@@ -1,0 +1,122 @@
+//! End-to-end driver: the full system on a real (synthetic-census-scale)
+//! workload, proving all layers compose:
+//!
+//!   dataset registry -> Appendix-F quantization -> all four seeders
+//!   -> cost evaluation (PJRT backend when artifacts are built)
+//!   -> Lloyd refinement -> paper-style runtime/cost table.
+//!
+//! This regenerates the *shape* of the paper's headline result (Tables
+//! 3/6 rows for the census dataset): FASTK-MEANS++ / REJECTIONSAMPLING
+//! runtimes nearly flat in k while K-MEANS++ grows linearly, at
+//! equivalent solution cost. The run is recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! cargo run --release --example end_to_end_census            # scaled n
+//! N=30000 K=100,500 cargo run --release --example end_to_end_census
+//! ```
+
+use std::time::Instant;
+
+use fastkmeanspp::data::quantize::quantize;
+use fastkmeanspp::data::synth::census_sim;
+use fastkmeanspp::lloyd::{lloyd, LloydConfig};
+use fastkmeanspp::prelude::*;
+use fastkmeanspp::runtime::Backend;
+use fastkmeanspp::seeding::SeedingAlgorithm;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let n = env_usize("N", 60_000);
+    let ks: Vec<usize> = std::env::var("K")
+        .unwrap_or_else(|_| "100,500,1000".into())
+        .split(',')
+        .filter_map(|s| s.parse().ok())
+        .collect();
+    let seed = env_usize("SEED", 7) as u64;
+
+    eprintln!("generating census_sim n={n} d=68 ...");
+    let t0 = Instant::now();
+    let original = census_sim(n, seed);
+    eprintln!("generated in {:.1}s", t0.elapsed().as_secs_f64());
+
+    // Appendix-F quantization (seeding space); costs on original coords.
+    let mut qrng = Pcg64::seed_from(seed ^ 0xF00D);
+    let q = quantize(&original, &mut qrng);
+    let backend = Backend::auto(std::path::Path::new("artifacts"));
+    eprintln!("cost backend: {}", backend.name());
+
+    let algos = [
+        SeedingAlgorithm::FastKMeansPP,
+        SeedingAlgorithm::Rejection,
+        SeedingAlgorithm::KMeansPP,
+        SeedingAlgorithm::Afkmc2,
+        SeedingAlgorithm::Uniform,
+    ];
+
+    println!("\n| algorithm | k | seconds | vs fast | seeding cost | cost vs k-means++ |");
+    println!("|---|---|---|---|---|---|");
+    for &k in &ks {
+        let mut fast_secs = None;
+        let mut pp_cost = None;
+        let mut rows = Vec::new();
+        for algo in algos {
+            let mut rng = Pcg64::seed_from(seed + k as u64);
+            let t = Instant::now();
+            let seeding = algo.run(&q.points, k, &mut rng);
+            let secs = t.elapsed().as_secs_f64();
+            let centers = original.gather(&seeding.indices);
+            let cost = backend.cost(&original, &centers)?;
+            if algo == SeedingAlgorithm::FastKMeansPP {
+                fast_secs = Some(secs);
+            }
+            if algo == SeedingAlgorithm::KMeansPP {
+                pp_cost = Some(cost);
+            }
+            rows.push((algo, secs, cost));
+        }
+        for (algo, secs, cost) in rows {
+            println!(
+                "| {} | {k} | {secs:.3} | {:.2}x | {cost:.4e} | {:.3} |",
+                algo.paper_name(),
+                secs / fast_secs.unwrap(),
+                cost / pp_cost.unwrap()
+            );
+        }
+    }
+
+    // Lloyd refinement on the best seeding at the largest k: the classic
+    // end-to-end k-means pipeline.
+    let k = *ks.last().unwrap();
+    let mut rng = Pcg64::seed_from(seed);
+    let seeding = SeedingAlgorithm::Rejection.run(&q.points, k, &mut rng);
+    let centers = original.gather(&seeding.indices);
+    let t = Instant::now();
+    let refined = lloyd(
+        &original,
+        &centers,
+        &LloydConfig {
+            max_iters: 10,
+            tol: 1e-5,
+        },
+        &backend,
+    )?;
+    println!(
+        "\nlloyd refinement (k={k}, backend {}): {} iters in {:.1}s, cost {:.4e} -> {:.4e}",
+        backend.name(),
+        refined.iterations,
+        t.elapsed().as_secs_f64(),
+        refined.history.first().unwrap(),
+        refined.history.last().unwrap()
+    );
+    println!(
+        "throughput: {:.1}k points/s/iter",
+        (original.len() * refined.iterations) as f64 / t.elapsed().as_secs_f64() / 1e3
+    );
+    Ok(())
+}

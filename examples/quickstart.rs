@@ -1,0 +1,60 @@
+//! Quickstart: seed a clustered dataset with the paper's rejection
+//! sampler, compare against exact k-means++, refine with Lloyd.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use fastkmeanspp::lloyd::{cost_native, lloyd, LloydConfig};
+use fastkmeanspp::prelude::*;
+use fastkmeanspp::runtime::Backend;
+use fastkmeanspp::seeding::SeedingAlgorithm;
+
+fn main() -> anyhow::Result<()> {
+    // 20k points in 32 dims, 100 latent clusters.
+    let data = fastkmeanspp::data::synth::gaussian_mixture(
+        &SynthSpec {
+            n: 20_000,
+            d: 32,
+            k_true: 100,
+            center_spread: 12.0,
+            ..SynthSpec::default()
+        },
+        0xC0FFEE,
+    );
+    println!("dataset: n={} d={}", data.len(), data.dim());
+
+    let k = 100;
+    for algo in [
+        SeedingAlgorithm::Rejection,
+        SeedingAlgorithm::FastKMeansPP,
+        SeedingAlgorithm::KMeansPP,
+        SeedingAlgorithm::Uniform,
+    ] {
+        let mut rng = Pcg64::seed_from(42);
+        let t0 = std::time::Instant::now();
+        let seeding = algo.run(&data, k, &mut rng);
+        let secs = t0.elapsed().as_secs_f64();
+        let cost = cost_native(&data, &seeding.centers);
+        println!(
+            "{:<16} k={k}  {:>8.3}s  seeding cost = {cost:.4e}",
+            algo.name(),
+            secs
+        );
+    }
+
+    // Refine the rejection seeding with Lloyd (PJRT backend if artifacts
+    // are built, native otherwise).
+    let mut rng = Pcg64::seed_from(42);
+    let seeding = SeedingAlgorithm::Rejection.run(&data, k, &mut rng);
+    let backend = Backend::auto(std::path::Path::new("artifacts"));
+    let refined = lloyd(&data, &seeding.centers, &LloydConfig::default(), &backend)?;
+    println!(
+        "lloyd ({}): {} iters, cost {:.4e} -> {:.4e}",
+        backend.name(),
+        refined.iterations,
+        refined.history.first().unwrap(),
+        refined.history.last().unwrap()
+    );
+    Ok(())
+}

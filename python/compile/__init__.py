@@ -1,0 +1,5 @@
+"""Build-time-only compile package: L2 jax model + L1 Pallas kernels + AOT.
+
+Nothing here is imported at runtime; `make artifacts` runs `compile.aot`
+once and the rust binary is self-contained afterwards.
+"""

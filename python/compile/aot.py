@@ -1,0 +1,123 @@
+"""AOT pipeline: lower every L2 entry point to HLO *text* + manifest.
+
+Run once at build time (`make artifacts`); rust/src/runtime/ loads the
+results via `HloModuleProto::from_text_file` and executes them on the PJRT
+CPU client. HLO text (NOT `lowered.compile().serialize()` / proto bytes)
+is the interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Shape variants
+--------------
+PJRT executables are shape-specialized, so we emit one module per
+(entry point, chunk, d, k) variant. The rust runtime pads:
+  * the point dim to the variant's `d` with zeros (zero-padded coordinates
+    on BOTH points and centers add 0 to every distance);
+  * the chunk tail with copies of an arbitrary real point (ignored or
+    subtracted by the caller);
+  * unused center rows with PAD_CENTER_COORD (never argmin-selected).
+
+Variant grid: chunk 16384 (streaming) and 2048 (small/test), d in
+{32, 96, 128}, k in {128, 1024}. d=96 covers the paper datasets
+(74/90/68 pad up); d=32 the examples; d=128 headroom.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# (name, fn, needs_k)
+ENTRY_POINTS = [
+    ("d2_update", model.d2_update_fn, False),
+    ("assign", model.assign_fn, True),
+    ("lloyd_step", model.lloyd_step_fn, True),
+    ("cost", model.cost_fn, True),
+]
+
+CHUNKS = [2048, 16384]
+DIMS = [32, 96, 128]
+KS = [128, 1024]
+
+# --quick trims the grid for CI-speed builds (still enough for all tests
+# and the scaled-profile benches).
+QUICK_CHUNKS = [2048, 16384]
+QUICK_DIMS = [32, 96]
+QUICK_KS = [128, 1024]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(name: str, fn, chunk: int, d: int, k: int | None) -> str:
+    f32 = jax.ShapeDtypeStruct((chunk, d), "float32")
+    if name == "d2_update":
+        args = (f32, jax.ShapeDtypeStruct((1, d), "float32"),
+                jax.ShapeDtypeStruct((chunk,), "float32"))
+    else:
+        args = (f32, jax.ShapeDtypeStruct((k, d), "float32"))
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="trimmed variant grid (CI builds)")
+    ns = ap.parse_args()
+
+    chunks = QUICK_CHUNKS if ns.quick else CHUNKS
+    dims = QUICK_DIMS if ns.quick else DIMS
+    ks = QUICK_KS if ns.quick else KS
+
+    os.makedirs(ns.out_dir, exist_ok=True)
+    manifest_rows = []
+    total = 0
+    for name, fn, needs_k in ENTRY_POINTS:
+        for chunk in chunks:
+            for d in dims:
+                k_list = ks if needs_k else [0]
+                for k in k_list:
+                    variant = (
+                        f"{name}_n{chunk}_d{d}" + (f"_k{k}" if needs_k else "")
+                    )
+                    path = f"{variant}.hlo.txt"
+                    text = lower_variant(name, fn, chunk, d, k if needs_k else None)
+                    with open(os.path.join(ns.out_dir, path), "w") as f:
+                        f.write(text)
+                    manifest_rows.append(
+                        (name, path, str(chunk), str(d), str(k))
+                    )
+                    total += len(text)
+                    print(f"  {variant}: {len(text)} chars", file=sys.stderr)
+
+    # Hand-rolled TSV manifest (no serde on the rust side either):
+    # entry \t file \t chunk \t d \t k    — k=0 for k-independent entries.
+    with open(os.path.join(ns.out_dir, "manifest.tsv"), "w") as f:
+        f.write("# entry\tfile\tchunk\td\tk\n")
+        for row in manifest_rows:
+            f.write("\t".join(row) + "\n")
+    print(
+        f"wrote {len(manifest_rows)} HLO modules ({total} chars) "
+        f"+ manifest.tsv to {ns.out_dir}",
+        file=sys.stderr,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""L1 Pallas kernels + pure-jnp oracles.
+
+Exports:
+  pairwise_d2 — tiled [B,D]x[K,D]->[B,K] squared-distance kernel (MXU form)
+  d2_update   — fused k-means++ distance min-update
+  ref         — jnp reference implementations (ground truth for pytest)
+"""
+
+from . import ref  # noqa: F401
+from .d2_update import d2_update  # noqa: F401
+from .pairwise_d2 import pairwise_d2  # noqa: F401

@@ -1,0 +1,62 @@
+"""L1 Pallas kernel: fused k-means++ distance min-update.
+
+After opening a new center c, every point's cached squared distance to the
+center set shrinks to `min(cur_d2[x], ||x - c||^2)`. This is the inner loop
+of exact D^2 seeding (the paper's Theta(ndk) baseline) — one fused pass,
+no [B, K] intermediate.
+
+Tiled over points with a 1-D grid; the single center row is re-fetched into
+VMEM for every tile (BlockSpec index_map pins it to block 0). VMEM per
+step ~ BLOCK_B*D + D + 2*BLOCK_B floats.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 1024
+
+
+def _d2_update_kernel(x_ref, c_ref, cur_ref, o_ref):
+    x = x_ref[...]  # [BLOCK_B, D]
+    c = c_ref[...]  # [1, D]
+    diff = x - c  # broadcast over the tile
+    d2 = jnp.sum(diff * diff, axis=1)  # [BLOCK_B]
+    o_ref[...] = jnp.minimum(cur_ref[...], d2)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def d2_update(
+    points: jnp.ndarray,
+    center: jnp.ndarray,
+    cur_d2: jnp.ndarray,
+    *,
+    block_b: int = DEFAULT_BLOCK_B,
+) -> jnp.ndarray:
+    """min(cur_d2, ||x - center||^2) per point; B a multiple of block_b."""
+    b, d = points.shape
+    assert center.shape == (d,), f"center shape {center.shape} != ({d},)"
+    assert cur_d2.shape == (b,)
+    if b % block_b != 0:
+        block_b = b
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        _d2_update_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(
+        points.astype(jnp.float32),
+        center.astype(jnp.float32).reshape(1, d),
+        cur_d2.astype(jnp.float32),
+    )

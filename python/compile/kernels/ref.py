@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every Pallas kernel in this package has a reference implementation here,
+written with nothing but `jax.numpy` so that pytest/hypothesis can compare
+the two with `assert_allclose`. These functions are also used directly by
+`model.py` shape tests.
+
+All distance algebra is squared Euclidean, matching the paper's D^2
+sampling (`DIST(x, C)^2`).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pairwise_d2_ref(points: jnp.ndarray, centers: jnp.ndarray) -> jnp.ndarray:
+    """Exact [B, K] squared-distance matrix between points [B, D] and centers [K, D].
+
+    Computed the numerically-straightforward way (explicit difference) so it
+    can serve as an oracle for the matmul-form kernel.
+    """
+    diff = points[:, None, :] - centers[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def d2_update_ref(
+    points: jnp.ndarray, center: jnp.ndarray, cur_d2: jnp.ndarray
+) -> jnp.ndarray:
+    """min(cur_d2, ||x - center||^2) per point — the k-means++ inner loop."""
+    diff = points - center[None, :]
+    d2 = jnp.sum(diff * diff, axis=-1)
+    return jnp.minimum(cur_d2, d2)
+
+
+def assign_ref(points: jnp.ndarray, centers: jnp.ndarray):
+    """(argmin index [B] int32, min squared distance [B] f32)."""
+    d2 = pairwise_d2_ref(points, centers)
+    return jnp.argmin(d2, axis=1).astype(jnp.int32), jnp.min(d2, axis=1)
+
+
+def lloyd_step_ref(points: jnp.ndarray, centers: jnp.ndarray):
+    """One Lloyd step over a chunk of points.
+
+    Returns (sums [K, D], counts [K], cost scalar): per-cluster coordinate
+    sums and member counts for the chunk (the caller reduces over chunks and
+    divides), plus the chunk's k-means cost under the *current* centers.
+    """
+    idx, mind2 = assign_ref(points, centers)
+    k = centers.shape[0]
+    one_hot = (idx[:, None] == jnp.arange(k)[None, :]).astype(points.dtype)
+    sums = one_hot.T @ points
+    counts = jnp.sum(one_hot, axis=0)
+    cost = jnp.sum(mind2)
+    return sums, counts, cost

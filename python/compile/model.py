@@ -1,0 +1,68 @@
+"""L2: jax compute graphs built on the L1 Pallas kernels.
+
+These are the dense-compute entry points the rust coordinator executes via
+PJRT (AOT-lowered to HLO text by aot.py, loaded by rust/src/runtime/).
+Python is build-time only: nothing in this package is imported at runtime.
+
+Entry points (all chunk-shaped — the rust side streams fixed-size chunks
+and pads the tail):
+
+  d2_update_fn(points [N,D], center [1,D], cur [N])        -> (new_cur [N],)
+  assign_fn(points [N,D], centers [K,D])                   -> (idx [N] i32, mind2 [N])
+  lloyd_step_fn(points [N,D], centers [K,D])               -> (sums [K,D], counts [K], cost [])
+  cost_fn(points [N,D], centers [K,D])                     -> (cost [],)
+
+Padding contract with the rust side (see rust/src/runtime/pjrt.rs):
+  * tail point rows are padded with the dataset's first point; the rust
+    side subtracts the padded rows' contribution (it knows the pad count);
+    for `assign`/`d2_update` it simply ignores the padded outputs.
+  * unused center rows are padded with the PAD_CENTER_COORD sentinel so
+    they are never the argmin and attract no Lloyd mass.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile.kernels import d2_update, pairwise_d2
+
+# Sentinel coordinate for padded center rows. Distance contribution per
+# dim ~ (1e15)^2 = 1e30; times d<=128 dims ~ 1e32 — far above any real
+# distance yet far below f32 overflow (3.4e38).
+PAD_CENTER_COORD = 1.0e15
+
+
+def d2_update_fn(points, center, cur_d2):
+    """k-means++ inner loop: new cached D^2 after opening `center`."""
+    return (d2_update(points, center.reshape(-1), cur_d2),)
+
+
+def assign_fn(points, centers):
+    """Nearest-center assignment: (index [N] i32, min D^2 [N] f32)."""
+    d2 = pairwise_d2(points, centers)
+    idx = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    mind2 = jnp.min(d2, axis=1)
+    return idx, mind2
+
+
+def lloyd_step_fn(points, centers):
+    """One Lloyd step over a chunk: per-cluster sums/counts + current cost.
+
+    The one-hot contraction is a [K,N]x[N,D] matmul — MXU-shaped, fused by
+    XLA with the assignment's argmin into a single pass over the chunk.
+    """
+    idx, mind2 = assign_fn(points, centers)
+    k = centers.shape[0]
+    one_hot = (idx[:, None] == jnp.arange(k, dtype=jnp.int32)[None, :]).astype(
+        jnp.float32
+    )
+    sums = jnp.einsum("nk,nd->kd", one_hot, points)
+    counts = jnp.sum(one_hot, axis=0)
+    cost = jnp.sum(mind2)
+    return sums, counts, cost
+
+
+def cost_fn(points, centers):
+    """Chunk k-means cost under `centers` (sum of min squared distances)."""
+    _, mind2 = assign_fn(points, centers)
+    return (jnp.sum(mind2),)

@@ -1,0 +1,117 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes (B, D, K incl. non-tile-divisible Bs), value
+scales and degenerate cases; every property asserts allclose against
+ref.py. This is the CORE correctness signal for the compute layer.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import d2_update, pairwise_d2, ref
+
+RNG = np.random.default_rng(1234)
+
+
+def _pts(b, d, scale=1.0, seed=0):
+    return (np.random.default_rng(seed).normal(size=(b, d)) * scale).astype(
+        np.float32
+    )
+
+
+# ---------------------------------------------------------------- pairwise
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    b=st.sampled_from([1, 3, 17, 64, 512, 513, 1024]),
+    d=st.integers(min_value=1, max_value=96),
+    k=st.sampled_from([1, 2, 7, 32, 128]),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_pairwise_d2_matches_ref(b, d, k, scale, seed):
+    x = _pts(b, d, scale, seed)
+    c = _pts(k, d, scale, seed + 1)
+    got = np.asarray(pairwise_d2(x, c))
+    want = np.asarray(ref.pairwise_d2_ref(x, c))
+    # matmul form loses ~half the mantissa relative to the diff form at
+    # large |x|; tolerance is scale-aware.
+    tol = 1e-3 * max(scale * scale, 1.0)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=tol)
+
+
+def test_pairwise_d2_zero_distance_diagonal():
+    x = _pts(32, 9, seed=7)
+    d2 = np.asarray(pairwise_d2(x, x))
+    assert np.allclose(np.diag(d2), 0.0, atol=1e-3)
+    assert (d2 >= 0).all(), "kernel must clamp matmul-form negatives"
+
+
+def test_pairwise_d2_identical_points():
+    x = np.ones((16, 5), dtype=np.float32)
+    c = np.ones((3, 5), dtype=np.float32)
+    np.testing.assert_allclose(np.asarray(pairwise_d2(x, c)), 0.0, atol=1e-5)
+
+
+def test_pairwise_d2_block_divisible_grid():
+    # B an exact multiple of the 512 tile -> multi-step grid path.
+    x = _pts(2048, 24, seed=3)
+    c = _pts(64, 24, seed=4)
+    np.testing.assert_allclose(
+        np.asarray(pairwise_d2(x, c)),
+        np.asarray(ref.pairwise_d2_ref(x, c)),
+        rtol=1e-3,
+        atol=1e-3,
+    )
+
+
+# ---------------------------------------------------------------- d2_update
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    b=st.sampled_from([1, 5, 100, 1024, 1025, 4096]),
+    d=st.integers(min_value=1, max_value=96),
+    scale=st.sampled_from([1e-2, 1.0, 1e2]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_d2_update_matches_ref(b, d, scale, seed):
+    x = _pts(b, d, scale, seed)
+    c = _pts(1, d, scale, seed + 1)[0]
+    cur = (np.random.default_rng(seed + 2).uniform(0, 4 * scale * scale, b)).astype(
+        np.float32
+    )
+    got = np.asarray(d2_update(x, c, cur))
+    want = np.asarray(ref.d2_update_ref(x, c, cur))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4 * scale * scale)
+
+
+def test_d2_update_never_increases():
+    x = _pts(512, 13, seed=11)
+    c = _pts(1, 13, seed=12)[0]
+    cur = np.full(512, 1e-6, dtype=np.float32)
+    got = np.asarray(d2_update(x, c, cur))
+    assert (got <= cur + 1e-12).all()
+
+
+def test_d2_update_inf_start_equals_exact_distance():
+    x = _pts(256, 8, seed=13)
+    c = x[17].copy()
+    cur = np.full(256, np.finfo(np.float32).max, dtype=np.float32)
+    got = np.asarray(d2_update(x, c, cur))
+    want = ((x - c) ** 2).sum(1)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    assert got[17] == pytest.approx(0.0, abs=1e-6)
+
+
+def test_d2_update_idempotent():
+    x = _pts(128, 6, seed=21)
+    c = _pts(1, 6, seed=22)[0]
+    cur = np.full(128, 1e9, dtype=np.float32)
+    once = np.asarray(d2_update(x, c, cur))
+    twice = np.asarray(d2_update(x, c, once))
+    np.testing.assert_allclose(once, twice, rtol=0, atol=0)

@@ -1,0 +1,105 @@
+"""L2 correctness: model entry points (shapes + semantics vs numpy).
+
+Includes the padding contract the rust runtime relies on: zero dim-padding
+preserves distances; PAD_CENTER_COORD rows never win an argmin and attract
+no Lloyd mass.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def _case(n, d, k, seed=0):
+    rng = np.random.default_rng(seed)
+    return (
+        rng.normal(size=(n, d)).astype(np.float32),
+        rng.normal(size=(k, d)).astype(np.float32),
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from([4, 64, 300, 1024]),
+    d=st.integers(min_value=1, max_value=64),
+    k=st.sampled_from([1, 3, 16, 64]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_assign_matches_numpy(n, d, k, seed):
+    pts, cs = _case(n, d, k, seed)
+    idx, mind2 = model.assign_fn(pts, cs)
+    d2 = ((pts[:, None, :] - cs[None, :, :]) ** 2).sum(-1)
+    want_min = d2.min(1)
+    np.testing.assert_allclose(np.asarray(mind2), want_min, rtol=1e-3, atol=1e-3)
+    # argmin may legitimately differ under ties/eps — check via distance.
+    got_val = d2[np.arange(n), np.asarray(idx)]
+    np.testing.assert_allclose(got_val, want_min, rtol=1e-3, atol=1e-3)
+    assert np.asarray(idx).dtype == np.int32
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([8, 256, 1000]),
+    d=st.integers(min_value=1, max_value=48),
+    k=st.sampled_from([2, 8, 32]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_lloyd_step_matches_ref(n, d, k, seed):
+    pts, cs = _case(n, d, k, seed)
+    sums, counts, cost = model.lloyd_step_fn(pts, cs)
+    rsums, rcounts, rcost = ref.lloyd_step_ref(pts, cs)
+    np.testing.assert_allclose(np.asarray(sums), np.asarray(rsums), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(counts), np.asarray(rcounts))
+    np.testing.assert_allclose(float(cost), float(rcost), rtol=1e-3)
+    # conservation: every point lands in exactly one cluster
+    assert float(np.asarray(counts).sum()) == n
+    np.testing.assert_allclose(
+        np.asarray(sums).sum(0), pts.sum(0), rtol=1e-3, atol=1e-2
+    )
+
+
+def test_cost_fn_equals_assign_sum():
+    pts, cs = _case(500, 20, 10, seed=42)
+    (cost,) = model.cost_fn(pts, cs)
+    _, mind2 = model.assign_fn(pts, cs)
+    np.testing.assert_allclose(float(cost), float(np.asarray(mind2).sum()), rtol=1e-5)
+
+
+def test_d2_update_fn_tuple_contract():
+    pts, cs = _case(128, 12, 1, seed=5)
+    cur = np.full(128, 1e30, dtype=np.float32)
+    (out,) = model.d2_update_fn(pts, cs[:1], cur)
+    want = ((pts - cs[0]) ** 2).sum(1)
+    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------- padding contract
+
+
+def test_zero_dim_padding_preserves_distances():
+    pts, cs = _case(200, 30, 7, seed=9)
+    pad = lambda a, d: np.concatenate(
+        [a, np.zeros((a.shape[0], d - a.shape[1]), np.float32)], axis=1
+    )
+    _, m1 = model.assign_fn(pts, cs)
+    _, m2 = model.assign_fn(pad(pts, 96), pad(cs, 96))
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), rtol=1e-4, atol=1e-4)
+
+
+def test_pad_center_rows_never_selected():
+    pts, cs = _case(300, 16, 4, seed=10)
+    padded = np.concatenate(
+        [cs, np.full((60, 16), model.PAD_CENTER_COORD, np.float32)], axis=0
+    )
+    idx, mind2 = model.assign_fn(pts, padded)
+    assert (np.asarray(idx) < 4).all()
+    _, want = model.assign_fn(pts, cs)
+    np.testing.assert_allclose(np.asarray(mind2), np.asarray(want), rtol=1e-4)
+    # Lloyd: padded rows attract zero mass
+    sums, counts, _ = model.lloyd_step_fn(pts, padded)
+    assert np.asarray(counts)[4:].sum() == 0
+    assert np.abs(np.asarray(sums)[4:]).sum() == 0

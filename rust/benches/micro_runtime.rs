@@ -1,0 +1,126 @@
+//! PJRT-vs-native throughput for the dense entry points (`cost`,
+//! `assign`, `lloyd_step`, `d2_update`) — the L1/L2 artifacts against
+//! the tuned rust kernels on identical inputs.
+//!
+//! ```bash
+//! cargo bench --bench micro_runtime
+//! cargo bench --bench micro_runtime -- --n 100000 --k 512
+//! ```
+//!
+//! Skips (with a note) when `artifacts/` is missing. The useful output
+//! is points/second per entry point; on this CPU-only image the native
+//! path typically wins (PJRT pays per-call literal copies) — the PJRT
+//! numbers are the integration-fidelity check, and the real accelerator
+//! story is the DESIGN.md §Hardware-Adaptation estimate.
+
+use std::time::Instant;
+
+use fastkmeanspp::cli::Args;
+use fastkmeanspp::data::synth::{gaussian_mixture, SynthSpec};
+use fastkmeanspp::rng::Pcg64;
+use fastkmeanspp::runtime::{native, pjrt::PjrtRuntime};
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    let args = Args::parse(&std::iter::once("bench".to_string()).chain(argv).collect::<Vec<_>>())?;
+    let n = args.get_usize("n", 65_536)?;
+    let k = args.get_usize("k", 256)?;
+    let d = args.get_usize("d", 74)?;
+    let reps = args.get_usize("reps", 5)?;
+
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let rt = match PjrtRuntime::load(&dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("note: PJRT unavailable ({e:#}) — native only");
+            None
+        }
+    };
+
+    let ps = gaussian_mixture(
+        &SynthSpec {
+            n,
+            d,
+            k_true: 64,
+            ..Default::default()
+        },
+        1,
+    );
+    let mut rng = Pcg64::seed_from(2);
+    let centers = ps.gather(&(0..k).map(|_| rng.index(n)).collect::<Vec<_>>());
+    println!("n={n} d={d} k={k} reps={reps}\n");
+    println!("| entry point | backend | seconds | Mpoints/s |");
+    println!("|---|---|---|---|");
+
+    let mut report = |name: &str, backend: &str, secs: f64| {
+        println!(
+            "| {name} | {backend} | {:.4} | {:.2} |",
+            secs,
+            n as f64 / secs / 1e6
+        );
+    };
+
+    // cost
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(native::cost(&ps, &centers));
+    }
+    report("cost", "native", t0.elapsed().as_secs_f64() / reps as f64);
+    if let Some(rt) = &rt {
+        rt.cost(&ps, &centers)?; // compile outside the timer
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(rt.cost(&ps, &centers)?);
+        }
+        report("cost", "pjrt", t0.elapsed().as_secs_f64() / reps as f64);
+    }
+
+    // assign
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(native::assign(&ps, &centers));
+    }
+    report("assign", "native", t0.elapsed().as_secs_f64() / reps as f64);
+    if let Some(rt) = &rt {
+        rt.assign(&ps, &centers)?;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(rt.assign(&ps, &centers)?);
+        }
+        report("assign", "pjrt", t0.elapsed().as_secs_f64() / reps as f64);
+    }
+
+    // lloyd_step
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(native::lloyd_step(&ps, &centers));
+    }
+    report("lloyd_step", "native", t0.elapsed().as_secs_f64() / reps as f64);
+    if let Some(rt) = &rt {
+        rt.lloyd_step(&ps, &centers)?;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(rt.lloyd_step(&ps, &centers)?);
+        }
+        report("lloyd_step", "pjrt", t0.elapsed().as_secs_f64() / reps as f64);
+    }
+
+    // d2_update
+    let center = ps.row(0).to_vec();
+    let mut buf = vec![f32::INFINITY; n];
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        fastkmeanspp::seeding::kmeanspp::update_d2_parallel(&ps, 0, &mut buf);
+    }
+    report("d2_update", "native", t0.elapsed().as_secs_f64() / reps as f64);
+    if let Some(rt) = &rt {
+        rt.d2_update(&ps, &center, &mut buf)?;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            rt.d2_update(&ps, &center, &mut buf)?;
+        }
+        report("d2_update", "pjrt", t0.elapsed().as_secs_f64() / reps as f64);
+    }
+
+    Ok(())
+}

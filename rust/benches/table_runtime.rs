@@ -1,0 +1,101 @@
+//! Regenerates the paper's **Tables 1–3** (running time of each seeding
+//! algorithm divided by FASTK-MEANS++'s, per dataset) plus the
+//! Lemma-5.3 rejection-loop diagnostics.
+//!
+//! ```bash
+//! cargo bench --bench table_runtime                      # all 3 tables, scaled profile
+//! cargo bench --bench table_runtime -- --table 1         # KDD only
+//! cargo bench --bench table_runtime -- --profile smoke --reps 2
+//! cargo bench --bench table_runtime -- --profile paper   # full-size n (slow!)
+//! ```
+//!
+//! Absolute times are machine-specific; the table reports *ratios*, the
+//! same normalization the paper uses. Expected shape: K-MEANS++ and
+//! AFKMC2 ratios grow ~linearly in k (order of magnitude at the top of
+//! the grid), REJECTIONSAMPLING stays within a small factor of 1.
+
+use fastkmeanspp::cli::Args;
+use fastkmeanspp::coordinator::config::{bench_default_k_grid, k_grid_for, ExperimentConfig};
+use fastkmeanspp::coordinator::{run_grid, tables};
+use fastkmeanspp::data::registry::{DatasetId, Profile};
+use fastkmeanspp::seeding::SeedingAlgorithm;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    let args = Args::parse(&std::iter::once("bench".to_string()).chain(argv).collect::<Vec<_>>())?;
+
+    let profile = Profile::parse(args.get("profile").unwrap_or("scaled"))?;
+    let datasets: Vec<DatasetId> = match args.get("table") {
+        Some(t) => {
+            let t: u8 = t.parse()?;
+            vec![DatasetId::all()
+                .into_iter()
+                .find(|d| d.runtime_table() == t)
+                .ok_or_else(|| anyhow::anyhow!("runtime tables are 1..3"))?]
+        }
+        None => DatasetId::all().to_vec(),
+    };
+
+    let mut cfg = ExperimentConfig {
+        datasets: datasets.clone(),
+        profile,
+        // Runtime tables: the four timed algorithms (uniform is excluded
+        // by the paper here; it appears in the cost tables).
+        algorithms: vec![
+            SeedingAlgorithm::FastKMeansPP,
+            SeedingAlgorithm::Rejection,
+            SeedingAlgorithm::KMeansPP,
+            SeedingAlgorithm::Afkmc2,
+        ],
+        // Default 2 reps: runtime *ratios* are stable across reps, and the
+        // Θ(ndk)/Θ(mk^2 d) baselines dominate the bench budget (pass
+        // --reps 5 to match the paper's repetition count exactly).
+        reps: args.get_usize("reps", 2)?,
+        seed: args.get_u64("seed", 42)?,
+        ..Default::default()
+    };
+    let min_n = datasets.iter().map(|d| d.n(profile)).min().unwrap();
+    cfg.ks = match args.get("ks") {
+        Some(ks) => ks.split(',').map(|s| s.parse().unwrap()).collect(),
+        None => {
+            let g = if args.get("full").is_some() {
+                k_grid_for(min_n) // the paper's complete grid
+            } else {
+                bench_default_k_grid(min_n)
+            };
+            if g.is_empty() {
+                vec![50, 150]
+            } else {
+                g
+            }
+        }
+    };
+
+    eprintln!(
+        "table_runtime: profile={} ks={:?} reps={}",
+        profile.name(),
+        cfg.ks,
+        cfg.reps
+    );
+    let t0 = std::time::Instant::now();
+    let res = run_grid(&cfg, |line| eprintln!("  [{:7.1}s] {line}", t0.elapsed().as_secs_f64()))?;
+
+    for &ds in &datasets {
+        println!("{}", tables::runtime_table(&res, ds, &cfg.ks));
+        println!("{}", tables::rejection_diagnostics(&res, ds, &cfg.ks));
+        // Raw seconds appendix (not in the paper; useful for EXPERIMENTS.md).
+        println!("raw seconds ({}):", ds.name());
+        for &algo in &cfg.algorithms {
+            print!("  {:<18}", algo.paper_name());
+            for &k in &cfg.ks {
+                match res.get(ds, algo, k) {
+                    Some(c) => print!(" {:>9.3}", c.seconds.mean()),
+                    None => print!(" {:>9}", "—"),
+                }
+            }
+            println!();
+        }
+        println!();
+    }
+    Ok(())
+}

@@ -1,0 +1,366 @@
+//! Hand-rolled CLI (the offline build has no clap).
+//!
+//! ```text
+//! fkmpp seed      --dataset kdd_sim --algo rejection -k 1000 [--lloyd 10]
+//! fkmpp grid      --datasets kdd_sim,song_sim --ks 100,500 --reps 5
+//! fkmpp table     --which 1..8|all [--profile scaled] [--reps 5]
+//! fkmpp datasets  gen [--profile scaled]
+//! fkmpp info
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::config::{k_grid_for, ExperimentConfig};
+use crate::coordinator::{run_grid, tables};
+use crate::data::registry::{DatasetId, Profile};
+use crate::lloyd::{lloyd, LloydConfig};
+use crate::rng::Pcg64;
+use crate::runtime::Backend;
+use crate::seeding::SeedingAlgorithm;
+
+/// Parsed command line: one subcommand, positional args, `--key value`
+/// flags (also `--flag` booleans and `-k 5` shorthands).
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        args.command = it.next().cloned().unwrap_or_else(|| "help".into());
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--").or_else(|| tok.strip_prefix('-')) {
+                let value = match it.peek() {
+                    Some(v) if !v.starts_with('-') || v.parse::<f64>().is_ok() => {
+                        it.next().unwrap().clone()
+                    }
+                    _ => "true".to_string(),
+                };
+                args.flags.insert(name.to_string(), value);
+            } else {
+                args.positional.push(tok.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_f32(&self, key: &str, default: f32) -> Result<f32> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?}")),
+            None => Ok(default),
+        }
+    }
+}
+
+/// Assemble an [`ExperimentConfig`] from common flags.
+pub fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = ExperimentConfig::default();
+    if let Some(ds) = args.get("datasets").or_else(|| args.get("dataset")) {
+        cfg.datasets = ds
+            .split(',')
+            .map(DatasetId::parse)
+            .collect::<Result<Vec<_>>>()?;
+    }
+    if let Some(p) = args.get("profile") {
+        cfg.profile = Profile::parse(p)?;
+    }
+    if let Some(a) = args.get("algos").or_else(|| args.get("algo")) {
+        cfg.algorithms = a
+            .split(',')
+            .map(SeedingAlgorithm::parse)
+            .collect::<Result<Vec<_>>>()?;
+    }
+    if let Some(ks) = args.get("ks") {
+        cfg.ks = ks
+            .split(',')
+            .map(|s| s.parse::<usize>().context("--ks"))
+            .collect::<Result<Vec<_>>>()?;
+    } else if let Some(k) = args.get("k") {
+        cfg.ks = vec![k.parse().context("-k")?];
+    }
+    cfg.reps = args.get_usize("reps", cfg.reps)?;
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    cfg.lloyd_iters = args.get_usize("lloyd", cfg.lloyd_iters)?;
+    cfg.rejection.c = args.get_f32("c", cfg.rejection.c)?;
+    cfg.quantize = args.get("no-quantize").is_none();
+    if let Some(dir) = args.get("data-dir") {
+        cfg.data_dir = PathBuf::from(dir);
+    }
+    if let Some(dir) = args.get("artifacts-dir") {
+        cfg.artifacts_dir = PathBuf::from(dir);
+    }
+    Ok(cfg)
+}
+
+/// Entry point used by `main.rs` (and by CLI tests).
+pub fn run(argv: &[String]) -> Result<String> {
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "seed" => cmd_seed(&args),
+        "grid" => cmd_grid(&args),
+        "table" => cmd_table(&args),
+        "datasets" => cmd_datasets(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => Ok(USAGE.to_string()),
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+const USAGE: &str = "fastkmeanspp (NeurIPS 2020 reproduction)
+
+USAGE:
+  fkmpp seed     --dataset <kdd_sim|song_sim|census_sim> --algo <name> -k <K>
+                 [--profile paper|scaled|smoke] [--seed N] [--lloyd ITERS]
+                 [--c FLOAT] [--no-quantize]
+  fkmpp grid     --datasets a,b --algos x,y --ks 100,500 --reps 5
+  fkmpp table    --which 1|2|...|8|all [--profile scaled] [--reps 5]
+  fkmpp datasets gen [--profile scaled] [--data-dir data]
+  fkmpp info
+
+Algorithms: kmeanspp fastkmeanspp rejection rejection-exact afkmc2 uniform";
+
+fn cmd_seed(args: &Args) -> Result<String> {
+    let cfg = config_from_args(args)?;
+    let dataset = cfg.datasets[0];
+    let algo = cfg.algorithms[0];
+    let k = *cfg.ks.first().context("need -k")?;
+    let ps = dataset.load_cached(&cfg.data_dir, cfg.profile, cfg.seed)?;
+    let seed_space = if cfg.quantize {
+        let mut qrng = Pcg64::seed_from(cfg.seed ^ 0x5EED_0F00D);
+        crate::data::quantize::quantize(&ps, &mut qrng).points
+    } else {
+        ps.clone()
+    };
+    let mut rng = Pcg64::seed_from(cfg.seed);
+    let t0 = std::time::Instant::now();
+    let seeding = crate::coordinator::runner::run_seeding(&cfg, algo, &seed_space, k, &mut rng);
+    let secs = t0.elapsed().as_secs_f64();
+    let backend = Backend::auto(&cfg.artifacts_dir);
+    let centers = ps.gather(&seeding.indices);
+    let cost = backend.cost(&ps, &centers)?;
+    let mut out = format!(
+        "dataset={} n={} d={} algo={} k={}\nseeding: {:.3}s (init {:.3}s select {:.3}s), \
+         proposals={} rejections={}\nseeding cost = {cost:.6e} (backend: {})\n",
+        dataset.name(),
+        ps.len(),
+        ps.dim(),
+        algo.name(),
+        k,
+        secs,
+        seeding.stats.init_secs,
+        seeding.stats.select_secs,
+        seeding.stats.proposals,
+        seeding.stats.rejections,
+        backend.name(),
+    );
+    if cfg.lloyd_iters > 0 {
+        let res = lloyd(
+            &ps,
+            &centers,
+            &LloydConfig {
+                max_iters: cfg.lloyd_iters,
+                tol: 1e-6,
+            },
+            &backend,
+        )?;
+        out.push_str(&format!(
+            "lloyd: {} iters, cost {:.6e} -> {:.6e}\n",
+            res.iterations,
+            res.history.first().unwrap(),
+            res.history.last().unwrap()
+        ));
+    }
+    Ok(out)
+}
+
+fn cmd_grid(args: &Args) -> Result<String> {
+    let cfg = config_from_args(args)?;
+    let res = run_grid(&cfg, |line| eprintln!("[grid] {line}"))?;
+    let mut out = String::new();
+    for &ds in &cfg.datasets {
+        out.push_str(&tables::runtime_table(&res, ds, &cfg.ks));
+        out.push('\n');
+        out.push_str(&tables::cost_table(&res, ds, &cfg.ks));
+        out.push('\n');
+    }
+    Ok(out)
+}
+
+fn cmd_table(args: &Args) -> Result<String> {
+    let which = args.get("which").unwrap_or("all");
+    let mut cfg = config_from_args(args)?;
+    let (datasets, want): (Vec<DatasetId>, Vec<u8>) = match which {
+        "all" => (DatasetId::all().to_vec(), vec![1, 2, 3, 4, 5, 6, 7, 8]),
+        w => {
+            let t: u8 = w.parse().context("--which")?;
+            let ds = match t {
+                1 | 4 | 8 => DatasetId::KddSim,
+                2 | 5 | 7 => DatasetId::SongSim,
+                3 | 6 => DatasetId::CensusSim,
+                _ => bail!("tables are numbered 1..8"),
+            };
+            (vec![ds], vec![t])
+        }
+    };
+    cfg.datasets = datasets;
+    // Cap the k grid by dataset size at this profile.
+    let min_n = cfg
+        .datasets
+        .iter()
+        .map(|d| d.n(cfg.profile))
+        .min()
+        .unwrap();
+    if args.get("ks").is_none() {
+        cfg.ks = k_grid_for(min_n);
+        if cfg.ks.is_empty() {
+            cfg.ks = vec![min_n / 20.max(1)];
+        }
+    }
+    let res = run_grid(&cfg, |line| eprintln!("[table] {line}"))?;
+    let mut out = format!(
+        "profile={} reps={} backend={}\n\n",
+        cfg.profile.name(),
+        cfg.reps,
+        res.backend_name
+    );
+    for &t in &want {
+        let s = match t {
+            1 | 2 | 3 => {
+                let ds = cfg.datasets.iter().find(|d| d.runtime_table() == t);
+                ds.map(|&d| tables::runtime_table(&res, d, &cfg.ks))
+            }
+            4 | 5 | 6 => {
+                let ds = cfg.datasets.iter().find(|d| d.cost_table() == t);
+                ds.map(|&d| tables::cost_table(&res, d, &cfg.ks))
+            }
+            7 => Some(tables::variance_table(&res, DatasetId::SongSim, &cfg.ks)),
+            8 => Some(tables::variance_table(&res, DatasetId::KddSim, &cfg.ks)),
+            _ => None,
+        };
+        if let Some(s) = s {
+            out.push_str(&s);
+            out.push('\n');
+        }
+    }
+    Ok(out)
+}
+
+fn cmd_datasets(args: &Args) -> Result<String> {
+    let action = args.positional.first().map(|s| s.as_str()).unwrap_or("gen");
+    if action != "gen" {
+        bail!("datasets: only `gen` is supported");
+    }
+    let cfg = config_from_args(args)?;
+    let mut out = String::new();
+    for ds in DatasetId::all() {
+        let t0 = std::time::Instant::now();
+        let ps = ds.load_cached(&cfg.data_dir, cfg.profile, cfg.seed)?;
+        out.push_str(&format!(
+            "{}: n={} d={} ({:.2}s)\n",
+            ds.name(),
+            ps.len(),
+            ps.dim(),
+            t0.elapsed().as_secs_f64()
+        ));
+    }
+    Ok(out)
+}
+
+fn cmd_info(args: &Args) -> Result<String> {
+    let cfg = config_from_args(args)?;
+    let backend = Backend::auto(&cfg.artifacts_dir);
+    let mut out = format!(
+        "fastkmeanspp — Fast and Accurate k-means++ via Rejection Sampling (NeurIPS 2020)\n\
+         backend: {}\nthreads: {}\n",
+        backend.name(),
+        crate::parallel::num_threads()
+    );
+    if let Backend::Pjrt(rt) = &backend {
+        out.push_str(&format!(
+            "artifacts: {} variants\n",
+            rt.manifest().variants.len()
+        ));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_flags_and_positional() {
+        let a = Args::parse(&argv("seed --dataset kdd_sim -k 100 --lloyd 5 pos")).unwrap();
+        assert_eq!(a.command, "seed");
+        assert_eq!(a.get("dataset"), Some("kdd_sim"));
+        assert_eq!(a.get("k"), Some("100"));
+        assert_eq!(a.get_usize("lloyd", 0).unwrap(), 5);
+        assert_eq!(a.positional, vec!["pos"]);
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let a = Args::parse(&argv("seed --no-quantize --dataset song_sim")).unwrap();
+        assert_eq!(a.get("no-quantize"), Some("true"));
+        let cfg = config_from_args(&a).unwrap();
+        assert!(!cfg.quantize);
+    }
+
+    #[test]
+    fn config_defaults() {
+        let a = Args::parse(&argv("grid")).unwrap();
+        let cfg = config_from_args(&a).unwrap();
+        assert_eq!(cfg.reps, 5);
+        assert_eq!(cfg.ks.len(), 6);
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(run(&argv("frobnicate")).is_err());
+    }
+
+    #[test]
+    fn help_prints_usage() {
+        let out = run(&argv("help")).unwrap();
+        assert!(out.contains("USAGE"));
+    }
+
+    #[test]
+    fn seed_smoke_run() {
+        let out = run(&argv(
+            "seed --dataset kdd_sim --algo uniform -k 10 --profile smoke \
+             --data-dir /tmp/fkmpp_cli_test --artifacts-dir /nonexistent --seed 3",
+        ))
+        .unwrap();
+        assert!(out.contains("seeding cost"), "{out}");
+    }
+}

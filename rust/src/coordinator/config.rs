@@ -1,0 +1,99 @@
+//! Experiment configuration: every knob of the paper's evaluation in one
+//! struct, buildable from CLI flags (no serde in the offline build — the
+//! CLI parser in `cli.rs` fills this in).
+
+use std::path::PathBuf;
+
+use crate::data::registry::{DatasetId, Profile};
+use crate::seeding::afkmc2::Afkmc2Config;
+use crate::seeding::rejection::RejectionConfig;
+use crate::seeding::SeedingAlgorithm;
+
+/// Full sweep specification.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub datasets: Vec<DatasetId>,
+    pub profile: Profile,
+    pub algorithms: Vec<SeedingAlgorithm>,
+    /// The paper's k grid: 100, 500, 1000, 2000, 3000, 5000.
+    pub ks: Vec<usize>,
+    /// Repetitions per cell (paper: 5).
+    pub reps: usize,
+    /// Base seed; rep r of cell uses `seed + r`.
+    pub seed: u64,
+    /// Apply Appendix-F quantization before seeding (costs are still
+    /// evaluated on the original coordinates).
+    pub quantize: bool,
+    /// Dataset cache directory.
+    pub data_dir: PathBuf,
+    /// AOT artifacts directory (PJRT backend; falls back to native).
+    pub artifacts_dir: PathBuf,
+    pub rejection: RejectionConfig,
+    pub afkmc2: Afkmc2Config,
+    /// Lloyd refinement iterations after seeding (0 = seeding only, as in
+    /// the paper's tables).
+    pub lloyd_iters: usize,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            datasets: vec![DatasetId::KddSim],
+            profile: Profile::Scaled,
+            algorithms: SeedingAlgorithm::paper_order().to_vec(),
+            ks: paper_k_grid(),
+            reps: 5,
+            seed: 42,
+            quantize: true,
+            data_dir: PathBuf::from("data"),
+            artifacts_dir: PathBuf::from("artifacts"),
+            rejection: RejectionConfig::default(),
+            afkmc2: Afkmc2Config::default(),
+            lloyd_iters: 0,
+        }
+    }
+}
+
+/// The paper's k grid (Tables 1–8).
+pub fn paper_k_grid() -> Vec<usize> {
+    vec![100, 500, 1000, 2000, 3000, 5000]
+}
+
+/// A k grid scaled to a dataset size: keep the paper's shape but cap at
+/// n/10 so smoke/scaled profiles stay meaningful.
+pub fn k_grid_for(n: usize) -> Vec<usize> {
+    paper_k_grid()
+        .into_iter()
+        .filter(|&k| k <= n / 10)
+        .collect::<Vec<_>>()
+        .into_iter()
+        .collect()
+}
+
+/// Default k grid for the table benches: `k_grid_for(n)` additionally
+/// capped at 2000 — the `Θ(mk^2 d)` AFK-MC2 baseline dominates a default
+/// `cargo bench` run beyond that. `--full` (or `--ks`) restores the
+/// paper's complete grid.
+pub fn bench_default_k_grid(n: usize) -> Vec<usize> {
+    k_grid_for(n).into_iter().filter(|&k| k <= 2000).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper_grid() {
+        let cfg = ExperimentConfig::default();
+        assert_eq!(cfg.ks, vec![100, 500, 1000, 2000, 3000, 5000]);
+        assert_eq!(cfg.reps, 5);
+        assert_eq!(cfg.algorithms.len(), 5);
+    }
+
+    #[test]
+    fn k_grid_caps_at_n_over_10() {
+        assert_eq!(k_grid_for(60_000), vec![100, 500, 1000, 2000, 3000, 5000]);
+        assert_eq!(k_grid_for(12_000), vec![100, 500, 1000]);
+        assert_eq!(k_grid_for(500), Vec::<usize>::new());
+    }
+}

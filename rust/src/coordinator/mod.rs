@@ -1,0 +1,11 @@
+//! The experiment coordinator — the L3 "system" layer that turns the
+//! algorithm library into the paper's evaluation: configuration, the
+//! sweep runner (dataset × algorithm × k × repetition grid), and the
+//! table emitters that regenerate Tables 1–8.
+
+pub mod config;
+pub mod runner;
+pub mod tables;
+
+pub use config::ExperimentConfig;
+pub use runner::{run_grid, CellKey, CellResult, GridResults};

@@ -1,0 +1,240 @@
+//! The sweep runner: executes the (dataset × algorithm × k × rep) grid,
+//! timing seeding wall-clock and evaluating costs, and aggregates the
+//! per-cell statistics the table emitters render.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::config::ExperimentConfig;
+use crate::data::matrix::PointSet;
+use crate::data::quantize::quantize;
+use crate::data::registry::DatasetId;
+use crate::lloyd::{lloyd, LloydConfig};
+use crate::metrics::Stats;
+use crate::rng::Pcg64;
+use crate::runtime::Backend;
+use crate::seeding::{
+    afkmc2::afkmc2, fastkmeanspp::fast_kmeanspp, kmeanspp::kmeanspp,
+    rejection::rejection_sampling, uniform::uniform_sampling, Seeding, SeedingAlgorithm,
+};
+
+/// Grid cell key.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct CellKey {
+    pub dataset: DatasetId,
+    pub algorithm: SeedingAlgorithm,
+    pub k: usize,
+}
+
+// Derive-free Ord support for the enums (they are small and fixed).
+impl PartialOrd for DatasetId {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for DatasetId {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (*self as u8).cmp(&(*other as u8))
+    }
+}
+impl PartialOrd for SeedingAlgorithm {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for SeedingAlgorithm {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (*self as u8).cmp(&(*other as u8))
+    }
+}
+
+/// Aggregated results for one grid cell over `reps` runs.
+#[derive(Clone, Debug, Default)]
+pub struct CellResult {
+    /// Seeding wall-clock seconds (init + select, as the paper times it).
+    pub seconds: Stats,
+    /// Seeding cost (k-means objective of the seed centers, original
+    /// coordinates).
+    pub cost: Stats,
+    /// Cost after Lloyd refinement (only if `lloyd_iters > 0`).
+    pub lloyd_cost: Stats,
+    /// Rejection-loop proposals per accepted center (Lemma 5.3 check).
+    pub proposals_per_center: Stats,
+}
+
+/// All cells of a sweep.
+#[derive(Clone, Debug, Default)]
+pub struct GridResults {
+    pub cells: BTreeMap<CellKey, CellResult>,
+    /// Backend used for cost evaluation.
+    pub backend_name: &'static str,
+}
+
+impl GridResults {
+    pub fn get(&self, dataset: DatasetId, algorithm: SeedingAlgorithm, k: usize) -> Option<&CellResult> {
+        self.cells.get(&CellKey {
+            dataset,
+            algorithm,
+            k,
+        })
+    }
+}
+
+/// Run one seeding with the per-algorithm config from `cfg`.
+pub fn run_seeding(
+    cfg: &ExperimentConfig,
+    algo: SeedingAlgorithm,
+    ps: &PointSet,
+    k: usize,
+    rng: &mut Pcg64,
+) -> Seeding {
+    match algo {
+        SeedingAlgorithm::KMeansPP => kmeanspp(ps, k, rng),
+        SeedingAlgorithm::FastKMeansPP => fast_kmeanspp(ps, k, &Default::default(), rng),
+        SeedingAlgorithm::Rejection => rejection_sampling(ps, k, &cfg.rejection, rng),
+        SeedingAlgorithm::RejectionExact => {
+            let mut rc = cfg.rejection.clone();
+            rc.oracle = crate::seeding::rejection::OracleKind::Exact;
+            rejection_sampling(ps, k, &rc, rng)
+        }
+        SeedingAlgorithm::Afkmc2 => afkmc2(ps, k, &cfg.afkmc2, rng),
+        SeedingAlgorithm::Uniform => uniform_sampling(ps, k, rng),
+        SeedingAlgorithm::KMeansPPGreedy => {
+            crate::seeding::kmeanspp::kmeanspp_greedy(ps, k, 5, rng)
+        }
+    }
+}
+
+/// Execute the whole grid. `progress` is called after every completed
+/// cell with a human-readable line (the CLI prints it; benches pass a
+/// no-op).
+pub fn run_grid<F: FnMut(&str)>(cfg: &ExperimentConfig, mut progress: F) -> Result<GridResults> {
+    let backend = Backend::auto(&cfg.artifacts_dir);
+    let mut results = GridResults {
+        backend_name: backend.name(),
+        ..Default::default()
+    };
+    for &dataset in &cfg.datasets {
+        let original = dataset.load_cached(&cfg.data_dir, cfg.profile, cfg.seed)?;
+        // Appendix-F quantization for seeding; costs on original coords.
+        let seed_space = if cfg.quantize {
+            let mut qrng = Pcg64::seed_from(cfg.seed ^ 0x5EED_0F00D);
+            quantize(&original, &mut qrng).points
+        } else {
+            original.clone()
+        };
+        for &k in &cfg.ks {
+            if k > original.len() {
+                continue;
+            }
+            for &algo in &cfg.algorithms {
+                let mut cell = CellResult::default();
+                for rep in 0..cfg.reps {
+                    let mut rng = Pcg64::seed_from(
+                        cfg.seed
+                            .wrapping_add(rep as u64)
+                            .wrapping_add((k as u64) << 20)
+                            ^ (algo as u64) << 56,
+                    );
+                    let t0 = Instant::now();
+                    let seeding = run_seeding(cfg, algo, &seed_space, k, &mut rng);
+                    let secs = t0.elapsed().as_secs_f64();
+                    cell.seconds.push(secs);
+                    // Cost on ORIGINAL coordinates via the chosen indices.
+                    let centers = original.gather(&seeding.indices);
+                    cell.cost.push(backend.cost(&original, &centers)?);
+                    if seeding.stats.proposals > 0 {
+                        cell.proposals_per_center
+                            .push(seeding.stats.proposals as f64 / k.max(1) as f64);
+                    }
+                    if cfg.lloyd_iters > 0 {
+                        let res = lloyd(
+                            &original,
+                            &centers,
+                            &LloydConfig {
+                                max_iters: cfg.lloyd_iters,
+                                tol: 1e-6,
+                            },
+                            &backend,
+                        )?;
+                        cell.lloyd_cost.push(*res.history.last().unwrap());
+                    }
+                }
+                progress(&format!(
+                    "{} {} k={}: {:.3}s cost={:.4e}",
+                    dataset.name(),
+                    algo.name(),
+                    k,
+                    cell.seconds.mean(),
+                    cell.cost.mean()
+                ));
+                results.cells.insert(
+                    CellKey {
+                        dataset,
+                        algorithm: algo,
+                        k,
+                    },
+                    cell,
+                );
+            }
+        }
+    }
+    Ok(results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::registry::Profile;
+
+    fn tiny_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            datasets: vec![DatasetId::KddSim],
+            profile: Profile::Smoke,
+            algorithms: vec![SeedingAlgorithm::Uniform, SeedingAlgorithm::FastKMeansPP],
+            ks: vec![10, 20],
+            reps: 2,
+            seed: 7,
+            data_dir: std::env::temp_dir().join("fkmpp_runner_test"),
+            artifacts_dir: std::path::PathBuf::from("/nonexistent"),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn grid_produces_all_cells() {
+        let cfg = tiny_cfg();
+        let res = run_grid(&cfg, |_| {}).unwrap();
+        assert_eq!(res.cells.len(), 4);
+        assert_eq!(res.backend_name, "native");
+        for (key, cell) in &res.cells {
+            assert_eq!(cell.seconds.count(), 2, "{key:?}");
+            assert_eq!(cell.cost.count(), 2);
+            assert!(cell.cost.mean() > 0.0);
+        }
+    }
+
+    #[test]
+    fn lloyd_refinement_reduces_cost() {
+        let mut cfg = tiny_cfg();
+        cfg.algorithms = vec![SeedingAlgorithm::Uniform];
+        cfg.ks = vec![15];
+        cfg.reps = 2;
+        cfg.lloyd_iters = 5;
+        let res = run_grid(&cfg, |_| {}).unwrap();
+        let cell = res
+            .get(DatasetId::KddSim, SeedingAlgorithm::Uniform, 15)
+            .unwrap();
+        assert!(cell.lloyd_cost.mean() <= cell.cost.mean());
+    }
+
+    #[test]
+    fn oversized_k_skipped() {
+        let mut cfg = tiny_cfg();
+        cfg.ks = vec![10, 1_000_000];
+        let res = run_grid(&cfg, |_| {}).unwrap();
+        assert_eq!(res.cells.len(), 2); // only k=10 cells
+    }
+}

@@ -1,0 +1,234 @@
+//! Table emitters: render a [`GridResults`] as the paper's Tables 1–8.
+//!
+//! * Tables 1–3 — running time of each algorithm divided by the running
+//!   time of FASTK-MEANS++ (per dataset);
+//! * Tables 4–6 — seeding costs (scaled by the paper's per-table factor);
+//! * Tables 7–8 — variance of the costs over the repetitions.
+//!
+//! Output is GitHub-flavored markdown (also fine on a terminal).
+
+use crate::coordinator::runner::GridResults;
+use crate::data::registry::DatasetId;
+use crate::seeding::SeedingAlgorithm;
+
+/// Paper cost-scale factors: Table 4 ×10³, Table 5 ×10⁵, Table 6 ×10⁴.
+pub fn cost_scale(dataset: DatasetId) -> f64 {
+    match dataset {
+        DatasetId::KddSim => 1e3,
+        DatasetId::SongSim => 1e5,
+        DatasetId::CensusSim => 1e4,
+    }
+}
+
+fn header(ks: &[usize]) -> String {
+    let mut s = String::from("| Algorithm |");
+    for k in ks {
+        s.push_str(&format!(" k = {k} |"));
+    }
+    s.push('\n');
+    s.push_str("|---|");
+    for _ in ks {
+        s.push_str("---|");
+    }
+    s.push('\n');
+    s
+}
+
+/// Tables 1–3: runtime ratios vs FASTK-MEANS++.
+pub fn runtime_table(res: &GridResults, dataset: DatasetId, ks: &[usize]) -> String {
+    let mut out = format!(
+        "### Table {}: running time / FASTK-MEANS++ ({})\n\n",
+        dataset.runtime_table(),
+        dataset.name()
+    );
+    out.push_str(&header(ks));
+    let algos = [
+        SeedingAlgorithm::FastKMeansPP,
+        SeedingAlgorithm::Rejection,
+        SeedingAlgorithm::KMeansPP,
+        SeedingAlgorithm::Afkmc2,
+    ];
+    for algo in algos {
+        let mut row = format!("| {} |", algo.paper_name());
+        for &k in ks {
+            let base = res
+                .get(dataset, SeedingAlgorithm::FastKMeansPP, k)
+                .map(|c| c.seconds.mean());
+            let cell = res.get(dataset, algo, k).map(|c| c.seconds.mean());
+            match (base, cell) {
+                (Some(b), Some(c)) if b > 0.0 => {
+                    row.push_str(&format!(" {:.2}x |", c / b));
+                }
+                _ => row.push_str(" — |"),
+            }
+        }
+        out.push_str(&row);
+        out.push('\n');
+    }
+    out
+}
+
+/// Tables 4–6: seeding costs, scaled by the paper's factor.
+pub fn cost_table(res: &GridResults, dataset: DatasetId, ks: &[usize]) -> String {
+    let scale = cost_scale(dataset);
+    let mut out = format!(
+        "### Table {}: seeding cost / {:.0e} ({})\n\n",
+        dataset.cost_table(),
+        scale,
+        dataset.name()
+    );
+    out.push_str(&header(ks));
+    for algo in SeedingAlgorithm::paper_order() {
+        let mut row = format!("| {} |", algo.paper_name());
+        for &k in ks {
+            match res.get(dataset, algo, k) {
+                Some(c) => row.push_str(&format!(" {:.0} |", c.cost.mean() / scale)),
+                None => row.push_str(" — |"),
+            }
+        }
+        out.push_str(&row);
+        out.push('\n');
+    }
+    out
+}
+
+/// Tables 7–8: variance of the costs over the repetitions (paper scales:
+/// Song ×10⁵, KDD ×10²).
+pub fn variance_table(res: &GridResults, dataset: DatasetId, ks: &[usize]) -> String {
+    let (table_no, scale) = match dataset {
+        DatasetId::SongSim => (7, 1e5),
+        DatasetId::KddSim => (8, 1e2),
+        DatasetId::CensusSim => (0, 1e4), // not in the paper; extra
+    };
+    let label = if table_no == 0 {
+        format!("### Extra: cost variance ({})\n\n", dataset.name())
+    } else {
+        format!(
+            "### Table {}: cost variance / {:.0e} ({})\n\n",
+            table_no,
+            scale,
+            dataset.name()
+        )
+    };
+    let mut out = label;
+    out.push_str(&header(ks));
+    for algo in SeedingAlgorithm::paper_order() {
+        let mut row = format!("| {} |", algo.paper_name());
+        for &k in ks {
+            match res.get(dataset, algo, k) {
+                // The paper reports the variance of the scaled costs: with
+                // costs reported as cost/S, variance scales by 1/S^2; it
+                // then scales the variance column by its own factor. We
+                // report var(cost / cost_scale) / scale to match
+                // magnitudes.
+                Some(c) => {
+                    let cs = cost_scale(dataset);
+                    let v = c.cost.sample_variance() / (cs * cs);
+                    row.push_str(&format!(" {:.0} |", v / scale * 1e5));
+                }
+                None => row.push_str(" — |"),
+            }
+        }
+        out.push_str(&row);
+        out.push('\n');
+    }
+    out
+}
+
+/// Lemma 5.3 diagnostic: proposals per accepted center for the rejection
+/// sampler (expected `O(c^2 d^2)`, far smaller in practice).
+pub fn rejection_diagnostics(res: &GridResults, dataset: DatasetId, ks: &[usize]) -> String {
+    let mut out = format!(
+        "### Rejection-loop proposals per accepted center ({})\n\n",
+        dataset.name()
+    );
+    out.push_str(&header(ks));
+    for algo in [SeedingAlgorithm::Rejection, SeedingAlgorithm::RejectionExact] {
+        let mut row = format!("| {} |", algo.paper_name());
+        let mut any = false;
+        for &k in ks {
+            match res.get(dataset, algo, k) {
+                Some(c) if c.proposals_per_center.count() > 0 => {
+                    any = true;
+                    row.push_str(&format!(" {:.2} |", c.proposals_per_center.mean()));
+                }
+                _ => row.push_str(" — |"),
+            }
+        }
+        if any {
+            out.push_str(&row);
+            out.push('\n');
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::runner::{CellKey, CellResult};
+    use crate::metrics::Stats;
+
+    fn fake_results() -> GridResults {
+        let mut res = GridResults::default();
+        let mut add = |algo, k: usize, secs: f64, cost: f64| {
+            let mut cell = CellResult::default();
+            let mut s = Stats::new();
+            s.push(secs);
+            cell.seconds = s;
+            let mut c = Stats::new();
+            c.push(cost);
+            c.push(cost * 1.1);
+            cell.cost = c;
+            res.cells.insert(
+                CellKey {
+                    dataset: DatasetId::KddSim,
+                    algorithm: algo,
+                    k,
+                },
+                cell,
+            );
+        };
+        add(SeedingAlgorithm::FastKMeansPP, 100, 1.0, 3.0e7);
+        add(SeedingAlgorithm::KMeansPP, 100, 6.58, 2.4e7);
+        add(SeedingAlgorithm::Rejection, 100, 1.04, 2.9e7);
+        add(SeedingAlgorithm::Afkmc2, 100, 3.8, 2.5e7);
+        add(SeedingAlgorithm::Uniform, 100, 0.01, 1.5e8);
+        res
+    }
+
+    #[test]
+    fn runtime_table_shows_ratios() {
+        let res = fake_results();
+        let t = runtime_table(&res, DatasetId::KddSim, &[100]);
+        assert!(t.contains("Table 1"));
+        assert!(t.contains("| FASTK-MEANS++ | 1.00x |"), "{t}");
+        assert!(t.contains("| K-MEANS++ | 6.58x |"), "{t}");
+    }
+
+    #[test]
+    fn cost_table_scales() {
+        let res = fake_results();
+        let t = cost_table(&res, DatasetId::KddSim, &[100]);
+        assert!(t.contains("Table 4"));
+        // 3.0e7 avg with the 1.1 factor -> 31500 at x10^3 scale
+        assert!(t.contains("31500") || t.contains("31499"), "{t}");
+        assert!(t.contains("UNIFORMSAMPLING"));
+    }
+
+    #[test]
+    fn variance_table_renders() {
+        let res = fake_results();
+        let t = variance_table(&res, DatasetId::KddSim, &[100]);
+        assert!(t.contains("Table 8"));
+        assert!(t.contains("K-MEANS++"));
+    }
+
+    #[test]
+    fn missing_cells_render_dashes() {
+        let res = GridResults::default();
+        let t = runtime_table(&res, DatasetId::SongSim, &[100, 500]);
+        assert!(t.contains("—"));
+        assert!(t.contains("Table 2"));
+    }
+}

@@ -1,0 +1,152 @@
+//! Binary + CSV point-set IO.
+//!
+//! The canonical on-disk format is `.fbin`, the little-endian layout used
+//! by the ANN-benchmarks ecosystem: `u32 n, u32 d, then n*d f32`. Benches
+//! materialize the synthetic datasets once (`fkmpp datasets gen`) so the
+//! timed region measures seeding, not generation. CSV import exists so
+//! users can feed the real UCI files when they have them.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::matrix::PointSet;
+
+/// Write `.fbin` (u32 n, u32 d, n*d little-endian f32).
+pub fn write_fbin(ps: &PointSet, path: &Path) -> Result<()> {
+    let f = File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(&(ps.len() as u32).to_le_bytes())?;
+    w.write_all(&(ps.dim() as u32).to_le_bytes())?;
+    // Bulk write: f32 -> LE bytes chunk-wise to avoid a 4x copy blowup.
+    let mut buf = Vec::with_capacity(1 << 20);
+    for v in ps.flat() {
+        buf.extend_from_slice(&v.to_le_bytes());
+        if buf.len() >= (1 << 20) {
+            w.write_all(&buf)?;
+            buf.clear();
+        }
+    }
+    w.write_all(&buf)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read `.fbin`.
+pub fn read_fbin(path: &Path) -> Result<PointSet> {
+    let f = File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut r = BufReader::new(f);
+    let mut hdr = [0u8; 8];
+    r.read_exact(&mut hdr).context("fbin header")?;
+    let n = u32::from_le_bytes(hdr[0..4].try_into().unwrap()) as usize;
+    let d = u32::from_le_bytes(hdr[4..8].try_into().unwrap()) as usize;
+    if d == 0 || n.checked_mul(d).is_none() {
+        bail!("corrupt fbin header n={n} d={d}");
+    }
+    let mut bytes = vec![0u8; n * d * 4];
+    r.read_exact(&mut bytes)
+        .with_context(|| format!("fbin body: expected {} floats", n * d))?;
+    let data = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok(PointSet::from_flat(n, d, data))
+}
+
+/// Read a headerless numeric CSV (comma or whitespace separated), the
+/// format the UCI dumps use after stripping ids/labels.
+pub fn read_csv(path: &Path) -> Result<PointSet> {
+    let f = File::open(path).with_context(|| format!("open {path:?}"))?;
+    let r = BufReader::new(f);
+    let mut rows: Vec<Vec<f32>> = Vec::new();
+    for (lineno, line) in r.lines().enumerate() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            continue;
+        }
+        let row: Result<Vec<f32>, _> = trimmed
+            .split(|c: char| c == ',' || c.is_whitespace())
+            .filter(|t| !t.is_empty())
+            .map(|t| t.parse::<f32>())
+            .collect();
+        let row = row.with_context(|| format!("{path:?}:{} parse", lineno + 1))?;
+        if let Some(first) = rows.first() {
+            if row.len() != first.len() {
+                bail!(
+                    "{path:?}:{}: ragged row ({} cols, expected {})",
+                    lineno + 1,
+                    row.len(),
+                    first.len()
+                );
+            }
+        }
+        rows.push(row);
+    }
+    if rows.is_empty() {
+        bail!("{path:?}: no data rows");
+    }
+    Ok(PointSet::from_rows(&rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gaussian_mixture, SynthSpec};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("fkmpp_io_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn fbin_roundtrip() {
+        let ps = gaussian_mixture(
+            &SynthSpec {
+                n: 257,
+                d: 13,
+                k_true: 4,
+                ..Default::default()
+            },
+            9,
+        );
+        let p = tmp("roundtrip.fbin");
+        write_fbin(&ps, &p).unwrap();
+        let back = read_fbin(&p).unwrap();
+        assert_eq!(ps, back);
+    }
+
+    #[test]
+    fn fbin_rejects_truncated() {
+        let p = tmp("trunc.fbin");
+        std::fs::write(&p, [5u8, 0, 0, 0, 2, 0, 0, 0, 1, 2, 3]).unwrap();
+        assert!(read_fbin(&p).is_err());
+    }
+
+    #[test]
+    fn csv_parses_mixed_separators() {
+        let p = tmp("pts.csv");
+        std::fs::write(&p, "# comment\n1.0,2.0,3.0\n4 5 6\n\n7.5,8.5,9.5\n").unwrap();
+        let ps = read_csv(&p).unwrap();
+        assert_eq!(ps.len(), 3);
+        assert_eq!(ps.dim(), 3);
+        assert_eq!(ps.row(1), &[4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn csv_rejects_ragged() {
+        let p = tmp("ragged.csv");
+        std::fs::write(&p, "1,2\n3,4,5\n").unwrap();
+        assert!(read_csv(&p).is_err());
+    }
+
+    #[test]
+    fn csv_rejects_empty() {
+        let p = tmp("empty.csv");
+        std::fs::write(&p, "# nothing\n").unwrap();
+        assert!(read_csv(&p).is_err());
+    }
+}

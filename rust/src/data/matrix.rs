@@ -1,0 +1,272 @@
+//! `PointSet`: the dense row-major `n x d` f32 container every layer
+//! shares, plus the squared-distance kernels that dominate the exact-`D^2`
+//! baseline's runtime.
+//!
+//! The distance kernel is the crate's native hot path (the PJRT artifacts
+//! are the other implementation of the same contract). It is written to
+//! autovectorize: contiguous rows, a 4-lane unrolled accumulator, and no
+//! bounds checks in the inner loop (checked slices hoisted out).
+
+/// Dense row-major point matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PointSet {
+    n: usize,
+    d: usize,
+    data: Vec<f32>,
+}
+
+impl PointSet {
+    /// Build from a flat row-major buffer. Panics if `data.len() != n*d`.
+    pub fn from_flat(n: usize, d: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), n * d, "flat buffer length mismatch");
+        assert!(d > 0, "dimension must be positive");
+        PointSet { n, d, data }
+    }
+
+    /// Build from row slices.
+    pub fn from_rows(rows: &[Vec<f32>]) -> Self {
+        assert!(!rows.is_empty());
+        let d = rows[0].len();
+        let mut data = Vec::with_capacity(rows.len() * d);
+        for r in rows {
+            assert_eq!(r.len(), d, "ragged rows");
+            data.extend_from_slice(r);
+        }
+        PointSet {
+            n: rows.len(),
+            d,
+            data,
+        }
+    }
+
+    /// All-zeros point set.
+    pub fn zeros(n: usize, d: usize) -> Self {
+        PointSet {
+            n,
+            d,
+            data: vec![0.0; n * d],
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    #[inline]
+    pub fn flat(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn flat_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Gather the given rows into a new `PointSet` (e.g. chosen centers).
+    pub fn gather(&self, idx: &[usize]) -> PointSet {
+        let mut data = Vec::with_capacity(idx.len() * self.d);
+        for &i in idx {
+            data.extend_from_slice(self.row(i));
+        }
+        PointSet {
+            n: idx.len(),
+            d: self.d,
+            data,
+        }
+    }
+
+    /// Squared Euclidean distance between row `i` and an arbitrary point.
+    #[inline]
+    pub fn d2_to(&self, i: usize, q: &[f32]) -> f32 {
+        d2(self.row(i), q)
+    }
+
+    /// Squared Euclidean distance between rows `i` and `j`.
+    #[inline]
+    pub fn d2_rows(&self, i: usize, j: usize) -> f32 {
+        d2(self.row(i), self.row(j))
+    }
+
+    /// Coordinate-wise min/max over the whole set (bounding box).
+    pub fn bounding_box(&self) -> (Vec<f32>, Vec<f32>) {
+        let mut lo = vec![f32::INFINITY; self.d];
+        let mut hi = vec![f32::NEG_INFINITY; self.d];
+        for i in 0..self.n {
+            let r = self.row(i);
+            for j in 0..self.d {
+                lo[j] = lo[j].min(r[j]);
+                hi[j] = hi[j].max(r[j]);
+            }
+        }
+        (lo, hi)
+    }
+
+    /// Upper bound on the max pairwise distance within a factor 2
+    /// (paper §2: max distance from an arbitrary point, times 2).
+    /// Runs in `O(nd)`.
+    pub fn max_dist_upper_bound(&self) -> f32 {
+        if self.n <= 1 {
+            return 0.0;
+        }
+        let pivot = self.row(0).to_vec();
+        let mut max_d2 = 0.0f32;
+        for i in 1..self.n {
+            max_d2 = max_d2.max(self.d2_to(i, &pivot));
+        }
+        2.0 * max_d2.sqrt()
+    }
+
+    /// Exact minimum pairwise distance — `O(n^2 d)`; test/diagnostic only.
+    pub fn min_pairwise_dist(&self) -> f32 {
+        let mut best = f32::INFINITY;
+        for i in 0..self.n {
+            for j in (i + 1)..self.n {
+                best = best.min(self.d2_rows(i, j));
+            }
+        }
+        best.sqrt()
+    }
+}
+
+/// Squared Euclidean distance between two equal-length slices.
+///
+/// 4-way unrolled so LLVM vectorizes it into fused multiply-subtract
+/// lanes; this single function is the native hot path of the exact
+/// baseline, Lloyd and cost evaluation.
+#[inline]
+pub fn d2(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    // SAFETY-free formulation: slice patterns keep bounds checks out of
+    // the loop body.
+    let (a4, a_rest) = a.split_at(chunks * 4);
+    let (b4, b_rest) = b.split_at(chunks * 4);
+    for (ca, cb) in a4.chunks_exact(4).zip(b4.chunks_exact(4)) {
+        let d0 = ca[0] - cb[0];
+        let d1 = ca[1] - cb[1];
+        let d2_ = ca[2] - cb[2];
+        let d3 = ca[3] - cb[3];
+        s0 += d0 * d0;
+        s1 += d1 * d1;
+        s2 += d2_ * d2_;
+        s3 += d3 * d3;
+    }
+    let mut tail = 0.0f32;
+    for (x, y) in a_rest.iter().zip(b_rest) {
+        let d = x - y;
+        tail += d * d;
+    }
+    (s0 + s1) + (s2 + s3) + tail
+}
+
+/// Plain (non-squared) Euclidean distance.
+#[inline]
+pub fn dist(a: &[f32], b: &[f32]) -> f32 {
+    d2(a, b).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn construction_and_access() {
+        let ps = PointSet::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(ps.len(), 2);
+        assert_eq!(ps.dim(), 2);
+        assert_eq!(ps.row(1), &[3.0, 4.0]);
+        assert_eq!(ps.flat(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "flat buffer length mismatch")]
+    fn from_flat_checks_len() {
+        PointSet::from_flat(2, 3, vec![0.0; 5]);
+    }
+
+    #[test]
+    fn d2_matches_naive_all_lengths() {
+        let mut rng = Pcg64::seed_from(1);
+        for len in [1usize, 2, 3, 4, 5, 7, 8, 13, 64, 65, 96] {
+            let a: Vec<f32> = (0..len).map(|_| rng.next_gaussian() as f32).collect();
+            let b: Vec<f32> = (0..len).map(|_| rng.next_gaussian() as f32).collect();
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| (x - y) * (x - y)).sum();
+            let got = d2(&a, &b);
+            assert!(
+                (got - naive).abs() <= 1e-4 * naive.max(1.0),
+                "len={len} got={got} naive={naive}"
+            );
+        }
+    }
+
+    #[test]
+    fn d2_zero_for_identical() {
+        let a = vec![1.5f32; 31];
+        assert_eq!(d2(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn gather_selects_rows() {
+        let ps = PointSet::from_rows(&[vec![0.0], vec![1.0], vec![2.0]]);
+        let g = ps.gather(&[2, 0]);
+        assert_eq!(g.row(0), &[2.0]);
+        assert_eq!(g.row(1), &[0.0]);
+    }
+
+    #[test]
+    fn bounding_box() {
+        let ps = PointSet::from_rows(&[vec![1.0, -5.0], vec![-2.0, 7.0]]);
+        let (lo, hi) = ps.bounding_box();
+        assert_eq!(lo, vec![-2.0, -5.0]);
+        assert_eq!(hi, vec![1.0, 7.0]);
+    }
+
+    #[test]
+    fn max_dist_upper_bound_is_valid() {
+        let mut rng = Pcg64::seed_from(2);
+        let rows: Vec<Vec<f32>> = (0..50)
+            .map(|_| (0..4).map(|_| rng.next_gaussian() as f32).collect())
+            .collect();
+        let ps = PointSet::from_rows(&rows);
+        let ub = ps.max_dist_upper_bound();
+        // brute-force true max
+        let mut true_max = 0.0f32;
+        for i in 0..50 {
+            for j in 0..50 {
+                true_max = true_max.max(ps.d2_rows(i, j).sqrt());
+            }
+        }
+        assert!(ub >= true_max, "ub={ub} true={true_max}");
+        assert!(ub <= 2.0 * true_max + 1e-5);
+    }
+
+    #[test]
+    fn min_pairwise() {
+        let ps = PointSet::from_rows(&[vec![0.0], vec![10.0], vec![10.5]]);
+        assert!((ps.min_pairwise_dist() - 0.5).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,13 @@
+//! Datasets: the point-set container, synthetic generators that stand in
+//! for the paper's UCI datasets (offline image — see DESIGN.md §2), binary
+//! IO, the Appendix-F aspect-ratio quantization, JL random projection, and
+//! the named-dataset registry used by the CLI/benches.
+
+pub mod io;
+pub mod matrix;
+pub mod project;
+pub mod quantize;
+pub mod registry;
+pub mod synth;
+
+pub use matrix::PointSet;

@@ -1,0 +1,129 @@
+//! Johnson–Lindenstrauss random projection (§5 remark).
+//!
+//! The paper notes that for large `d` one first applies an oblivious
+//! dimensionality reduction to `O(log n)` dimensions (Becchetti et al. /
+//! Makarychev et al.) which preserves the cost of every clustering up to a
+//! constant. We implement the dense Gaussian JL map `x -> Gx / sqrt(t)`
+//! with `G ~ N(0,1)^{t x d}` — `O(ndt)` once, independent of `k`.
+
+use crate::data::matrix::PointSet;
+use crate::rng::Pcg64;
+
+/// Target dimension for a JL map preserving k-means costs to within
+/// `1 ± eps` (constant from the standard JL bound, `8 ln n / eps^2`).
+pub fn jl_target_dim(n: usize, eps: f64) -> usize {
+    let n = n.max(2) as f64;
+    ((8.0 * n.ln()) / (eps * eps)).ceil() as usize
+}
+
+/// Dense Gaussian random projection to `t` dimensions.
+pub struct JlProjection {
+    /// `t x d` row-major Gaussian matrix, pre-scaled by `1/sqrt(t)`.
+    g: Vec<f32>,
+    pub from_dim: usize,
+    pub to_dim: usize,
+}
+
+impl JlProjection {
+    pub fn new(from_dim: usize, to_dim: usize, rng: &mut Pcg64) -> Self {
+        assert!(to_dim > 0);
+        let scale = 1.0 / (to_dim as f64).sqrt();
+        let g = (0..from_dim * to_dim)
+            .map(|_| (rng.next_gaussian() * scale) as f32)
+            .collect();
+        JlProjection {
+            g,
+            from_dim,
+            to_dim,
+        }
+    }
+
+    /// Project a single point.
+    pub fn apply(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.from_dim);
+        let mut out = vec![0.0f32; self.to_dim];
+        // Row-major over output dims: g[t*d .. t*d+d] . x
+        for (t, o) in out.iter_mut().enumerate() {
+            let row = &self.g[t * self.from_dim..(t + 1) * self.from_dim];
+            let mut acc = 0.0f32;
+            for (a, b) in row.iter().zip(x) {
+                acc += a * b;
+            }
+            *o = acc;
+        }
+        out
+    }
+
+    /// Project a whole point set.
+    pub fn apply_all(&self, ps: &PointSet) -> PointSet {
+        assert_eq!(ps.dim(), self.from_dim);
+        let mut data = Vec::with_capacity(ps.len() * self.to_dim);
+        for i in 0..ps.len() {
+            data.extend_from_slice(&self.apply(ps.row(i)));
+        }
+        PointSet::from_flat(ps.len(), self.to_dim, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::matrix::d2;
+    use crate::data::synth::{gaussian_mixture, SynthSpec};
+
+    #[test]
+    fn target_dim_grows_with_n_and_eps() {
+        assert!(jl_target_dim(1_000_000, 0.5) > jl_target_dim(1_000, 0.5));
+        assert!(jl_target_dim(1_000, 0.1) > jl_target_dim(1_000, 0.5));
+    }
+
+    #[test]
+    fn preserves_distances_in_expectation() {
+        let ps = gaussian_mixture(
+            &SynthSpec {
+                n: 60,
+                d: 128,
+                k_true: 4,
+                ..Default::default()
+            },
+            11,
+        );
+        let mut rng = Pcg64::seed_from(12);
+        let proj = JlProjection::new(128, 64, &mut rng);
+        let pps = proj.apply_all(&ps);
+        assert_eq!(pps.dim(), 64);
+        // Pairwise distance distortion concentrated around 1.
+        let mut ratios = Vec::new();
+        for i in 0..30 {
+            for j in (i + 1)..30 {
+                let orig = d2(ps.row(i), ps.row(j));
+                if orig > 0.0 {
+                    ratios.push((d2(pps.row(i), pps.row(j)) / orig) as f64);
+                }
+            }
+        }
+        let mean = ratios.iter().sum::<f64>() / ratios.len() as f64;
+        assert!((mean - 1.0).abs() < 0.15, "mean distortion {mean}");
+        // No extreme blowups at t=64.
+        assert!(ratios.iter().all(|&r| r > 0.2 && r < 3.0));
+    }
+
+    #[test]
+    fn apply_matches_apply_all() {
+        let ps = gaussian_mixture(
+            &SynthSpec {
+                n: 5,
+                d: 10,
+                k_true: 2,
+                ..Default::default()
+            },
+            13,
+        );
+        let mut rng = Pcg64::seed_from(14);
+        let proj = JlProjection::new(10, 4, &mut rng);
+        let all = proj.apply_all(&ps);
+        for i in 0..5 {
+            assert_eq!(all.row(i), proj.apply(ps.row(i)).as_slice());
+        }
+    }
+}

@@ -1,0 +1,170 @@
+//! Appendix-F aspect-ratio bounding.
+//!
+//! The paper's `O(log Delta)` terms assume a bounded ratio between the max
+//! and min pairwise distance. Appendix F gives the practical recipe, which
+//! we implement verbatim:
+//!
+//! 1. estimate the optimum by sampling 20 random centers and evaluating
+//!    the k-means cost of that solution;
+//! 2. divide by `n * d * 200` — the per-coordinate error budget (0.5% of
+//!    the estimate in total) — to get the *scaling factor*;
+//! 3. divide every coordinate by the scaling factor and truncate to an
+//!    integer.
+//!
+//! After this, `log(Delta)` is `O(log(nd))` and tree heights are bounded.
+
+use crate::data::matrix::PointSet;
+use crate::rng::Pcg64;
+
+/// Result of quantization: the rescaled points plus the factor used
+/// (callers multiply distances by `scale` to get back to input units;
+/// costs scale by `scale^2`).
+#[derive(Clone, Debug)]
+pub struct Quantized {
+    pub points: PointSet,
+    pub scale: f64,
+}
+
+/// Estimate the k-means optimum cost by evaluating `sample_k` uniformly
+/// random centers (Appendix F step 1).
+pub fn estimate_opt_cost(ps: &PointSet, sample_k: usize, rng: &mut Pcg64) -> f64 {
+    let k = sample_k.min(ps.len()).max(1);
+    let mut idx: Vec<usize> = Vec::with_capacity(k);
+    while idx.len() < k {
+        let cand = rng.index(ps.len());
+        if !idx.contains(&cand) {
+            idx.push(cand);
+        }
+    }
+    let centers = ps.gather(&idx);
+    let mut total = 0.0f64;
+    for i in 0..ps.len() {
+        let mut best = f32::INFINITY;
+        for c in 0..centers.len() {
+            best = best.min(ps.d2_to(i, centers.row(c)));
+        }
+        total += best as f64;
+    }
+    total
+}
+
+/// Appendix-F quantization. `error_divisor` is the paper's 200.
+pub fn quantize(ps: &PointSet, rng: &mut Pcg64) -> Quantized {
+    quantize_with(ps, 20, 200.0, rng)
+}
+
+/// Parameterized version (tests/ablations).
+pub fn quantize_with(
+    ps: &PointSet,
+    sample_k: usize,
+    error_divisor: f64,
+    rng: &mut Pcg64,
+) -> Quantized {
+    let est = estimate_opt_cost(ps, sample_k, rng);
+    // Per-coordinate error budget; est can be 0 for degenerate inputs
+    // (all points identical) — keep scale 1 in that case.
+    let denom = (ps.len() * ps.dim()) as f64 * error_divisor;
+    // The cost estimate is in squared units; the per-coordinate grid step
+    // must be in linear units.
+    let scale = if est > 0.0 { (est / denom).sqrt() } else { 1.0 };
+    let mut out = ps.clone();
+    for v in out.flat_mut() {
+        *v = (*v as f64 / scale).trunc() as f32;
+    }
+    Quantized { points: out, scale }
+}
+
+/// Aspect ratio `Delta` = max pairwise distance / min *nonzero* pairwise
+/// distance. Exact (`O(n^2 d)`) — diagnostics and tests only.
+pub fn aspect_ratio_exact(ps: &PointSet) -> f64 {
+    let mut max_d2 = 0.0f32;
+    let mut min_d2 = f32::INFINITY;
+    for i in 0..ps.len() {
+        for j in (i + 1)..ps.len() {
+            let d2 = ps.d2_rows(i, j);
+            max_d2 = max_d2.max(d2);
+            if d2 > 0.0 {
+                min_d2 = min_d2.min(d2);
+            }
+        }
+    }
+    if min_d2.is_infinite() || min_d2 == 0.0 {
+        return 1.0;
+    }
+    (max_d2 as f64 / min_d2 as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gaussian_mixture, SynthSpec};
+
+    #[test]
+    fn quantized_coordinates_are_integers() {
+        let ps = gaussian_mixture(
+            &SynthSpec {
+                n: 500,
+                d: 8,
+                k_true: 5,
+                ..Default::default()
+            },
+            1,
+        );
+        let mut rng = Pcg64::seed_from(2);
+        let q = quantize(&ps, &mut rng);
+        for v in q.points.flat() {
+            assert_eq!(v.fract(), 0.0, "coordinate {v} not integral");
+        }
+        assert!(q.scale > 0.0);
+    }
+
+    #[test]
+    fn quantization_preserves_cost_within_budget() {
+        let ps = gaussian_mixture(
+            &SynthSpec {
+                n: 800,
+                d: 6,
+                k_true: 8,
+                center_spread: 20.0,
+                ..Default::default()
+            },
+            3,
+        );
+        let mut rng = Pcg64::seed_from(4);
+        let q = quantize(&ps, &mut rng);
+        // Distances in rescaled space, multiplied back by scale, should be
+        // close to the originals (relative to the dataset radius).
+        let radius = ps.max_dist_upper_bound() as f64;
+        for (i, j) in [(0usize, 1usize), (5, 100), (17, 400), (2, 799)] {
+            let orig = (ps.d2_rows(i, j) as f64).sqrt();
+            let quant = (q.points.d2_rows(i, j) as f64).sqrt() * q.scale;
+            assert!(
+                (orig - quant).abs() < 0.01 * radius + q.scale * (ps.dim() as f64).sqrt() * 2.0,
+                "orig={orig} quant={quant} scale={}",
+                q.scale
+            );
+        }
+    }
+
+    #[test]
+    fn degenerate_identical_points() {
+        let ps = PointSet::from_rows(&vec![vec![3.0f32, 3.0]; 10]);
+        let mut rng = Pcg64::seed_from(5);
+        let q = quantize(&ps, &mut rng);
+        assert_eq!(q.scale, 1.0);
+    }
+
+    #[test]
+    fn estimate_opt_cost_zero_when_k_covers_all() {
+        let ps = PointSet::from_rows(&[vec![0.0f32], vec![5.0], vec![9.0]]);
+        let mut rng = Pcg64::seed_from(6);
+        let est = estimate_opt_cost(&ps, 3, &mut rng);
+        assert_eq!(est, 0.0);
+    }
+
+    #[test]
+    fn aspect_ratio_simple() {
+        let ps = PointSet::from_rows(&[vec![0.0f32], vec![1.0], vec![10.0]]);
+        assert!((aspect_ratio_exact(&ps) - 10.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,193 @@
+//! Named-dataset registry: maps the CLI/bench `--dataset` names to
+//! generators + size profiles, and caches materialized datasets on disk
+//! (`data/*.fbin`) so repeated bench runs skip generation.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+use crate::data::io::{read_fbin, write_fbin};
+use crate::data::matrix::PointSet;
+use crate::data::synth;
+
+/// Size profile: the paper's full n, or a scaled n that fits a laptop-
+/// class time budget (DESIGN.md §2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Profile {
+    /// Full paper-scale n.
+    Paper,
+    /// Scaled-down n (default for benches in this session).
+    Scaled,
+    /// Tiny — integration tests and smoke runs.
+    Smoke,
+}
+
+impl Profile {
+    pub fn parse(s: &str) -> Result<Profile> {
+        Ok(match s {
+            "paper" => Profile::Paper,
+            "scaled" => Profile::Scaled,
+            "smoke" => Profile::Smoke,
+            _ => bail!("unknown profile {s:?} (paper|scaled|smoke)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Profile::Paper => "paper",
+            Profile::Scaled => "scaled",
+            Profile::Smoke => "smoke",
+        }
+    }
+}
+
+/// The three paper datasets (synthetic stand-ins) + extras for tests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DatasetId {
+    KddSim,
+    SongSim,
+    CensusSim,
+}
+
+impl DatasetId {
+    pub fn parse(s: &str) -> Result<DatasetId> {
+        Ok(match s {
+            "kdd_sim" | "kdd" => DatasetId::KddSim,
+            "song_sim" | "song" => DatasetId::SongSim,
+            "census_sim" | "census" => DatasetId::CensusSim,
+            _ => bail!("unknown dataset {s:?} (kdd_sim|song_sim|census_sim)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DatasetId::KddSim => "kdd_sim",
+            DatasetId::SongSim => "song_sim",
+            DatasetId::CensusSim => "census_sim",
+        }
+    }
+
+    pub fn all() -> [DatasetId; 3] {
+        [DatasetId::KddSim, DatasetId::SongSim, DatasetId::CensusSim]
+    }
+
+    /// Paper table this dataset's runtime/cost rows correspond to.
+    pub fn runtime_table(self) -> u8 {
+        match self {
+            DatasetId::KddSim => 1,
+            DatasetId::SongSim => 2,
+            DatasetId::CensusSim => 3,
+        }
+    }
+
+    pub fn cost_table(self) -> u8 {
+        match self {
+            DatasetId::KddSim => 4,
+            DatasetId::SongSim => 5,
+            DatasetId::CensusSim => 6,
+        }
+    }
+
+    /// n for a profile (paper sizes from §6; scaled sizes fit the session
+    /// budget; smoke is for tests).
+    pub fn n(self, profile: Profile) -> usize {
+        match (self, profile) {
+            (DatasetId::KddSim, Profile::Paper) => 311_029,
+            (DatasetId::SongSim, Profile::Paper) => 515_345,
+            (DatasetId::CensusSim, Profile::Paper) => 2_458_285,
+            (DatasetId::KddSim, Profile::Scaled) => 60_000,
+            (DatasetId::SongSim, Profile::Scaled) => 80_000,
+            (DatasetId::CensusSim, Profile::Scaled) => 120_000,
+            (DatasetId::KddSim, Profile::Smoke) => 3_000,
+            (DatasetId::SongSim, Profile::Smoke) => 3_000,
+            (DatasetId::CensusSim, Profile::Smoke) => 3_000,
+        }
+    }
+
+    pub fn dim(self) -> usize {
+        match self {
+            DatasetId::KddSim => 74,
+            DatasetId::SongSim => 90,
+            DatasetId::CensusSim => 68,
+        }
+    }
+
+    /// Generate in memory (deterministic in seed).
+    pub fn generate(self, profile: Profile, seed: u64) -> PointSet {
+        let n = self.n(profile);
+        match self {
+            DatasetId::KddSim => synth::kdd_sim(n, seed),
+            DatasetId::SongSim => synth::song_sim(n, seed),
+            DatasetId::CensusSim => synth::census_sim(n, seed),
+        }
+    }
+
+    fn cache_path(self, dir: &Path, profile: Profile, seed: u64) -> PathBuf {
+        dir.join(format!(
+            "{}_{}_s{}.fbin",
+            self.name(),
+            profile.name(),
+            seed
+        ))
+    }
+
+    /// Load from the on-disk cache, generating + writing it on first use.
+    pub fn load_cached(self, dir: &Path, profile: Profile, seed: u64) -> Result<PointSet> {
+        let path = self.cache_path(dir, profile, seed);
+        if path.exists() {
+            return read_fbin(&path);
+        }
+        let ps = self.generate(profile, seed);
+        std::fs::create_dir_all(dir)?;
+        write_fbin(&ps, &path)?;
+        Ok(ps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for id in DatasetId::all() {
+            assert_eq!(DatasetId::parse(id.name()).unwrap(), id);
+        }
+        assert!(DatasetId::parse("nope").is_err());
+        assert_eq!(Profile::parse("paper").unwrap(), Profile::Paper);
+        assert!(Profile::parse("x").is_err());
+    }
+
+    #[test]
+    fn smoke_generation_shapes() {
+        for id in DatasetId::all() {
+            let ps = id.generate(Profile::Smoke, 7);
+            assert_eq!(ps.len(), 3_000);
+            assert_eq!(ps.dim(), id.dim());
+        }
+    }
+
+    #[test]
+    fn table_numbers_match_paper() {
+        assert_eq!(DatasetId::KddSim.runtime_table(), 1);
+        assert_eq!(DatasetId::SongSim.runtime_table(), 2);
+        assert_eq!(DatasetId::CensusSim.runtime_table(), 3);
+        assert_eq!(DatasetId::KddSim.cost_table(), 4);
+        assert_eq!(DatasetId::SongSim.cost_table(), 5);
+        assert_eq!(DatasetId::CensusSim.cost_table(), 6);
+    }
+
+    #[test]
+    fn cache_roundtrip() {
+        let dir = std::env::temp_dir().join("fkmpp_registry_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let a = DatasetId::KddSim
+            .load_cached(&dir, Profile::Smoke, 3)
+            .unwrap();
+        // second load hits the cache and must be byte-identical
+        let b = DatasetId::KddSim
+            .load_cached(&dir, Profile::Smoke, 3)
+            .unwrap();
+        assert_eq!(a, b);
+    }
+}

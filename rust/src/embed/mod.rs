@@ -1,0 +1,9 @@
+//! Tree embeddings (paper §2–§4): the single random-shift grid tree and
+//! the 3-tree *multi-tree* embedding with the `MultiTreeOpen` /
+//! `MultiTreeSample` data structure.
+
+pub mod multitree;
+pub mod tree;
+
+pub use multitree::{MultiTree, MultiTreeConfig};
+pub use tree::ShiftTree;

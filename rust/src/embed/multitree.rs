@@ -1,0 +1,401 @@
+//! Multi-tree embedding + the `MultiTreeOpen` / `MultiTreeSample` data
+//! structure (paper §3–§4).
+//!
+//! Three (configurable) independently-shifted grid trees; the multi-tree
+//! distance is the *minimum* of the three tree distances, which bounds the
+//! expected squared-distance distortion by `O(d^2)` (Lemma 3.1) — a single
+//! tree has `Omega(n)` squared distortion.
+//!
+//! The shared data structure maintains the §4 invariants for the set `S`
+//! of opened centers:
+//!
+//! 1. `w_x = MULTITREEDIST(x, S)^2` for every point `x`;
+//! 2. every sample-tree node's weight is the sum of its leaf weights;
+//! 3. a tree node is marked iff its subtree contains an opened point.
+//!
+//! `open(x)` walks each tree from `x`'s leaf up to the first marked
+//! ancestor, marks the path, and min-updates the weights of exactly the
+//! points whose tree distance to `S` shrank — each tree node is marked
+//! once over the whole run, giving the `O(n log(dΔ) log n)` total of
+//! Lemma 4.1. `sample()` is Algorithm 2 on the sample-tree, `O(log n)`.
+
+use crate::data::matrix::PointSet;
+use crate::embed::tree::{ShiftTree, NIL};
+use crate::rng::Pcg64;
+use crate::sampletree::SampleTree;
+
+/// Multi-tree configuration.
+#[derive(Clone, Debug)]
+pub struct MultiTreeConfig {
+    /// Number of independently shifted trees (the paper fixes 3; the
+    /// trees ablation sweeps this).
+    pub num_trees: usize,
+}
+
+impl Default for MultiTreeConfig {
+    fn default() -> Self {
+        MultiTreeConfig { num_trees: 3 }
+    }
+}
+
+/// The multi-tree embedding plus the open/sample data structure.
+pub struct MultiTree {
+    trees: Vec<ShiftTree>,
+    /// Invariant 1: `w[x] = MULTITREEDIST(x, S)^2`.
+    weights: Vec<f64>,
+    /// Invariant 2 lives inside the sample-tree.
+    sample_tree: SampleTree,
+    /// Upper bound `M = 16 d MAXDIST^2` on any squared multi-tree distance.
+    m_bound: f64,
+    /// Opened centers, in open order.
+    opened: Vec<u32>,
+    /// Scratch path buffer (allocation-free `open`).
+    path: Vec<u32>,
+}
+
+impl MultiTree {
+    /// `MultiTreeInit()`: build the trees and initialize all weights to
+    /// `M` (so the first sample is uniform). `O(n d H)` per tree.
+    pub fn init(ps: &PointSet, cfg: &MultiTreeConfig, rng: &mut Pcg64) -> Self {
+        assert!(cfg.num_trees >= 1);
+        // Fork the per-tree rngs sequentially (deterministic in `rng`),
+        // then build the independent trees in parallel.
+        let mut tree_rngs: Vec<Pcg64> = (0..cfg.num_trees).map(|t| rng.fork(t as u64)).collect();
+        let mut trees: Vec<Option<ShiftTree>> = (0..cfg.num_trees).map(|_| None).collect();
+        std::thread::scope(|s| {
+            for (slot, tree_rng) in trees.iter_mut().zip(tree_rngs.iter_mut()) {
+                s.spawn(move || {
+                    *slot = Some(ShiftTree::build(ps, tree_rng));
+                });
+            }
+        });
+        let trees: Vec<ShiftTree> = trees.into_iter().map(|t| t.unwrap()).collect();
+        let d = ps.dim() as f64;
+        let m_bound = trees
+            .iter()
+            .map(|t| 16.0 * d * t.max_dist as f64 * t.max_dist as f64)
+            .fold(0.0f64, f64::max)
+            .max(f64::MIN_POSITIVE);
+        MultiTree {
+            weights: vec![m_bound; ps.len()],
+            sample_tree: SampleTree::with_uniform_weight(ps.len(), m_bound),
+            trees,
+            m_bound,
+            opened: Vec::new(),
+            path: Vec::new(),
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.weights.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.weights.is_empty()
+    }
+
+    /// `w_x = MULTITREEDIST(x, S)^2` (= `M` while `S` is empty).
+    #[inline]
+    pub fn weight(&self, x: usize) -> f64 {
+        self.weights[x]
+    }
+
+    /// Σ_y MULTITREEDIST(y, S)^2 — the D^2 normalizer.
+    #[inline]
+    pub fn total_weight(&self) -> f64 {
+        self.sample_tree.total()
+    }
+
+    /// The `M` upper bound (`MULTITREEDIST(x, ∅)^2`).
+    #[inline]
+    pub fn m_bound(&self) -> f64 {
+        self.m_bound
+    }
+
+    pub fn opened(&self) -> &[u32] {
+        &self.opened
+    }
+
+    pub fn num_trees(&self) -> usize {
+        self.trees.len()
+    }
+
+    /// `MULTITREESAMPLE()` (Algorithm 2): a point with probability
+    /// `w_x / Σ w_y`, `O(log n)`. `None` once every point has weight 0.
+    #[inline]
+    pub fn sample(&self, rng: &mut Pcg64) -> Option<usize> {
+        self.sample_tree.sample(rng)
+    }
+
+    /// `MULTITREEOPEN(x)` (Algorithm 1): add `x` to `S`, restore all
+    /// three invariants.
+    pub fn open(&mut self, x: usize) {
+        self.opened.push(x as u32);
+        for ti in 0..self.trees.len() {
+            // Step 2-3: leaf -> up, stop at root or below a marked parent.
+            let mut path = std::mem::take(&mut self.path);
+            path.clear();
+            {
+                let tree = &self.trees[ti];
+                let mut v = tree.leaf_of[x];
+                loop {
+                    path.push(v);
+                    let parent = tree.nodes[v as usize].parent;
+                    if parent == NIL || tree.nodes[parent as usize].marked {
+                        break;
+                    }
+                    v = parent;
+                }
+            }
+            // Step 4: mark the path.
+            for &v in &path {
+                self.trees[ti].nodes[v as usize].marked = true;
+            }
+            // Step 5-9: min-update exactly the points whose tree distance
+            // to S dropped: P_T(v_0), then P_T(v_i) \ P_T(v_{i-1}).
+            let weights = &mut self.weights;
+            let sample_tree = &mut self.sample_tree;
+            let tree = &self.trees[ti];
+            let mut prev = NIL;
+            for &v in &path {
+                let h = tree.nodes[v as usize].height as usize;
+                let dist = if prev == NIL {
+                    0.0 // the leaf: coincident points, distance 0
+                } else {
+                    tree.dist_at_height(h)
+                };
+                let d2 = dist * dist;
+                tree.for_each_point_in_subtree(v, prev, &mut |y| {
+                    let yy = y as usize;
+                    if d2 < weights[yy] {
+                        weights[yy] = d2;
+                        sample_tree.update(yy, d2);
+                    }
+                });
+                prev = v;
+            }
+            self.path = path;
+        }
+    }
+
+    /// `MULTITREEDIST(p, q)` — min over the trees. `O(H)`; used by the
+    /// brute-force invariant checks and the distortion ablation, not on
+    /// the hot path.
+    pub fn multi_tree_dist(&self, p: usize, q: usize) -> f64 {
+        self.trees
+            .iter()
+            .map(|t| t.tree_dist(p, q))
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Brute-force `MULTITREEDIST(p, S)^2` for invariant tests.
+    pub fn multi_tree_dist_to_opened_sq(&self, p: usize) -> f64 {
+        if self.opened.is_empty() {
+            return self.m_bound;
+        }
+        let d = self
+            .opened
+            .iter()
+            .map(|&s| self.multi_tree_dist(p, s as usize))
+            .fold(f64::INFINITY, f64::min);
+        d * d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::matrix::d2 as euclid_d2;
+    use crate::data::synth::{gaussian_mixture, uniform_box, SynthSpec};
+
+    fn build(n: usize, d: usize, seed: u64) -> (PointSet, MultiTree) {
+        let ps = gaussian_mixture(
+            &SynthSpec {
+                n,
+                d,
+                k_true: 6,
+                ..Default::default()
+            },
+            seed,
+        );
+        let mut rng = Pcg64::seed_from(seed ^ 0xABCD);
+        let mt = MultiTree::init(&ps, &MultiTreeConfig::default(), &mut rng);
+        (ps, mt)
+    }
+
+    #[test]
+    fn init_uniform_weights() {
+        let (ps, mt) = build(64, 5, 1);
+        assert_eq!(mt.len(), 64);
+        for x in 0..ps.len() {
+            assert_eq!(mt.weight(x), mt.m_bound());
+        }
+        assert!((mt.total_weight() - 64.0 * mt.m_bound()).abs() < 1e-6 * mt.total_weight());
+    }
+
+    #[test]
+    fn open_zeroes_center_weight() {
+        let (_, mut mt) = build(100, 4, 2);
+        mt.open(17);
+        assert_eq!(mt.weight(17), 0.0);
+        assert_eq!(mt.opened(), &[17]);
+    }
+
+    #[test]
+    fn invariants_after_each_open() {
+        // Invariant 1 checked against brute force after every open.
+        let (ps, mut mt) = build(120, 5, 3);
+        let mut rng = Pcg64::seed_from(4);
+        for step in 0..12 {
+            let x = rng.index(ps.len());
+            mt.open(x);
+            for y in 0..ps.len() {
+                let want = mt.multi_tree_dist_to_opened_sq(y);
+                let got = mt.weight(y);
+                assert!(
+                    (got - want).abs() <= 1e-6 * want.max(1.0),
+                    "step={step} y={y} got={got} want={want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn marks_follow_invariant_3() {
+        let (ps, mut mt) = build(80, 4, 5);
+        let mut rng = Pcg64::seed_from(6);
+        for _ in 0..6 {
+            mt.open(rng.index(ps.len()));
+        }
+        // A node is marked iff its subtree contains an opened point.
+        for tree in &mt.trees {
+            for (id, node) in tree.nodes.iter().enumerate() {
+                let mut contains_open = false;
+                tree.for_each_point_in_subtree(id as u32, NIL, &mut |p| {
+                    if mt.opened.contains(&p) {
+                        contains_open = true;
+                    }
+                });
+                assert_eq!(
+                    node.marked, contains_open,
+                    "tree node {id} marked={} contains={}",
+                    node.marked, contains_open
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn weights_dominate_euclidean_d2() {
+        // MULTITREEDIST >= DIST (Lemma 3.1), so w_y >= DIST(y,S)^2.
+        let (ps, mut mt) = build(150, 6, 7);
+        let mut rng = Pcg64::seed_from(8);
+        let mut opened = Vec::new();
+        for _ in 0..10 {
+            let x = rng.index(ps.len());
+            mt.open(x);
+            opened.push(x);
+        }
+        for y in 0..ps.len() {
+            let true_d2 = opened
+                .iter()
+                .map(|&s| euclid_d2(ps.row(y), ps.row(s)) as f64)
+                .fold(f64::INFINITY, f64::min);
+            assert!(
+                mt.weight(y) + 1e-6 >= true_d2,
+                "y={y} w={} true={true_d2}",
+                mt.weight(y)
+            );
+        }
+    }
+
+    #[test]
+    fn expected_multitree_distortion_is_moderate() {
+        // Lemma 3.1: E[MULTITREEDIST^2] <= 48 d^2 DIST^2. Empirically the
+        // mean over pairs should respect a comfortable multiple of that.
+        let ps = uniform_box(200, 4, 100.0, 9);
+        let mut rng = Pcg64::seed_from(10);
+        let mt = MultiTree::init(&ps, &MultiTreeConfig::default(), &mut rng);
+        let d = ps.dim() as f64;
+        let mut ratio_sum = 0.0;
+        let mut count = 0;
+        let mut rng2 = Pcg64::seed_from(11);
+        for _ in 0..500 {
+            let (i, j) = (rng2.index(200), rng2.index(200));
+            let dd = euclid_d2(ps.row(i), ps.row(j)) as f64;
+            if dd == 0.0 {
+                continue;
+            }
+            let md = mt.multi_tree_dist(i, j);
+            ratio_sum += md * md / dd;
+            count += 1;
+        }
+        let mean_ratio = ratio_sum / count as f64;
+        assert!(
+            mean_ratio <= 96.0 * d * d,
+            "mean sq distortion {mean_ratio} vs bound {}",
+            48.0 * d * d
+        );
+        assert!(mean_ratio >= 1.0, "embedding must not contract");
+    }
+
+    #[test]
+    fn sample_respects_weights_after_opens() {
+        let (ps, mut mt) = build(50, 3, 12);
+        mt.open(0);
+        mt.open(25);
+        let total = mt.total_weight();
+        if total == 0.0 {
+            return; // degenerate: all coincide
+        }
+        let mut rng = Pcg64::seed_from(13);
+        let mut counts = vec![0usize; ps.len()];
+        let draws = 100_000;
+        for _ in 0..draws {
+            counts[mt.sample(&mut rng).unwrap()] += 1;
+        }
+        assert_eq!(counts[0], 0, "opened center must never be sampled");
+        assert_eq!(counts[25], 0);
+        for y in 0..ps.len() {
+            let want = mt.weight(y) / total;
+            let got = counts[y] as f64 / draws as f64;
+            assert!(
+                (got - want).abs() < 0.01 + want * 0.2,
+                "y={y} got={got} want={want}"
+            );
+        }
+    }
+
+    #[test]
+    fn all_opened_total_weight_zero() {
+        let (ps, mut mt) = build(20, 3, 14);
+        for x in 0..ps.len() {
+            mt.open(x);
+        }
+        assert!(mt.total_weight() <= 1e-9);
+        let mut rng = Pcg64::seed_from(15);
+        assert_eq!(mt.sample(&mut rng), None);
+    }
+
+    #[test]
+    fn single_tree_config() {
+        let ps = gaussian_mixture(
+            &SynthSpec {
+                n: 40,
+                d: 3,
+                k_true: 2,
+                ..Default::default()
+            },
+            16,
+        );
+        let mut rng = Pcg64::seed_from(17);
+        let mut mt = MultiTree::init(&ps, &MultiTreeConfig { num_trees: 1 }, &mut rng);
+        mt.open(5);
+        for y in 0..ps.len() {
+            let want = mt.multi_tree_dist_to_opened_sq(y);
+            assert!((mt.weight(y) - want).abs() <= 1e-6 * want.max(1.0));
+        }
+    }
+}

@@ -1,0 +1,445 @@
+//! Single random-shift grid tree (the paper's §2 "tree embedding",
+//! a la Indyk '04).
+//!
+//! Construction (verbatim from the paper):
+//! * compute `MAXDIST`, an upper bound on the max pairwise distance within
+//!   a factor 2 (`O(nd)`: twice the max distance to an arbitrary pivot);
+//! * draw one random shift `s_j in [0, MAXDIST)` per coordinate;
+//! * the root (height 0) is an axis-aligned cube of side `2*MAXDIST`
+//!   containing all shifted points; each level halves the side; a node is
+//!   a non-empty grid cell; recursion stops when a cell holds a single
+//!   point (or only coincident points).
+//!
+//! `TREEDIST(p, q)` depends only on the height of the lowest common
+//! ancestor `i` and the (virtual) common leaf height `H`:
+//!
+//! ```text
+//!   TREEDIST(p,q) = 2 * sqrt(d) * MAXDIST * (2^(1-i) - 2^(1-H))
+//! ```
+//!
+//! (sum of the geometric edge weights from height `i` down to `H`, twice).
+//! Singleton cells are real leaves; conceptually they continue as a chain
+//! of degree-1 nodes down to height `H`, which only affects the constant
+//! `2^(1-H)` term, so we never materialize the chain.
+//!
+//! The grid cells at consecutive heights are nested by construction
+//! (fixed origin, halving side), so the parent of a cell is its
+//! half-resolution cell — no explicit geometry is stored, only the node
+//! forest with child lists, which `MultiTree` walks during
+//! `MultiTreeOpen`.
+
+use std::collections::HashMap;
+
+use crate::data::matrix::PointSet;
+use crate::rng::{splitmix64, Pcg64};
+
+/// Sentinel for "no node".
+pub const NIL: u32 = u32::MAX;
+
+/// Hard cap on tree height — 2*MAXDIST/2^60 underflows any f32 gap, so
+/// this is unreachable for distinct points; it guards degenerate inputs.
+const MAX_HEIGHT: usize = 60;
+
+/// One node of the shift tree.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub parent: u32,
+    pub first_child: u32,
+    pub next_sibling: u32,
+    /// Height in the embedding (root = 0).
+    pub height: u16,
+    /// Leaf payload: index of the first point in this cell, `NIL` for
+    /// internal nodes. Coincident points share a leaf (see `leaf_points`).
+    pub point: u32,
+    /// Marked flag used by `MultiTreeOpen` (invariant 3 of §4).
+    pub marked: bool,
+}
+
+/// A built random-shift grid tree over a point set.
+pub struct ShiftTree {
+    pub nodes: Vec<Node>,
+    /// Leaf node id for every point.
+    pub leaf_of: Vec<u32>,
+    /// Points per leaf (coincident points share one leaf).
+    pub leaf_points: HashMap<u32, Vec<u32>>,
+    /// Upper bound on max pairwise distance used for the grid.
+    pub max_dist: f32,
+    /// `max_dist` as f64 (cached for the hot distance formula).
+    max_dist_f64: f64,
+    /// `sqrt(d)` cached.
+    sqrt_d: f64,
+    /// Virtual common leaf height `H` (>= deepest real leaf height + 1).
+    pub height: usize,
+}
+
+impl ShiftTree {
+    /// Build with a fresh random shift drawn from `rng`.
+    ///
+    /// `O(n d H)` for `H` levels: each level recomputes one grid
+    /// coordinate per point dimension and buckets by hashed cell id.
+    pub fn build(ps: &PointSet, rng: &mut Pcg64) -> Self {
+        let max_dist = ps.max_dist_upper_bound().max(f32::MIN_POSITIVE);
+        let d = ps.dim();
+        // Random shift per coordinate in [0, MAXDIST).
+        let shift: Vec<f64> = (0..d).map(|_| rng.next_f64() * max_dist as f64).collect();
+        // Root cube origin: pivot (point 0) minus MAXDIST/2 per coordinate
+        // guarantees every shifted point lies in [0, 2*MAXDIST)^d.
+        let origin: Vec<f64> = (0..d)
+            .map(|j| ps.row(0)[j] as f64 - 0.5 * max_dist as f64)
+            .collect();
+
+        // Fixed-point normalized coordinates, computed ONCE (O(nd) float
+        // work): fp in [0, 2^FP_BITS) such that the grid cell of point i
+        // in dim j at height h is `fp >> (FP_BITS - h)`. Each level then
+        // costs only shifts/masks instead of float mul + floor + mix
+        // (the §Perf log records a ~4x build speedup from this).
+        const FP_BITS: u32 = 60;
+        let span = 2.0 * max_dist as f64;
+        let inv_span = 1.0 / span;
+        let scale = (1u64 << FP_BITS) as f64;
+        let mut fp = vec![0u64; ps.len() * d];
+        for i in 0..ps.len() {
+            let row = ps.row(i);
+            let out = &mut fp[i * d..(i + 1) * d];
+            for j in 0..d {
+                let t = (row[j] as f64 + shift[j] - origin[j]) * inv_span;
+                out[j] = ((t * scale) as u64).min((1u64 << FP_BITS) - 1);
+            }
+        }
+        let words = d.div_ceil(64);
+
+        let mut nodes = Vec::with_capacity(2 * ps.len());
+        let mut leaf_of = vec![NIL; ps.len()];
+        let mut leaf_points: HashMap<u32, Vec<u32>> = HashMap::new();
+
+        // Root holds all points.
+        nodes.push(Node {
+            parent: NIL,
+            first_child: NIL,
+            next_sibling: NIL,
+            height: 0,
+            point: NIL,
+            marked: false,
+        });
+
+        // Iterative level-by-level split. `groups`: (node id, point ids).
+        let all: Vec<u32> = (0..ps.len() as u32).collect();
+        let mut groups: Vec<(u32, Vec<u32>)> = vec![(0, all)];
+        let mut height = 1usize;
+        let mut deepest = 1usize;
+        let mut bit_words = vec![0u64; words];
+        while !groups.is_empty() && height <= MAX_HEIGHT.min(FP_BITS as usize) {
+            let bit_shift = FP_BITS - height as u32;
+            let mut next_groups = Vec::new();
+            for (parent_id, pts) in groups {
+                // Bucket by this level's NEW grid bit per dimension
+                // (within a parent cell, the child cell is determined by
+                // exactly those d bits), packed into u64 words.
+                let mut cells: HashMap<u64, Vec<u32>> = HashMap::with_capacity(pts.len());
+                for &p in &pts {
+                    let coords = &fp[p as usize * d..(p as usize + 1) * d];
+                    bit_words.iter_mut().for_each(|w| *w = 0);
+                    for (j, &c) in coords.iter().enumerate() {
+                        bit_words[j >> 6] |= ((c >> bit_shift) & 1) << (j & 63);
+                    }
+                    let mut h = 0xcbf2_9ce4_8422_2325u64;
+                    for &w in &bit_words {
+                        h = splitmix64(h ^ w);
+                    }
+                    cells.entry(h).or_default().push(p);
+                }
+                // One child per non-empty cell; order children
+                // deterministically (by min point id) for reproducibility.
+                let mut children: Vec<Vec<u32>> = cells.into_values().collect();
+                children.sort_by_key(|v| *v.iter().min().unwrap());
+                for pts_in_cell in children {
+                    let id = nodes.len() as u32;
+                    let parent = &mut nodes[parent_id as usize];
+                    let sibling = parent.first_child;
+                    parent.first_child = id;
+                    nodes.push(Node {
+                        parent: parent_id,
+                        first_child: NIL,
+                        next_sibling: sibling,
+                        height: height as u16,
+                        point: NIL,
+                        marked: false,
+                    });
+                    deepest = deepest.max(height);
+                    let singleton = pts_in_cell.len() == 1
+                        || all_coincident(ps, &pts_in_cell)
+                        || height >= MAX_HEIGHT.min(FP_BITS as usize);
+                    if singleton {
+                        nodes[id as usize].point = pts_in_cell[0];
+                        for &p in &pts_in_cell {
+                            leaf_of[p as usize] = id;
+                        }
+                        leaf_points.insert(id, pts_in_cell);
+                    } else {
+                        next_groups.push((id, pts_in_cell));
+                    }
+                }
+            }
+            groups = next_groups;
+            height += 1;
+        }
+
+        ShiftTree {
+            nodes,
+            leaf_of,
+            leaf_points,
+            max_dist,
+            sqrt_d: (d as f64).sqrt(),
+            // Virtual common leaf height: one below the deepest real
+            // split, so fdist(i) is positive for every real LCA height.
+            height: deepest + 1,
+            max_dist_f64: max_dist as f64,
+        }
+    }
+
+    /// Tree distance for an LCA at `height` (see module docs).
+    #[inline]
+    pub fn dist_at_height(&self, height: usize) -> f64 {
+        if height >= self.height {
+            return 0.0;
+        }
+        let h = self.height as i32;
+        let i = height as i32;
+        2.0 * self.sqrt_d
+            * self.max_dist_f64
+            * ((2.0f64).powi(1 - i) - (2.0f64).powi(1 - h))
+    }
+
+    /// `TREEDIST(p, q)`: walk both leaves to their LCA.
+    pub fn tree_dist(&self, p: usize, q: usize) -> f64 {
+        if p == q {
+            return 0.0;
+        }
+        let (mut a, mut b) = (self.leaf_of[p], self.leaf_of[q]);
+        if a == b {
+            return 0.0; // coincident points share a leaf
+        }
+        // Lift the deeper node until heights match, then lift both.
+        while self.nodes[a as usize].height > self.nodes[b as usize].height {
+            a = self.nodes[a as usize].parent;
+        }
+        while self.nodes[b as usize].height > self.nodes[a as usize].height {
+            b = self.nodes[b as usize].parent;
+        }
+        while a != b {
+            a = self.nodes[a as usize].parent;
+            b = self.nodes[b as usize].parent;
+        }
+        self.dist_at_height(self.nodes[a as usize].height as usize)
+    }
+
+    /// Number of nodes.
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Iterate the point ids in the subtree of `v` (DFS, child lists).
+    /// `skip` (if not `NIL`) prunes one child subtree — used by
+    /// `MultiTreeOpen` to enumerate `P_T(v_i) \ P_T(v_{i-1})`.
+    pub fn for_each_point_in_subtree<F: FnMut(u32)>(&self, v: u32, skip: u32, f: &mut F) {
+        // Explicit stack: trees can be deep and thin after quantization.
+        let mut stack = vec![v];
+        while let Some(u) = stack.pop() {
+            if u == skip {
+                continue;
+            }
+            let node = &self.nodes[u as usize];
+            if node.point != NIL {
+                for &p in &self.leaf_points[&u] {
+                    f(p);
+                }
+                continue;
+            }
+            let mut c = node.first_child;
+            while c != NIL {
+                stack.push(c);
+                c = self.nodes[c as usize].next_sibling;
+            }
+        }
+    }
+}
+
+fn all_coincident(ps: &PointSet, pts: &[u32]) -> bool {
+    let first = ps.row(pts[0] as usize);
+    pts[1..]
+        .iter()
+        .all(|&p| ps.row(p as usize) == first)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gaussian_mixture, uniform_box, SynthSpec};
+
+    fn small_set(seed: u64) -> PointSet {
+        gaussian_mixture(
+            &SynthSpec {
+                n: 200,
+                d: 6,
+                k_true: 5,
+                ..Default::default()
+            },
+            seed,
+        )
+    }
+
+    #[test]
+    fn every_point_has_a_leaf() {
+        let ps = small_set(1);
+        let mut rng = Pcg64::seed_from(2);
+        let t = ShiftTree::build(&ps, &mut rng);
+        for p in 0..ps.len() {
+            let leaf = t.leaf_of[p];
+            assert_ne!(leaf, NIL);
+            assert_ne!(t.nodes[leaf as usize].point, NIL);
+            assert!(t.leaf_points[&leaf].contains(&(p as u32)));
+        }
+    }
+
+    #[test]
+    fn parent_child_structure_consistent() {
+        let ps = small_set(3);
+        let mut rng = Pcg64::seed_from(4);
+        let t = ShiftTree::build(&ps, &mut rng);
+        for (id, node) in t.nodes.iter().enumerate() {
+            if node.parent != NIL {
+                let parent = &t.nodes[node.parent as usize];
+                assert_eq!(parent.height + 1, node.height, "node {id}");
+                // id must appear in parent's child list
+                let mut c = parent.first_child;
+                let mut found = false;
+                while c != NIL {
+                    if c as usize == id {
+                        found = true;
+                        break;
+                    }
+                    c = t.nodes[c as usize].next_sibling;
+                }
+                assert!(found, "node {id} missing from parent child list");
+            } else {
+                assert_eq!(id, 0, "only the root lacks a parent");
+            }
+        }
+    }
+
+    #[test]
+    fn tree_dist_dominates_euclidean() {
+        // Lemma 3.1 part 1 (exact, not probabilistic): DIST <= TREEDIST.
+        for seed in 0..5u64 {
+            let ps = small_set(10 + seed);
+            let mut rng = Pcg64::seed_from(20 + seed);
+            let t = ShiftTree::build(&ps, &mut rng);
+            let mut rng2 = Pcg64::seed_from(30 + seed);
+            for _ in 0..300 {
+                let (i, j) = (rng2.index(ps.len()), rng2.index(ps.len()));
+                let euclid = (ps.d2_rows(i, j) as f64).sqrt();
+                let td = t.tree_dist(i, j);
+                assert!(
+                    td + 1e-6 >= euclid,
+                    "seed={seed} i={i} j={j} tree={td} euclid={euclid}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tree_dist_symmetric_and_reflexive() {
+        let ps = small_set(5);
+        let mut rng = Pcg64::seed_from(6);
+        let t = ShiftTree::build(&ps, &mut rng);
+        assert_eq!(t.tree_dist(7, 7), 0.0);
+        for (i, j) in [(0usize, 1usize), (10, 150), (42, 43)] {
+            assert_eq!(t.tree_dist(i, j), t.tree_dist(j, i));
+        }
+    }
+
+    #[test]
+    fn tree_dist_bounded_by_m() {
+        // MULTITREEDIST(p,q)^2 <= M = 16 d MAXDIST^2 (paper §4).
+        let ps = small_set(7);
+        let mut rng = Pcg64::seed_from(8);
+        let t = ShiftTree::build(&ps, &mut rng);
+        let m = 16.0 * ps.dim() as f64 * (t.max_dist as f64) * (t.max_dist as f64);
+        for i in 0..50 {
+            for j in 0..50 {
+                let d = t.tree_dist(i, j);
+                assert!(d * d <= m * (1.0 + 1e-9), "d^2={} M={m}", d * d);
+            }
+        }
+    }
+
+    #[test]
+    fn expected_distortion_reasonable() {
+        // Lemma 3.1 part 2 gives E[min over 3 trees]^2 = O(d^2) DIST^2;
+        // a single tree has no such bound, but the *median over many
+        // builds* should still be within a polynomial factor. This is a
+        // sanity check that distances are not absurdly inflated.
+        let ps = uniform_box(100, 4, 100.0, 9);
+        let mut ratios = Vec::new();
+        for seed in 0..9u64 {
+            let mut rng = Pcg64::seed_from(40 + seed);
+            let t = ShiftTree::build(&ps, &mut rng);
+            let euclid = (ps.d2_rows(0, 1) as f64).sqrt();
+            ratios.push(t.tree_dist(0, 1) / euclid);
+        }
+        ratios.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = ratios[ratios.len() / 2];
+        assert!(median >= 1.0 - 1e-9);
+        assert!(median < 2_000.0, "median distortion {median}");
+    }
+
+    #[test]
+    fn coincident_points_share_leaf() {
+        let mut rows = vec![vec![1.0f32, 2.0]; 3];
+        rows.push(vec![50.0, 50.0]);
+        rows.push(vec![-30.0, 10.0]);
+        let ps = PointSet::from_rows(&rows);
+        let mut rng = Pcg64::seed_from(11);
+        let t = ShiftTree::build(&ps, &mut rng);
+        assert_eq!(t.leaf_of[0], t.leaf_of[1]);
+        assert_eq!(t.leaf_of[0], t.leaf_of[2]);
+        assert_eq!(t.tree_dist(0, 2), 0.0);
+        assert!(t.tree_dist(0, 3) > 0.0);
+    }
+
+    #[test]
+    fn subtree_enumeration_covers_all_points_once() {
+        let ps = small_set(13);
+        let mut rng = Pcg64::seed_from(14);
+        let t = ShiftTree::build(&ps, &mut rng);
+        let mut seen = vec![0u32; ps.len()];
+        t.for_each_point_in_subtree(0, NIL, &mut |p| seen[p as usize] += 1);
+        assert!(seen.iter().all(|&c| c == 1), "each point exactly once");
+        // Skipping a child subtree removes exactly its points.
+        let leaf = t.leaf_of[0];
+        let parent = t.nodes[leaf as usize].parent;
+        let mut seen2 = Vec::new();
+        t.for_each_point_in_subtree(parent, leaf, &mut |p| seen2.push(p));
+        assert!(!seen2.contains(&0));
+    }
+
+    #[test]
+    fn dist_at_height_monotone_decreasing() {
+        let ps = small_set(15);
+        let mut rng = Pcg64::seed_from(16);
+        let t = ShiftTree::build(&ps, &mut rng);
+        for h in 1..t.height {
+            assert!(t.dist_at_height(h) <= t.dist_at_height(h - 1));
+        }
+        assert_eq!(t.dist_at_height(t.height), 0.0);
+    }
+
+    #[test]
+    fn single_point_tree() {
+        let ps = PointSet::from_rows(&[vec![3.0f32, 4.0]]);
+        let mut rng = Pcg64::seed_from(17);
+        let t = ShiftTree::build(&ps, &mut rng);
+        assert_eq!(t.tree_dist(0, 0), 0.0);
+        assert_ne!(t.leaf_of[0], NIL);
+    }
+}

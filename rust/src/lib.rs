@@ -1,0 +1,76 @@
+//! # fastkmeanspp — Fast and Accurate k-means++ via Rejection Sampling
+//!
+//! A production-quality reproduction of Cohen-Addad, Lattanzi,
+//! Norouzi-Fard, Sohler & Svensson, *"Fast and Accurate k-means++ via
+//! Rejection Sampling"* (NeurIPS 2020).
+//!
+//! The library implements, from scratch:
+//!
+//! * the **random-shift grid (quadtree) embedding** and the 3-way
+//!   **multi-tree embedding** with its `O(d^2)` expected squared-distance
+//!   distortion ([`embed`]);
+//! * the **weighted sample-tree** supporting `O(log n)` weight updates and
+//!   `O(log n)` proportional sampling ([`sampletree`]);
+//! * `MultiTreeOpen` / `MultiTreeSample` and the near-linear-time
+//!   [`seeding::fastkmeanspp`] seeder (Algorithm 3);
+//! * a **monotone p-stable LSH** approximate-nearest-neighbor structure
+//!   (Theorem 5.1 / Appendix D) in [`lsh`];
+//! * the **rejection-sampling** seeder that emulates the exact `D^2`
+//!   distribution up to `c^2` ([`seeding::rejection`], Algorithm 4);
+//! * the paper's baselines: exact [`seeding::kmeanspp`],
+//!   [`seeding::afkmc2`] (Bachem et al. 2016) and
+//!   [`seeding::uniform`];
+//! * [`lloyd`] refinement and cost evaluation, with both a tuned native
+//!   path and an AOT-compiled JAX/Pallas path executed through PJRT
+//!   ([`runtime`]);
+//! * dataset generators/registry matching the paper's evaluation scale
+//!   ([`data`]) and the experiment [`coordinator`] that regenerates every
+//!   table of the paper.
+//!
+//! Python/JAX appears only at build time (`make artifacts`); the request
+//! path is pure rust.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use fastkmeanspp::prelude::*;
+//!
+//! let data = fastkmeanspp::data::synth::gaussian_mixture(
+//!     &SynthSpec { n: 10_000, d: 16, k_true: 50, ..SynthSpec::default() },
+//!     0xC0FFEE,
+//! );
+//! let mut rng = Pcg64::seed_from(42);
+//! let seeding = fastkmeanspp::seeding::rejection::rejection_sampling(
+//!     &data, 100, &RejectionConfig::default(), &mut rng,
+//! );
+//! let cost = fastkmeanspp::lloyd::cost_native(&data, &seeding.centers);
+//! println!("seeding cost = {cost}");
+//! ```
+
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod embed;
+pub mod lloyd;
+pub mod lsh;
+pub mod metrics;
+pub mod parallel;
+pub mod rng;
+pub mod runtime;
+pub mod sampletree;
+pub mod seeding;
+
+/// Convenience re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::data::matrix::PointSet;
+    pub use crate::data::synth::SynthSpec;
+    pub use crate::embed::multitree::{MultiTree, MultiTreeConfig};
+    pub use crate::lloyd::LloydConfig;
+    pub use crate::lsh::multiscale::MonotoneLsh;
+    pub use crate::metrics::Metrics;
+    pub use crate::rng::Pcg64;
+    pub use crate::sampletree::SampleTree;
+    pub use crate::seeding::{
+        afkmc2::Afkmc2Config, rejection::RejectionConfig, Seeding, SeedingAlgorithm,
+    };
+}

@@ -1,0 +1,207 @@
+//! Lloyd's local-improvement algorithm (Lloyd 1982) — the refinement the
+//! paper runs after seeding ("K-MEANS++ … combination of a randomized
+//! seeding with the classic local improvement algorithm").
+//!
+//! Iterations run on either backend ([`crate::runtime::Backend`]): the
+//! tuned native path or the AOT JAX/Pallas `lloyd_step` artifact via
+//! PJRT. Empty clusters are re-seeded with the point farthest from its
+//! assigned center (the standard repair).
+
+use crate::data::matrix::PointSet;
+use crate::runtime::{native, Backend};
+
+/// Lloyd configuration.
+#[derive(Clone, Debug)]
+pub struct LloydConfig {
+    /// Max iterations.
+    pub max_iters: usize,
+    /// Stop when the relative cost improvement falls below this.
+    pub tol: f64,
+}
+
+impl Default for LloydConfig {
+    fn default() -> Self {
+        LloydConfig {
+            max_iters: 20,
+            tol: 1e-4,
+        }
+    }
+}
+
+/// Result of a Lloyd run.
+#[derive(Clone, Debug)]
+pub struct LloydResult {
+    pub centers: PointSet,
+    /// Cost under the centers *before* each iteration, plus the final
+    /// cost: `history.len() == iterations + 1`.
+    pub history: Vec<f64>,
+    pub iterations: usize,
+}
+
+/// Convenience: k-means cost on the native backend.
+pub fn cost_native(ps: &PointSet, centers: &PointSet) -> f64 {
+    native::cost(ps, centers)
+}
+
+/// Run Lloyd iterations from `seed_centers` on `backend`.
+pub fn lloyd(
+    ps: &PointSet,
+    seed_centers: &PointSet,
+    cfg: &LloydConfig,
+    backend: &Backend,
+) -> anyhow::Result<LloydResult> {
+    let k = seed_centers.len();
+    let d = ps.dim();
+    let mut centers = seed_centers.clone();
+    let mut history = Vec::with_capacity(cfg.max_iters + 1);
+    let mut iterations = 0;
+    for _ in 0..cfg.max_iters {
+        let (sums, counts, cost) = backend.lloyd_step(ps, &centers)?;
+        history.push(cost);
+        // New centers = cluster means; empty clusters re-seeded below.
+        let mut next = PointSet::zeros(k, d);
+        let mut empties = Vec::new();
+        for j in 0..k {
+            if counts[j] == 0 {
+                empties.push(j);
+                next.row_mut(j).copy_from_slice(centers.row(j));
+            } else {
+                let row = next.row_mut(j);
+                for t in 0..d {
+                    row[t] = (sums[j * d + t] / counts[j] as f64) as f32;
+                }
+            }
+        }
+        if !empties.is_empty() {
+            // Re-seed each empty cluster with the point currently farthest
+            // from its center (one extra assignment pass).
+            let (_, mind2) = backend.assign(ps, &centers)?;
+            let mut order: Vec<usize> = (0..ps.len()).collect();
+            order.sort_by(|&a, &b| mind2[b].partial_cmp(&mind2[a]).unwrap());
+            for (slot, j) in empties.into_iter().enumerate() {
+                if slot < order.len() {
+                    next.row_mut(j).copy_from_slice(ps.row(order[slot]));
+                }
+            }
+        }
+        centers = next;
+        iterations += 1;
+        // Convergence on relative improvement.
+        if history.len() >= 2 {
+            let prev = history[history.len() - 2];
+            let cur = history[history.len() - 1];
+            if prev.is_finite() && prev > 0.0 && (prev - cur) / prev < cfg.tol {
+                break;
+            }
+        }
+    }
+    history.push(backend.cost(ps, &centers)?);
+    Ok(LloydResult {
+        centers,
+        history,
+        iterations,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gaussian_mixture, separated_grid, SynthSpec};
+    use crate::rng::Pcg64;
+    use crate::seeding::kmeanspp::kmeanspp;
+
+    #[test]
+    fn cost_decreases_monotonically() {
+        let ps = gaussian_mixture(
+            &SynthSpec {
+                n: 2000,
+                d: 6,
+                k_true: 8,
+                ..Default::default()
+            },
+            1,
+        );
+        let mut rng = Pcg64::seed_from(2);
+        let seed = kmeanspp(&ps, 8, &mut rng);
+        let res = lloyd(&ps, &seed.centers, &LloydConfig::default(), &Backend::Native).unwrap();
+        for w in res.history.windows(2) {
+            assert!(
+                w[1] <= w[0] * (1.0 + 1e-9),
+                "cost increased: {} -> {}",
+                w[0],
+                w[1]
+            );
+        }
+    }
+
+    #[test]
+    fn recovers_separated_clusters_exactly() {
+        let ps = separated_grid(6, 100, 3, 3);
+        let mut rng = Pcg64::seed_from(4);
+        let seed = kmeanspp(&ps, 6, &mut rng);
+        let res = lloyd(
+            &ps,
+            &seed.centers,
+            &LloydConfig {
+                max_iters: 30,
+                tol: 1e-9,
+            },
+            &Backend::Native,
+        )
+        .unwrap();
+        // Final cost ~ within-cluster variance only: per point ~ d*0.25.
+        let final_cost = *res.history.last().unwrap();
+        let per_point = final_cost / ps.len() as f64;
+        assert!(per_point < 3.0 * 0.25 * 3.0, "per-point cost {per_point}");
+    }
+
+    #[test]
+    fn single_iteration_limit_respected() {
+        let ps = gaussian_mixture(
+            &SynthSpec {
+                n: 300,
+                d: 4,
+                k_true: 3,
+                ..Default::default()
+            },
+            5,
+        );
+        let mut rng = Pcg64::seed_from(6);
+        let seed = kmeanspp(&ps, 3, &mut rng);
+        let res = lloyd(
+            &ps,
+            &seed.centers,
+            &LloydConfig {
+                max_iters: 1,
+                tol: 0.0,
+            },
+            &Backend::Native,
+        )
+        .unwrap();
+        assert_eq!(res.iterations, 1);
+        assert_eq!(res.history.len(), 2);
+    }
+
+    #[test]
+    fn empty_cluster_repair() {
+        // Duplicate seed centers force an empty cluster on step one.
+        let ps = gaussian_mixture(
+            &SynthSpec {
+                n: 500,
+                d: 4,
+                k_true: 5,
+                ..Default::default()
+            },
+            7,
+        );
+        let dup = ps.gather(&[0, 0, 0, 100]);
+        let res = lloyd(&ps, &dup, &LloydConfig::default(), &Backend::Native).unwrap();
+        // After repair the final centers should be distinct.
+        for i in 0..4 {
+            for j in (i + 1)..4 {
+                let dd = crate::data::matrix::d2(res.centers.row(i), res.centers.row(j));
+                assert!(dd > 0.0, "centers {i} and {j} identical after repair");
+            }
+        }
+    }
+}

@@ -1,0 +1,279 @@
+//! The `(c, R)`-gap data structure (Appendix D.1).
+//!
+//! `ℓ` hash tables with append-only linked lists (here: `Vec`s, which
+//! preserve insertion order). `Insert(p)` appends `p` to the bucket
+//! `T_i[f_i(p)]` of every table. `Query(p)` takes, per table, the *first*
+//! element of the bucket within distance `cR`, then returns the closest of
+//! the ≤ ℓ candidates.
+//!
+//! Monotonicity (the property the seeding proof needs) is by
+//! construction: insertions append at the *end* of bucket lists while
+//! queries scan from the *beginning*, so every candidate a query saw
+//! before an insertion is still a candidate after it — the returned
+//! distance can only decrease.
+//!
+//! One practical deviation, recorded in DESIGN.md §8: we bound the bucket
+//! scan by `probe_limit` entries (the theory guarantees no false
+//! positives whp, making the first in-range element sit at the bucket
+//! head; real buckets are noisier). A fixed prefix of an append-only list
+//! is still a monotone candidate set.
+
+use std::collections::HashMap;
+
+use crate::data::matrix::{d2, PointSet};
+use crate::lsh::pstable::TableHash;
+use crate::rng::Pcg64;
+
+/// Configuration of a single gap structure.
+#[derive(Clone, Debug)]
+pub struct GapConfig {
+    /// Approximation factor `c > 1`.
+    pub c: f32,
+    /// Scale `R` (`cR` is the acceptance radius). `f32::INFINITY`
+    /// disables the radius filter (the practical single-scale mode).
+    pub r_scale: f32,
+    /// Number of hash tables `ℓ`.
+    pub tables: usize,
+    /// Concatenation width `m` per table hash.
+    pub m: usize,
+    /// Bucket width `r` of the p-stable hash.
+    pub bucket_width: f32,
+    /// Max bucket entries scanned per query.
+    pub probe_limit: usize,
+}
+
+impl Default for GapConfig {
+    fn default() -> Self {
+        // Appendix D.3 parameters: one scale, m = 15 hash functions,
+        // collision parameter r = 10 (quantized integer coordinates).
+        GapConfig {
+            c: 2.0,
+            r_scale: f32::INFINITY,
+            tables: 8,
+            m: 15,
+            bucket_width: 10.0,
+            probe_limit: 16,
+        }
+    }
+}
+
+/// A single `(c, R)`-gap structure.
+pub struct GapStructure {
+    cfg: GapConfig,
+    hashes: Vec<TableHash>,
+    /// One bucket map per table; values are append-only point-id lists.
+    buckets: Vec<HashMap<u64, Vec<u32>>>,
+    inserted: usize,
+}
+
+impl GapStructure {
+    pub fn new(dim: usize, cfg: GapConfig, rng: &mut Pcg64) -> Self {
+        let hashes = (0..cfg.tables)
+            .map(|t| {
+                let mut hr = rng.fork(t as u64);
+                TableHash::new(dim, cfg.m, cfg.bucket_width, &mut hr)
+            })
+            .collect();
+        GapStructure {
+            buckets: vec![HashMap::new(); cfg.tables],
+            hashes,
+            cfg,
+            inserted: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inserted
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inserted == 0
+    }
+
+    /// Append `i` to its bucket in every table.
+    pub fn insert(&mut self, ps: &PointSet, i: u32) {
+        let p = ps.row(i as usize);
+        for (hash, table) in self.hashes.iter().zip(self.buckets.iter_mut()) {
+            table.entry(hash.bucket(p)).or_default().push(i);
+        }
+        self.inserted += 1;
+    }
+
+    /// Candidate per table, then the closest overall. Returns
+    /// `(index, distance)`.
+    ///
+    /// With a finite scale this is Appendix D.1 verbatim: the *first*
+    /// bucket element within `cR`. With the radius filter disabled
+    /// (practical single-scale mode) the "first within ∞" rule would
+    /// degenerate to "oldest colliding point", so we instead take the
+    /// minimum over the scanned prefix — still a monotone candidate set
+    /// (a fixed-length prefix of an append-only list only ever grows).
+    pub fn query(&self, ps: &PointSet, q: &[f32]) -> Option<(u32, f32)> {
+        let radius = self.cfg.c * self.cfg.r_scale;
+        let first_in_range = radius.is_finite();
+        let mut best: Option<(u32, f32)> = None;
+        for (hash, table) in self.hashes.iter().zip(&self.buckets) {
+            let Some(bucket) = table.get(&hash.bucket(q)) else {
+                continue;
+            };
+            for &i in bucket.iter().take(self.cfg.probe_limit) {
+                let dist = d2(ps.row(i as usize), q).sqrt();
+                if dist <= radius {
+                    if best.map_or(true, |(_, bd)| dist < bd) {
+                        best = Some((i, dist));
+                    }
+                    if first_in_range {
+                        break; // first in-range element of this list
+                    }
+                }
+            }
+        }
+        best
+    }
+
+    /// Early-exit witness scan over the same candidate set as [`query`]:
+    /// is any candidate closer than `threshold`?
+    ///
+    /// [`query`]: GapStructure::query
+    pub fn dist_below(&self, ps: &PointSet, q: &[f32], threshold: f32) -> bool {
+        let radius = (self.cfg.c * self.cfg.r_scale).min(threshold);
+        let t2 = threshold * threshold;
+        for (hash, table) in self.hashes.iter().zip(&self.buckets) {
+            let Some(bucket) = table.get(&hash.bucket(q)) else {
+                continue;
+            };
+            for &i in bucket.iter().take(self.cfg.probe_limit) {
+                let dd = d2(ps.row(i as usize), q);
+                if dd < t2 && dd.sqrt() <= radius {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gaussian_mixture, SynthSpec};
+
+    fn dataset(n: usize, seed: u64) -> PointSet {
+        gaussian_mixture(
+            &SynthSpec {
+                n,
+                d: 10,
+                k_true: 8,
+                center_spread: 20.0,
+                cluster_std: 1.0,
+                ..Default::default()
+            },
+            seed,
+        )
+    }
+
+    fn cfg_unit() -> GapConfig {
+        GapConfig {
+            c: 2.0,
+            r_scale: f32::INFINITY,
+            tables: 8,
+            m: 6,
+            // ~8x the within-cluster NN scale of `dataset` (std 1, d=10).
+            bucket_width: 32.0,
+            probe_limit: 16,
+        }
+    }
+
+    #[test]
+    fn empty_returns_none() {
+        let ps = dataset(10, 1);
+        let mut rng = Pcg64::seed_from(2);
+        let g = GapStructure::new(10, cfg_unit(), &mut rng);
+        assert!(g.query(&ps, ps.row(0)).is_none());
+    }
+
+    #[test]
+    fn query_self_after_insert_is_exact() {
+        let ps = dataset(100, 3);
+        let mut rng = Pcg64::seed_from(4);
+        let mut g = GapStructure::new(10, cfg_unit(), &mut rng);
+        for i in 0..100u32 {
+            g.insert(&ps, i);
+        }
+        // Identical point always collides in every table -> distance 0.
+        for i in (0..100).step_by(7) {
+            let (_, d) = g.query(&ps, ps.row(i)).unwrap();
+            assert!(d <= 1e-6, "self-query i={i} dist={d}");
+        }
+    }
+
+    #[test]
+    fn finds_near_neighbors_with_good_recall() {
+        let ps = dataset(400, 5);
+        let mut rng = Pcg64::seed_from(6);
+        let mut g = GapStructure::new(10, cfg_unit(), &mut rng);
+        for i in 0..200u32 {
+            g.insert(&ps, i);
+        }
+        // For queries among the inserted cluster structure, the returned
+        // distance should usually be within 2x of the true NN distance.
+        let mut ok = 0;
+        let mut total = 0;
+        for q in 200..400 {
+            let truth = (0..200)
+                .map(|i| ps.d2_rows(q, i).sqrt())
+                .fold(f32::INFINITY, f32::min);
+            if let Some((_, d)) = g.query(&ps, ps.row(q)) {
+                total += 1;
+                if d <= 3.0 * truth + 1e-3 {
+                    ok += 1;
+                }
+            }
+        }
+        assert!(total > 150, "too many empty queries: {total}");
+        assert!(
+            ok as f64 >= 0.7 * total as f64,
+            "recall {ok}/{total} too low"
+        );
+    }
+
+    #[test]
+    fn monotone_under_insertions() {
+        let ps = dataset(300, 7);
+        let mut rng = Pcg64::seed_from(8);
+        let mut g = GapStructure::new(10, cfg_unit(), &mut rng);
+        let q = ps.row(299).to_vec();
+        let mut last = f32::INFINITY;
+        for i in 0..299u32 {
+            g.insert(&ps, i);
+            if let Some((_, d)) = g.query(&ps, &q) {
+                assert!(
+                    d <= last + 1e-5,
+                    "monotonicity violated after inserting {i}: {d} > {last}"
+                );
+                last = d;
+            } else {
+                assert_eq!(last, f32::INFINITY, "candidate disappeared");
+            }
+        }
+    }
+
+    #[test]
+    fn radius_filter_rejects_far_points() {
+        let ps = PointSet::from_rows(&[vec![0.0f32, 0.0], vec![100.0, 100.0]]);
+        let mut rng = Pcg64::seed_from(9);
+        let cfg = GapConfig {
+            c: 2.0,
+            r_scale: 1.0, // cR = 2 -> the far point is out of range
+            tables: 8,
+            m: 2,
+            bucket_width: 500.0, // force collisions
+            probe_limit: 8,
+        };
+        let mut g = GapStructure::new(2, cfg, &mut rng);
+        g.insert(&ps, 1);
+        assert!(g.query(&ps, ps.row(0)).is_none());
+        // A query point near the inserted point IS within cR.
+        assert!(g.query(&ps, &[99.5f32, 100.0]).is_some());
+    }
+}

@@ -1,0 +1,439 @@
+//! The user-facing monotone LSH oracle (Theorem 5.1).
+//!
+//! Two modes:
+//!
+//! * **Practical** (default; Appendix D.3, what the paper's experiments
+//!   run): a single scale — one gap structure with the radius filter
+//!   disabled, m = 15, bucket width 10 (quantized coordinates).
+//! * **Rigorous** (Appendix D.2): `log2(2Δ)` copies of the `(c/2, R_i)`
+//!   gap structure at geometric scales `R_i = 2^{i-1} · MAXDIST/(2Δ)`;
+//!   a query asks every copy and keeps the closest.
+//!
+//! Both modes additionally keep the **first inserted point** in the
+//! candidate set of every query. This guarantees `query` is total once
+//! anything was inserted (the seeding loop needs *a* distance; `min{1,·}`
+//! in Algorithm 4 absorbs overestimates) and cannot break monotonicity:
+//! the candidate set still only grows.
+
+use crate::data::matrix::{d2, PointSet};
+use crate::lsh::gap::{GapConfig, GapStructure};
+use crate::lsh::NnOracle;
+use crate::rng::Pcg64;
+
+/// Which Appendix-D construction to use.
+#[derive(Clone, Debug)]
+pub enum LshMode {
+    /// Single-scale (Appendix D.3).
+    Practical,
+    /// Multi-scale stack (Appendix D.2); needs `max_dist` and an aspect
+    /// ratio (upper bound) to lay out the scales.
+    Rigorous { max_dist: f32, delta: f32 },
+}
+
+/// Tunables shared by both modes.
+#[derive(Clone, Debug)]
+pub struct LshParams {
+    /// Approximation factor `c > 1` (the rejection sampler's `c`).
+    pub c: f32,
+    /// Tables per gap structure.
+    pub tables: usize,
+    /// Concatenated hashes per table (paper: 15).
+    pub m: usize,
+    /// p-stable bucket width (paper: 10 on quantized data).
+    pub bucket_width: f32,
+    /// Bucket scan bound per query.
+    pub probe_limit: usize,
+}
+
+impl Default for LshParams {
+    fn default() -> Self {
+        LshParams {
+            c: 2.0,
+            tables: 8,
+            m: 15,
+            bucket_width: 10.0,
+            probe_limit: 16,
+        }
+    }
+}
+
+/// How many of the earliest insertions every query scans exactly.
+///
+/// The first `PREFIX_CAP` inserted points form a *fixed, append-only
+/// prefix*, so scanning all of them keeps queries monotone while making
+/// the oracle **exact** until that many centers exist — removing the
+/// early-phase bias where sparse centers rarely collide with any bucket.
+/// Past the cap the scan costs a constant `PREFIX_CAP * d` per query.
+pub const PREFIX_CAP: usize = 128;
+
+/// Monotone approximate-NN oracle (implements [`NnOracle`]).
+pub struct MonotoneLsh {
+    structures: Vec<GapStructure>,
+    /// First `PREFIX_CAP` inserted ids (append-only; scanned exactly).
+    prefix: Vec<u32>,
+    /// The prefix rows copied into one contiguous, L1-resident buffer —
+    /// the scan is the per-query hot loop and sequential access beats
+    /// `PREFIX_CAP` random row gathers (§Perf log).
+    prefix_rows: Vec<f32>,
+    dim: usize,
+    inserted: usize,
+}
+
+impl MonotoneLsh {
+    /// Single-scale practical construction (Appendix D.3).
+    pub fn practical(dim: usize, params: &LshParams, rng: &mut Pcg64) -> Self {
+        let cfg = GapConfig {
+            c: params.c,
+            r_scale: f32::INFINITY,
+            tables: params.tables,
+            m: params.m,
+            bucket_width: params.bucket_width,
+            probe_limit: params.probe_limit,
+        };
+        MonotoneLsh {
+            structures: vec![GapStructure::new(dim, cfg, rng)],
+            prefix: Vec::new(),
+            prefix_rows: Vec::new(),
+            dim,
+            inserted: 0,
+        }
+    }
+
+    /// Multi-scale rigorous construction (Appendix D.2): scales
+    /// `R_i = 2^{i-1} MAXDIST / (2Δ)`, accuracy `c/2` each.
+    pub fn rigorous(
+        dim: usize,
+        params: &LshParams,
+        max_dist: f32,
+        delta: f32,
+        rng: &mut Pcg64,
+    ) -> Self {
+        let delta = delta.max(1.0);
+        let levels = (2.0 * delta).log2().ceil().max(1.0) as usize;
+        let r_min = max_dist / (2.0 * delta);
+        let structures = (0..levels)
+            .map(|i| {
+                let cfg = GapConfig {
+                    c: (params.c / 2.0).max(1.01),
+                    r_scale: r_min * (1u64 << i) as f32,
+                    tables: params.tables,
+                    m: params.m,
+                    // Scale-proportional bucket width: collisions at scale
+                    // R_i should happen for points within ~R_i.
+                    bucket_width: (r_min * (1u64 << i) as f32).max(f32::MIN_POSITIVE),
+                    probe_limit: params.probe_limit,
+                };
+                let mut sr = rng.fork(i as u64);
+                GapStructure::new(dim, cfg, &mut sr)
+            })
+            .collect();
+        MonotoneLsh {
+            structures,
+            prefix: Vec::new(),
+            prefix_rows: Vec::new(),
+            dim,
+            inserted: 0,
+        }
+    }
+
+    /// Build from a mode descriptor.
+    pub fn new(dim: usize, params: &LshParams, mode: &LshMode, rng: &mut Pcg64) -> Self {
+        match mode {
+            LshMode::Practical => Self::practical(dim, params, rng),
+            LshMode::Rigorous { max_dist, delta } => {
+                Self::rigorous(dim, params, *max_dist, *delta, rng)
+            }
+        }
+    }
+}
+
+impl NnOracle for MonotoneLsh {
+    fn insert(&mut self, ps: &PointSet, i: u32) {
+        if self.prefix.len() < PREFIX_CAP {
+            self.prefix.push(i);
+            self.prefix_rows.extend_from_slice(ps.row(i as usize));
+        }
+        for s in self.structures.iter_mut() {
+            s.insert(ps, i);
+        }
+        self.inserted += 1;
+    }
+
+    fn query(&self, ps: &PointSet, q: &[f32]) -> Option<(u32, f32)> {
+        if self.inserted == 0 {
+            return None;
+        }
+        // Exact scan over the fixed insertion prefix (monotone: it only
+        // grows, and never changes once full). This makes the oracle
+        // exact while |S| <= PREFIX_CAP and a guaranteed-candidate
+        // fallback afterwards.
+        let mut best: Option<(u32, f32)> = None;
+        for (slot, &i) in self.prefix.iter().enumerate() {
+            let row = &self.prefix_rows[slot * self.dim..(slot + 1) * self.dim];
+            let d = d2(row, q).sqrt();
+            if best.map_or(true, |(_, bd)| d < bd) {
+                best = Some((i, d));
+            }
+        }
+        let mut best = best?;
+        for s in &self.structures {
+            if let Some((i, d)) = s.query(ps, q) {
+                if d < best.1 {
+                    best = (i, d);
+                }
+            }
+        }
+        Some(best)
+    }
+
+    fn dist_below(&self, ps: &PointSet, q: &[f32], threshold: f32) -> bool {
+        let t2 = threshold * threshold;
+        // Witness scan, cheapest first: the contiguous prefix buffer.
+        if self
+            .prefix_rows
+            .chunks_exact(self.dim)
+            .any(|row| d2(row, q) < t2)
+        {
+            return true;
+        }
+        self.structures
+            .iter()
+            .any(|s| s.dist_below(ps, q, threshold))
+    }
+
+    fn len(&self) -> usize {
+        self.inserted
+    }
+}
+
+/// Estimate a sensible p-stable bucket width.
+///
+/// The Datar et al. collision probability for a single hash at distance
+/// `u` is ≈ `1 - 2Φ(-r/u) - ...`: with `m = 15` concatenated hashes and a
+/// handful of tables, good recall needs `r ≈ 8-10x` the nearest-neighbor
+/// distance scale. Random *pairs* measure the inter-cluster scale (orders
+/// of magnitude larger), so instead we sample `probes` query points and
+/// take the median of their true NN distance within a sampled subset —
+/// an upper bound on the NN scale (subset ⊂ full set), which errs toward
+/// wider buckets, i.e. better recall at slightly larger buckets.
+///
+/// (On Appendix-F quantized data the paper's fixed `10` corresponds to a
+/// few grid steps; this helper generalizes that choice to raw inputs.)
+pub fn auto_bucket_width(ps: &PointSet, probes: usize, rng: &mut Pcg64) -> f32 {
+    let n = ps.len();
+    if n < 2 {
+        return 1.0;
+    }
+    let probes = probes.clamp(8, 64);
+    let subset = 1024.min(n);
+    let subset_idx: Vec<usize> = (0..subset).map(|_| rng.index(n)).collect();
+    let mut nn: Vec<f32> = Vec::with_capacity(probes);
+    for _ in 0..probes {
+        let q = rng.index(n);
+        let mut best = f32::INFINITY;
+        for &j in &subset_idx {
+            if j == q {
+                continue;
+            }
+            let dd = ps.d2_rows(q, j);
+            if dd > 0.0 && dd < best {
+                best = dd;
+            }
+        }
+        if best.is_finite() {
+            nn.push(best.sqrt());
+        }
+    }
+    if nn.is_empty() {
+        return 1.0;
+    }
+    nn.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = nn[nn.len() / 2];
+    (median * 8.0).max(f32::MIN_POSITIVE)
+}
+
+/// Bucket width tuned for querying against ~`k` inserted centers (the
+/// rejection sampler's workload): the relevant collision scale is the
+/// distance from a random point to its nearest center, i.e. the NN
+/// distance `u_q` to a random `k`-subset — typically orders of magnitude
+/// larger than the dataset NN scale that [`auto_bucket_width`] measures.
+///
+/// With `m` concatenated hashes the table collision probability at
+/// distance `u` is ≈ `exp(-0.8 m u / w)`, so `w = m * u_q` gives ~0.45
+/// per table at the query scale (near-certain over several tables) while
+/// staying selective at a few multiples of `u_q`.
+pub fn auto_bucket_width_for_k(ps: &PointSet, k: usize, m: usize, rng: &mut Pcg64) -> f32 {
+    let n = ps.len();
+    if n < 2 {
+        return 1.0;
+    }
+    let k = k.clamp(1, n - 1);
+    let subset: Vec<usize> = (0..k).map(|_| rng.index(n)).collect();
+    let probes = 48.min(n);
+    let mut nn: Vec<f32> = Vec::with_capacity(probes);
+    for _ in 0..probes {
+        let q = rng.index(n);
+        let mut best = f32::INFINITY;
+        for &j in &subset {
+            if j == q {
+                continue;
+            }
+            let dd = ps.d2_rows(q, j);
+            if dd > 0.0 && dd < best {
+                best = dd;
+            }
+        }
+        if best.is_finite() {
+            nn.push(best.sqrt());
+        }
+    }
+    if nn.is_empty() {
+        return 1.0;
+    }
+    nn.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // Median distance-to-k-subset times m: widths that are too narrow
+    // force fallback answers (clamped acceptance = distribution bias);
+    // too wide only costs probe time.
+    (nn[nn.len() / 2] * m.max(1) as f32).max(f32::MIN_POSITIVE)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gaussian_mixture, SynthSpec};
+    use crate::lsh::ExactNn;
+
+    fn dataset(n: usize, seed: u64) -> PointSet {
+        gaussian_mixture(
+            &SynthSpec {
+                n,
+                d: 12,
+                k_true: 10,
+                center_spread: 30.0,
+                cluster_std: 1.0,
+                ..Default::default()
+            },
+            seed,
+        )
+    }
+
+    fn params(ps: &PointSet, rng: &mut Pcg64) -> LshParams {
+        LshParams {
+            bucket_width: auto_bucket_width(ps, 200, rng),
+            m: 8,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn query_total_once_inserted() {
+        let ps = dataset(50, 1);
+        let mut rng = Pcg64::seed_from(2);
+        let p = params(&ps, &mut rng);
+        let mut lsh = MonotoneLsh::practical(12, &p, &mut rng);
+        assert!(lsh.query(&ps, ps.row(0)).is_none());
+        lsh.insert(&ps, 3);
+        // Even if hashing misses, the fallback candidate answers.
+        let (i, d) = lsh.query(&ps, ps.row(0)).unwrap();
+        assert_eq!(i, 3);
+        assert!((d - ps.d2_rows(0, 3).sqrt()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn practical_monotone_under_insertions() {
+        let ps = dataset(400, 3);
+        let mut rng = Pcg64::seed_from(4);
+        let p = params(&ps, &mut rng);
+        let lsh = MonotoneLsh::practical(12, &p, &mut rng);
+        for q in [399usize, 200, 57] {
+            let mut lsh2 = MonotoneLsh::practical(12, &p, &mut rng);
+            let mut last = f32::INFINITY;
+            for i in 0..150u32 {
+                lsh2.insert(&ps, i);
+                let (_, d) = lsh2.query(&ps, ps.row(q)).unwrap();
+                assert!(d <= last + 1e-5, "q={q} i={i}: {d} > {last}");
+                last = d;
+            }
+        }
+        let _ = lsh; // silence unused in release cfg
+    }
+
+    #[test]
+    fn rigorous_monotone_and_total() {
+        let ps = dataset(300, 5);
+        let mut rng = Pcg64::seed_from(6);
+        let p = LshParams {
+            m: 4,
+            ..params(&ps, &mut rng)
+        };
+        let max_dist = ps.max_dist_upper_bound();
+        let mut lsh = MonotoneLsh::rigorous(12, &p, max_dist, 1024.0, &mut rng);
+        let q = ps.row(299).to_vec();
+        let mut last = f32::INFINITY;
+        for i in 0..200u32 {
+            lsh.insert(&ps, i);
+            let (_, d) = lsh.query(&ps, &q).unwrap();
+            assert!(d <= last + 1e-5);
+            last = d;
+        }
+    }
+
+    #[test]
+    fn approximation_quality_vs_exact() {
+        // The returned distance must (a) upper-bound the true NN distance
+        // (it is a real inserted point) and (b) usually be within a small
+        // factor of it.
+        let ps = dataset(600, 7);
+        let mut rng = Pcg64::seed_from(8);
+        let p = params(&ps, &mut rng);
+        let mut lsh = MonotoneLsh::practical(12, &p, &mut rng);
+        let mut exact = ExactNn::default();
+        for i in 0..300u32 {
+            lsh.insert(&ps, i);
+            exact.insert(&ps, i);
+        }
+        let mut within = 0;
+        let total = 300;
+        for q in 300..600 {
+            let (_, d) = lsh.query(&ps, ps.row(q)).unwrap();
+            let (_, t) = exact.query(&ps, ps.row(q)).unwrap();
+            assert!(d + 1e-5 >= t, "LSH distance below true NN");
+            if d <= 2.0 * t + 1e-3 {
+                within += 1;
+            }
+        }
+        assert!(
+            within as f64 >= 0.6 * total as f64,
+            "only {within}/{total} within 2x of exact"
+        );
+    }
+
+    #[test]
+    fn auto_bucket_width_positive_and_scales() {
+        let ps = dataset(200, 9);
+        let mut rng = Pcg64::seed_from(10);
+        let w = auto_bucket_width(&ps, 100, &mut rng);
+        assert!(w > 0.0);
+        // Scaling the data scales the width estimate.
+        let mut scaled = ps.clone();
+        for v in scaled.flat_mut() {
+            *v *= 100.0;
+        }
+        let mut rng2 = Pcg64::seed_from(10);
+        let w2 = auto_bucket_width(&scaled, 100, &mut rng2);
+        assert!(w2 > 20.0 * w, "w={w} w2={w2}");
+    }
+
+    #[test]
+    fn duplicate_points_distance_zero() {
+        let mut rows = vec![vec![5.0f32; 12]; 2];
+        rows.push(vec![9.0f32; 12]);
+        let ps = PointSet::from_rows(&rows);
+        let mut rng = Pcg64::seed_from(11);
+        let p = LshParams::default();
+        let mut lsh = MonotoneLsh::practical(12, &p, &mut rng);
+        lsh.insert(&ps, 0);
+        let (_, d) = lsh.query(&ps, ps.row(1)).unwrap();
+        assert!(d <= 1e-6);
+    }
+}

@@ -1,0 +1,162 @@
+//! p-stable LSH family (Datar, Immorlica, Indyk, Mirrokni 2004).
+//!
+//! A single hash is `h(p) = floor((a·p + b) / r)` with `a ~ N(0,1)^d`
+//! and `b ~ U[0, r)`. For the 2-stable (Gaussian) case the collision
+//! probability is a monotone function of `||p-q||_2 / r`, which is all
+//! Definition D.1 needs. A *table hash* concatenates `m` such hashes
+//! (`f_i(p) = [h_1(p), ..., h_m(p)]`, Appendix D.1); we fold the m-tuple
+//! into a single `u64` bucket key with splitmix mixing — a collision of
+//! keys is a collision of tuples up to 2^-64 false-positive noise.
+
+use crate::rng::{splitmix64, Pcg64};
+
+/// One m-fold concatenated table hash over d-dimensional points.
+#[derive(Clone, Debug)]
+pub struct TableHash {
+    /// `m x d` Gaussian projection matrix, row-major.
+    a: Vec<f32>,
+    /// Per-row offset `b in [0, r)`.
+    b: Vec<f32>,
+    /// Bucket width `r` (the paper's experiments use 10 on quantized data).
+    r: f32,
+    m: usize,
+    d: usize,
+}
+
+impl TableHash {
+    pub fn new(d: usize, m: usize, r: f32, rng: &mut Pcg64) -> Self {
+        assert!(r > 0.0 && m > 0 && d > 0);
+        let a = (0..m * d).map(|_| rng.next_gaussian() as f32).collect();
+        let b = (0..m).map(|_| rng.next_f32() * r).collect();
+        TableHash { a, b, r, m, d }
+    }
+
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Raw m-dimensional integer hash (tests/diagnostics).
+    pub fn hash_vec(&self, p: &[f32]) -> Vec<i64> {
+        (0..self.m).map(|i| self.hash_row(i, p)).collect()
+    }
+
+    #[inline]
+    fn hash_row(&self, i: usize, p: &[f32]) -> i64 {
+        debug_assert_eq!(p.len(), self.d);
+        let row = &self.a[i * self.d..(i + 1) * self.d];
+        let mut acc = 0.0f32;
+        for (x, y) in row.iter().zip(p) {
+            acc += x * y;
+        }
+        ((acc + self.b[i]) / self.r).floor() as i64
+    }
+
+    /// Bucket key: the m-tuple folded into a u64.
+    #[inline]
+    pub fn bucket(&self, p: &[f32]) -> u64 {
+        let mut key = 0x9E37_79B9_7F4A_7C15u64;
+        for i in 0..self.m {
+            key = splitmix64(key ^ (self.hash_row(i, p) as u64));
+        }
+        key
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn gauss_vec(d: usize, rng: &mut Pcg64) -> Vec<f32> {
+        (0..d).map(|_| rng.next_gaussian() as f32).collect()
+    }
+
+    #[test]
+    fn bucket_deterministic() {
+        let mut rng = Pcg64::seed_from(1);
+        let h = TableHash::new(8, 4, 2.0, &mut rng);
+        let p = gauss_vec(8, &mut rng);
+        assert_eq!(h.bucket(&p), h.bucket(&p));
+    }
+
+    #[test]
+    fn identical_points_always_collide() {
+        let mut rng = Pcg64::seed_from(2);
+        let h = TableHash::new(16, 15, 10.0, &mut rng);
+        let p = gauss_vec(16, &mut rng);
+        let q = p.clone();
+        assert_eq!(h.bucket(&p), h.bucket(&q));
+    }
+
+    #[test]
+    fn near_points_collide_more_than_far_points() {
+        // The defining LSH property (Definition D.1), checked empirically
+        // over independent hash draws.
+        let mut rng = Pcg64::seed_from(3);
+        let d = 12;
+        let p = gauss_vec(d, &mut rng);
+        let mut near = p.clone();
+        near[0] += 0.2;
+        let mut far = p.clone();
+        for v in far.iter_mut() {
+            *v += 4.0;
+        }
+        let trials = 400;
+        let mut near_coll = 0;
+        let mut far_coll = 0;
+        for t in 0..trials {
+            let mut hr = Pcg64::seed_from(100 + t);
+            let h = TableHash::new(d, 4, 2.0, &mut hr);
+            if h.bucket(&p) == h.bucket(&near) {
+                near_coll += 1;
+            }
+            if h.bucket(&p) == h.bucket(&far) {
+                far_coll += 1;
+            }
+        }
+        assert!(
+            near_coll > far_coll + trials / 10,
+            "near={near_coll} far={far_coll}"
+        );
+    }
+
+    #[test]
+    fn hash_vec_consistent_with_bucket() {
+        let mut rng = Pcg64::seed_from(4);
+        let h = TableHash::new(6, 3, 1.5, &mut rng);
+        let p = gauss_vec(6, &mut rng);
+        let q = gauss_vec(6, &mut rng);
+        if h.hash_vec(&p) == h.hash_vec(&q) {
+            assert_eq!(h.bucket(&p), h.bucket(&q));
+        }
+    }
+
+    #[test]
+    fn wider_r_collides_more() {
+        let mut rng = Pcg64::seed_from(5);
+        let d = 10;
+        let p = gauss_vec(d, &mut rng);
+        let mut q = p.clone();
+        q[3] += 1.0;
+        let mut narrow = 0;
+        let mut wide = 0;
+        for t in 0..300u64 {
+            let mut r1 = Pcg64::seed_from(1000 + t);
+            let mut r2 = Pcg64::seed_from(1000 + t);
+            if TableHash::new(d, 2, 0.5, &mut r1).bucket(&p)
+                == TableHash::new(d, 2, 0.5, &mut r2).bucket(&q)
+            {
+                narrow += 1;
+            }
+            let mut r3 = Pcg64::seed_from(1000 + t);
+            let mut r4 = Pcg64::seed_from(1000 + t);
+            if TableHash::new(d, 2, 8.0, &mut r3).bucket(&p)
+                == TableHash::new(d, 2, 8.0, &mut r4).bucket(&q)
+            {
+                wide += 1;
+            }
+        }
+        assert!(wide > narrow, "wide={wide} narrow={narrow}");
+    }
+}

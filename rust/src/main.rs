@@ -1,0 +1,14 @@
+//! `fkmpp` — the CLI entry point. All logic lives in the library
+//! (`fastkmeanspp::cli`); this binary is a thin shim so the coordinator
+//! stays testable.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match fastkmeanspp::cli::run(&argv) {
+        Ok(out) => print!("{out}"),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,246 @@
+//! Lightweight metrics: scoped wall-clock timers, counters, and the
+//! mean/variance accumulators the paper's Tables 7–8 report.
+//!
+//! Everything is plain `std` (no external deps in the offline build) and
+//! cheap enough to leave enabled on the hot path — counters are single
+//! adds; timers are two `Instant::now()` calls around coarse phases only.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Online mean/variance (Welford). Used for the repeated-run statistics in
+/// Tables 4–8 and for bench reporting.
+#[derive(Clone, Debug, Default)]
+pub struct Stats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Stats {
+    pub fn new() -> Self {
+        Stats {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance (the paper reports variance over 5 runs).
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    /// Sample variance (n-1 denominator).
+    pub fn sample_variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// A scoped timer: measures from construction to `stop()`/drop and records
+/// into a [`Metrics`] sink.
+pub struct ScopedTimer<'a> {
+    metrics: &'a Metrics,
+    name: &'static str,
+    start: Instant,
+    stopped: bool,
+}
+
+impl<'a> ScopedTimer<'a> {
+    pub fn stop(mut self) -> Duration {
+        self.stopped = true;
+        let elapsed = self.start.elapsed();
+        self.metrics.record_duration(self.name, elapsed);
+        elapsed
+    }
+}
+
+impl Drop for ScopedTimer<'_> {
+    fn drop(&mut self) {
+        if !self.stopped {
+            self.metrics.record_duration(self.name, self.start.elapsed());
+        }
+    }
+}
+
+/// Thread-safe metrics sink: named counters and duration statistics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<&'static str, u64>>,
+    timings: Mutex<BTreeMap<&'static str, Stats>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn incr(&self, name: &'static str, by: u64) {
+        *self.counters.lock().unwrap().entry(name).or_insert(0) += by;
+    }
+
+    pub fn counter(&self, name: &'static str) -> u64 {
+        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    pub fn timer(&self, name: &'static str) -> ScopedTimer<'_> {
+        ScopedTimer {
+            metrics: self,
+            name,
+            start: Instant::now(),
+            stopped: false,
+        }
+    }
+
+    pub fn record_duration(&self, name: &'static str, d: Duration) {
+        self.timings
+            .lock()
+            .unwrap()
+            .entry(name)
+            .or_default()
+            .push(d.as_secs_f64());
+    }
+
+    pub fn duration_stats(&self, name: &'static str) -> Option<Stats> {
+        self.timings.lock().unwrap().get(name).cloned()
+    }
+
+    /// Render all metrics as aligned text (CLI `--metrics` output).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let counters = self.counters.lock().unwrap();
+        if !counters.is_empty() {
+            out.push_str("counters:\n");
+            for (k, v) in counters.iter() {
+                out.push_str(&format!("  {k:<40} {v}\n"));
+            }
+        }
+        let timings = self.timings.lock().unwrap();
+        if !timings.is_empty() {
+            out.push_str("timings (seconds):\n");
+            for (k, s) in timings.iter() {
+                out.push_str(&format!(
+                    "  {k:<40} n={:<4} mean={:.6} min={:.6} max={:.6}\n",
+                    s.count(),
+                    s.mean(),
+                    s.min(),
+                    s.max()
+                ));
+            }
+        }
+        out
+    }
+}
+
+/// Format a duration as human-readable seconds/millis.
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else {
+        format!("{:.3}ms", s * 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_mean_variance() {
+        let mut s = Stats::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.push(x);
+        }
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.variance() - 4.0).abs() < 1e-12);
+        assert!((s.stddev() - 2.0).abs() < 1e-12);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+        assert_eq!(s.count(), 8);
+    }
+
+    #[test]
+    fn sample_variance_bessel() {
+        let mut s = Stats::new();
+        for x in [1.0, 2.0, 3.0] {
+            s.push(x);
+        }
+        assert!((s.sample_variance() - 1.0).abs() < 1e-12);
+        assert!((s.variance() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.incr("lsh.collisions", 3);
+        m.incr("lsh.collisions", 4);
+        assert_eq!(m.counter("lsh.collisions"), 7);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn timer_records() {
+        let m = Metrics::new();
+        {
+            let _t = m.timer("phase");
+        }
+        let t = m.timer("phase");
+        let d = t.stop();
+        assert!(d.as_nanos() > 0 || d.as_nanos() == 0); // no panic path
+        let s = m.duration_stats("phase").unwrap();
+        assert_eq!(s.count(), 2);
+    }
+
+    #[test]
+    fn render_contains_entries() {
+        let m = Metrics::new();
+        m.incr("x", 1);
+        m.record_duration("y", Duration::from_millis(5));
+        let out = m.render();
+        assert!(out.contains('x') && out.contains('y'));
+    }
+}

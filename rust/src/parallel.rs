@@ -1,0 +1,162 @@
+//! Minimal data-parallel helpers on `std::thread::scope` (the offline
+//! build has no rayon). Used by the native distance kernels: the exact
+//! `D^2` update, assignment and cost loops are embarrassingly parallel
+//! over points.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use (cores, capped; override with
+/// `FKMPP_THREADS`).
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("FKMPP_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(32)
+}
+
+/// Split `[0, n)` into contiguous chunks, one per worker, and run `f` on
+/// each in parallel. `f(range)` must be independent across chunks.
+/// Falls back to a single inline call for small `n`.
+pub fn parallel_ranges<F>(n: usize, min_per_thread: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>) + Sync,
+{
+    let threads = num_threads().min(n / min_per_thread.max(1)).max(1);
+    if threads <= 1 {
+        f(0..n);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let f = &f;
+            let start = t * chunk;
+            let end = ((t + 1) * chunk).min(n);
+            if start >= end {
+                continue;
+            }
+            s.spawn(move || f(start..end));
+        }
+    });
+}
+
+/// Parallel map-reduce over contiguous chunks: each worker folds its
+/// range with `map`, results combined with `reduce`.
+pub fn parallel_reduce<T, M, R>(n: usize, min_per_thread: usize, identity: T, map: M, reduce: R) -> T
+where
+    T: Send,
+    M: Fn(std::ops::Range<usize>) -> T + Sync,
+    R: Fn(T, T) -> T,
+{
+    let threads = num_threads().min(n / min_per_thread.max(1)).max(1);
+    if threads <= 1 {
+        return reduce(identity, map(0..n));
+    }
+    let chunk = n.div_ceil(threads);
+    let mut results = Vec::with_capacity(threads);
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(threads);
+        for t in 0..threads {
+            let map = &map;
+            let start = t * chunk;
+            let end = ((t + 1) * chunk).min(n);
+            if start >= end {
+                continue;
+            }
+            handles.push(s.spawn(move || map(start..end)));
+        }
+        for h in handles {
+            results.push(h.join().expect("worker panicked"));
+        }
+    });
+    results.into_iter().fold(identity, |a, b| reduce(a, b))
+}
+
+/// Work-stealing-ish dynamic parallel-for over indivisible items (used
+/// where per-item cost is very uneven, e.g. per-k bench cells).
+pub fn parallel_items<F>(n: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let threads = num_threads().min(n).max(1);
+    if threads <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            let f = &f;
+            let next = &next;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn ranges_cover_everything_once() {
+        let n = 100_003;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        parallel_ranges(n, 64, |r| {
+            for i in r {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn reduce_sums_correctly() {
+        let n = 10_000usize;
+        let total = parallel_reduce(
+            n,
+            16,
+            0u64,
+            |r| r.map(|i| i as u64).sum::<u64>(),
+            |a, b| a + b,
+        );
+        assert_eq!(total, (n as u64 - 1) * n as u64 / 2);
+    }
+
+    #[test]
+    fn items_run_each_exactly_once() {
+        let n = 1000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        parallel_items(n, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn small_n_inline() {
+        // n smaller than min_per_thread must still work (single thread).
+        let mut seen = vec![false; 3];
+        let cell = std::sync::Mutex::new(&mut seen);
+        parallel_ranges(3, 1000, |r| {
+            let mut guard = cell.lock().unwrap();
+            for i in r {
+                guard[i] = true;
+            }
+        });
+        assert!(seen.iter().all(|&b| b));
+    }
+}

@@ -1,0 +1,177 @@
+//! `artifacts/manifest.tsv` parsing + shape-variant selection.
+//!
+//! Format (written by `python/compile/aot.py`):
+//!
+//! ```text
+//! # entry\tfile\tchunk\td\tk
+//! assign\tassign_n16384_d96_k1024.hlo.txt\t16384\t96\t1024
+//! ```
+//!
+//! PJRT executables are shape-specialized; `select` picks, for a request
+//! `(entry, n, d, k)`, the variant with the smallest `d_v >= d` and
+//! `k_v >= k`, preferring the large streaming chunk when `n` fills it.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One AOT-compiled HLO module.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Variant {
+    pub entry: String,
+    pub file: PathBuf,
+    pub chunk: usize,
+    pub d: usize,
+    /// 0 for k-independent entries (d2_update).
+    pub k: usize,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub variants: Vec<Variant>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {path:?} — run `make artifacts`"))?;
+        let mut variants = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 5 {
+                bail!("{path:?}:{}: expected 5 columns", lineno + 1);
+            }
+            variants.push(Variant {
+                entry: cols[0].to_string(),
+                file: dir.join(cols[1]),
+                chunk: cols[2].parse().context("chunk")?,
+                d: cols[3].parse().context("d")?,
+                k: cols[4].parse().context("k")?,
+            });
+        }
+        if variants.is_empty() {
+            bail!("{path:?}: no variants");
+        }
+        Ok(Manifest { variants })
+    }
+
+    /// Pick the best variant for `(entry, n, d, k)`; `k = 0` means the
+    /// entry is k-independent.
+    pub fn select(&self, entry: &str, n: usize, d: usize, k: usize) -> Option<&Variant> {
+        let feasible = self
+            .variants
+            .iter()
+            .filter(|v| v.entry == entry && v.d >= d && v.k >= k);
+        // Prefer: smallest (d_v, k_v) waste; among those, the largest
+        // chunk not bigger than n (falling back to the smallest chunk).
+        let mut best: Option<&Variant> = None;
+        for v in feasible {
+            let better = match best {
+                None => true,
+                Some(b) => {
+                    let key_v = (v.d, v.k);
+                    let key_b = (b.d, b.k);
+                    if key_v != key_b {
+                        key_v < key_b
+                    } else {
+                        // Same padding waste: prefer chunk fitting n.
+                        let fit = |c: usize| {
+                            if c <= n.max(1) {
+                                (0usize, usize::MAX - c) // larger fitting chunk wins
+                            } else {
+                                (1usize, c) // otherwise smallest chunk
+                            }
+                        };
+                        fit(v.chunk) < fit(b.chunk)
+                    }
+                }
+            };
+            if better {
+                best = Some(v);
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Manifest {
+        let mk = |entry: &str, chunk: usize, d: usize, k: usize| Variant {
+            entry: entry.to_string(),
+            file: PathBuf::from(format!("{entry}_{chunk}_{d}_{k}")),
+            chunk,
+            d,
+            k,
+        };
+        Manifest {
+            variants: vec![
+                mk("assign", 2048, 32, 128),
+                mk("assign", 2048, 96, 128),
+                mk("assign", 16384, 96, 128),
+                mk("assign", 16384, 96, 1024),
+                mk("d2_update", 2048, 96, 0),
+                mk("d2_update", 16384, 96, 0),
+            ],
+        }
+    }
+
+    #[test]
+    fn selects_tightest_dims() {
+        let m = manifest();
+        let v = m.select("assign", 100_000, 74, 100).unwrap();
+        assert_eq!((v.d, v.k, v.chunk), (96, 128, 16384));
+        let v = m.select("assign", 100_000, 74, 500).unwrap();
+        assert_eq!((v.d, v.k), (96, 1024));
+        let v = m.select("assign", 1_000, 20, 64).unwrap();
+        assert_eq!((v.d, v.k, v.chunk), (32, 128, 2048));
+    }
+
+    #[test]
+    fn k_independent_entry() {
+        let m = manifest();
+        let v = m.select("d2_update", 50_000, 74, 0).unwrap();
+        assert_eq!(v.chunk, 16384);
+        let v = m.select("d2_update", 1_000, 74, 0).unwrap();
+        assert_eq!(v.chunk, 2048);
+    }
+
+    #[test]
+    fn infeasible_returns_none() {
+        let m = manifest();
+        assert!(m.select("assign", 1000, 200, 10).is_none());
+        assert!(m.select("assign", 1000, 10, 5000).is_none());
+        assert!(m.select("nope", 1000, 10, 10).is_none());
+    }
+
+    #[test]
+    fn load_roundtrip() {
+        let dir = std::env::temp_dir().join("fkmpp_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.tsv"),
+            "# entry\tfile\tchunk\td\tk\nassign\ta.hlo.txt\t2048\t32\t128\n",
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.variants.len(), 1);
+        assert_eq!(m.variants[0].entry, "assign");
+        assert_eq!(m.variants[0].file, dir.join("a.hlo.txt"));
+    }
+
+    #[test]
+    fn load_missing_fails() {
+        let dir = std::env::temp_dir().join("fkmpp_manifest_missing");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

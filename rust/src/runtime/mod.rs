@@ -1,0 +1,70 @@
+//! Execution backends for the dense distance algebra.
+//!
+//! * [`native`] — tuned pure-rust implementations (parallel over point
+//!   chunks). Always available; also the tail-chunk handler for PJRT.
+//! * [`pjrt`] — loads the AOT-compiled JAX/Pallas HLO artifacts
+//!   (`artifacts/*.hlo.txt`, built once by `make artifacts`) and runs them
+//!   on the PJRT CPU client via the `xla` crate. Python never runs here.
+//! * [`manifest`] — the `artifacts/manifest.tsv` parser and shape-variant
+//!   selection logic.
+//!
+//! [`Backend`] is the dispatch point the coordinator and Lloyd use.
+
+pub mod manifest;
+pub mod native;
+pub mod pjrt;
+
+use crate::data::matrix::PointSet;
+use anyhow::Result;
+
+/// Compute backend selector.
+pub enum Backend {
+    Native,
+    Pjrt(pjrt::PjrtRuntime),
+}
+
+impl Backend {
+    /// Load the PJRT backend if artifacts exist, else native.
+    pub fn auto(artifacts_dir: &std::path::Path) -> Backend {
+        match pjrt::PjrtRuntime::load(artifacts_dir) {
+            Ok(rt) => Backend::Pjrt(rt),
+            Err(_) => Backend::Native,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Native => "native",
+            Backend::Pjrt(_) => "pjrt",
+        }
+    }
+
+    /// Nearest-center assignment: `(index, min squared distance)` per point.
+    pub fn assign(&self, ps: &PointSet, centers: &PointSet) -> Result<(Vec<u32>, Vec<f32>)> {
+        match self {
+            Backend::Native => Ok(native::assign(ps, centers)),
+            Backend::Pjrt(rt) => rt.assign(ps, centers),
+        }
+    }
+
+    /// k-means objective under `centers`.
+    pub fn cost(&self, ps: &PointSet, centers: &PointSet) -> Result<f64> {
+        match self {
+            Backend::Native => Ok(native::cost(ps, centers)),
+            Backend::Pjrt(rt) => rt.cost(ps, centers),
+        }
+    }
+
+    /// One Lloyd step: per-cluster coordinate sums, counts, and the cost
+    /// under the *input* centers.
+    pub fn lloyd_step(
+        &self,
+        ps: &PointSet,
+        centers: &PointSet,
+    ) -> Result<(Vec<f64>, Vec<u64>, f64)> {
+        match self {
+            Backend::Native => Ok(native::lloyd_step(ps, centers)),
+            Backend::Pjrt(rt) => rt.lloyd_step(ps, centers),
+        }
+    }
+}

@@ -1,0 +1,193 @@
+//! Native (pure-rust) implementations of the dense entry points — the
+//! same contracts as the AOT JAX/Pallas artifacts, used as the default
+//! backend, the PJRT tail-chunk handler, and the cross-check oracle in
+//! the `runtime_pjrt_matches_native` integration test.
+//!
+//! All loops parallelize over contiguous point chunks and funnel through
+//! the unrolled [`crate::data::matrix::d2`] kernel.
+
+use crate::data::matrix::{d2, PointSet};
+use crate::parallel::{parallel_reduce, parallel_ranges};
+
+/// Nearest center per point: `(argmin index, min squared distance)`.
+pub fn assign(ps: &PointSet, centers: &PointSet) -> (Vec<u32>, Vec<f32>) {
+    assert_eq!(ps.dim(), centers.dim());
+    assert!(!centers.is_empty());
+    let n = ps.len();
+    let mut idx = vec![0u32; n];
+    let mut mind2 = vec![0.0f32; n];
+    let idx_ptr = SendMutPtr(idx.as_mut_ptr());
+    let d2_ptr = SendMutPtr(mind2.as_mut_ptr());
+    parallel_ranges(n, 2048, |range| {
+        let _ = (&idx_ptr, &d2_ptr);
+        for i in range {
+            let row = ps.row(i);
+            let mut best = f32::INFINITY;
+            let mut best_j = 0u32;
+            for j in 0..centers.len() {
+                let dd = d2(row, centers.row(j));
+                if dd < best {
+                    best = dd;
+                    best_j = j as u32;
+                }
+            }
+            // SAFETY: parallel_ranges hands out disjoint index ranges.
+            unsafe {
+                *idx_ptr.0.add(i) = best_j;
+                *d2_ptr.0.add(i) = best;
+            }
+        }
+    });
+    (idx, mind2)
+}
+
+struct SendMutPtr<T>(*mut T);
+unsafe impl<T> Send for SendMutPtr<T> {}
+unsafe impl<T> Sync for SendMutPtr<T> {}
+
+/// k-means cost (sum over points of the min squared distance).
+pub fn cost(ps: &PointSet, centers: &PointSet) -> f64 {
+    assert_eq!(ps.dim(), centers.dim());
+    assert!(!centers.is_empty());
+    parallel_reduce(
+        ps.len(),
+        2048,
+        0.0f64,
+        |range| {
+            let mut acc = 0.0f64;
+            for i in range {
+                let row = ps.row(i);
+                let mut best = f32::INFINITY;
+                for j in 0..centers.len() {
+                    let dd = d2(row, centers.row(j));
+                    if dd < best {
+                        best = dd;
+                    }
+                }
+                acc += best as f64;
+            }
+            acc
+        },
+        |a, b| a + b,
+    )
+}
+
+/// One Lloyd step over the whole set: per-cluster coordinate sums (f64,
+/// `k*d` row-major), member counts, and the cost under the input centers.
+pub fn lloyd_step(ps: &PointSet, centers: &PointSet) -> (Vec<f64>, Vec<u64>, f64) {
+    let k = centers.len();
+    let d = ps.dim();
+    let (sums, counts, cost) = parallel_reduce(
+        ps.len(),
+        2048,
+        (vec![0.0f64; k * d], vec![0u64; k], 0.0f64),
+        |range| {
+            let mut sums = vec![0.0f64; k * d];
+            let mut counts = vec![0u64; k];
+            let mut cost = 0.0f64;
+            for i in range {
+                let row = ps.row(i);
+                let mut best = f32::INFINITY;
+                let mut best_j = 0usize;
+                for j in 0..k {
+                    let dd = d2(row, centers.row(j));
+                    if dd < best {
+                        best = dd;
+                        best_j = j;
+                    }
+                }
+                cost += best as f64;
+                counts[best_j] += 1;
+                let s = &mut sums[best_j * d..(best_j + 1) * d];
+                for (acc, &v) in s.iter_mut().zip(row) {
+                    *acc += v as f64;
+                }
+            }
+            (sums, counts, cost)
+        },
+        |(mut sa, mut ca, costa), (sb, cb, costb)| {
+            for (a, b) in sa.iter_mut().zip(&sb) {
+                *a += b;
+            }
+            for (a, b) in ca.iter_mut().zip(&cb) {
+                *a += b;
+            }
+            (sa, ca, costa + costb)
+        },
+    );
+    (sums, counts, cost)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gaussian_mixture, SynthSpec};
+
+    fn case() -> (PointSet, PointSet) {
+        let ps = gaussian_mixture(
+            &SynthSpec {
+                n: 5000,
+                d: 9,
+                k_true: 6,
+                ..Default::default()
+            },
+            1,
+        );
+        let centers = ps.gather(&[0, 100, 2000, 4999]);
+        (ps, centers)
+    }
+
+    #[test]
+    fn assign_matches_bruteforce() {
+        let (ps, cs) = case();
+        let (idx, mind2) = assign(&ps, &cs);
+        for i in (0..ps.len()).step_by(333) {
+            let (bj, bd) = (0..cs.len())
+                .map(|j| (j, d2(ps.row(i), cs.row(j))))
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap();
+            assert_eq!(idx[i] as usize, bj, "i={i}");
+            assert!((mind2[i] - bd).abs() <= 1e-6 * bd.max(1.0));
+        }
+    }
+
+    #[test]
+    fn cost_equals_sum_of_assignment() {
+        let (ps, cs) = case();
+        let (_, mind2) = assign(&ps, &cs);
+        let want: f64 = mind2.iter().map(|&x| x as f64).sum();
+        let got = cost(&ps, &cs);
+        assert!((got - want).abs() <= 1e-6 * want);
+    }
+
+    #[test]
+    fn cost_zero_when_centers_cover_points() {
+        let ps = PointSet::from_rows(&[vec![1.0f32, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(cost(&ps, &ps), 0.0);
+    }
+
+    #[test]
+    fn lloyd_step_conserves_mass() {
+        let (ps, cs) = case();
+        let (sums, counts, c) = lloyd_step(&ps, &cs);
+        assert_eq!(counts.iter().sum::<u64>(), ps.len() as u64);
+        // Sum of per-cluster sums = global coordinate sum.
+        let d = ps.dim();
+        for j in 0..d {
+            let global: f64 = (0..ps.len()).map(|i| ps.row(i)[j] as f64).sum();
+            let parts: f64 = (0..cs.len()).map(|q| sums[q * d + j]).sum();
+            assert!((global - parts).abs() < 1e-3 * global.abs().max(1.0));
+        }
+        assert!((c - cost(&ps, &cs)).abs() <= 1e-6 * c);
+    }
+
+    #[test]
+    fn single_center_everything_assigned_to_it() {
+        let (ps, _) = case();
+        let one = ps.gather(&[42]);
+        let (idx, _) = assign(&ps, &one);
+        assert!(idx.iter().all(|&i| i == 0));
+        let (_, counts, _) = lloyd_step(&ps, &one);
+        assert_eq!(counts, vec![ps.len() as u64]);
+    }
+}

@@ -1,0 +1,350 @@
+//! PJRT execution of the AOT JAX/Pallas artifacts.
+//!
+//! Load path (see /opt/xla-example and DESIGN.md): HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::cpu().compile` → `execute`. Compilation is lazy per
+//! shape variant and cached for the life of the runtime.
+//!
+//! Padding contract (mirrors `python/compile/model.py`):
+//! * point dims zero-padded to the variant's `d` (adds 0 to distances);
+//! * center rows padded with `PAD_CENTER_COORD` (never argmin-selected,
+//!   attract no Lloyd mass);
+//! * only *full* chunks go through PJRT; the tail chunk runs on the
+//!   native backend (identical contract, negligible work).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use crate::data::matrix::PointSet;
+use crate::runtime::manifest::{Manifest, Variant};
+use crate::runtime::native;
+
+/// Sentinel coordinate for padded center rows (see model.py).
+pub const PAD_CENTER_COORD: f32 = 1.0e15;
+
+/// A loaded PJRT CPU runtime over an artifacts directory.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    /// Lazy executable cache keyed by artifact path.
+    cache: RefCell<HashMap<PathBuf, xla::PjRtLoadedExecutable>>,
+}
+
+impl PjrtRuntime {
+    /// Load the manifest and bring up the PJRT CPU client.
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(PjrtRuntime {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) the executable for a variant, then
+    /// run it on `literals`, returning the flattened output tuple.
+    fn run(&self, variant: &Variant, literals: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        {
+            let cache = self.cache.borrow();
+            if let Some(exe) = cache.get(&variant.file) {
+                return exec(exe, literals);
+            }
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            variant
+                .file
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 artifact path"))?,
+        )
+        .map_err(|e| anyhow!("parse {:?}: {e:?}", variant.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {:?}: {e:?}", variant.file))?;
+        let out = exec(&exe, literals)?;
+        self.cache.borrow_mut().insert(variant.file.clone(), exe);
+        Ok(out)
+    }
+
+    /// Pack `centers` into a `[k_v, d_v]` buffer per the padding contract.
+    fn pad_centers(centers: &PointSet, k_v: usize, d_v: usize) -> Vec<f32> {
+        let mut buf = vec![0.0f32; k_v * d_v];
+        for j in 0..centers.len() {
+            buf[j * d_v..j * d_v + centers.dim()].copy_from_slice(centers.row(j));
+        }
+        for j in centers.len()..k_v {
+            for v in buf[j * d_v..(j + 1) * d_v].iter_mut() {
+                *v = PAD_CENTER_COORD;
+            }
+        }
+        buf
+    }
+
+    /// Pack points `[start, start+chunk)` into a `[chunk, d_v]` buffer.
+    fn pad_points(ps: &PointSet, start: usize, chunk: usize, d_v: usize, buf: &mut [f32]) {
+        debug_assert_eq!(buf.len(), chunk * d_v);
+        let d = ps.dim();
+        if d == d_v {
+            buf.copy_from_slice(&ps.flat()[start * d..(start + chunk) * d]);
+        } else {
+            buf.fill(0.0);
+            for i in 0..chunk {
+                buf[i * d_v..i * d_v + d].copy_from_slice(ps.row(start + i));
+            }
+        }
+    }
+
+    fn tail_points(ps: &PointSet, start: usize) -> PointSet {
+        let d = ps.dim();
+        PointSet::from_flat(
+            ps.len() - start,
+            d,
+            ps.flat()[start * d..].to_vec(),
+        )
+    }
+
+    /// k-means cost via the `cost` artifact (tail natively).
+    ///
+    /// Shapes beyond the AOT variant grid (e.g. k > the largest compiled
+    /// k) fall back to the native backend — identical contract.
+    pub fn cost(&self, ps: &PointSet, centers: &PointSet) -> Result<f64> {
+        let Some(variant) = self
+            .manifest
+            .select("cost", ps.len(), ps.dim(), centers.len())
+            .cloned()
+        else {
+            return Ok(native::cost(ps, centers));
+        };
+        let centers_lit = xla::Literal::vec1(&Self::pad_centers(centers, variant.k, variant.d))
+            .reshape(&[variant.k as i64, variant.d as i64])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let mut total = 0.0f64;
+        let mut buf = vec![0.0f32; variant.chunk * variant.d];
+        let full_chunks = ps.len() / variant.chunk;
+        for c in 0..full_chunks {
+            Self::pad_points(ps, c * variant.chunk, variant.chunk, variant.d, &mut buf);
+            let pts = xla::Literal::vec1(&buf)
+                .reshape(&[variant.chunk as i64, variant.d as i64])
+                .map_err(|e| anyhow!("{e:?}"))?;
+            let out = self.run(&variant, &[pts, centers_lit.clone()])?;
+            let v: Vec<f32> = out[0].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+            total += v[0] as f64;
+        }
+        let tail_start = full_chunks * variant.chunk;
+        if tail_start < ps.len() {
+            total += native::cost(&Self::tail_points(ps, tail_start), centers);
+        }
+        Ok(total)
+    }
+
+    /// Nearest-center assignment via the `assign` artifact (native
+    /// fallback outside the variant grid).
+    pub fn assign(&self, ps: &PointSet, centers: &PointSet) -> Result<(Vec<u32>, Vec<f32>)> {
+        let Some(variant) = self
+            .manifest
+            .select("assign", ps.len(), ps.dim(), centers.len())
+            .cloned()
+        else {
+            return Ok(native::assign(ps, centers));
+        };
+        let centers_lit = xla::Literal::vec1(&Self::pad_centers(centers, variant.k, variant.d))
+            .reshape(&[variant.k as i64, variant.d as i64])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let n = ps.len();
+        let mut idx = Vec::with_capacity(n);
+        let mut mind2 = Vec::with_capacity(n);
+        let mut buf = vec![0.0f32; variant.chunk * variant.d];
+        let full_chunks = n / variant.chunk;
+        for c in 0..full_chunks {
+            Self::pad_points(ps, c * variant.chunk, variant.chunk, variant.d, &mut buf);
+            let pts = xla::Literal::vec1(&buf)
+                .reshape(&[variant.chunk as i64, variant.d as i64])
+                .map_err(|e| anyhow!("{e:?}"))?;
+            let out = self.run(&variant, &[pts, centers_lit.clone()])?;
+            let ids: Vec<i32> = out[0].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+            let dd: Vec<f32> = out[1].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+            idx.extend(ids.into_iter().map(|i| i as u32));
+            mind2.extend(dd);
+        }
+        let tail_start = full_chunks * variant.chunk;
+        if tail_start < n {
+            let (ti, td) = native::assign(&Self::tail_points(ps, tail_start), centers);
+            idx.extend(ti);
+            mind2.extend(td);
+        }
+        Ok((idx, mind2))
+    }
+
+    /// One Lloyd step via the `lloyd_step` artifact: `(sums k*d, counts, cost)`.
+    pub fn lloyd_step(
+        &self,
+        ps: &PointSet,
+        centers: &PointSet,
+    ) -> Result<(Vec<f64>, Vec<u64>, f64)> {
+        let Some(variant) = self
+            .manifest
+            .select("lloyd_step", ps.len(), ps.dim(), centers.len())
+            .cloned()
+        else {
+            return Ok(native::lloyd_step(ps, centers));
+        };
+        let k = centers.len();
+        let d = ps.dim();
+        let centers_lit = xla::Literal::vec1(&Self::pad_centers(centers, variant.k, variant.d))
+            .reshape(&[variant.k as i64, variant.d as i64])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let mut sums = vec![0.0f64; k * d];
+        let mut counts = vec![0u64; k];
+        let mut cost = 0.0f64;
+        let mut buf = vec![0.0f32; variant.chunk * variant.d];
+        let full_chunks = ps.len() / variant.chunk;
+        for c in 0..full_chunks {
+            Self::pad_points(ps, c * variant.chunk, variant.chunk, variant.d, &mut buf);
+            let pts = xla::Literal::vec1(&buf)
+                .reshape(&[variant.chunk as i64, variant.d as i64])
+                .map_err(|e| anyhow!("{e:?}"))?;
+            let out = self.run(&variant, &[pts, centers_lit.clone()])?;
+            let s: Vec<f32> = out[0].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+            let cnt: Vec<f32> = out[1].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+            let co: Vec<f32> = out[2].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+            for j in 0..k {
+                for t in 0..d {
+                    sums[j * d + t] += s[j * variant.d + t] as f64;
+                }
+                counts[j] += cnt[j] as u64;
+            }
+            cost += co[0] as f64;
+        }
+        let tail_start = full_chunks * variant.chunk;
+        if tail_start < ps.len() {
+            let (ts, tc, tcost) =
+                native::lloyd_step(&Self::tail_points(ps, tail_start), centers);
+            for (a, b) in sums.iter_mut().zip(&ts) {
+                *a += b;
+            }
+            for (a, b) in counts.iter_mut().zip(&tc) {
+                *a += b;
+            }
+            cost += tcost;
+        }
+        Ok((sums, counts, cost))
+    }
+
+    /// k-means++ distance min-update via the `d2_update` artifact.
+    pub fn d2_update(&self, ps: &PointSet, center: &[f32], cur_d2: &mut [f32]) -> Result<()> {
+        assert_eq!(center.len(), ps.dim());
+        assert_eq!(cur_d2.len(), ps.len());
+        let Some(variant) = self
+            .manifest
+            .select("d2_update", ps.len(), ps.dim(), 0)
+            .cloned()
+        else {
+            crate::seeding::kmeanspp::update_d2_parallel_to(ps, center, cur_d2);
+            return Ok(());
+        };
+        let mut c_buf = vec![0.0f32; variant.d];
+        c_buf[..center.len()].copy_from_slice(center);
+        let center_lit = xla::Literal::vec1(&c_buf)
+            .reshape(&[1, variant.d as i64])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let mut buf = vec![0.0f32; variant.chunk * variant.d];
+        let full_chunks = ps.len() / variant.chunk;
+        for c in 0..full_chunks {
+            let start = c * variant.chunk;
+            Self::pad_points(ps, start, variant.chunk, variant.d, &mut buf);
+            let pts = xla::Literal::vec1(&buf)
+                .reshape(&[variant.chunk as i64, variant.d as i64])
+                .map_err(|e| anyhow!("{e:?}"))?;
+            let cur = xla::Literal::vec1(&cur_d2[start..start + variant.chunk]);
+            let out = self.run(&variant, &[pts, center_lit.clone(), cur])?;
+            let updated: Vec<f32> = out[0].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+            cur_d2[start..start + variant.chunk].copy_from_slice(&updated);
+        }
+        let tail_start = full_chunks * variant.chunk;
+        for i in tail_start..ps.len() {
+            let dd = crate::data::matrix::d2(ps.row(i), center);
+            if dd < cur_d2[i] {
+                cur_d2[i] = dd;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Execute and flatten the 1-tuple-of-outputs convention from aot.py
+/// (`return_tuple=True`).
+fn exec(exe: &xla::PjRtLoadedExecutable, literals: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+    let result = exe
+        .execute::<xla::Literal>(literals)
+        .map_err(|e| anyhow!("execute: {e:?}"))?;
+    let lit = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+    lit.to_tuple().map_err(|e| anyhow!("tuple: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    //! Unit tests needing compiled artifacts are in
+    //! `rust/tests/pjrt_integration.rs` (they skip gracefully when
+    //! `artifacts/` is absent). Here: padding logic only.
+    use super::*;
+    use crate::data::synth::{gaussian_mixture, SynthSpec};
+
+    #[test]
+    fn pad_centers_layout() {
+        let cs = PointSet::from_rows(&[vec![1.0f32, 2.0], vec![3.0, 4.0]]);
+        let buf = PjrtRuntime::pad_centers(&cs, 4, 3);
+        assert_eq!(&buf[0..3], &[1.0, 2.0, 0.0]);
+        assert_eq!(&buf[3..6], &[3.0, 4.0, 0.0]);
+        assert!(buf[6..].iter().all(|&v| v == PAD_CENTER_COORD));
+    }
+
+    #[test]
+    fn pad_points_fast_path_and_padded_path() {
+        let ps = gaussian_mixture(
+            &SynthSpec {
+                n: 10,
+                d: 4,
+                k_true: 2,
+                ..Default::default()
+            },
+            1,
+        );
+        let mut buf = vec![9.0f32; 2 * 4];
+        PjrtRuntime::pad_points(&ps, 3, 2, 4, &mut buf);
+        assert_eq!(&buf[0..4], ps.row(3));
+        assert_eq!(&buf[4..8], ps.row(4));
+        let mut buf6 = vec![9.0f32; 2 * 6];
+        PjrtRuntime::pad_points(&ps, 3, 2, 6, &mut buf6);
+        assert_eq!(&buf6[0..4], ps.row(3));
+        assert_eq!(&buf6[4..6], &[0.0, 0.0]);
+        assert_eq!(&buf6[6..10], ps.row(4));
+    }
+
+    #[test]
+    fn tail_points_slices() {
+        let ps = gaussian_mixture(
+            &SynthSpec {
+                n: 7,
+                d: 3,
+                k_true: 2,
+                ..Default::default()
+            },
+            2,
+        );
+        let tail = PjrtRuntime::tail_points(&ps, 5);
+        assert_eq!(tail.len(), 2);
+        assert_eq!(tail.row(0), ps.row(5));
+        assert_eq!(tail.row(1), ps.row(6));
+    }
+}

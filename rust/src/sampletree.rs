@@ -1,0 +1,268 @@
+//! The *sample-tree* (paper §4): a node-weighted balanced binary tree with
+//! one leaf per point, supporting
+//!
+//! * `update(i, w)` — set leaf `i`'s weight, `O(log n)`;
+//! * `sample(rng)` — draw a leaf with probability `w_i / Σ w`, `O(log n)`
+//!   (Algorithm 2: walk from the root, choosing each child with
+//!   probability proportional to its subtree weight);
+//! * `total()` — Σ w, `O(1)`.
+//!
+//! Implemented as an implicit complete binary tree (segment tree) over
+//! `n` leaves padded to a power of two; node `v`'s weight is stored in a
+//! flat array with children `2v`/`2v+1`. Weights are `f64`: the inputs are
+//! squared f32 distances whose sums overflow f32 precision long before n
+//! reaches the paper's dataset sizes.
+
+use crate::rng::Pcg64;
+
+/// Weighted balanced binary tree over `n` leaves (invariant 2 of §4:
+/// every internal node's weight equals the sum of the weights of the
+/// leaves in its subtree).
+#[derive(Clone, Debug)]
+pub struct SampleTree {
+    n: usize,
+    /// Number of leaves padded to a power of two.
+    base: usize,
+    /// 1-indexed heap layout; `tree[1]` is the root, leaves start at `base`.
+    tree: Vec<f64>,
+}
+
+impl SampleTree {
+    /// Build with all weights zero.
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0, "empty sample tree");
+        let base = n.next_power_of_two();
+        SampleTree {
+            n,
+            base,
+            tree: vec![0.0; 2 * base],
+        }
+    }
+
+    /// Build with every leaf at `w` (the `M`-initialization of §4), `O(n)`.
+    pub fn with_uniform_weight(n: usize, w: f64) -> Self {
+        let mut t = SampleTree::new(n);
+        for i in 0..n {
+            t.tree[t.base + i] = w;
+        }
+        // Bottom-up sums in O(base).
+        for v in (1..t.base).rev() {
+            t.tree[v] = t.tree[2 * v] + t.tree[2 * v + 1];
+        }
+        t
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Current weight of leaf `i`.
+    #[inline]
+    pub fn weight(&self, i: usize) -> f64 {
+        self.tree[self.base + i]
+    }
+
+    /// Total weight (root).
+    #[inline]
+    pub fn total(&self) -> f64 {
+        self.tree[1]
+    }
+
+    /// Set leaf `i` to `w`, updating the `O(log n)` ancestors.
+    #[inline]
+    pub fn update(&mut self, i: usize, w: f64) {
+        debug_assert!(i < self.n);
+        debug_assert!(w >= 0.0 && w.is_finite(), "weight {w}");
+        let mut v = self.base + i;
+        let delta = w - self.tree[v];
+        if delta == 0.0 {
+            return;
+        }
+        self.tree[v] = w;
+        v /= 2;
+        while v >= 1 {
+            self.tree[v] += delta;
+            if v == 1 {
+                break;
+            }
+            v /= 2;
+        }
+        // Guard against drift pushing a node slightly negative.
+        if self.tree[1] < 0.0 {
+            self.rebuild();
+        }
+    }
+
+    /// Recompute all internal sums from the leaves (drift repair), `O(n)`.
+    pub fn rebuild(&mut self) {
+        for v in (1..self.base).rev() {
+            self.tree[v] = self.tree[2 * v] + self.tree[2 * v + 1];
+        }
+    }
+
+    /// Algorithm 2: sample a leaf proportional to its weight.
+    /// Returns `None` when the total weight is zero.
+    pub fn sample(&self, rng: &mut Pcg64) -> Option<usize> {
+        let total = self.tree[1];
+        if !(total > 0.0) {
+            return None;
+        }
+        let mut v = 1usize;
+        // Descend: pick left child w.p. w(L)/(w(L)+w(R)).
+        let mut target = rng.next_f64() * total;
+        while v < self.base {
+            let left = self.tree[2 * v];
+            if target < left {
+                v = 2 * v;
+            } else {
+                target -= left;
+                v = 2 * v + 1;
+            }
+        }
+        let idx = v - self.base;
+        if idx >= self.n || self.tree[v] <= 0.0 {
+            // Floating-point edge (target landed in padding / a zero leaf
+            // due to rounding): resample by scanning to the nearest
+            // positive leaf — rare, O(n) worst case, keeps correctness.
+            return (0..self.n).find(|&i| self.tree[self.base + i] > 0.0);
+        }
+        Some(idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn empirical(t: &SampleTree, draws: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Pcg64::seed_from(seed);
+        let mut counts = vec![0usize; t.len()];
+        for _ in 0..draws {
+            counts[t.sample(&mut rng).unwrap()] += 1;
+        }
+        counts.iter().map(|&c| c as f64 / draws as f64).collect()
+    }
+
+    #[test]
+    fn uniform_init_sums() {
+        let t = SampleTree::with_uniform_weight(10, 2.5);
+        assert!((t.total() - 25.0).abs() < 1e-12);
+        for i in 0..10 {
+            assert_eq!(t.weight(i), 2.5);
+        }
+    }
+
+    #[test]
+    fn invariant_after_updates() {
+        let mut t = SampleTree::with_uniform_weight(13, 1.0);
+        let mut rng = Pcg64::seed_from(1);
+        for _ in 0..500 {
+            let i = rng.index(13);
+            t.update(i, rng.next_f64() * 10.0);
+        }
+        // Invariant 2: every internal node = sum of children.
+        for v in 1..t.base {
+            let want = t.tree[2 * v] + t.tree[2 * v + 1];
+            assert!((t.tree[v] - want).abs() < 1e-6 * want.max(1.0), "node {v}");
+        }
+        let leaf_sum: f64 = (0..13).map(|i| t.weight(i)).sum();
+        assert!((t.total() - leaf_sum).abs() < 1e-9 * leaf_sum.max(1.0));
+    }
+
+    #[test]
+    fn sampling_distribution_matches_weights() {
+        let mut t = SampleTree::new(4);
+        for (i, w) in [0.1, 0.0, 0.6, 0.3].iter().enumerate() {
+            t.update(i, *w);
+        }
+        let freq = empirical(&t, 200_000, 2);
+        assert!((freq[0] - 0.1).abs() < 0.01);
+        assert_eq!(freq[1], 0.0);
+        assert!((freq[2] - 0.6).abs() < 0.01);
+        assert!((freq[3] - 0.3).abs() < 0.01);
+    }
+
+    #[test]
+    fn sampling_non_power_of_two() {
+        let mut t = SampleTree::new(7);
+        for i in 0..7 {
+            t.update(i, (i + 1) as f64);
+        }
+        let freq = empirical(&t, 280_000, 3);
+        for i in 0..7 {
+            let want = (i + 1) as f64 / 28.0;
+            assert!((freq[i] - want).abs() < 0.01, "i={i} got={} want={want}", freq[i]);
+        }
+    }
+
+    #[test]
+    fn zero_total_returns_none() {
+        let t = SampleTree::new(5);
+        let mut rng = Pcg64::seed_from(4);
+        assert_eq!(t.sample(&mut rng), None);
+    }
+
+    #[test]
+    fn single_positive_leaf_always_sampled() {
+        let mut t = SampleTree::new(9);
+        t.update(6, 1e-30);
+        let mut rng = Pcg64::seed_from(5);
+        for _ in 0..100 {
+            assert_eq!(t.sample(&mut rng), Some(6));
+        }
+    }
+
+    #[test]
+    fn update_to_zero_removes_mass() {
+        let mut t = SampleTree::with_uniform_weight(3, 1.0);
+        t.update(0, 0.0);
+        t.update(2, 0.0);
+        let mut rng = Pcg64::seed_from(6);
+        for _ in 0..50 {
+            assert_eq!(t.sample(&mut rng), Some(1));
+        }
+    }
+
+    #[test]
+    fn property_random_ops_vs_linear_oracle() {
+        // Hand-rolled property test: the O(log n) tree must agree with the
+        // weighted linear scan oracle in distribution across many random
+        // (size, ops) instances.
+        for seed in 0..8u64 {
+            let mut rng = Pcg64::seed_from(100 + seed);
+            let n = 2 + rng.index(60);
+            let mut t = SampleTree::new(n);
+            let mut w = vec![0.0f64; n];
+            for _ in 0..200 {
+                let i = rng.index(n);
+                let x = if rng.next_bool(0.2) {
+                    0.0
+                } else {
+                    rng.next_f64() * 5.0
+                };
+                w[i] = x;
+                t.update(i, x);
+            }
+            let total: f64 = w.iter().sum();
+            assert!((t.total() - total).abs() < 1e-9 * total.max(1.0));
+            if total > 0.0 {
+                // Chi-square-ish agreement on 20k draws.
+                let freq = empirical(&t, 20_000, 200 + seed);
+                for i in 0..n {
+                    let want = w[i] / total;
+                    assert!(
+                        (freq[i] - want).abs() < 0.025 + want * 0.15,
+                        "seed={seed} i={i} got={} want={want}",
+                        freq[i]
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,215 @@
+//! AFK-MC² (Bachem, Lucic, Hassani, Krause — NeurIPS 2016), the paper's
+//! "fast seeding" baseline.
+//!
+//! Metropolis–Hastings over the assumption-free proposal
+//!
+//! ```text
+//!   q(x) = 1/2 · d(x, c1)^2 / Σ_y d(y, c1)^2  +  1/(2n)
+//! ```
+//!
+//! built once in `O(nd)`. Each of the `k-1` rounds runs an `m`-step chain
+//! whose stationary distribution is the true `D^2` distribution; each step
+//! evaluates `DIST(y, S)^2` against all current centers — the `O(m k^2 d)`
+//! term that the rejection-sampling paper removes. The paper's experiments
+//! use the authors' suggested `m = 200`; so do we.
+
+use std::time::Instant;
+
+use crate::data::matrix::{d2, PointSet};
+use crate::rng::Pcg64;
+use crate::seeding::{Seeding, SeedingStats};
+
+/// AFK-MC² configuration.
+#[derive(Clone, Debug)]
+pub struct Afkmc2Config {
+    /// Markov chain length per center (paper setup: 200).
+    pub chain_length: usize,
+}
+
+impl Default for Afkmc2Config {
+    fn default() -> Self {
+        Afkmc2Config { chain_length: 200 }
+    }
+}
+
+/// AFK-MC² seeding.
+pub fn afkmc2(ps: &PointSet, k: usize, cfg: &Afkmc2Config, rng: &mut Pcg64) -> Seeding {
+    let k = k.min(ps.len());
+    let n = ps.len();
+    let mut stats = SeedingStats::default();
+
+    let t0 = Instant::now();
+    // First center uniform; build the proposal q and its prefix sums.
+    let c1 = rng.index(n);
+    let c1_row = ps.row(c1).to_vec();
+    let mut q = vec![0.0f64; n];
+    let mut total = 0.0f64;
+    for i in 0..n {
+        let dd = d2(ps.row(i), &c1_row) as f64;
+        q[i] = dd;
+        total += dd;
+    }
+    // q(x) = 0.5 d^2/Σ + 0.5/n ; degenerate Σ=0 -> uniform.
+    let mut prefix = vec![0.0f64; n + 1];
+    for i in 0..n {
+        let val = if total > 0.0 {
+            0.5 * q[i] / total + 0.5 / n as f64
+        } else {
+            1.0 / n as f64
+        };
+        q[i] = val;
+        prefix[i + 1] = prefix[i] + val;
+    }
+    let norm = prefix[n];
+    stats.init_secs = t0.elapsed().as_secs_f64();
+
+    let t1 = Instant::now();
+    let mut indices = vec![c1];
+
+    // dist^2 to the current center set, evaluated by scanning S.
+    let dist_to_set = |x: usize, set: &[usize]| -> f64 {
+        let row = ps.row(x);
+        set.iter()
+            .map(|&s| d2(row, ps.row(s)) as f64)
+            .fold(f64::INFINITY, f64::min)
+    };
+    // O(log n) inverse-CDF sampling from q.
+    let sample_q = |rng: &mut Pcg64| -> usize {
+        let target = rng.next_f64() * norm;
+        // binary search for the first prefix > target
+        let mut lo = 0usize;
+        let mut hi = n;
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if prefix[mid + 1] > target {
+                hi = mid;
+            } else {
+                lo = mid + 1;
+            }
+        }
+        lo.min(n - 1)
+    };
+
+    while indices.len() < k {
+        // Initialize the chain.
+        let mut x = sample_q(rng);
+        let mut dx = dist_to_set(x, &indices);
+        stats.proposals += 1;
+        for _ in 1..cfg.chain_length.max(1) {
+            let y = sample_q(rng);
+            stats.proposals += 1;
+            let dy = dist_to_set(y, &indices);
+            // Acceptance: (dy/q(y)) / (dx/q(x)).
+            let accept = if dx <= 0.0 {
+                true // current state is a center; any proposal improves
+            } else {
+                let ratio = (dy * q[x]) / (dx * q[y]);
+                rng.next_f64() < ratio
+            };
+            if accept {
+                x = y;
+                dx = dy;
+            } else {
+                stats.rejections += 1;
+            }
+        }
+        if indices.contains(&x) {
+            // The chain ended on an existing center (possible on tiny or
+            // degenerate data): take any unchosen point to keep indices
+            // distinct — matches the reference implementation's dedup.
+            if let Some(fresh) = (0..n).find(|i| !indices.contains(i)) {
+                indices.push(fresh);
+            } else {
+                break;
+            }
+        } else {
+            indices.push(x);
+        }
+    }
+    stats.select_secs = t1.elapsed().as_secs_f64();
+    Seeding::from_indices(ps, indices, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gaussian_mixture, separated_grid, SynthSpec};
+    use crate::lloyd::cost_native;
+    use crate::seeding::uniform::uniform_sampling;
+
+    #[test]
+    fn returns_k_distinct() {
+        let ps = gaussian_mixture(
+            &SynthSpec {
+                n: 400,
+                d: 5,
+                k_true: 8,
+                ..Default::default()
+            },
+            1,
+        );
+        let mut rng = Pcg64::seed_from(2);
+        let s = afkmc2(&ps, 25, &Afkmc2Config { chain_length: 20 }, &mut rng);
+        assert_eq!(s.k(), 25);
+        let mut idx = s.indices.clone();
+        idx.sort_unstable();
+        idx.dedup();
+        assert_eq!(idx.len(), 25);
+    }
+
+    #[test]
+    fn proposal_counts_match_chain_length() {
+        let ps = gaussian_mixture(
+            &SynthSpec {
+                n: 200,
+                d: 4,
+                k_true: 4,
+                ..Default::default()
+            },
+            3,
+        );
+        let mut rng = Pcg64::seed_from(4);
+        let cfg = Afkmc2Config { chain_length: 50 };
+        let s = afkmc2(&ps, 5, &cfg, &mut rng);
+        // (k-1) chains x 50 proposals each.
+        assert_eq!(s.stats.proposals, 4 * 50);
+    }
+
+    #[test]
+    fn quality_between_uniform_and_kmeanspp() {
+        // On separated clusters AFK-MC2 approaches exact D^2 quality and
+        // beats uniform (this is Figure 1 of the Bachem et al. paper).
+        let ps = separated_grid(10, 80, 4, 5);
+        let mut afk_cost = 0.0;
+        let mut uni_cost = 0.0;
+        for seed in 0..5 {
+            let mut rng = Pcg64::seed_from(100 + seed);
+            let s = afkmc2(&ps, 10, &Afkmc2Config { chain_length: 100 }, &mut rng);
+            afk_cost += cost_native(&ps, &s.centers);
+            let mut rng2 = Pcg64::seed_from(200 + seed);
+            let u = uniform_sampling(&ps, 10, &mut rng2);
+            uni_cost += cost_native(&ps, &u.centers);
+        }
+        assert!(
+            afk_cost < uni_cost,
+            "afkmc2 ({afk_cost}) should beat uniform ({uni_cost})"
+        );
+    }
+
+    #[test]
+    fn single_center_is_uniform_draw() {
+        let ps = gaussian_mixture(
+            &SynthSpec {
+                n: 50,
+                d: 3,
+                k_true: 2,
+                ..Default::default()
+            },
+            6,
+        );
+        let mut rng = Pcg64::seed_from(7);
+        let s = afkmc2(&ps, 1, &Default::default(), &mut rng);
+        assert_eq!(s.k(), 1);
+        assert_eq!(s.stats.proposals, 0);
+    }
+}

@@ -1,0 +1,203 @@
+//! `FASTK-MEANS++` (Algorithm 3): `D^2` seeding over the multi-tree
+//! metric.
+//!
+//! `MultiTreeInit()` then `k` rounds of `MULTITREESAMPLE` +
+//! `MULTITREEOPEN`. Total `O(nd log(dΔ) + n log(dΔ) log n)`
+//! (Corollary 4.3) — crucially *independent of k* beyond the `k` samples
+//! themselves, which is where the order-of-magnitude speedups of
+//! Tables 1–3 at k = 5000 come from.
+
+use std::time::Instant;
+
+use crate::data::matrix::PointSet;
+use crate::embed::multitree::{MultiTree, MultiTreeConfig};
+use crate::rng::Pcg64;
+use crate::seeding::{Seeding, SeedingStats};
+
+/// Configuration for FastKMeans++ (tree count ablation lives here).
+#[derive(Clone, Debug, Default)]
+pub struct FastConfig {
+    pub multitree: MultiTreeConfig,
+}
+
+/// Algorithm 3.
+pub fn fast_kmeanspp(ps: &PointSet, k: usize, cfg: &FastConfig, rng: &mut Pcg64) -> Seeding {
+    let k = k.min(ps.len());
+    let mut stats = SeedingStats::default();
+
+    let t0 = Instant::now();
+    let mut mt = MultiTree::init(ps, &cfg.multitree, rng);
+    stats.init_secs = t0.elapsed().as_secs_f64();
+
+    let t1 = Instant::now();
+    let mut indices = Vec::with_capacity(k);
+    while indices.len() < k {
+        stats.proposals += 1;
+        let x = match mt.sample(rng) {
+            Some(x) => x,
+            // Total multi-tree weight hit zero: every remaining point is
+            // coincident with an opened center. Top up with arbitrary
+            // distinct indices to honor the k contract.
+            None => match (0..ps.len()).find(|i| !indices.contains(i)) {
+                Some(i) => i,
+                None => break,
+            },
+        };
+        indices.push(x);
+        mt.open(x);
+    }
+    stats.select_secs = t1.elapsed().as_secs_f64();
+    Seeding::from_indices(ps, indices, stats)
+}
+
+/// Variant that also returns the multi-tree (the rejection sampler and
+/// tests reuse it).
+pub fn fast_kmeanspp_with_tree(
+    ps: &PointSet,
+    k: usize,
+    cfg: &FastConfig,
+    rng: &mut Pcg64,
+) -> (Seeding, MultiTree) {
+    let k = k.min(ps.len());
+    let mut stats = SeedingStats::default();
+    let t0 = Instant::now();
+    let mut mt = MultiTree::init(ps, &cfg.multitree, rng);
+    stats.init_secs = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let mut indices = Vec::with_capacity(k);
+    while indices.len() < k {
+        stats.proposals += 1;
+        let x = match mt.sample(rng) {
+            Some(x) => x,
+            None => match (0..ps.len()).find(|i| !indices.contains(i)) {
+                Some(i) => i,
+                None => break,
+            },
+        };
+        indices.push(x);
+        mt.open(x);
+    }
+    stats.select_secs = t1.elapsed().as_secs_f64();
+    (Seeding::from_indices(ps, indices, stats), mt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gaussian_mixture, separated_grid, SynthSpec};
+    use crate::lloyd::cost_native;
+    use crate::seeding::uniform::uniform_sampling;
+
+    #[test]
+    fn returns_k_distinct() {
+        let ps = gaussian_mixture(
+            &SynthSpec {
+                n: 600,
+                d: 8,
+                k_true: 12,
+                ..Default::default()
+            },
+            1,
+        );
+        let mut rng = Pcg64::seed_from(2);
+        let s = fast_kmeanspp(&ps, 40, &FastConfig::default(), &mut rng);
+        assert_eq!(s.k(), 40);
+        let mut idx = s.indices.clone();
+        idx.sort_unstable();
+        idx.dedup();
+        assert_eq!(idx.len(), 40);
+    }
+
+    #[test]
+    fn first_sample_is_uniform() {
+        // With S empty all weights are M, so the first draw is uniform.
+        let ps = gaussian_mixture(
+            &SynthSpec {
+                n: 20,
+                d: 3,
+                k_true: 2,
+                ..Default::default()
+            },
+            3,
+        );
+        let mut counts = vec![0u32; 20];
+        for seed in 0..8000u64 {
+            let mut rng = Pcg64::seed_from(seed);
+            let s = fast_kmeanspp(&ps, 1, &FastConfig::default(), &mut rng);
+            counts[s.indices[0]] += 1;
+        }
+        for &c in &counts {
+            assert!((c as i64 - 400).abs() < 150, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn covers_separated_clusters() {
+        // The tree D^2 proxy must still find well-separated clusters: the
+        // distortion is bounded, separation is huge.
+        let ps = separated_grid(8, 60, 3, 4);
+        let mut hits = 0;
+        for seed in 0..10 {
+            let mut rng = Pcg64::seed_from(50 + seed);
+            let s = fast_kmeanspp(&ps, 8, &FastConfig::default(), &mut rng);
+            let mut clusters: Vec<usize> = s.indices.iter().map(|&i| i / 60).collect();
+            clusters.sort_unstable();
+            clusters.dedup();
+            if clusters.len() == 8 {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 8, "only {hits}/10 runs covered all clusters");
+    }
+
+    #[test]
+    fn beats_uniform_on_clustered_data() {
+        let ps = separated_grid(10, 100, 4, 6);
+        let mut fast_cost = 0.0;
+        let mut uni_cost = 0.0;
+        for seed in 0..5 {
+            let mut rng = Pcg64::seed_from(300 + seed);
+            let s = fast_kmeanspp(&ps, 10, &FastConfig::default(), &mut rng);
+            fast_cost += cost_native(&ps, &s.centers);
+            let mut rng2 = Pcg64::seed_from(400 + seed);
+            uni_cost += cost_native(&ps, &uniform_sampling(&ps, 10, &mut rng2).centers);
+        }
+        assert!(fast_cost < uni_cost, "fast={fast_cost} uniform={uni_cost}");
+    }
+
+    #[test]
+    fn k_equals_n() {
+        let ps = gaussian_mixture(
+            &SynthSpec {
+                n: 30,
+                d: 4,
+                k_true: 3,
+                ..Default::default()
+            },
+            7,
+        );
+        let mut rng = Pcg64::seed_from(8);
+        let s = fast_kmeanspp(&ps, 30, &FastConfig::default(), &mut rng);
+        assert_eq!(s.k(), 30);
+    }
+
+    #[test]
+    fn with_tree_variant_consistent() {
+        let ps = gaussian_mixture(
+            &SynthSpec {
+                n: 100,
+                d: 5,
+                k_true: 4,
+                ..Default::default()
+            },
+            9,
+        );
+        let mut rng = Pcg64::seed_from(10);
+        let (s, mt) = fast_kmeanspp_with_tree(&ps, 12, &FastConfig::default(), &mut rng);
+        assert_eq!(s.k(), 12);
+        assert_eq!(mt.opened().len(), 12);
+        for &i in &s.indices {
+            assert_eq!(mt.weight(i), 0.0, "opened center weight must be 0");
+        }
+    }
+}

@@ -1,0 +1,384 @@
+//! Exact `D^2` seeding — the original K-MEANS++ of Arthur & Vassilvitskii
+//! (2007), the paper's primary baseline.
+//!
+//! `Θ(ndk)`: every one of the `k` rounds updates all `n` cached squared
+//! distances against the newly opened center (`d2_update`, the same
+//! contract as the L1 Pallas kernel) and draws one sample from the exact
+//! `D^2` distribution by prefix scan. The distance update is
+//! parallelized over point chunks; this is the tuned native twin of the
+//! `d2_update` PJRT artifact.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::data::matrix::{d2, PointSet};
+use crate::parallel::parallel_ranges;
+use crate::rng::Pcg64;
+use crate::seeding::{Seeding, SeedingStats};
+
+/// Exact k-means++ seeding.
+pub fn kmeanspp(ps: &PointSet, k: usize, rng: &mut Pcg64) -> Seeding {
+    let k = k.min(ps.len());
+    let t0 = Instant::now();
+    let n = ps.len();
+    let mut cur_d2 = vec![f32::INFINITY; n];
+    let mut indices = Vec::with_capacity(k);
+    let mut stats = SeedingStats::default();
+    stats.init_secs = t0.elapsed().as_secs_f64();
+
+    let t1 = Instant::now();
+    // First center uniform.
+    let first = rng.index(n);
+    indices.push(first);
+    update_d2_parallel(ps, first, &mut cur_d2);
+    stats.proposals += 1;
+
+    while indices.len() < k {
+        stats.proposals += 1;
+        let next = match sample_d2(&cur_d2, rng) {
+            Some(i) => i,
+            None => {
+                // All remaining points coincide with centers; fill with
+                // arbitrary distinct indices to honor the k contract.
+                match (0..n).find(|i| !indices.contains(i)) {
+                    Some(i) => i,
+                    None => break,
+                }
+            }
+        };
+        indices.push(next);
+        update_d2_parallel(ps, next, &mut cur_d2);
+    }
+    stats.select_secs = t1.elapsed().as_secs_f64();
+    Seeding::from_indices(ps, indices, stats)
+}
+
+/// `cur[i] = min(cur[i], ||x_i - center||^2)` in parallel chunks.
+pub fn update_d2_parallel(ps: &PointSet, center: usize, cur_d2: &mut [f32]) {
+    let c = ps.row(center).to_vec();
+    update_d2_parallel_to(ps, &c, cur_d2)
+}
+
+/// Same, against an arbitrary center point.
+pub fn update_d2_parallel_to(ps: &PointSet, c: &[f32], cur_d2: &mut [f32]) {
+    let c = c.to_vec();
+    // SAFETY-free parallel mutation: hand each worker a disjoint
+    // sub-slice via raw split below (std::thread::scope + chunk math).
+    let n = ps.len();
+    let ptr = SendPtr(cur_d2.as_mut_ptr());
+    parallel_ranges(n, 4096, move |range| {
+        let ptr = &ptr;
+        for i in range {
+            let dd = d2(ps.row(i), &c);
+            // SAFETY: ranges from parallel_ranges are disjoint.
+            unsafe {
+                let slot = ptr.0.add(i);
+                if dd < *slot {
+                    *slot = dd;
+                }
+            }
+        }
+    });
+}
+
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Draw an index proportional to `w[i]` (exact `D^2`). Parallel prefix:
+/// block sums first (parallel), then a scan inside the selected block.
+pub fn sample_d2(w: &[f32], rng: &mut Pcg64) -> Option<usize> {
+    const BLOCK: usize = 8192;
+    let nblocks = w.len().div_ceil(BLOCK);
+    let block_sums: Vec<f64> = if nblocks > 4 {
+        let sums: Vec<AtomicU64> = (0..nblocks).map(|_| AtomicU64::new(0)).collect();
+        parallel_ranges(nblocks, 1, |range| {
+            for b in range {
+                let s: f64 = w[b * BLOCK..(b * BLOCK + BLOCK).min(w.len())]
+                    .iter()
+                    .map(|&x| x as f64)
+                    .sum();
+                sums[b].store(s.to_bits(), Ordering::Relaxed);
+            }
+        });
+        sums.into_iter()
+            .map(|a| f64::from_bits(a.load(Ordering::Relaxed)))
+            .collect()
+    } else {
+        (0..nblocks)
+            .map(|b| {
+                w[b * BLOCK..(b * BLOCK + BLOCK).min(w.len())]
+                    .iter()
+                    .map(|&x| x as f64)
+                    .sum()
+            })
+            .collect()
+    };
+    let total: f64 = block_sums.iter().sum();
+    if !(total > 0.0) || !total.is_finite() {
+        return None;
+    }
+    let mut target = rng.next_f64() * total;
+    for (b, &bs) in block_sums.iter().enumerate() {
+        if target < bs {
+            let start = b * BLOCK;
+            let end = (start + BLOCK).min(w.len());
+            for i in start..end {
+                target -= w[i] as f64;
+                if target < 0.0 {
+                    return Some(i);
+                }
+            }
+            // rounding slack: last positive weight in block
+            return w[start..end]
+                .iter()
+                .rposition(|&x| x > 0.0)
+                .map(|i| start + i)
+                .or_else(|| w.iter().rposition(|&x| x > 0.0));
+        }
+        target -= bs;
+    }
+    w.iter().rposition(|&x| x > 0.0)
+}
+
+/// Greedy k-means++ (Arthur & Vassilvitskii's practical variant,
+/// analyzed by Bhattacharya et al. — the paper's ref [11]; also
+/// scikit-learn's default): each round draws `trials` candidates from
+/// the `D^2` distribution and opens the one that reduces the total cost
+/// the most. `Θ(ndk·trials)` — slower than plain k-means++, usually a
+/// few percent better; included as the quality upper-bound reference for
+/// the cost tables and the `greedy` CLI algorithm.
+pub fn kmeanspp_greedy(ps: &PointSet, k: usize, trials: usize, rng: &mut Pcg64) -> Seeding {
+    let k = k.min(ps.len());
+    let trials = trials.max(1);
+    let n = ps.len();
+    let mut stats = SeedingStats::default();
+    let t1 = Instant::now();
+
+    let mut cur_d2 = vec![f32::INFINITY; n];
+    let mut indices = Vec::with_capacity(k);
+    let first = rng.index(n);
+    indices.push(first);
+    update_d2_parallel(ps, first, &mut cur_d2);
+    stats.proposals += 1;
+
+    let mut scratch = vec![0.0f32; n];
+    while indices.len() < k {
+        // Draw `trials` candidates, keep the cost-minimizing one.
+        let mut best: Option<(usize, f64, Vec<f32>)> = None;
+        for _ in 0..trials {
+            stats.proposals += 1;
+            let Some(cand) = sample_d2(&cur_d2, rng) else { break };
+            scratch.copy_from_slice(&cur_d2);
+            update_d2_parallel_to(ps, ps.row(cand), &mut scratch);
+            let cost: f64 = scratch.iter().map(|&x| x as f64).sum();
+            if best.as_ref().map_or(true, |(_, bc, _)| cost < *bc) {
+                best = Some((cand, cost, scratch.clone()));
+            } else {
+                stats.rejections += 1;
+            }
+        }
+        match best {
+            Some((cand, _, new_d2)) => {
+                indices.push(cand);
+                cur_d2 = new_d2;
+            }
+            None => {
+                // Degenerate: remaining points coincide with centers.
+                match (0..n).find(|i| !indices.contains(i)) {
+                    Some(i) => {
+                        indices.push(i);
+                        update_d2_parallel(ps, i, &mut cur_d2);
+                    }
+                    None => break,
+                }
+            }
+        }
+    }
+    stats.select_secs = t1.elapsed().as_secs_f64();
+    Seeding::from_indices(ps, indices, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gaussian_mixture, separated_grid, SynthSpec};
+    use crate::lloyd::cost_native;
+
+    #[test]
+    fn returns_k_distinct() {
+        let ps = gaussian_mixture(
+            &SynthSpec {
+                n: 500,
+                d: 6,
+                k_true: 10,
+                ..Default::default()
+            },
+            1,
+        );
+        let mut rng = Pcg64::seed_from(2);
+        let s = kmeanspp(&ps, 20, &mut rng);
+        assert_eq!(s.k(), 20);
+        let mut idx = s.indices.clone();
+        idx.sort_unstable();
+        idx.dedup();
+        assert_eq!(idx.len(), 20);
+    }
+
+    #[test]
+    fn covers_separated_clusters() {
+        // With k == true cluster count and huge separation, exact D^2
+        // seeding finds every cluster essentially always.
+        let ps = separated_grid(8, 50, 3, 3);
+        let mut hits = 0;
+        for seed in 0..10 {
+            let mut rng = Pcg64::seed_from(seed);
+            let s = kmeanspp(&ps, 8, &mut rng);
+            let mut clusters: Vec<usize> = s.indices.iter().map(|&i| i / 50).collect();
+            clusters.sort_unstable();
+            clusters.dedup();
+            if clusters.len() == 8 {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 9, "only {hits}/10 runs covered all clusters");
+    }
+
+    #[test]
+    fn k_larger_than_n_clamps() {
+        let ps = gaussian_mixture(
+            &SynthSpec {
+                n: 10,
+                d: 3,
+                k_true: 2,
+                ..Default::default()
+            },
+            4,
+        );
+        let mut rng = Pcg64::seed_from(5);
+        let s = kmeanspp(&ps, 50, &mut rng);
+        assert_eq!(s.k(), 10);
+    }
+
+    #[test]
+    fn sample_d2_respects_weights() {
+        let mut rng = Pcg64::seed_from(6);
+        let mut w = vec![0.0f32; 20_000];
+        w[7] = 1.0;
+        w[19_999] = 3.0;
+        let mut counts = [0u32; 2];
+        for _ in 0..20_000 {
+            match sample_d2(&w, &mut rng) {
+                Some(7) => counts[0] += 1,
+                Some(19_999) => counts[1] += 1,
+                other => panic!("sampled {other:?}"),
+            }
+        }
+        let ratio = counts[1] as f64 / counts[0] as f64;
+        assert!((ratio - 3.0).abs() < 0.3, "ratio {ratio}");
+    }
+
+    #[test]
+    fn sample_d2_degenerate() {
+        let mut rng = Pcg64::seed_from(7);
+        assert_eq!(sample_d2(&[], &mut rng), None);
+        assert_eq!(sample_d2(&[0.0, 0.0], &mut rng), None);
+    }
+
+    #[test]
+    fn update_d2_parallel_matches_serial() {
+        let ps = gaussian_mixture(
+            &SynthSpec {
+                n: 20_000,
+                d: 12,
+                k_true: 5,
+                ..Default::default()
+            },
+            8,
+        );
+        let mut par = vec![f32::INFINITY; ps.len()];
+        update_d2_parallel(&ps, 17, &mut par);
+        for i in (0..ps.len()).step_by(997) {
+            let want = ps.d2_rows(i, 17);
+            assert!((par[i] - want).abs() <= 1e-5 * want.max(1.0));
+        }
+    }
+
+    #[test]
+    fn greedy_returns_k_distinct() {
+        let ps = gaussian_mixture(
+            &SynthSpec {
+                n: 400,
+                d: 5,
+                k_true: 8,
+                ..Default::default()
+            },
+            11,
+        );
+        let mut rng = Pcg64::seed_from(12);
+        let s = kmeanspp_greedy(&ps, 15, 4, &mut rng);
+        assert_eq!(s.k(), 15);
+        let mut idx = s.indices.clone();
+        idx.sort_unstable();
+        idx.dedup();
+        assert_eq!(idx.len(), 15);
+        // (k-1) rounds x 4 trials + the uniform first draw.
+        assert_eq!(s.stats.proposals, 1 + 14 * 4);
+    }
+
+    #[test]
+    fn greedy_no_worse_than_plain_on_average() {
+        let ps = gaussian_mixture(
+            &SynthSpec {
+                n: 2000,
+                d: 8,
+                k_true: 12,
+                center_spread: 12.0,
+                ..Default::default()
+            },
+            13,
+        );
+        let (mut greedy, mut plain) = (0.0, 0.0);
+        for seed in 0..5u64 {
+            let mut r1 = Pcg64::seed_from(500 + seed);
+            greedy += cost_native(&ps, &kmeanspp_greedy(&ps, 12, 5, &mut r1).centers);
+            let mut r2 = Pcg64::seed_from(600 + seed);
+            plain += cost_native(&ps, &kmeanspp(&ps, 12, &mut r2).centers);
+        }
+        assert!(
+            greedy <= plain * 1.05,
+            "greedy {greedy} should not lose to plain {plain}"
+        );
+    }
+
+    #[test]
+    fn greedy_trials_one_behaves_like_plain() {
+        let ps = gaussian_mixture(
+            &SynthSpec {
+                n: 300,
+                d: 4,
+                k_true: 5,
+                ..Default::default()
+            },
+            14,
+        );
+        let mut rng = Pcg64::seed_from(15);
+        let s = kmeanspp_greedy(&ps, 10, 1, &mut rng);
+        assert_eq!(s.k(), 10);
+        assert_eq!(s.stats.rejections, 0);
+    }
+
+    #[test]
+    fn seeding_cost_beats_uniform_on_clustered_data() {
+        let ps = separated_grid(10, 100, 4, 9);
+        let mut rng = Pcg64::seed_from(10);
+        let pp = kmeanspp(&ps, 10, &mut rng);
+        let uni = crate::seeding::uniform::uniform_sampling(&ps, 10, &mut rng);
+        let c_pp = cost_native(&ps, &pp.centers);
+        let c_uni = cost_native(&ps, &uni.centers);
+        assert!(
+            c_pp < c_uni,
+            "kmeans++ ({c_pp}) should beat uniform ({c_uni}) on separated clusters"
+        );
+    }
+}

@@ -1,0 +1,193 @@
+//! Seeding algorithms: the paper's two contributions and its three
+//! baselines, behind one [`Seeding`] result type and a string-dispatched
+//! [`SeedingAlgorithm`] registry used by the CLI, coordinator and benches.
+//!
+//! | algorithm        | paper role | time (paper)                  |
+//! |------------------|-----------|--------------------------------|
+//! | `kmeanspp`       | baseline  | `Θ(ndk)`                       |
+//! | `afkmc2`         | baseline  | `O(nd + mk^2 d)` (MCMC)        |
+//! | `uniform`        | baseline  | `O(kd)`                        |
+//! | `fastkmeanspp`   | Alg. 3    | `O(nd log(dΔ) + n log(dΔ) log n)` |
+//! | `rejection`      | Alg. 4    | near-linear + LSH terms        |
+//! | `rejection-exact`| ablation  | the `Ω(k^2)` no-LSH variant §5 |
+
+pub mod afkmc2;
+pub mod fastkmeanspp;
+pub mod kmeanspp;
+pub mod rejection;
+pub mod uniform;
+
+use anyhow::{bail, Result};
+
+use crate::data::matrix::PointSet;
+use crate::rng::Pcg64;
+
+/// Counters every seeder reports (the rejection-loop statistics back the
+/// Lemma 5.3 empirical check in the benches).
+#[derive(Clone, Debug, Default)]
+pub struct SeedingStats {
+    /// Draws from the proposal distribution (multi-tree samples, MCMC
+    /// proposals, or exact D^2 samples depending on the algorithm).
+    pub proposals: u64,
+    /// Proposals rejected (rejection sampler / MCMC only).
+    pub rejections: u64,
+    /// Seconds spent in one-time initialization (tree builds, q-distr).
+    pub init_secs: f64,
+    /// Seconds spent selecting the k centers.
+    pub select_secs: f64,
+}
+
+/// A seeding: `k` chosen centers (as dataset indices + materialized rows).
+#[derive(Clone, Debug)]
+pub struct Seeding {
+    pub indices: Vec<usize>,
+    pub centers: PointSet,
+    pub stats: SeedingStats,
+}
+
+impl Seeding {
+    pub(crate) fn from_indices(ps: &PointSet, indices: Vec<usize>, stats: SeedingStats) -> Self {
+        let centers = ps.gather(&indices);
+        Seeding {
+            indices,
+            centers,
+            stats,
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.indices.len()
+    }
+}
+
+/// The algorithm registry (CLI names match the paper's).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SeedingAlgorithm {
+    KMeansPP,
+    FastKMeansPP,
+    Rejection,
+    RejectionExact,
+    Afkmc2,
+    Uniform,
+    /// Greedy k-means++ (best of several D^2 draws per round) — the
+    /// quality upper-bound reference; not in the paper's tables.
+    KMeansPPGreedy,
+}
+
+impl SeedingAlgorithm {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "kmeanspp" | "kmeans++" => SeedingAlgorithm::KMeansPP,
+            "greedy" | "kmeanspp-greedy" => SeedingAlgorithm::KMeansPPGreedy,
+            "fastkmeanspp" | "fast" => SeedingAlgorithm::FastKMeansPP,
+            "rejection" | "rejectionsampling" => SeedingAlgorithm::Rejection,
+            "rejection-exact" => SeedingAlgorithm::RejectionExact,
+            "afkmc2" => SeedingAlgorithm::Afkmc2,
+            "uniform" => SeedingAlgorithm::Uniform,
+            _ => bail!(
+                "unknown algorithm {s:?} (kmeanspp|fastkmeanspp|rejection|\
+                 rejection-exact|afkmc2|uniform|greedy)"
+            ),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SeedingAlgorithm::KMeansPP => "kmeanspp",
+            SeedingAlgorithm::FastKMeansPP => "fastkmeanspp",
+            SeedingAlgorithm::Rejection => "rejection",
+            SeedingAlgorithm::RejectionExact => "rejection-exact",
+            SeedingAlgorithm::Afkmc2 => "afkmc2",
+            SeedingAlgorithm::Uniform => "uniform",
+            SeedingAlgorithm::KMeansPPGreedy => "greedy",
+        }
+    }
+
+    /// Paper display name (table rows).
+    pub fn paper_name(self) -> &'static str {
+        match self {
+            SeedingAlgorithm::KMeansPP => "K-MEANS++",
+            SeedingAlgorithm::FastKMeansPP => "FASTK-MEANS++",
+            SeedingAlgorithm::Rejection => "REJECTIONSAMPLING",
+            SeedingAlgorithm::RejectionExact => "REJECTION-EXACT",
+            SeedingAlgorithm::Afkmc2 => "AFKMC2",
+            SeedingAlgorithm::Uniform => "UNIFORMSAMPLING",
+            SeedingAlgorithm::KMeansPPGreedy => "GREEDY-K-MEANS++",
+        }
+    }
+
+    /// All algorithms in the paper's table order.
+    pub fn paper_order() -> [SeedingAlgorithm; 5] {
+        [
+            SeedingAlgorithm::FastKMeansPP,
+            SeedingAlgorithm::Rejection,
+            SeedingAlgorithm::KMeansPP,
+            SeedingAlgorithm::Afkmc2,
+            SeedingAlgorithm::Uniform,
+        ]
+    }
+
+    /// Run with default per-algorithm configs.
+    pub fn run(self, ps: &PointSet, k: usize, rng: &mut Pcg64) -> Seeding {
+        match self {
+            SeedingAlgorithm::KMeansPP => kmeanspp::kmeanspp(ps, k, rng),
+            SeedingAlgorithm::FastKMeansPP => {
+                fastkmeanspp::fast_kmeanspp(ps, k, &Default::default(), rng)
+            }
+            SeedingAlgorithm::Rejection => {
+                rejection::rejection_sampling(ps, k, &Default::default(), rng)
+            }
+            SeedingAlgorithm::RejectionExact => {
+                let cfg = rejection::RejectionConfig {
+                    oracle: rejection::OracleKind::Exact,
+                    ..Default::default()
+                };
+                rejection::rejection_sampling(ps, k, &cfg, rng)
+            }
+            SeedingAlgorithm::Afkmc2 => {
+                afkmc2::afkmc2(ps, k, &Default::default(), rng)
+            }
+            SeedingAlgorithm::Uniform => uniform::uniform_sampling(ps, k, rng),
+            SeedingAlgorithm::KMeansPPGreedy => kmeanspp::kmeanspp_greedy(ps, k, 5, rng),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::separated_grid;
+
+    #[test]
+    fn parse_all_names() {
+        for a in [
+            SeedingAlgorithm::KMeansPP,
+            SeedingAlgorithm::FastKMeansPP,
+            SeedingAlgorithm::Rejection,
+            SeedingAlgorithm::RejectionExact,
+            SeedingAlgorithm::Afkmc2,
+            SeedingAlgorithm::Uniform,
+            SeedingAlgorithm::KMeansPPGreedy,
+        ] {
+            assert_eq!(SeedingAlgorithm::parse(a.name()).unwrap(), a);
+        }
+        assert!(SeedingAlgorithm::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn every_algorithm_returns_k_distinct_valid_indices() {
+        let ps = separated_grid(5, 40, 4, 1);
+        for a in SeedingAlgorithm::paper_order() {
+            let mut rng = Pcg64::seed_from(2);
+            let s = a.run(&ps, 8, &mut rng);
+            assert_eq!(s.k(), 8, "{}", a.name());
+            assert_eq!(s.centers.len(), 8);
+            assert_eq!(s.centers.dim(), 4);
+            let mut idx = s.indices.clone();
+            idx.sort_unstable();
+            idx.dedup();
+            assert_eq!(idx.len(), 8, "{} returned duplicates", a.name());
+            assert!(idx.iter().all(|&i| i < ps.len()));
+        }
+    }
+}

@@ -1,0 +1,97 @@
+//! `UNIFORMSAMPLING` — the trivial baseline (§6): `k` distinct uniform
+//! indices. Blazing fast, no quality guarantee; the paper's tables show it
+//! collapsing on clustered/heavy-tailed data (Table 4).
+
+use std::collections::HashSet;
+use std::time::Instant;
+
+use crate::data::matrix::PointSet;
+use crate::rng::Pcg64;
+use crate::seeding::{Seeding, SeedingStats};
+
+/// Sample `k` distinct points uniformly at random.
+pub fn uniform_sampling(ps: &PointSet, k: usize, rng: &mut Pcg64) -> Seeding {
+    let k = k.min(ps.len());
+    let t0 = Instant::now();
+    let n = ps.len();
+    let mut chosen = Vec::with_capacity(k);
+    if k * 3 >= n {
+        // Dense regime: partial Fisher–Yates on the full index range.
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + rng.index(n - i);
+            idx.swap(i, j);
+            chosen.push(idx[i]);
+        }
+    } else {
+        // Sparse regime: rejection on a hash set.
+        let mut seen = HashSet::with_capacity(k * 2);
+        while chosen.len() < k {
+            let i = rng.index(n);
+            if seen.insert(i) {
+                chosen.push(i);
+            }
+        }
+    }
+    let stats = SeedingStats {
+        proposals: k as u64,
+        select_secs: t0.elapsed().as_secs_f64(),
+        ..Default::default()
+    };
+    Seeding::from_indices(ps, chosen, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gaussian_mixture, SynthSpec};
+
+    fn data(n: usize) -> PointSet {
+        gaussian_mixture(
+            &SynthSpec {
+                n,
+                d: 4,
+                k_true: 3,
+                ..Default::default()
+            },
+            1,
+        )
+    }
+
+    #[test]
+    fn distinct_indices_both_regimes() {
+        for (n, k) in [(100, 90), (10_000, 20)] {
+            let ps = data(n);
+            let mut rng = Pcg64::seed_from(2);
+            let s = uniform_sampling(&ps, k, &mut rng);
+            let mut idx = s.indices.clone();
+            idx.sort_unstable();
+            idx.dedup();
+            assert_eq!(idx.len(), k, "n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn k_equals_n_returns_everything() {
+        let ps = data(25);
+        let mut rng = Pcg64::seed_from(3);
+        let s = uniform_sampling(&ps, 25, &mut rng);
+        let mut idx = s.indices.clone();
+        idx.sort_unstable();
+        assert_eq!(idx, (0..25).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn roughly_uniform_marginals() {
+        let ps = data(10);
+        let mut counts = [0u32; 10];
+        for seed in 0..20_000u64 {
+            let mut rng = Pcg64::seed_from(seed);
+            let s = uniform_sampling(&ps, 1, &mut rng);
+            counts[s.indices[0]] += 1;
+        }
+        for &c in &counts {
+            assert!((c as i64 - 2000).abs() < 300, "{counts:?}");
+        }
+    }
+}

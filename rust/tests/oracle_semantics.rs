@@ -1,0 +1,181 @@
+//! Oracle-semantics integration tests: the early-exit indicator
+//! (`dist_below`) must agree with the full minimum (`query`) on the same
+//! candidate set — this equivalence is what makes the rejection
+//! sampler's indicator-form acceptance test *exactly* the Algorithm-4
+//! probability — plus prefix-exactness and cross-oracle agreement.
+
+use fastkmeanspp::data::matrix::PointSet;
+use fastkmeanspp::data::synth::{gaussian_mixture, SynthSpec};
+use fastkmeanspp::lsh::multiscale::{auto_bucket_width_for_k, LshParams, MonotoneLsh, PREFIX_CAP};
+use fastkmeanspp::lsh::{ExactNn, NnOracle};
+use fastkmeanspp::rng::Pcg64;
+
+fn dataset(n: usize, d: usize, seed: u64) -> PointSet {
+    gaussian_mixture(
+        &SynthSpec {
+            n,
+            d,
+            k_true: 20,
+            center_spread: 15.0,
+            ..Default::default()
+        },
+        seed,
+    )
+}
+
+#[test]
+fn dist_below_matches_query_practical_mode() {
+    // Property: for any threshold, dist_below == (query().dist < t).
+    let ps = dataset(800, 12, 1);
+    let mut rng = Pcg64::seed_from(2);
+    let params = LshParams {
+        bucket_width: auto_bucket_width_for_k(&ps, 200, 15, &mut rng),
+        ..Default::default()
+    };
+    let mut lsh = MonotoneLsh::practical(12, &params, &mut rng);
+    for i in 0..400u32 {
+        lsh.insert(&ps, i);
+    }
+    let mut checked = 0;
+    for q in 400..800 {
+        let (_, dist) = lsh.query(&ps, ps.row(q)).unwrap();
+        for mult in [0.5f32, 0.999, 1.001, 2.0] {
+            let t = dist * mult;
+            let got = lsh.dist_below(&ps, ps.row(q), t);
+            assert_eq!(
+                got,
+                dist < t,
+                "q={q} t={t} dist={dist} (mult {mult})"
+            );
+            checked += 1;
+        }
+    }
+    assert!(checked > 1000);
+}
+
+#[test]
+fn dist_below_matches_query_exact_oracle() {
+    let ps = dataset(300, 8, 3);
+    let mut nn = ExactNn::default();
+    for i in 0..150u32 {
+        nn.insert(&ps, i);
+    }
+    for q in 150..300 {
+        let (_, dist) = nn.query(&ps, ps.row(q)).unwrap();
+        assert!(nn.dist_below(&ps, ps.row(q), dist * 1.001));
+        assert!(!nn.dist_below(&ps, ps.row(q), dist * 0.999));
+    }
+}
+
+#[test]
+fn lsh_exact_while_under_prefix_cap() {
+    // While at most PREFIX_CAP points are inserted, MonotoneLsh must be
+    // an EXACT nearest-neighbor oracle (the prefix scan covers all).
+    let ps = dataset(600, 10, 5);
+    let mut rng = Pcg64::seed_from(6);
+    let params = LshParams {
+        bucket_width: auto_bucket_width_for_k(&ps, 100, 15, &mut rng),
+        ..Default::default()
+    };
+    let mut lsh = MonotoneLsh::practical(10, &params, &mut rng);
+    let mut exact = ExactNn::default();
+    assert!(PREFIX_CAP >= 100);
+    for i in 0..100u32 {
+        lsh.insert(&ps, i);
+        exact.insert(&ps, i);
+    }
+    for q in 100..600 {
+        let (_, dl) = lsh.query(&ps, ps.row(q)).unwrap();
+        let (_, de) = exact.query(&ps, ps.row(q)).unwrap();
+        assert!(
+            (dl - de).abs() < 1e-5,
+            "q={q}: lsh {dl} != exact {de} under the prefix cap"
+        );
+    }
+}
+
+#[test]
+fn monotone_past_prefix_cap() {
+    // Beyond the cap the oracle goes approximate but must stay monotone.
+    let ps = dataset(1500, 10, 7);
+    let mut rng = Pcg64::seed_from(8);
+    let params = LshParams {
+        bucket_width: auto_bucket_width_for_k(&ps, 400, 15, &mut rng),
+        ..Default::default()
+    };
+    let mut lsh = MonotoneLsh::practical(10, &params, &mut rng);
+    let queries: Vec<usize> = vec![1400, 1450, 1499];
+    let mut last = vec![f32::INFINITY; queries.len()];
+    for i in 0..400u32 {
+        lsh.insert(&ps, i);
+        for (slot, &q) in queries.iter().enumerate() {
+            let (_, d) = lsh.query(&ps, ps.row(q)).unwrap();
+            assert!(
+                d <= last[slot] + 1e-5,
+                "q={q} after insert {i}: {d} > {}",
+                last[slot]
+            );
+            last[slot] = d;
+        }
+    }
+}
+
+#[test]
+fn rejection_same_seed_same_centers_across_oracle_cost() {
+    // The indicator-form accept test must be deterministic in the rng
+    // seed (regression guard for the u-draw ordering).
+    use fastkmeanspp::seeding::rejection::{rejection_sampling, RejectionConfig};
+    let ps = dataset(2000, 16, 9);
+    let cfg = RejectionConfig::default();
+    let mut a = Pcg64::seed_from(11);
+    let mut b = Pcg64::seed_from(11);
+    let sa = rejection_sampling(&ps, 40, &cfg, &mut a);
+    let sb = rejection_sampling(&ps, 40, &cfg, &mut b);
+    assert_eq!(sa.indices, sb.indices);
+    assert_eq!(sa.stats.proposals, sb.stats.proposals);
+}
+
+#[test]
+fn rejection_distribution_unchanged_by_indicator_form() {
+    // With the EXACT oracle and c=1 the accepted second-center marginal
+    // must match the analytic D^2 distribution — the indicator-form
+    // evaluation must not shift it (this is the Lemma 5.2 check).
+    use fastkmeanspp::seeding::rejection::{rejection_sampling, OracleKind, RejectionConfig};
+    let rows = vec![
+        vec![0.0f32, 0.0],
+        vec![2.0, 0.0],
+        vec![0.0, 3.0],
+        vec![8.0, 8.0],
+    ];
+    let ps = PointSet::from_rows(&rows);
+    let cfg = RejectionConfig {
+        c: 1.0,
+        oracle: OracleKind::Exact,
+        ..Default::default()
+    };
+    let trials = 40_000;
+    let mut first = vec![0.0f64; 4];
+    let mut second = vec![0.0f64; 4];
+    for seed in 0..trials {
+        let mut rng = Pcg64::seed_from(seed);
+        let s = rejection_sampling(&ps, 2, &cfg, &mut rng);
+        first[s.indices[0]] += 1.0;
+        second[s.indices[1]] += 1.0;
+    }
+    let mut want = vec![0.0f64; 4];
+    for f in 0..4 {
+        let d2s: Vec<f64> = (0..4).map(|j| ps.d2_rows(j, f) as f64).collect();
+        let sum: f64 = d2s.iter().sum();
+        for j in 0..4 {
+            want[j] += (first[f] / trials as f64) * d2s[j] / sum;
+        }
+    }
+    for j in 0..4 {
+        let got = second[j] / trials as f64;
+        assert!(
+            (got - want[j]).abs() < 0.012,
+            "j={j} got={got} want={}",
+            want[j]
+        );
+    }
+}

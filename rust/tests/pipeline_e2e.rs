@@ -1,0 +1,115 @@
+//! Full-pipeline integration: dataset registry -> Appendix-F quantization
+//! -> seeding -> Lloyd refinement -> tables, exactly the path the CLI and
+//! benches drive, on the smoke profile.
+
+use fastkmeanspp::coordinator::config::ExperimentConfig;
+use fastkmeanspp::coordinator::{run_grid, tables};
+use fastkmeanspp::data::registry::{DatasetId, Profile};
+use fastkmeanspp::seeding::SeedingAlgorithm;
+
+fn smoke_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        datasets: vec![DatasetId::KddSim],
+        profile: Profile::Smoke,
+        algorithms: vec![
+            SeedingAlgorithm::FastKMeansPP,
+            SeedingAlgorithm::Rejection,
+            SeedingAlgorithm::KMeansPP,
+            SeedingAlgorithm::Afkmc2,
+            SeedingAlgorithm::Uniform,
+        ],
+        ks: vec![20, 60],
+        reps: 2,
+        seed: 99,
+        data_dir: std::env::temp_dir().join("fkmpp_e2e_test"),
+        artifacts_dir: std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn grid_and_all_table_emitters() {
+    let cfg = smoke_cfg();
+    let res = run_grid(&cfg, |_| {}).unwrap();
+    assert_eq!(res.cells.len(), 10);
+
+    let t1 = tables::runtime_table(&res, DatasetId::KddSim, &cfg.ks);
+    assert!(t1.contains("FASTK-MEANS++ | 1.00x"), "{t1}");
+    assert!(t1.contains("K-MEANS++"));
+
+    let t4 = tables::cost_table(&res, DatasetId::KddSim, &cfg.ks);
+    assert!(t4.contains("UNIFORMSAMPLING"));
+    // No dashes: every cell filled.
+    assert!(!t4.contains('—'), "{t4}");
+
+    let t8 = tables::variance_table(&res, DatasetId::KddSim, &cfg.ks);
+    assert!(t8.contains("Table 8"));
+
+    let diag = tables::rejection_diagnostics(&res, DatasetId::KddSim, &cfg.ks);
+    assert!(diag.contains("REJECTIONSAMPLING"), "{diag}");
+}
+
+#[test]
+fn lloyd_refinement_through_grid() {
+    let mut cfg = smoke_cfg();
+    cfg.algorithms = vec![SeedingAlgorithm::Rejection];
+    cfg.ks = vec![30];
+    cfg.lloyd_iters = 4;
+    let res = run_grid(&cfg, |_| {}).unwrap();
+    let cell = res
+        .get(DatasetId::KddSim, SeedingAlgorithm::Rejection, 30)
+        .unwrap();
+    assert!(cell.lloyd_cost.count() > 0);
+    assert!(
+        cell.lloyd_cost.mean() <= cell.cost.mean(),
+        "lloyd {:.4e} > seed {:.4e}",
+        cell.lloyd_cost.mean(),
+        cell.cost.mean()
+    );
+}
+
+#[test]
+fn cli_table_command_smoke() {
+    let argv: Vec<String> = [
+        "table",
+        "--which",
+        "4",
+        "--profile",
+        "smoke",
+        "--ks",
+        "15,40",
+        "--reps",
+        "1",
+        "--data-dir",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .chain([std::env::temp_dir()
+        .join("fkmpp_e2e_cli")
+        .to_string_lossy()
+        .into_owned()])
+    .collect();
+    let out = fastkmeanspp::cli::run(&argv).unwrap();
+    assert!(out.contains("Table 4"), "{out}");
+    assert!(out.contains("K-MEANS++"));
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let cfg = {
+        let mut c = smoke_cfg();
+        c.algorithms = vec![SeedingAlgorithm::FastKMeansPP];
+        c.ks = vec![25];
+        c.reps = 1;
+        c
+    };
+    let a = run_grid(&cfg, |_| {}).unwrap();
+    let b = run_grid(&cfg, |_| {}).unwrap();
+    let ka = a
+        .get(DatasetId::KddSim, SeedingAlgorithm::FastKMeansPP, 25)
+        .unwrap();
+    let kb = b
+        .get(DatasetId::KddSim, SeedingAlgorithm::FastKMeansPP, 25)
+        .unwrap();
+    assert_eq!(ka.cost.mean(), kb.cost.mean());
+}

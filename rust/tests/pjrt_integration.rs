@@ -1,0 +1,153 @@
+//! PJRT integration: the AOT JAX/Pallas artifacts must agree with the
+//! tuned native backend on every entry point.
+//!
+//! These tests need `artifacts/` (built by `make artifacts`); when it is
+//! absent they skip with a note instead of failing, so `cargo test` works
+//! on a fresh checkout.
+
+use fastkmeanspp::data::matrix::PointSet;
+use fastkmeanspp::data::synth::{gaussian_mixture, SynthSpec};
+use fastkmeanspp::rng::Pcg64;
+use fastkmeanspp::runtime::{native, pjrt::PjrtRuntime};
+
+fn runtime() -> Option<PjrtRuntime> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match PjrtRuntime::load(&dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP: no artifacts ({e:#}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn dataset(n: usize, d: usize, seed: u64) -> PointSet {
+    gaussian_mixture(
+        &SynthSpec {
+            n,
+            d,
+            k_true: 12,
+            center_spread: 10.0,
+            ..Default::default()
+        },
+        seed,
+    )
+}
+
+#[test]
+fn cost_matches_native() {
+    let Some(rt) = runtime() else { return };
+    // n spans multiple chunks (2048-variant) + a tail; d=74 pads to 96.
+    let ps = dataset(5000, 74, 1);
+    let mut rng = Pcg64::seed_from(2);
+    let centers = ps.gather(&(0..50).map(|_| rng.index(ps.len())).collect::<Vec<_>>());
+    let native_cost = native::cost(&ps, &centers);
+    let pjrt_cost = rt.cost(&ps, &centers).unwrap();
+    let rel = (native_cost - pjrt_cost).abs() / native_cost.max(1.0);
+    assert!(rel < 1e-3, "native={native_cost} pjrt={pjrt_cost} rel={rel}");
+}
+
+#[test]
+fn assign_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let ps = dataset(4500, 32, 3);
+    let centers = ps.gather(&(0..30).collect::<Vec<_>>());
+    let (ni, nd) = native::assign(&ps, &centers);
+    let (pi, pd) = rt.assign(&ps, &centers).unwrap();
+    assert_eq!(ni.len(), pi.len());
+    let mut mismatched_idx = 0;
+    for i in 0..ni.len() {
+        // The matmul-form kernel (||x||^2 + ||c||^2 - 2xc) loses absolute
+        // precision ~ |x|^2 * eps_f32 near zero distance; floor the
+        // denominator at 1.0 (coordinates are O(10)).
+        let rel = (nd[i] - pd[i]).abs() / nd[i].max(1.0);
+        assert!(rel < 1e-2, "i={i} native_d2={} pjrt_d2={}", nd[i], pd[i]);
+        if ni[i] != pi[i] {
+            mismatched_idx += 1; // ties/eps may flip the argmin
+        }
+    }
+    assert!(
+        mismatched_idx < ni.len() / 100,
+        "{mismatched_idx} argmin mismatches"
+    );
+}
+
+#[test]
+fn lloyd_step_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let ps = dataset(6000, 68, 5);
+    let centers = ps.gather(&(0..40).map(|i| i * 100).collect::<Vec<_>>());
+    let (ns, nc, ncost) = native::lloyd_step(&ps, &centers);
+    let (s, c, cost) = rt.lloyd_step(&ps, &centers).unwrap();
+    assert_eq!(nc.len(), c.len());
+    let total_native: u64 = nc.iter().sum();
+    let total_pjrt: u64 = c.iter().sum();
+    assert_eq!(total_native, ps.len() as u64);
+    assert_eq!(total_pjrt, ps.len() as u64);
+    // Counts may differ slightly on distance ties; sums must track.
+    let mut count_diff = 0u64;
+    for j in 0..nc.len() {
+        count_diff += nc[j].abs_diff(c[j]);
+    }
+    assert!(count_diff < ps.len() as u64 / 100, "count diff {count_diff}");
+    let rel = (ncost - cost).abs() / ncost.max(1.0);
+    assert!(rel < 1e-3, "cost native={ncost} pjrt={cost}");
+    let d = ps.dim();
+    for j in 0..nc.len() {
+        if nc[j] == c[j] {
+            for t in 0..d {
+                let a = ns[j * d + t];
+                let b = s[j * d + t];
+                assert!(
+                    (a - b).abs() <= 1e-2 * a.abs().max(1.0),
+                    "sum[{j},{t}] native={a} pjrt={b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn d2_update_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let ps = dataset(5000, 90, 7);
+    let center = ps.row(123).to_vec();
+    let mut native_d2 = vec![f32::INFINITY; ps.len()];
+    let mut pjrt_d2 = vec![f32::INFINITY; ps.len()];
+    fastkmeanspp::seeding::kmeanspp::update_d2_parallel(&ps, 123, &mut native_d2);
+    rt.d2_update(&ps, &center, &mut pjrt_d2).unwrap();
+    for i in (0..ps.len()).step_by(37) {
+        let rel = (native_d2[i] - pjrt_d2[i]).abs() / native_d2[i].max(1e-3);
+        assert!(rel < 1e-2, "i={i} native={} pjrt={}", native_d2[i], pjrt_d2[i]);
+    }
+    // Second update with another center only decreases.
+    let before = pjrt_d2.clone();
+    rt.d2_update(&ps, &ps.row(4000).to_vec(), &mut pjrt_d2).unwrap();
+    for i in 0..ps.len() {
+        assert!(pjrt_d2[i] <= before[i] + 1e-6);
+    }
+}
+
+#[test]
+fn lloyd_full_runs_on_pjrt_backend() {
+    let Some(_) = runtime() else { return };
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let backend = fastkmeanspp::runtime::Backend::auto(&dir);
+    assert_eq!(backend.name(), "pjrt");
+    let ps = dataset(4000, 16, 9);
+    let mut rng = Pcg64::seed_from(10);
+    let seed = fastkmeanspp::seeding::kmeanspp::kmeanspp(&ps, 10, &mut rng);
+    let res = fastkmeanspp::lloyd::lloyd(
+        &ps,
+        &seed.centers,
+        &fastkmeanspp::lloyd::LloydConfig {
+            max_iters: 5,
+            tol: 1e-9,
+        },
+        &backend,
+    )
+    .unwrap();
+    for w in res.history.windows(2) {
+        assert!(w[1] <= w[0] * (1.0 + 1e-6), "{:?}", res.history);
+    }
+}

@@ -1,0 +1,111 @@
+//! Cross-algorithm quality integration tests: the cost *orderings* the
+//! paper's Tables 4–6 report must hold on the synthetic stand-ins.
+
+use fastkmeanspp::data::registry::{DatasetId, Profile};
+use fastkmeanspp::lloyd::cost_native;
+use fastkmeanspp::rng::Pcg64;
+use fastkmeanspp::seeding::SeedingAlgorithm;
+
+/// Average seeding cost over `reps` seeds.
+fn avg_cost(
+    ps: &fastkmeanspp::data::matrix::PointSet,
+    algo: SeedingAlgorithm,
+    k: usize,
+    reps: u64,
+) -> f64 {
+    let mut total = 0.0;
+    for r in 0..reps {
+        let mut rng = Pcg64::seed_from(1000 * (algo as u64 + 1) + r);
+        let s = algo.run(ps, k, &mut rng);
+        total += cost_native(ps, &s.centers);
+    }
+    total / reps as f64
+}
+
+#[test]
+fn d2_family_beats_uniform_on_kdd_sim() {
+    // Table 4's qualitative claim: on the heavy-tailed clustered set,
+    // uniform seeding is several times worse than every D^2-family
+    // seeder.
+    let ps = DatasetId::KddSim.generate(Profile::Smoke, 11);
+    let k = 50;
+    let uniform = avg_cost(&ps, SeedingAlgorithm::Uniform, k, 3);
+    for algo in [
+        SeedingAlgorithm::KMeansPP,
+        SeedingAlgorithm::FastKMeansPP,
+        SeedingAlgorithm::Rejection,
+        SeedingAlgorithm::Afkmc2,
+    ] {
+        let c = avg_cost(&ps, algo, k, 3);
+        assert!(
+            c * 1.5 < uniform,
+            "{}: cost {c:.3e} not clearly below uniform {uniform:.3e}",
+            algo.name()
+        );
+    }
+}
+
+#[test]
+fn tree_seeders_within_tolerance_of_exact() {
+    // Tables 4-6: FASTK-MEANS++ / REJECTIONSAMPLING within ~10-15% of
+    // K-MEANS++ (we allow 40% slack on the small smoke profile).
+    let ps = DatasetId::SongSim.generate(Profile::Smoke, 13);
+    let k = 100;
+    let exact = avg_cost(&ps, SeedingAlgorithm::KMeansPP, k, 3);
+    for algo in [SeedingAlgorithm::FastKMeansPP, SeedingAlgorithm::Rejection] {
+        let c = avg_cost(&ps, algo, k, 3);
+        assert!(
+            c < 1.4 * exact,
+            "{}: {c:.4e} vs exact {exact:.4e}",
+            algo.name()
+        );
+    }
+}
+
+#[test]
+fn rejection_quality_close_to_fast_on_census_sim() {
+    let ps = DatasetId::CensusSim.generate(Profile::Smoke, 17);
+    let k = 60;
+    let fast = avg_cost(&ps, SeedingAlgorithm::FastKMeansPP, k, 3);
+    let rej = avg_cost(&ps, SeedingAlgorithm::Rejection, k, 3);
+    // Paper: the two are within a few percent of each other; slack 30%.
+    assert!(
+        rej < 1.3 * fast && fast < 1.3 * rej,
+        "fast={fast:.4e} rejection={rej:.4e}"
+    );
+}
+
+#[test]
+fn cost_decreases_with_k() {
+    let ps = DatasetId::KddSim.generate(Profile::Smoke, 19);
+    let mut prev = f64::INFINITY;
+    for k in [10, 50, 150] {
+        let c = avg_cost(&ps, SeedingAlgorithm::Rejection, k, 2);
+        assert!(c < prev, "cost must decrease in k: k={k} c={c:.4e} prev={prev:.4e}");
+        prev = c;
+    }
+}
+
+#[test]
+fn quantization_does_not_change_costs_materially() {
+    // Appendix F: seeding on quantized coordinates, evaluated on the
+    // originals, costs within ~1% of seeding on raw coordinates.
+    let ps = DatasetId::SongSim.generate(Profile::Smoke, 23);
+    let mut qrng = Pcg64::seed_from(24);
+    let q = fastkmeanspp::data::quantize::quantize(&ps, &mut qrng);
+    let k = 40;
+    let mut raw = 0.0;
+    let mut quant = 0.0;
+    for r in 0..3u64 {
+        let mut r1 = Pcg64::seed_from(100 + r);
+        let s1 = SeedingAlgorithm::KMeansPP.run(&ps, k, &mut r1);
+        raw += cost_native(&ps, &s1.centers);
+        let mut r2 = Pcg64::seed_from(100 + r);
+        let s2 = SeedingAlgorithm::KMeansPP.run(&q.points, k, &mut r2);
+        quant += cost_native(&ps, &ps.gather(&s2.indices));
+    }
+    assert!(
+        (raw - quant).abs() < 0.15 * raw,
+        "raw={raw:.4e} quantized={quant:.4e}"
+    );
+}
