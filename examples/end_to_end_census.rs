@@ -31,7 +31,7 @@ fn env_usize(key: &str, default: usize) -> usize {
         .unwrap_or(default)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> fastkmeanspp::error::Result<()> {
     let n = env_usize("N", 60_000);
     let ks: Vec<usize> = std::env::var("K")
         .unwrap_or_else(|_| "100,500,1000".into())

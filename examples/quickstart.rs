@@ -10,7 +10,7 @@ use fastkmeanspp::prelude::*;
 use fastkmeanspp::runtime::Backend;
 use fastkmeanspp::seeding::SeedingAlgorithm;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> fastkmeanspp::error::Result<()> {
     // 20k points in 32 dims, 100 latent clusters.
     let data = fastkmeanspp::data::synth::gaussian_mixture(
         &SynthSpec {

@@ -1,32 +1,105 @@
 //! PJRT-vs-native throughput for the dense entry points (`cost`,
 //! `assign`, `lloyd_step`, `d2_update`) — the L1/L2 artifacts against
-//! the tuned rust kernels on identical inputs.
+//! the tuned rust kernels on identical inputs — plus the **kernel
+//! thread-scaling table**: `d2_update_min` / `assign_argmin` / `cost`
+//! at 1/2/4/8 threads for d in {16, 128} on n = 100k (the shapes the
+//! paper's Tables 1–3 runtimes are built from).
 //!
 //! ```bash
 //! cargo bench --bench micro_runtime
 //! cargo bench --bench micro_runtime -- --n 100000 --k 512
+//! cargo bench --bench micro_runtime -- --kernels-only
 //! ```
 //!
-//! Skips (with a note) when `artifacts/` is missing. The useful output
-//! is points/second per entry point; on this CPU-only image the native
-//! path typically wins (PJRT pays per-call literal copies) — the PJRT
-//! numbers are the integration-fidelity check, and the real accelerator
-//! story is the DESIGN.md §Hardware-Adaptation estimate.
+//! The PJRT section skips (with a note) when `artifacts/` is missing or
+//! the `pjrt` feature is off. The useful output is points/second per
+//! entry point; on this CPU-only image the native path typically wins
+//! (PJRT pays per-call literal copies) — the PJRT numbers are the
+//! integration-fidelity check, and the real accelerator story is the
+//! DESIGN.md §Hardware-Adaptation estimate.
 
 use std::time::Instant;
 
 use fastkmeanspp::cli::Args;
 use fastkmeanspp::data::synth::{gaussian_mixture, SynthSpec};
+use fastkmeanspp::kernels;
 use fastkmeanspp::rng::Pcg64;
 use fastkmeanspp::runtime::{native, pjrt::PjrtRuntime};
 
-fn main() -> anyhow::Result<()> {
+/// Kernel thread-scaling: the acceptance shape for the kernel engine is
+/// >1.5x at 4 threads on n=100k, d=128; the table prints the measured
+/// speedup per (kernel, d, threads) cell so regressions are visible in
+/// the bench log.
+fn kernel_scaling(reps: usize) {
+    let n = 100_000;
+    let k = 64;
+    println!("\n== kernel engine: thread scaling (n={n}, k={k}) ==\n");
+    println!("| kernel | d | threads | seconds | Mpoints/s | speedup vs 1T |");
+    println!("|---|---|---|---|---|---|");
+    for &d in &[16usize, 128] {
+        let ps = gaussian_mixture(
+            &SynthSpec {
+                n,
+                d,
+                k_true: k,
+                ..Default::default()
+            },
+            7,
+        );
+        let centers = ps.gather(&(0..k).map(|j| j * (n / k)).collect::<Vec<_>>());
+        let center = ps.row(0).to_vec();
+        let mut buf = vec![f32::INFINITY; n];
+        let mut base = [0.0f64; 3];
+        for &threads in &[1usize, 2, 4, 8] {
+            std::env::set_var("FKMPP_THREADS", threads.to_string());
+            for (slot, name) in ["d2_update_min", "assign_argmin", "cost"].iter().enumerate() {
+                // No per-rep buf reset: d2_update_min computes every
+                // distance regardless of the current min, so timing is
+                // state-independent and the serial fill would only skew
+                // the high-thread-count speedup numbers.
+                let mut run = |slot: usize| match slot {
+                    0 => {
+                        kernels::d2::d2_update_min(&ps, &center, &mut buf);
+                    }
+                    1 => {
+                        std::hint::black_box(kernels::assign::assign_argmin(&ps, &centers));
+                    }
+                    _ => {
+                        std::hint::black_box(kernels::reduce::cost(&ps, &centers));
+                    }
+                };
+                run(slot); // warmup
+                let t0 = Instant::now();
+                for _ in 0..reps {
+                    run(slot);
+                }
+                let secs = t0.elapsed().as_secs_f64() / reps as f64;
+                if threads == 1 {
+                    base[slot] = secs;
+                }
+                println!(
+                    "| {name} | {d} | {threads} | {secs:.4} | {:.2} | {:.2}x |",
+                    n as f64 / secs / 1e6,
+                    base[slot] / secs
+                );
+            }
+        }
+        std::env::remove_var("FKMPP_THREADS");
+    }
+}
+
+fn main() -> fastkmeanspp::error::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
     let args = Args::parse(&std::iter::once("bench".to_string()).chain(argv).collect::<Vec<_>>())?;
     let n = args.get_usize("n", 65_536)?;
     let k = args.get_usize("k", 256)?;
     let d = args.get_usize("d", 74)?;
     let reps = args.get_usize("reps", 5)?;
+
+    if args.get("kernels-only").is_some() {
+        kernel_scaling(reps);
+        return Ok(());
+    }
 
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let rt = match PjrtRuntime::load(&dir) {
@@ -121,6 +194,8 @@ fn main() -> anyhow::Result<()> {
         }
         report("d2_update", "pjrt", t0.elapsed().as_secs_f64() / reps as f64);
     }
+
+    kernel_scaling(reps);
 
     Ok(())
 }

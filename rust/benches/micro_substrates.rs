@@ -49,14 +49,14 @@ fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
     println!("{name:<52} {unit}/iter  ({iters} iters)");
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> fastkmeanspp::error::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
     let args = Args::parse(&std::iter::once("bench".to_string()).chain(argv).collect::<Vec<_>>())?;
 
     match args.get("ablation") {
         Some("trees") => return ablation_trees(),
         Some("lsh-c") => return ablation_lsh_c(),
-        Some(other) => anyhow::bail!("unknown ablation {other:?} (trees|lsh-c)"),
+        Some(other) => fastkmeanspp::bail!("unknown ablation {other:?} (trees|lsh-c)"),
         None => {}
     }
 
@@ -150,7 +150,7 @@ fn main() -> anyhow::Result<()> {
 
 /// Number-of-trees ablation: distortion of the multi-tree distance and
 /// end-to-end FastKMeans++ cost vs tree count (paper fixes 3).
-fn ablation_trees() -> anyhow::Result<()> {
+fn ablation_trees() -> fastkmeanspp::error::Result<()> {
     println!("== ablation: number of trees in the multi-tree embedding ==\n");
     let ps = gaussian_mixture(
         &SynthSpec {
@@ -199,7 +199,7 @@ fn ablation_trees() -> anyhow::Result<()> {
 
 /// `c` ablation: Lemma 5.3 (proposals ∝ c^2) vs Theorem 5.4 (cost ∝ c^6
 /// in the worst case; flat in practice until the oracle's error exceeds c).
-fn ablation_lsh_c() -> anyhow::Result<()> {
+fn ablation_lsh_c() -> fastkmeanspp::error::Result<()> {
     println!("== ablation: rejection-sampling approximation factor c ==\n");
     let ps = gaussian_mixture(
         &SynthSpec {

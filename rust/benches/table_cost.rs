@@ -17,7 +17,7 @@ use fastkmeanspp::coordinator::config::{bench_default_k_grid, k_grid_for, Experi
 use fastkmeanspp::coordinator::{run_grid, tables};
 use fastkmeanspp::data::registry::{DatasetId, Profile};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> fastkmeanspp::error::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
     let args = Args::parse(&std::iter::once("bench".to_string()).chain(argv).collect::<Vec<_>>())?;
 
@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
                 4 | 8 => DatasetId::KddSim,
                 5 | 7 => DatasetId::SongSim,
                 6 => DatasetId::CensusSim,
-                _ => anyhow::bail!("cost/variance tables are 4..8"),
+                _ => fastkmeanspp::bail!("cost/variance tables are 4..8"),
             };
             (vec![ds], vec![t])
         }

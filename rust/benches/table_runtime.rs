@@ -20,7 +20,7 @@ use fastkmeanspp::coordinator::{run_grid, tables};
 use fastkmeanspp::data::registry::{DatasetId, Profile};
 use fastkmeanspp::seeding::SeedingAlgorithm;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> fastkmeanspp::error::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
     let args = Args::parse(&std::iter::once("bench".to_string()).chain(argv).collect::<Vec<_>>())?;
 
@@ -31,7 +31,7 @@ fn main() -> anyhow::Result<()> {
             vec![DatasetId::all()
                 .into_iter()
                 .find(|d| d.runtime_table() == t)
-                .ok_or_else(|| anyhow::anyhow!("runtime tables are 1..3"))?]
+                .ok_or_else(|| fastkmeanspp::anyhow!("runtime tables are 1..3"))?]
         }
         None => DatasetId::all().to_vec(),
     };

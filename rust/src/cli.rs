@@ -11,11 +11,11 @@
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 
-use anyhow::{bail, Context, Result};
-
+use crate::bail;
 use crate::coordinator::config::{k_grid_for, ExperimentConfig};
 use crate::coordinator::{run_grid, tables};
 use crate::data::registry::{DatasetId, Profile};
+use crate::error::{Context, Result};
 use crate::lloyd::{lloyd, LloydConfig};
 use crate::rng::Pcg64;
 use crate::runtime::Backend;

@@ -1,16 +1,20 @@
 //! The sweep runner: executes the (dataset × algorithm × k × rep) grid,
 //! timing seeding wall-clock and evaluating costs, and aggregates the
 //! per-cell statistics the table emitters render.
+//!
+//! Cost evaluation goes through [`crate::runtime::Backend`], whose native
+//! path is the parallel kernel engine ([`crate::kernels`]) — the runner
+//! owns *no* distance loops of its own, so every timed cell reflects the
+//! same hot paths the benches measure.
 
 use std::collections::BTreeMap;
 use std::time::Instant;
-
-use anyhow::Result;
 
 use crate::coordinator::config::ExperimentConfig;
 use crate::data::matrix::PointSet;
 use crate::data::quantize::quantize;
 use crate::data::registry::DatasetId;
+use crate::error::Result;
 use crate::lloyd::{lloyd, LloydConfig};
 use crate::metrics::Stats;
 use crate::rng::Pcg64;

@@ -10,9 +10,9 @@ use std::fs::File;
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
-
+use crate::bail;
 use crate::data::matrix::PointSet;
+use crate::error::{Context, Result};
 
 /// Write `.fbin` (u32 n, u32 d, n*d little-endian f32).
 pub fn write_fbin(ps: &PointSet, path: &Path) -> Result<()> {

@@ -1,11 +1,12 @@
 //! `PointSet`: the dense row-major `n x d` f32 container every layer
-//! shares, plus the squared-distance kernels that dominate the exact-`D^2`
-//! baseline's runtime.
+//! shares, plus the scalar squared-distance kernel [`d2`] that dominates
+//! the exact-`D^2` baseline's runtime.
 //!
-//! The distance kernel is the crate's native hot path (the PJRT artifacts
-//! are the other implementation of the same contract). It is written to
+//! [`d2`] is the crate's native hot path (the PJRT artifacts are the
+//! other implementation of the same contract). It is written to
 //! autovectorize: contiguous rows, a 4-lane unrolled accumulator, and no
-//! bounds checks in the inner loop (checked slices hoisted out).
+//! bounds checks in the inner loop (checked slices hoisted out). All
+//! *loops over points* around it live in [`crate::kernels`].
 
 /// Dense row-major point matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -124,16 +125,14 @@ impl PointSet {
 
     /// Upper bound on the max pairwise distance within a factor 2
     /// (paper §2: max distance from an arbitrary point, times 2).
-    /// Runs in `O(nd)`.
+    /// Runs in `O(nd)`, parallel over point chunks
+    /// ([`crate::kernels::reduce::max_d2_to`]).
     pub fn max_dist_upper_bound(&self) -> f32 {
         if self.n <= 1 {
             return 0.0;
         }
         let pivot = self.row(0).to_vec();
-        let mut max_d2 = 0.0f32;
-        for i in 1..self.n {
-            max_d2 = max_d2.max(self.d2_to(i, &pivot));
-        }
+        let max_d2 = crate::kernels::reduce::max_d2_to(self, &pivot);
         2.0 * max_d2.sqrt()
     }
 

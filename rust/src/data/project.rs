@@ -7,6 +7,7 @@
 //! with `G ~ N(0,1)^{t x d}` — `O(ndt)` once, independent of `k`.
 
 use crate::data::matrix::PointSet;
+use crate::parallel::parallel_chunks_mut;
 use crate::rng::Pcg64;
 
 /// Target dimension for a JL map preserving k-means costs to within
@@ -38,10 +39,10 @@ impl JlProjection {
         }
     }
 
-    /// Project a single point.
-    pub fn apply(&self, x: &[f32]) -> Vec<f32> {
+    /// Project a single point into a caller-provided output row.
+    pub fn apply_into(&self, x: &[f32], out: &mut [f32]) {
         assert_eq!(x.len(), self.from_dim);
-        let mut out = vec![0.0f32; self.to_dim];
+        assert_eq!(out.len(), self.to_dim);
         // Row-major over output dims: g[t*d .. t*d+d] . x
         for (t, o) in out.iter_mut().enumerate() {
             let row = &self.g[t * self.from_dim..(t + 1) * self.from_dim];
@@ -51,17 +52,29 @@ impl JlProjection {
             }
             *o = acc;
         }
+    }
+
+    /// Project a single point.
+    pub fn apply(&self, x: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.to_dim];
+        self.apply_into(x, &mut out);
         out
     }
 
-    /// Project a whole point set.
+    /// Project a whole point set — `O(ndt)`, parallel over row-aligned
+    /// output chunks (this is the one-time cost the §5 remark trades for
+    /// the `O(d^2)` tree distortion, so it sits on the seeding init path).
     pub fn apply_all(&self, ps: &PointSet) -> PointSet {
         assert_eq!(ps.dim(), self.from_dim);
-        let mut data = Vec::with_capacity(ps.len() * self.to_dim);
-        for i in 0..ps.len() {
-            data.extend_from_slice(&self.apply(ps.row(i)));
-        }
-        PointSet::from_flat(ps.len(), self.to_dim, data)
+        let t = self.to_dim;
+        let mut data = vec![0.0f32; ps.len() * t];
+        parallel_chunks_mut(&mut data, t, 512, |start, chunk| {
+            let first_row = start / t;
+            for (r, out_row) in chunk.chunks_exact_mut(t).enumerate() {
+                self.apply_into(ps.row(first_row + r), out_row);
+            }
+        });
+        PointSet::from_flat(ps.len(), t, data)
     }
 }
 

@@ -26,7 +26,8 @@ pub struct Quantized {
 }
 
 /// Estimate the k-means optimum cost by evaluating `sample_k` uniformly
-/// random centers (Appendix F step 1).
+/// random centers (Appendix F step 1). The `O(n * sample_k * d)` cost
+/// evaluation runs on the parallel kernel engine.
 pub fn estimate_opt_cost(ps: &PointSet, sample_k: usize, rng: &mut Pcg64) -> f64 {
     let k = sample_k.min(ps.len()).max(1);
     let mut idx: Vec<usize> = Vec::with_capacity(k);
@@ -37,15 +38,7 @@ pub fn estimate_opt_cost(ps: &PointSet, sample_k: usize, rng: &mut Pcg64) -> f64
         }
     }
     let centers = ps.gather(&idx);
-    let mut total = 0.0f64;
-    for i in 0..ps.len() {
-        let mut best = f32::INFINITY;
-        for c in 0..centers.len() {
-            best = best.min(ps.d2_to(i, centers.row(c)));
-        }
-        total += best as f64;
-    }
-    total
+    crate::kernels::reduce::cost(ps, &centers)
 }
 
 /// Appendix-F quantization. `error_divisor` is the paper's 200.

@@ -4,11 +4,11 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Result};
-
+use crate::bail;
 use crate::data::io::{read_fbin, write_fbin};
 use crate::data::matrix::PointSet;
 use crate::data::synth;
+use crate::error::Result;
 
 /// Size profile: the paper's full n, or a scaled n that fits a laptop-
 /// class time budget (DESIGN.md §2).

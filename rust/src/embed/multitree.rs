@@ -21,6 +21,7 @@
 
 use crate::data::matrix::PointSet;
 use crate::embed::tree::{ShiftTree, NIL};
+use crate::parallel::parallel_map;
 use crate::rng::Pcg64;
 use crate::sampletree::SampleTree;
 
@@ -60,16 +61,11 @@ impl MultiTree {
         assert!(cfg.num_trees >= 1);
         // Fork the per-tree rngs sequentially (deterministic in `rng`),
         // then build the independent trees in parallel.
-        let mut tree_rngs: Vec<Pcg64> = (0..cfg.num_trees).map(|t| rng.fork(t as u64)).collect();
-        let mut trees: Vec<Option<ShiftTree>> = (0..cfg.num_trees).map(|_| None).collect();
-        std::thread::scope(|s| {
-            for (slot, tree_rng) in trees.iter_mut().zip(tree_rngs.iter_mut()) {
-                s.spawn(move || {
-                    *slot = Some(ShiftTree::build(ps, tree_rng));
-                });
-            }
+        let tree_rngs: Vec<Pcg64> = (0..cfg.num_trees).map(|t| rng.fork(t as u64)).collect();
+        let trees: Vec<ShiftTree> = parallel_map(cfg.num_trees, |t| {
+            let mut tree_rng = tree_rngs[t].clone();
+            ShiftTree::build(ps, &mut tree_rng)
         });
-        let trees: Vec<ShiftTree> = trees.into_iter().map(|t| t.unwrap()).collect();
         let d = ps.dim() as f64;
         let m_bound = trees
             .iter()

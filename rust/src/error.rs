@@ -1,0 +1,181 @@
+//! Dependency-free error handling (the offline build has no `anyhow`).
+//!
+//! A small, source-chained error type plus the ergonomic subset of the
+//! `anyhow` API the crate uses:
+//!
+//! * [`Error`] — an owned message chain (outermost context first);
+//! * [`Result`] — `std::result::Result` defaulted to [`Error`];
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`;
+//! * [`crate::anyhow!`] / [`crate::bail!`] — format-style construction and
+//!   early return.
+//!
+//! Any `std::error::Error` converts via `?`; the full source chain is
+//! captured eagerly. `{e}` prints the outermost message, `{e:#}` the whole
+//! chain separated by `": "` (matching the `anyhow` convention the CLI
+//! relies on).
+
+use std::fmt;
+
+/// Crate-wide result type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error: a chain of human-readable messages, outermost context first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single message.
+    pub fn msg(msg: impl Into<String>) -> Self {
+        Error {
+            chain: vec![msg.into()],
+        }
+    }
+
+    /// Prepend a context message (what `.context(..)` does).
+    pub fn wrap(mut self, msg: impl Into<String>) -> Self {
+        self.chain.insert(0, msg.into());
+        self
+    }
+
+    /// The messages, outermost first.
+    pub fn chain(&self) -> &[String] {
+        &self.chain
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+// Mirrors anyhow's blanket conversion: any std error (and its source
+// chain) becomes an `Error`. Coherent because `Error` itself does not
+// implement `std::error::Error`.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Attach context to failures, `anyhow`-style.
+pub trait Context<T> {
+    /// Wrap the error with a fixed message.
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T>;
+    /// Wrap the error with a lazily built message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: Into<Error>,
+{
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T> {
+        self.map_err(|e| e.into().wrap(msg.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().wrap(f().to_string()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Build an [`Error`] from a format string (drop-in for `anyhow::anyhow!`).
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] (drop-in for `anyhow::bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("inner {}", 42);
+    }
+
+    #[test]
+    fn bail_and_display() {
+        let e = fails().unwrap_err();
+        assert_eq!(format!("{e}"), "inner 42");
+        assert_eq!(format!("{e:#}"), "inner 42");
+    }
+
+    #[test]
+    fn context_prepends() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner 42");
+        assert_eq!(e.chain().len(), 2);
+    }
+
+    #[test]
+    fn with_context_lazy() {
+        let e = fails().with_context(|| format!("step {}", 7)).unwrap_err();
+        assert_eq!(format!("{e:#}"), "step 7: inner 42");
+    }
+
+    #[test]
+    fn std_error_converts_with_sources() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(format!("{e}").contains("gone"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing").unwrap_err();
+        assert_eq!(format!("{e}"), "missing");
+        assert_eq!(Some(3u32).context("missing").unwrap(), 3);
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn parse(s: &str) -> Result<u32> {
+            Ok(s.parse::<u32>()?)
+        }
+        assert_eq!(parse("5").unwrap(), 5);
+        assert!(parse("x").is_err());
+    }
+}

@@ -1,0 +1,80 @@
+//! Incremental `D^2` update: the `Θ(nd)`-per-round kernel of exact
+//! k-means++ (and the `d2_update` PJRT artifact's native twin).
+
+use crate::data::matrix::{d2, PointSet};
+use crate::parallel::parallel_chunks_mut;
+
+/// Points per worker below which the update runs inline (spawning
+/// threads costs more than the arithmetic saves).
+const MIN_POINTS_PER_THREAD: usize = 4096;
+
+/// `cur_d2[i] = min(cur_d2[i], ||x_i - center||^2)` for every point, in
+/// parallel chunks. `center` is an arbitrary point of dimension
+/// `ps.dim()`; pass `ps.row(j)` to open dataset point `j`.
+pub fn d2_update_min(ps: &PointSet, center: &[f32], cur_d2: &mut [f32]) {
+    assert_eq!(center.len(), ps.dim(), "center dimension mismatch");
+    assert_eq!(cur_d2.len(), ps.len(), "distance array length mismatch");
+    parallel_chunks_mut(cur_d2, 1, MIN_POINTS_PER_THREAD, |start, chunk| {
+        for (slot, i) in chunk.iter_mut().zip(start..) {
+            let dd = d2(ps.row(i), center);
+            if dd < *slot {
+                *slot = dd;
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gaussian_mixture, SynthSpec};
+
+    #[test]
+    fn matches_serial_reference() {
+        let ps = gaussian_mixture(
+            &SynthSpec {
+                n: 20_000,
+                d: 12,
+                k_true: 5,
+                ..Default::default()
+            },
+            1,
+        );
+        let center = ps.row(17).to_vec();
+        let mut par = vec![f32::INFINITY; ps.len()];
+        d2_update_min(&ps, &center, &mut par);
+        for i in 0..ps.len() {
+            assert_eq!(par[i], d2(ps.row(i), &center), "i={i}");
+        }
+    }
+
+    #[test]
+    fn only_decreases() {
+        let ps = gaussian_mixture(
+            &SynthSpec {
+                n: 5_000,
+                d: 8,
+                k_true: 4,
+                ..Default::default()
+            },
+            2,
+        );
+        let mut cur = vec![f32::INFINITY; ps.len()];
+        d2_update_min(&ps, ps.row(0), &mut cur);
+        let before = cur.clone();
+        d2_update_min(&ps, ps.row(4_999), &mut cur);
+        for i in 0..ps.len() {
+            assert!(cur[i] <= before[i], "i={i}");
+        }
+        assert_eq!(cur[0], 0.0);
+        assert_eq!(cur[4_999], 0.0);
+    }
+
+    #[test]
+    fn tiny_input_runs_inline() {
+        let ps = PointSet::from_rows(&[vec![0.0f32, 0.0], vec![3.0, 4.0]]);
+        let mut cur = vec![f32::INFINITY; 2];
+        d2_update_min(&ps, &[0.0, 0.0], &mut cur);
+        assert_eq!(cur, vec![0.0, 25.0]);
+    }
+}

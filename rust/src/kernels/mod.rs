@@ -1,0 +1,29 @@
+//! The parallel distance-kernel engine — every exact-`D^2` hot path in
+//! one place.
+//!
+//! The paper's runtime claims (Tables 1–3) compare the near-linear-time
+//! seeders against exact baselines whose cost is dominated by three dense
+//! primitives. They used to be re-implemented privately by each caller
+//! (`seeding/kmeanspp.rs`, `seeding/afkmc2.rs`, `lloyd.rs`, ...); they now
+//! live here, chunked and cache-blocked, driven by the
+//! [`crate::parallel`] helpers:
+//!
+//! * [`d2::d2_update_min`] — incremental `D^2` array update against one
+//!   new center: `cur[i] = min(cur[i], ||x_i - c||^2)`. `O(nd)` per call;
+//!   the inner loop of exact k-means++ and AFK-MC² initialization.
+//! * [`assign::assign_argmin`] — point → nearest-center assignment with
+//!   center tiling, `O(nkd)`; the inner loop of Lloyd and cost evaluation.
+//! * [`reduce`] — blocked tree-sum reductions: total cost, `f32 → f64`
+//!   weight sums, per-block partial sums (the prefix structure `D^2`
+//!   sampling scans), and the max-distance bound the tree embedding needs.
+//!
+//! Threading policy is inherited from [`crate::parallel::num_threads`]
+//! (override with `FKMPP_THREADS`); every kernel degrades to a single
+//! inline call for small inputs, so tiny test instances pay no spawn
+//! cost. The PJRT artifacts implement the same contracts
+//! ([`crate::runtime`]); `rust/tests/kernel_parity.rs` property-tests the
+//! kernels against naive serial references across thread counts.
+
+pub mod assign;
+pub mod d2;
+pub mod reduce;

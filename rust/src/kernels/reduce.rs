@@ -1,0 +1,168 @@
+//! Blocked tree-sum reductions over points and weights.
+//!
+//! Sums of squared f32 distances overflow f32 precision long before the
+//! paper's dataset sizes, so the summing reductions here widen to f64
+//! and accumulate in **fixed-size blocks at fixed global boundaries**
+//! (a two-level tree sum). That buys two properties at once:
+//!
+//! * worst-case rounding error `O(blocks)` ulps instead of `O(n)`;
+//! * results **independent of the thread count** — block boundaries
+//!   never move with `FKMPP_THREADS`, so callers that compare sums
+//!   (e.g. greedy k-means++ candidate selection) order candidates
+//!   identically at any parallelism. `max_d2_to` needs neither trick:
+//!   `max` is order-free.
+
+use crate::data::matrix::{d2, PointSet};
+use crate::kernels::assign::min_d2_block;
+use crate::parallel::{parallel_chunks_mut, parallel_reduce};
+
+/// Leaf block size of the two-level tree sum.
+const SUM_BLOCK: usize = 4096;
+
+/// Points per worker below which reductions run inline.
+const MIN_POINTS_PER_THREAD: usize = 2048;
+
+/// Serial blocked sum of f32 values in f64 (the reduction leaf).
+fn block_sum_serial(xs: &[f32]) -> f64 {
+    xs.chunks(SUM_BLOCK)
+        .map(|c| c.iter().map(|&v| v as f64).sum::<f64>())
+        .sum()
+}
+
+/// Σ w\[i\] as f64: fixed-boundary parallel tree sum (thread-invariant).
+pub fn sum_f32(w: &[f32]) -> f64 {
+    block_sums(w, SUM_BLOCK).iter().sum()
+}
+
+/// Per-block partial sums: `out[b] = Σ w[b*block .. (b+1)*block]` in f64.
+/// This is the coarse level of the prefix structure exact `D^2` sampling
+/// scans (sum all blocks, pick a block, scan inside it).
+pub fn block_sums(w: &[f32], block: usize) -> Vec<f64> {
+    let block = block.max(1);
+    let nblocks = w.len().div_ceil(block);
+    let mut out = vec![0.0f64; nblocks];
+    parallel_chunks_mut(&mut out, 1, 4, |start, chunk| {
+        for (slot, b) in chunk.iter_mut().zip(start..) {
+            let lo = b * block;
+            let hi = (lo + block).min(w.len());
+            *slot = block_sum_serial(&w[lo..hi]);
+        }
+    });
+    out
+}
+
+/// k-means cost: Σ_i min_j `||x_i - c_j||^2` — `O(nkd)` work, fused
+/// min-distance + sum. Each fixed `SUM_BLOCK`-point block is evaluated
+/// with the center-tiled distance core ([`crate::kernels::assign`]) into
+/// a per-worker scratch, then summed; blocks combine in order — cache-hot
+/// on the center matrix, bounded rounding error, thread-count-invariant.
+pub fn cost(ps: &PointSet, centers: &PointSet) -> f64 {
+    assert_eq!(ps.dim(), centers.dim(), "dimension mismatch");
+    assert!(!centers.is_empty(), "no centers");
+    let n = ps.len();
+    let nblocks = n.div_ceil(SUM_BLOCK);
+    let mut partials = vec![0.0f64; nblocks];
+    parallel_chunks_mut(&mut partials, 1, 1, |start, chunk| {
+        let mut scratch = vec![0.0f32; SUM_BLOCK];
+        for (slot, b) in chunk.iter_mut().zip(start..) {
+            let lo = b * SUM_BLOCK;
+            let hi = (lo + SUM_BLOCK).min(n);
+            let ds = &mut scratch[..hi - lo];
+            min_d2_block(ps, centers, lo, ds);
+            *slot = ds.iter().map(|&v| v as f64).sum();
+        }
+    });
+    partials.iter().sum()
+}
+
+/// `max_i ||x_i - pivot||^2` — the parallel max-reduction behind the
+/// `MAXDIST` upper bound every tree embedding build starts with.
+pub fn max_d2_to(ps: &PointSet, pivot: &[f32]) -> f32 {
+    assert_eq!(pivot.len(), ps.dim(), "pivot dimension mismatch");
+    parallel_reduce(
+        ps.len(),
+        MIN_POINTS_PER_THREAD,
+        0.0f32,
+        |range| {
+            let mut best = 0.0f32;
+            for i in range {
+                best = best.max(d2(ps.row(i), pivot));
+            }
+            best
+        },
+        f32::max,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gaussian_mixture, SynthSpec};
+
+    fn ps(n: usize, d: usize) -> PointSet {
+        gaussian_mixture(
+            &SynthSpec {
+                n,
+                d,
+                k_true: 5,
+                ..Default::default()
+            },
+            7,
+        )
+    }
+
+    #[test]
+    fn sum_matches_naive() {
+        let w: Vec<f32> = (0..50_000).map(|i| (i % 97) as f32 * 0.25).collect();
+        let naive: f64 = w.iter().map(|&v| v as f64).sum();
+        let got = sum_f32(&w);
+        assert!((got - naive).abs() <= 1e-9 * naive.max(1.0), "{got} vs {naive}");
+        assert_eq!(sum_f32(&[]), 0.0);
+    }
+
+    #[test]
+    fn block_sums_cover_everything() {
+        let w: Vec<f32> = (0..10_123).map(|i| (i % 13) as f32).collect();
+        for block in [1usize, 7, 100, 8192, 20_000] {
+            let bs = block_sums(&w, block);
+            assert_eq!(bs.len(), w.len().div_ceil(block));
+            let total: f64 = bs.iter().sum();
+            let naive: f64 = w.iter().map(|&v| v as f64).sum();
+            assert!((total - naive).abs() <= 1e-9 * naive, "block={block}");
+            // Spot-check one interior block.
+            if bs.len() > 1 {
+                let lo = block;
+                let hi = (2 * block).min(w.len());
+                let want: f64 = w[lo..hi].iter().map(|&v| v as f64).sum();
+                assert!((bs[1] - want).abs() <= 1e-9 * want.max(1.0));
+            }
+        }
+        assert!(block_sums(&[], 64).is_empty());
+    }
+
+    #[test]
+    fn cost_matches_assignment_sum() {
+        let ps = ps(4_000, 10);
+        let centers = ps.gather(&[0, 71, 999, 3_500]);
+        let (_, mind2) = crate::kernels::assign::assign_argmin(&ps, &centers);
+        let want: f64 = mind2.iter().map(|&v| v as f64).sum();
+        let got = cost(&ps, &centers);
+        assert!((got - want).abs() <= 1e-9 * want.max(1.0));
+    }
+
+    #[test]
+    fn cost_zero_when_centers_cover() {
+        let ps = ps(50, 4);
+        assert_eq!(cost(&ps, &ps), 0.0);
+    }
+
+    #[test]
+    fn max_d2_matches_naive() {
+        let ps = ps(9_000, 6);
+        let pivot = ps.row(0).to_vec();
+        let naive = (0..ps.len())
+            .map(|i| d2(ps.row(i), &pivot))
+            .fold(0.0f32, f32::max);
+        assert_eq!(max_d2_to(&ps, &pivot), naive);
+    }
+}

@@ -20,37 +20,44 @@
 //! * the paper's baselines: exact [`seeding::kmeanspp`],
 //!   [`seeding::afkmc2`] (Bachem et al. 2016) and
 //!   [`seeding::uniform`];
+//! * the **parallel distance-kernel engine** ([`kernels`]) every exact
+//!   `D^2` update, assignment and cost loop routes through — chunked,
+//!   cache-blocked, `FKMPP_THREADS`-controllable;
 //! * [`lloyd`] refinement and cost evaluation, with both a tuned native
-//!   path and an AOT-compiled JAX/Pallas path executed through PJRT
-//!   ([`runtime`]);
+//!   path and (behind the `pjrt` feature) an AOT-compiled JAX/Pallas path
+//!   executed through PJRT ([`runtime`]);
 //! * dataset generators/registry matching the paper's evaluation scale
 //!   ([`data`]) and the experiment [`coordinator`] that regenerates every
 //!   table of the paper.
 //!
 //! Python/JAX appears only at build time (`make artifacts`); the request
-//! path is pure rust.
+//! path is pure rust. The crate has **zero external dependencies**: error
+//! handling lives in [`error`] and randomness in [`rng`].
 //!
 //! ## Quickstart
 //!
-//! ```no_run
+//! ```
 //! use fastkmeanspp::prelude::*;
 //!
 //! let data = fastkmeanspp::data::synth::gaussian_mixture(
-//!     &SynthSpec { n: 10_000, d: 16, k_true: 50, ..SynthSpec::default() },
+//!     &SynthSpec { n: 2_000, d: 16, k_true: 20, ..SynthSpec::default() },
 //!     0xC0FFEE,
 //! );
 //! let mut rng = Pcg64::seed_from(42);
 //! let seeding = fastkmeanspp::seeding::rejection::rejection_sampling(
-//!     &data, 100, &RejectionConfig::default(), &mut rng,
+//!     &data, 20, &RejectionConfig::default(), &mut rng,
 //! );
 //! let cost = fastkmeanspp::lloyd::cost_native(&data, &seeding.centers);
-//! println!("seeding cost = {cost}");
+//! assert_eq!(seeding.indices.len(), 20);
+//! assert!(cost.is_finite() && cost > 0.0);
 //! ```
 
 pub mod cli;
 pub mod coordinator;
 pub mod data;
 pub mod embed;
+pub mod error;
+pub mod kernels;
 pub mod lloyd;
 pub mod lsh;
 pub mod metrics;

@@ -3,7 +3,8 @@
 //! seeding with the classic local improvement algorithm").
 //!
 //! Iterations run on either backend ([`crate::runtime::Backend`]): the
-//! tuned native path or the AOT JAX/Pallas `lloyd_step` artifact via
+//! tuned native path (whose assignment/cost loops route through
+//! [`crate::kernels`]) or the AOT JAX/Pallas `lloyd_step` artifact via
 //! PJRT. Empty clusters are re-seeded with the point farthest from its
 //! assigned center (the standard repair).
 
@@ -49,7 +50,7 @@ pub fn lloyd(
     seed_centers: &PointSet,
     cfg: &LloydConfig,
     backend: &Backend,
-) -> anyhow::Result<LloydResult> {
+) -> crate::error::Result<LloydResult> {
     let k = seed_centers.len();
     let d = ps.dim();
     let mut centers = seed_centers.clone();

@@ -1,9 +1,11 @@
 //! Minimal data-parallel helpers on `std::thread::scope` (the offline
-//! build has no rayon). Used by the native distance kernels: the exact
-//! `D^2` update, assignment and cost loops are embarrassingly parallel
-//! over points.
+//! build has no rayon). This is the **only** module that spawns threads:
+//! every distance kernel in [`crate::kernels`] drives its loops through
+//! the chunked helpers here, so thread-count policy (`FKMPP_THREADS`),
+//! chunk sizing and the unsafe-free slice splitting live in one place.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// Number of worker threads to use (cores, capped; override with
 /// `FKMPP_THREADS`).
@@ -19,6 +21,15 @@ pub fn num_threads() -> usize {
         .min(32)
 }
 
+/// Shared chunk planning: how many workers for `units` work items given
+/// a `min_per_thread` floor, and how many items each worker takes.
+/// Returns `(threads, chunk)` with `threads >= 1` and `chunk >= 1`
+/// whenever `units > 0`.
+fn plan(units: usize, min_per_thread: usize) -> (usize, usize) {
+    let threads = num_threads().min(units / min_per_thread.max(1)).max(1);
+    (threads, units.div_ceil(threads).max(1))
+}
+
 /// Split `[0, n)` into contiguous chunks, one per worker, and run `f` on
 /// each in parallel. `f(range)` must be independent across chunks.
 /// Falls back to a single inline call for small `n`.
@@ -26,12 +37,11 @@ pub fn parallel_ranges<F>(n: usize, min_per_thread: usize, f: F)
 where
     F: Fn(std::ops::Range<usize>) + Sync,
 {
-    let threads = num_threads().min(n / min_per_thread.max(1)).max(1);
+    let (threads, chunk) = plan(n, min_per_thread);
     if threads <= 1 {
         f(0..n);
         return;
     }
-    let chunk = n.div_ceil(threads);
     std::thread::scope(|s| {
         for t in 0..threads {
             let f = &f;
@@ -53,11 +63,10 @@ where
     M: Fn(std::ops::Range<usize>) -> T + Sync,
     R: Fn(T, T) -> T,
 {
-    let threads = num_threads().min(n / min_per_thread.max(1)).max(1);
+    let (threads, chunk) = plan(n, min_per_thread);
     if threads <= 1 {
         return reduce(identity, map(0..n));
     }
-    let chunk = n.div_ceil(threads);
     let mut results = Vec::with_capacity(threads);
     std::thread::scope(|s| {
         let mut handles = Vec::with_capacity(threads);
@@ -75,6 +84,93 @@ where
         }
     });
     results.into_iter().fold(identity, |a, b| reduce(a, b))
+}
+
+/// Split a mutable slice into per-worker contiguous chunks whose lengths
+/// are multiples of `align` (the final chunk takes the remainder) and run
+/// `f(start_index, chunk)` on each in parallel.
+///
+/// This is the safe replacement for the raw-pointer `SendPtr` loops the
+/// seeders used to carry: ownership of each disjoint sub-slice moves into
+/// its worker via `split_at_mut`, so no `unsafe` is needed.
+/// `min_per_thread` is measured in `align`-sized units.
+pub fn parallel_chunks_mut<T, F>(data: &mut [T], align: usize, min_per_thread: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let align = align.max(1);
+    let (threads, unit_chunk) = plan(data.len() / align, min_per_thread);
+    if threads <= 1 {
+        f(0, data);
+        return;
+    }
+    let chunk = unit_chunk * align;
+    std::thread::scope(|s| {
+        for (c, part) in data.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            let start = c * chunk;
+            s.spawn(move || f(start, part));
+        }
+    });
+}
+
+/// Like [`parallel_chunks_mut`] over two equal-length slices split at the
+/// same boundaries — the shape of the assignment kernel, which fills an
+/// index array and a distance array in one pass.
+pub fn parallel_chunks_mut2<A, B, F>(a: &mut [A], b: &mut [B], min_per_thread: usize, f: F)
+where
+    A: Send,
+    B: Send,
+    F: Fn(usize, &mut [A], &mut [B]) + Sync,
+{
+    assert_eq!(a.len(), b.len(), "parallel_chunks_mut2: length mismatch");
+    let (threads, chunk) = plan(a.len(), min_per_thread);
+    if threads <= 1 {
+        f(0, a, b);
+        return;
+    }
+    std::thread::scope(|s| {
+        for (c, (part_a, part_b)) in a.chunks_mut(chunk).zip(b.chunks_mut(chunk)).enumerate() {
+            let f = &f;
+            let start = c * chunk;
+            s.spawn(move || f(start, part_a, part_b));
+        }
+    });
+}
+
+/// Parallel `map` over `[0, n)` preserving order: returns
+/// `[f(0), f(1), ..., f(n-1)]`. Items are claimed dynamically, so uneven
+/// per-item cost (e.g. independent tree builds) balances automatically.
+pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = num_threads().min(n).max(1);
+    if threads <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            let f = &f;
+            let next = &next;
+            let slots = &slots;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                *slots[i].lock().unwrap() = Some(f(i));
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker skipped an item"))
+        .collect()
 }
 
 /// Work-stealing-ish dynamic parallel-for over indivisible items (used
@@ -144,6 +240,65 @@ mod tests {
             hits[i].fetch_add(1, Ordering::Relaxed);
         });
         assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn chunks_mut_writes_every_slot_once() {
+        let mut data = vec![0u32; 50_001];
+        parallel_chunks_mut(&mut data, 1, 64, |start, chunk| {
+            for (slot, i) in chunk.iter_mut().zip(start..) {
+                *slot += i as u32 + 1;
+            }
+        });
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, i as u32 + 1, "slot {i}");
+        }
+    }
+
+    #[test]
+    fn chunks_mut_respects_alignment() {
+        // With align = 7, every split boundary must be a multiple of 7.
+        let rows = 1000;
+        let mut data = vec![u32::MAX; rows * 7];
+        parallel_chunks_mut(&mut data, 7, 1, |start, chunk| {
+            assert_eq!(start % 7, 0, "misaligned start {start}");
+            if start + chunk.len() < rows * 7 {
+                assert_eq!(chunk.len() % 7, 0, "misaligned chunk at {start}");
+            }
+            for (slot, i) in chunk.iter_mut().zip(start..) {
+                *slot = (i / 7) as u32;
+            }
+        });
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v as usize, i / 7);
+        }
+    }
+
+    #[test]
+    fn chunks_mut2_splits_in_lockstep() {
+        let n = 30_000;
+        let mut a = vec![0u64; n];
+        let mut b = vec![0u64; n];
+        parallel_chunks_mut2(&mut a, &mut b, 64, |start, ca, cb| {
+            assert_eq!(ca.len(), cb.len());
+            for (t, (x, y)) in ca.iter_mut().zip(cb.iter_mut()).enumerate() {
+                *x = (start + t) as u64;
+                *y = 2 * (start + t) as u64;
+            }
+        });
+        for i in 0..n {
+            assert_eq!(a[i], i as u64);
+            assert_eq!(b[i], 2 * i as u64);
+        }
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let out = parallel_map(1000, |i| i * i);
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i * i);
+        }
+        assert!(parallel_map(0, |i| i).is_empty());
     }
 
     #[test]

@@ -13,7 +13,8 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::error::{Context, Result};
 
 /// One AOT-compiled HLO module.
 #[derive(Clone, Debug, PartialEq)]

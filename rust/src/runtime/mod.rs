@@ -1,10 +1,15 @@
 //! Execution backends for the dense distance algebra.
 //!
-//! * [`native`] — tuned pure-rust implementations (parallel over point
-//!   chunks). Always available; also the tail-chunk handler for PJRT.
+//! * [`native`] — tuned pure-rust implementations delegating to the
+//!   parallel kernel engine ([`crate::kernels`]). Always available; also
+//!   the tail-chunk handler for PJRT.
 //! * [`pjrt`] — loads the AOT-compiled JAX/Pallas HLO artifacts
 //!   (`artifacts/*.hlo.txt`, built once by `make artifacts`) and runs them
 //!   on the PJRT CPU client via the `xla` crate. Python never runs here.
+//!   Compiled only with the **`pjrt` feature** (which needs the vendored
+//!   `xla` crate); the default build substitutes a stub whose `load`
+//!   always fails, so `Backend::auto` falls back to native.
+//! * [`padding`] — the shape-padding contract shared by both PJRT paths.
 //! * [`manifest`] — the `artifacts/manifest.tsv` parser and shape-variant
 //!   selection logic.
 //!
@@ -12,10 +17,15 @@
 
 pub mod manifest;
 pub mod native;
+pub mod padding;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+#[cfg(not(feature = "pjrt"))]
+#[path = "pjrt_stub.rs"]
 pub mod pjrt;
 
 use crate::data::matrix::PointSet;
-use anyhow::Result;
+use crate::error::Result;
 
 /// Compute backend selector.
 pub enum Backend {

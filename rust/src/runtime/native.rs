@@ -3,81 +3,34 @@
 //! backend, the PJRT tail-chunk handler, and the cross-check oracle in
 //! the `runtime_pjrt_matches_native` integration test.
 //!
-//! All loops parallelize over contiguous point chunks and funnel through
-//! the unrolled [`crate::data::matrix::d2`] kernel.
+//! Assignment and cost delegate to the shared parallel kernel engine
+//! ([`crate::kernels`]); `lloyd_step` keeps its fused fold here (its
+//! per-cluster accumulators are backend-contract specific) but routes its
+//! inner distance loop through [`crate::kernels::assign::nearest_center`].
 
-use crate::data::matrix::{d2, PointSet};
-use crate::parallel::{parallel_reduce, parallel_ranges};
+use crate::data::matrix::PointSet;
+use crate::kernels::assign::nearest_center;
+use crate::kernels::reduce;
+use crate::parallel::parallel_reduce;
 
 /// Nearest center per point: `(argmin index, min squared distance)`.
 pub fn assign(ps: &PointSet, centers: &PointSet) -> (Vec<u32>, Vec<f32>) {
-    assert_eq!(ps.dim(), centers.dim());
-    assert!(!centers.is_empty());
-    let n = ps.len();
-    let mut idx = vec![0u32; n];
-    let mut mind2 = vec![0.0f32; n];
-    let idx_ptr = SendMutPtr(idx.as_mut_ptr());
-    let d2_ptr = SendMutPtr(mind2.as_mut_ptr());
-    parallel_ranges(n, 2048, |range| {
-        let _ = (&idx_ptr, &d2_ptr);
-        for i in range {
-            let row = ps.row(i);
-            let mut best = f32::INFINITY;
-            let mut best_j = 0u32;
-            for j in 0..centers.len() {
-                let dd = d2(row, centers.row(j));
-                if dd < best {
-                    best = dd;
-                    best_j = j as u32;
-                }
-            }
-            // SAFETY: parallel_ranges hands out disjoint index ranges.
-            unsafe {
-                *idx_ptr.0.add(i) = best_j;
-                *d2_ptr.0.add(i) = best;
-            }
-        }
-    });
-    (idx, mind2)
+    crate::kernels::assign::assign_argmin(ps, centers)
 }
-
-struct SendMutPtr<T>(*mut T);
-unsafe impl<T> Send for SendMutPtr<T> {}
-unsafe impl<T> Sync for SendMutPtr<T> {}
 
 /// k-means cost (sum over points of the min squared distance).
 pub fn cost(ps: &PointSet, centers: &PointSet) -> f64 {
-    assert_eq!(ps.dim(), centers.dim());
-    assert!(!centers.is_empty());
-    parallel_reduce(
-        ps.len(),
-        2048,
-        0.0f64,
-        |range| {
-            let mut acc = 0.0f64;
-            for i in range {
-                let row = ps.row(i);
-                let mut best = f32::INFINITY;
-                for j in 0..centers.len() {
-                    let dd = d2(row, centers.row(j));
-                    if dd < best {
-                        best = dd;
-                    }
-                }
-                acc += best as f64;
-            }
-            acc
-        },
-        |a, b| a + b,
-    )
+    reduce::cost(ps, centers)
 }
 
 /// One Lloyd step over the whole set: per-cluster coordinate sums (f64,
 /// `k*d` row-major), member counts, and the cost under the input centers.
 pub fn lloyd_step(ps: &PointSet, centers: &PointSet) -> (Vec<f64>, Vec<u64>, f64) {
+    assert_eq!(ps.dim(), centers.dim());
+    assert!(!centers.is_empty());
     let k = centers.len();
     let d = ps.dim();
-    let (sums, counts, cost) = parallel_reduce(
+    parallel_reduce(
         ps.len(),
         2048,
         (vec![0.0f64; k * d], vec![0u64; k], 0.0f64),
@@ -87,15 +40,8 @@ pub fn lloyd_step(ps: &PointSet, centers: &PointSet) -> (Vec<f64>, Vec<u64>, f64
             let mut cost = 0.0f64;
             for i in range {
                 let row = ps.row(i);
-                let mut best = f32::INFINITY;
-                let mut best_j = 0usize;
-                for j in 0..k {
-                    let dd = d2(row, centers.row(j));
-                    if dd < best {
-                        best = dd;
-                        best_j = j;
-                    }
-                }
+                let (best_j, best) = nearest_center(row, centers);
+                let best_j = best_j as usize;
                 cost += best as f64;
                 counts[best_j] += 1;
                 let s = &mut sums[best_j * d..(best_j + 1) * d];
@@ -114,13 +60,13 @@ pub fn lloyd_step(ps: &PointSet, centers: &PointSet) -> (Vec<f64>, Vec<u64>, f64
             }
             (sa, ca, costa + costb)
         },
-    );
-    (sums, counts, cost)
+    )
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::matrix::d2;
     use crate::data::synth::{gaussian_mixture, SynthSpec};
 
     fn case() -> (PointSet, PointSet) {

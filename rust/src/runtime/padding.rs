@@ -1,0 +1,102 @@
+//! Shape-padding contract for the AOT PJRT artifacts (mirrors
+//! `python/compile/model.py`), shared by the real `pjrt` runtime and
+//! kept compiled (and unit-tested) in the default build:
+//!
+//! * point dims zero-padded to the variant's `d` (adds 0 to distances);
+//! * center rows padded with [`PAD_CENTER_COORD`] (never argmin-selected,
+//!   attract no Lloyd mass);
+//! * only *full* chunks go through PJRT; the tail chunk runs on the
+//!   native backend (identical contract, negligible work).
+
+use crate::data::matrix::PointSet;
+
+/// Sentinel coordinate for padded center rows (see model.py).
+pub const PAD_CENTER_COORD: f32 = 1.0e15;
+
+/// Pack `centers` into a `[k_v, d_v]` buffer per the padding contract.
+pub fn pad_centers(centers: &PointSet, k_v: usize, d_v: usize) -> Vec<f32> {
+    let mut buf = vec![0.0f32; k_v * d_v];
+    for j in 0..centers.len() {
+        buf[j * d_v..j * d_v + centers.dim()].copy_from_slice(centers.row(j));
+    }
+    for j in centers.len()..k_v {
+        for v in buf[j * d_v..(j + 1) * d_v].iter_mut() {
+            *v = PAD_CENTER_COORD;
+        }
+    }
+    buf
+}
+
+/// Pack points `[start, start+chunk)` into a `[chunk, d_v]` buffer.
+pub fn pad_points(ps: &PointSet, start: usize, chunk: usize, d_v: usize, buf: &mut [f32]) {
+    debug_assert_eq!(buf.len(), chunk * d_v);
+    let d = ps.dim();
+    if d == d_v {
+        buf.copy_from_slice(&ps.flat()[start * d..(start + chunk) * d]);
+    } else {
+        buf.fill(0.0);
+        for i in 0..chunk {
+            buf[i * d_v..i * d_v + d].copy_from_slice(ps.row(start + i));
+        }
+    }
+}
+
+/// The tail slice `[start, n)` as an owned `PointSet` (handled natively).
+pub fn tail_points(ps: &PointSet, start: usize) -> PointSet {
+    let d = ps.dim();
+    PointSet::from_flat(ps.len() - start, d, ps.flat()[start * d..].to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gaussian_mixture, SynthSpec};
+
+    #[test]
+    fn pad_centers_layout() {
+        let cs = PointSet::from_rows(&[vec![1.0f32, 2.0], vec![3.0, 4.0]]);
+        let buf = pad_centers(&cs, 4, 3);
+        assert_eq!(&buf[0..3], &[1.0, 2.0, 0.0]);
+        assert_eq!(&buf[3..6], &[3.0, 4.0, 0.0]);
+        assert!(buf[6..].iter().all(|&v| v == PAD_CENTER_COORD));
+    }
+
+    #[test]
+    fn pad_points_fast_path_and_padded_path() {
+        let ps = gaussian_mixture(
+            &SynthSpec {
+                n: 10,
+                d: 4,
+                k_true: 2,
+                ..Default::default()
+            },
+            1,
+        );
+        let mut buf = vec![9.0f32; 2 * 4];
+        pad_points(&ps, 3, 2, 4, &mut buf);
+        assert_eq!(&buf[0..4], ps.row(3));
+        assert_eq!(&buf[4..8], ps.row(4));
+        let mut buf6 = vec![9.0f32; 2 * 6];
+        pad_points(&ps, 3, 2, 6, &mut buf6);
+        assert_eq!(&buf6[0..4], ps.row(3));
+        assert_eq!(&buf6[4..6], &[0.0, 0.0]);
+        assert_eq!(&buf6[6..10], ps.row(4));
+    }
+
+    #[test]
+    fn tail_points_slices() {
+        let ps = gaussian_mixture(
+            &SynthSpec {
+                n: 7,
+                d: 3,
+                k_true: 2,
+                ..Default::default()
+            },
+            2,
+        );
+        let tail = tail_points(&ps, 5);
+        assert_eq!(tail.len(), 2);
+        assert_eq!(tail.row(0), ps.row(5));
+        assert_eq!(tail.row(1), ps.row(6));
+    }
+}

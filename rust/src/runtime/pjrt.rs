@@ -1,29 +1,28 @@
-//! PJRT execution of the AOT JAX/Pallas artifacts.
+//! PJRT execution of the AOT JAX/Pallas artifacts (**`pjrt` feature
+//! only** — requires the vendored `xla` crate; the default build uses
+//! the stub in `pjrt_stub.rs`).
 //!
 //! Load path (see /opt/xla-example and DESIGN.md): HLO **text** →
 //! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
 //! `PjRtClient::cpu().compile` → `execute`. Compilation is lazy per
 //! shape variant and cached for the life of the runtime.
 //!
-//! Padding contract (mirrors `python/compile/model.py`):
-//! * point dims zero-padded to the variant's `d` (adds 0 to distances);
-//! * center rows padded with `PAD_CENTER_COORD` (never argmin-selected,
-//!   attract no Lloyd mass);
-//! * only *full* chunks go through PJRT; the tail chunk runs on the
-//!   native backend (identical contract, negligible work).
+//! The padding contract lives in [`crate::runtime::padding`] (shared
+//! with the stub build so it stays unit-tested everywhere).
 
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, Result};
+use crate::anyhow;
+use crate::error::Result;
 
 use crate::data::matrix::PointSet;
 use crate::runtime::manifest::{Manifest, Variant};
 use crate::runtime::native;
+use crate::runtime::padding::{pad_centers, pad_points, tail_points};
 
-/// Sentinel coordinate for padded center rows (see model.py).
-pub const PAD_CENTER_COORD: f32 = 1.0e15;
+pub use crate::runtime::padding::PAD_CENTER_COORD;
 
 /// A loaded PJRT CPU runtime over an artifacts directory.
 pub struct PjrtRuntime {
@@ -75,43 +74,6 @@ impl PjrtRuntime {
         Ok(out)
     }
 
-    /// Pack `centers` into a `[k_v, d_v]` buffer per the padding contract.
-    fn pad_centers(centers: &PointSet, k_v: usize, d_v: usize) -> Vec<f32> {
-        let mut buf = vec![0.0f32; k_v * d_v];
-        for j in 0..centers.len() {
-            buf[j * d_v..j * d_v + centers.dim()].copy_from_slice(centers.row(j));
-        }
-        for j in centers.len()..k_v {
-            for v in buf[j * d_v..(j + 1) * d_v].iter_mut() {
-                *v = PAD_CENTER_COORD;
-            }
-        }
-        buf
-    }
-
-    /// Pack points `[start, start+chunk)` into a `[chunk, d_v]` buffer.
-    fn pad_points(ps: &PointSet, start: usize, chunk: usize, d_v: usize, buf: &mut [f32]) {
-        debug_assert_eq!(buf.len(), chunk * d_v);
-        let d = ps.dim();
-        if d == d_v {
-            buf.copy_from_slice(&ps.flat()[start * d..(start + chunk) * d]);
-        } else {
-            buf.fill(0.0);
-            for i in 0..chunk {
-                buf[i * d_v..i * d_v + d].copy_from_slice(ps.row(start + i));
-            }
-        }
-    }
-
-    fn tail_points(ps: &PointSet, start: usize) -> PointSet {
-        let d = ps.dim();
-        PointSet::from_flat(
-            ps.len() - start,
-            d,
-            ps.flat()[start * d..].to_vec(),
-        )
-    }
-
     /// k-means cost via the `cost` artifact (tail natively).
     ///
     /// Shapes beyond the AOT variant grid (e.g. k > the largest compiled
@@ -124,14 +86,14 @@ impl PjrtRuntime {
         else {
             return Ok(native::cost(ps, centers));
         };
-        let centers_lit = xla::Literal::vec1(&Self::pad_centers(centers, variant.k, variant.d))
+        let centers_lit = xla::Literal::vec1(&pad_centers(centers, variant.k, variant.d))
             .reshape(&[variant.k as i64, variant.d as i64])
             .map_err(|e| anyhow!("{e:?}"))?;
         let mut total = 0.0f64;
         let mut buf = vec![0.0f32; variant.chunk * variant.d];
         let full_chunks = ps.len() / variant.chunk;
         for c in 0..full_chunks {
-            Self::pad_points(ps, c * variant.chunk, variant.chunk, variant.d, &mut buf);
+            pad_points(ps, c * variant.chunk, variant.chunk, variant.d, &mut buf);
             let pts = xla::Literal::vec1(&buf)
                 .reshape(&[variant.chunk as i64, variant.d as i64])
                 .map_err(|e| anyhow!("{e:?}"))?;
@@ -141,7 +103,7 @@ impl PjrtRuntime {
         }
         let tail_start = full_chunks * variant.chunk;
         if tail_start < ps.len() {
-            total += native::cost(&Self::tail_points(ps, tail_start), centers);
+            total += native::cost(&tail_points(ps, tail_start), centers);
         }
         Ok(total)
     }
@@ -156,7 +118,7 @@ impl PjrtRuntime {
         else {
             return Ok(native::assign(ps, centers));
         };
-        let centers_lit = xla::Literal::vec1(&Self::pad_centers(centers, variant.k, variant.d))
+        let centers_lit = xla::Literal::vec1(&pad_centers(centers, variant.k, variant.d))
             .reshape(&[variant.k as i64, variant.d as i64])
             .map_err(|e| anyhow!("{e:?}"))?;
         let n = ps.len();
@@ -165,7 +127,7 @@ impl PjrtRuntime {
         let mut buf = vec![0.0f32; variant.chunk * variant.d];
         let full_chunks = n / variant.chunk;
         for c in 0..full_chunks {
-            Self::pad_points(ps, c * variant.chunk, variant.chunk, variant.d, &mut buf);
+            pad_points(ps, c * variant.chunk, variant.chunk, variant.d, &mut buf);
             let pts = xla::Literal::vec1(&buf)
                 .reshape(&[variant.chunk as i64, variant.d as i64])
                 .map_err(|e| anyhow!("{e:?}"))?;
@@ -177,7 +139,7 @@ impl PjrtRuntime {
         }
         let tail_start = full_chunks * variant.chunk;
         if tail_start < n {
-            let (ti, td) = native::assign(&Self::tail_points(ps, tail_start), centers);
+            let (ti, td) = native::assign(&tail_points(ps, tail_start), centers);
             idx.extend(ti);
             mind2.extend(td);
         }
@@ -199,7 +161,7 @@ impl PjrtRuntime {
         };
         let k = centers.len();
         let d = ps.dim();
-        let centers_lit = xla::Literal::vec1(&Self::pad_centers(centers, variant.k, variant.d))
+        let centers_lit = xla::Literal::vec1(&pad_centers(centers, variant.k, variant.d))
             .reshape(&[variant.k as i64, variant.d as i64])
             .map_err(|e| anyhow!("{e:?}"))?;
         let mut sums = vec![0.0f64; k * d];
@@ -208,7 +170,7 @@ impl PjrtRuntime {
         let mut buf = vec![0.0f32; variant.chunk * variant.d];
         let full_chunks = ps.len() / variant.chunk;
         for c in 0..full_chunks {
-            Self::pad_points(ps, c * variant.chunk, variant.chunk, variant.d, &mut buf);
+            pad_points(ps, c * variant.chunk, variant.chunk, variant.d, &mut buf);
             let pts = xla::Literal::vec1(&buf)
                 .reshape(&[variant.chunk as i64, variant.d as i64])
                 .map_err(|e| anyhow!("{e:?}"))?;
@@ -226,8 +188,7 @@ impl PjrtRuntime {
         }
         let tail_start = full_chunks * variant.chunk;
         if tail_start < ps.len() {
-            let (ts, tc, tcost) =
-                native::lloyd_step(&Self::tail_points(ps, tail_start), centers);
+            let (ts, tc, tcost) = native::lloyd_step(&tail_points(ps, tail_start), centers);
             for (a, b) in sums.iter_mut().zip(&ts) {
                 *a += b;
             }
@@ -248,7 +209,7 @@ impl PjrtRuntime {
             .select("d2_update", ps.len(), ps.dim(), 0)
             .cloned()
         else {
-            crate::seeding::kmeanspp::update_d2_parallel_to(ps, center, cur_d2);
+            crate::kernels::d2::d2_update_min(ps, center, cur_d2);
             return Ok(());
         };
         let mut c_buf = vec![0.0f32; variant.d];
@@ -260,7 +221,7 @@ impl PjrtRuntime {
         let full_chunks = ps.len() / variant.chunk;
         for c in 0..full_chunks {
             let start = c * variant.chunk;
-            Self::pad_points(ps, start, variant.chunk, variant.d, &mut buf);
+            pad_points(ps, start, variant.chunk, variant.d, &mut buf);
             let pts = xla::Literal::vec1(&buf)
                 .reshape(&[variant.chunk as i64, variant.d as i64])
                 .map_err(|e| anyhow!("{e:?}"))?;
@@ -290,61 +251,4 @@ fn exec(exe: &xla::PjRtLoadedExecutable, literals: &[xla::Literal]) -> Result<Ve
         .to_literal_sync()
         .map_err(|e| anyhow!("to_literal: {e:?}"))?;
     lit.to_tuple().map_err(|e| anyhow!("tuple: {e:?}"))
-}
-
-#[cfg(test)]
-mod tests {
-    //! Unit tests needing compiled artifacts are in
-    //! `rust/tests/pjrt_integration.rs` (they skip gracefully when
-    //! `artifacts/` is absent). Here: padding logic only.
-    use super::*;
-    use crate::data::synth::{gaussian_mixture, SynthSpec};
-
-    #[test]
-    fn pad_centers_layout() {
-        let cs = PointSet::from_rows(&[vec![1.0f32, 2.0], vec![3.0, 4.0]]);
-        let buf = PjrtRuntime::pad_centers(&cs, 4, 3);
-        assert_eq!(&buf[0..3], &[1.0, 2.0, 0.0]);
-        assert_eq!(&buf[3..6], &[3.0, 4.0, 0.0]);
-        assert!(buf[6..].iter().all(|&v| v == PAD_CENTER_COORD));
-    }
-
-    #[test]
-    fn pad_points_fast_path_and_padded_path() {
-        let ps = gaussian_mixture(
-            &SynthSpec {
-                n: 10,
-                d: 4,
-                k_true: 2,
-                ..Default::default()
-            },
-            1,
-        );
-        let mut buf = vec![9.0f32; 2 * 4];
-        PjrtRuntime::pad_points(&ps, 3, 2, 4, &mut buf);
-        assert_eq!(&buf[0..4], ps.row(3));
-        assert_eq!(&buf[4..8], ps.row(4));
-        let mut buf6 = vec![9.0f32; 2 * 6];
-        PjrtRuntime::pad_points(&ps, 3, 2, 6, &mut buf6);
-        assert_eq!(&buf6[0..4], ps.row(3));
-        assert_eq!(&buf6[4..6], &[0.0, 0.0]);
-        assert_eq!(&buf6[6..10], ps.row(4));
-    }
-
-    #[test]
-    fn tail_points_slices() {
-        let ps = gaussian_mixture(
-            &SynthSpec {
-                n: 7,
-                d: 3,
-                k_true: 2,
-                ..Default::default()
-            },
-            2,
-        );
-        let tail = PjrtRuntime::tail_points(&ps, 5);
-        assert_eq!(tail.len(), 2);
-        assert_eq!(tail.row(0), ps.row(5));
-        assert_eq!(tail.row(1), ps.row(6));
-    }
 }

@@ -1,0 +1,75 @@
+//! Stub PJRT runtime — compiled when the `pjrt` feature is **off** (the
+//! default: the offline image cannot vendor the `xla` crate).
+//!
+//! The stub keeps the exact public surface of the real
+//! `runtime/pjrt.rs` so callers (`Backend::auto`, the benches, the
+//! integration tests) compile unchanged: `load` always fails with a
+//! descriptive error, which makes every caller fall back to the native
+//! backend, and the entry points delegate to [`crate::runtime::native`]
+//! so they stay well-defined even if constructed by hand in the future.
+
+use std::path::Path;
+
+use crate::data::matrix::PointSet;
+use crate::error::Result;
+use crate::runtime::manifest::Manifest;
+use crate::runtime::native;
+
+pub use crate::runtime::padding::PAD_CENTER_COORD;
+
+/// Placeholder for the PJRT CPU runtime (see module docs).
+pub struct PjrtRuntime {
+    manifest: Manifest,
+}
+
+impl PjrtRuntime {
+    /// Always fails: the `pjrt` feature (and the `xla` crate behind it)
+    /// is not enabled in this build.
+    pub fn load(_artifacts_dir: &Path) -> Result<Self> {
+        Err(crate::anyhow!(
+            "PJRT backend unavailable: built without the `pjrt` feature \
+             (vendor the `xla` crate, add it to [dependencies] in \
+             Cargo.toml, then rebuild with --features pjrt)"
+        ))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Native fallback (the stub can never hold compiled artifacts).
+    pub fn cost(&self, ps: &PointSet, centers: &PointSet) -> Result<f64> {
+        Ok(native::cost(ps, centers))
+    }
+
+    /// Native fallback.
+    pub fn assign(&self, ps: &PointSet, centers: &PointSet) -> Result<(Vec<u32>, Vec<f32>)> {
+        Ok(native::assign(ps, centers))
+    }
+
+    /// Native fallback.
+    pub fn lloyd_step(
+        &self,
+        ps: &PointSet,
+        centers: &PointSet,
+    ) -> Result<(Vec<f64>, Vec<u64>, f64)> {
+        Ok(native::lloyd_step(ps, centers))
+    }
+
+    /// Native fallback.
+    pub fn d2_update(&self, ps: &PointSet, center: &[f32], cur_d2: &mut [f32]) -> Result<()> {
+        crate::kernels::d2::d2_update_min(ps, center, cur_d2);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_reports_missing_feature() {
+        let err = PjrtRuntime::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err:#}").contains("pjrt"), "{err:#}");
+    }
+}

@@ -7,15 +7,18 @@
 //!   q(x) = 1/2 · d(x, c1)^2 / Σ_y d(y, c1)^2  +  1/(2n)
 //! ```
 //!
-//! built once in `O(nd)`. Each of the `k-1` rounds runs an `m`-step chain
-//! whose stationary distribution is the true `D^2` distribution; each step
-//! evaluates `DIST(y, S)^2` against all current centers — the `O(m k^2 d)`
-//! term that the rejection-sampling paper removes. The paper's experiments
-//! use the authors' suggested `m = 200`; so do we.
+//! built once in `O(nd)` (parallel, via
+//! [`crate::kernels::d2::d2_update_min`]). Each of the `k-1` rounds runs
+//! an `m`-step chain whose stationary distribution is the true `D^2`
+//! distribution; each step evaluates `DIST(y, S)^2` against all current
+//! centers — the `O(m k^2 d)` term that the rejection-sampling paper
+//! removes. The paper's experiments use the authors' suggested `m = 200`;
+//! so do we.
 
 use std::time::Instant;
 
 use crate::data::matrix::{d2, PointSet};
+use crate::kernels::d2::d2_update_min;
 use crate::rng::Pcg64;
 use crate::seeding::{Seeding, SeedingStats};
 
@@ -40,14 +43,16 @@ pub fn afkmc2(ps: &PointSet, k: usize, cfg: &Afkmc2Config, rng: &mut Pcg64) -> S
 
     let t0 = Instant::now();
     // First center uniform; build the proposal q and its prefix sums.
+    // The O(nd) distance pass runs on the parallel kernel engine.
     let c1 = rng.index(n);
     let c1_row = ps.row(c1).to_vec();
+    let mut d2_c1 = vec![f32::INFINITY; n];
+    d2_update_min(ps, &c1_row, &mut d2_c1);
     let mut q = vec![0.0f64; n];
     let mut total = 0.0f64;
-    for i in 0..n {
-        let dd = d2(ps.row(i), &c1_row) as f64;
-        q[i] = dd;
-        total += dd;
+    for (qi, &dd) in q.iter_mut().zip(&d2_c1) {
+        *qi = dd as f64;
+        total += dd as f64;
     }
     // q(x) = 0.5 d^2/Σ + 0.5/n ; degenerate Σ=0 -> uniform.
     let mut prefix = vec![0.0f64; n + 1];

@@ -2,17 +2,16 @@
 //! (2007), the paper's primary baseline.
 //!
 //! `Θ(ndk)`: every one of the `k` rounds updates all `n` cached squared
-//! distances against the newly opened center (`d2_update`, the same
-//! contract as the L1 Pallas kernel) and draws one sample from the exact
-//! `D^2` distribution by prefix scan. The distance update is
-//! parallelized over point chunks; this is the tuned native twin of the
-//! `d2_update` PJRT artifact.
+//! distances against the newly opened center
+//! ([`crate::kernels::d2::d2_update_min`], the same contract as the L1
+//! Pallas kernel) and draws one sample from the exact `D^2` distribution
+//! by a blocked prefix scan over
+//! [`crate::kernels::reduce::block_sums`].
 
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
-use crate::data::matrix::{d2, PointSet};
-use crate::parallel::parallel_ranges;
+use crate::data::matrix::PointSet;
+use crate::kernels::{d2 as d2_kernel, reduce};
 use crate::rng::Pcg64;
 use crate::seeding::{Seeding, SeedingStats};
 
@@ -53,7 +52,9 @@ pub fn kmeanspp(ps: &PointSet, k: usize, rng: &mut Pcg64) -> Seeding {
     Seeding::from_indices(ps, indices, stats)
 }
 
-/// `cur[i] = min(cur[i], ||x_i - center||^2)` in parallel chunks.
+/// `cur[i] = min(cur[i], ||x_i - center||^2)` against dataset point
+/// `center` (thin wrapper over [`crate::kernels::d2::d2_update_min`],
+/// kept for the benches and the PJRT parity tests).
 pub fn update_d2_parallel(ps: &PointSet, center: usize, cur_d2: &mut [f32]) {
     let c = ps.row(center).to_vec();
     update_d2_parallel_to(ps, &c, cur_d2)
@@ -61,59 +62,14 @@ pub fn update_d2_parallel(ps: &PointSet, center: usize, cur_d2: &mut [f32]) {
 
 /// Same, against an arbitrary center point.
 pub fn update_d2_parallel_to(ps: &PointSet, c: &[f32], cur_d2: &mut [f32]) {
-    let c = c.to_vec();
-    // SAFETY-free parallel mutation: hand each worker a disjoint
-    // sub-slice via raw split below (std::thread::scope + chunk math).
-    let n = ps.len();
-    let ptr = SendPtr(cur_d2.as_mut_ptr());
-    parallel_ranges(n, 4096, move |range| {
-        let ptr = &ptr;
-        for i in range {
-            let dd = d2(ps.row(i), &c);
-            // SAFETY: ranges from parallel_ranges are disjoint.
-            unsafe {
-                let slot = ptr.0.add(i);
-                if dd < *slot {
-                    *slot = dd;
-                }
-            }
-        }
-    });
+    d2_kernel::d2_update_min(ps, c, cur_d2)
 }
 
-struct SendPtr(*mut f32);
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
-
-/// Draw an index proportional to `w[i]` (exact `D^2`). Parallel prefix:
-/// block sums first (parallel), then a scan inside the selected block.
+/// Draw an index proportional to `w[i]` (exact `D^2`). Blocked prefix:
+/// parallel block sums first, then a scan inside the selected block.
 pub fn sample_d2(w: &[f32], rng: &mut Pcg64) -> Option<usize> {
     const BLOCK: usize = 8192;
-    let nblocks = w.len().div_ceil(BLOCK);
-    let block_sums: Vec<f64> = if nblocks > 4 {
-        let sums: Vec<AtomicU64> = (0..nblocks).map(|_| AtomicU64::new(0)).collect();
-        parallel_ranges(nblocks, 1, |range| {
-            for b in range {
-                let s: f64 = w[b * BLOCK..(b * BLOCK + BLOCK).min(w.len())]
-                    .iter()
-                    .map(|&x| x as f64)
-                    .sum();
-                sums[b].store(s.to_bits(), Ordering::Relaxed);
-            }
-        });
-        sums.into_iter()
-            .map(|a| f64::from_bits(a.load(Ordering::Relaxed)))
-            .collect()
-    } else {
-        (0..nblocks)
-            .map(|b| {
-                w[b * BLOCK..(b * BLOCK + BLOCK).min(w.len())]
-                    .iter()
-                    .map(|&x| x as f64)
-                    .sum()
-            })
-            .collect()
-    };
+    let block_sums = reduce::block_sums(w, BLOCK);
     let total: f64 = block_sums.iter().sum();
     if !(total > 0.0) || !total.is_finite() {
         return None;
@@ -142,7 +98,7 @@ pub fn sample_d2(w: &[f32], rng: &mut Pcg64) -> Option<usize> {
 }
 
 /// Greedy k-means++ (Arthur & Vassilvitskii's practical variant,
-/// analyzed by Bhattacharya et al. — the paper's ref [11]; also
+/// analyzed by Bhattacharya et al. — the paper's ref \[11\]; also
 /// scikit-learn's default): each round draws `trials` candidates from
 /// the `D^2` distribution and opens the one that reduces the total cost
 /// the most. `Θ(ndk·trials)` — slower than plain k-means++, usually a
@@ -171,7 +127,7 @@ pub fn kmeanspp_greedy(ps: &PointSet, k: usize, trials: usize, rng: &mut Pcg64) 
             let Some(cand) = sample_d2(&cur_d2, rng) else { break };
             scratch.copy_from_slice(&cur_d2);
             update_d2_parallel_to(ps, ps.row(cand), &mut scratch);
-            let cost: f64 = scratch.iter().map(|&x| x as f64).sum();
+            let cost = reduce::sum_f32(&scratch);
             if best.as_ref().map_or(true, |(_, bc, _)| cost < *bc) {
                 best = Some((cand, cost, scratch.clone()));
             } else {

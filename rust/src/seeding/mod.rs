@@ -17,9 +17,9 @@ pub mod kmeanspp;
 pub mod rejection;
 pub mod uniform;
 
-use anyhow::{bail, Result};
-
+use crate::bail;
 use crate::data::matrix::PointSet;
+use crate::error::Result;
 use crate::rng::Pcg64;
 
 /// Counters every seeder reports (the rejection-loop statistics back the

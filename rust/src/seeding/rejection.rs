@@ -112,7 +112,9 @@ pub fn rejection_sampling(
     // in a JL projection to O(log n) dims; the projected metric preserves
     // every clustering cost up to a constant, so the O(log k) guarantee
     // survives while the tree distortion drops from O(d^2) to
-    // O(log^2 n).
+    // O(log^2 n). The O(ndt) projection and the O(nd) MAXDIST bound both
+    // run on the parallel kernel engine (`crate::kernels`), so seeding
+    // init scales with FKMPP_THREADS like the exact baselines do.
     let projected = projection_target(cfg, ps.len(), ps.dim()).map(|t| {
         let proj = crate::data::project::JlProjection::new(ps.dim(), t, rng);
         proj.apply_all(ps)

@@ -1,0 +1,127 @@
+//! Property tests for the parallel distance-kernel engine: on random
+//! instances, every kernel must agree with a naive serial reference —
+//! bit-exactly where the arithmetic order is identical, within tree-sum
+//! rounding otherwise — across thread counts (`FKMPP_THREADS` in
+//! {1, 4}).
+//!
+//! The thread-count sweep lives in ONE test function on purpose: the
+//! kernels read `FKMPP_THREADS` per call, so a single test owning the
+//! env var avoids cross-test interleaving ever pinning a surprising
+//! thread count on an assertion that depends on it (no kernel result
+//! may depend on the thread count — that is exactly what this file
+//! checks).
+
+use fastkmeanspp::data::matrix::{d2, PointSet};
+use fastkmeanspp::kernels::{assign, d2 as d2_kernel, reduce};
+use fastkmeanspp::rng::Pcg64;
+
+fn random_points(n: usize, d: usize, rng: &mut Pcg64) -> PointSet {
+    let data: Vec<f32> = (0..n * d)
+        .map(|_| (rng.next_gaussian() * 10.0) as f32)
+        .collect();
+    PointSet::from_flat(n, d, data)
+}
+
+/// Naive references, written with the same scalar `d2` so bit-exact
+/// comparison is legitimate.
+fn naive_update_min(ps: &PointSet, center: &[f32], cur: &mut [f32]) {
+    for i in 0..ps.len() {
+        let dd = d2(ps.row(i), center);
+        if dd < cur[i] {
+            cur[i] = dd;
+        }
+    }
+}
+
+fn naive_assign(ps: &PointSet, centers: &PointSet) -> (Vec<u32>, Vec<f32>) {
+    let mut idx = vec![0u32; ps.len()];
+    let mut mind2 = vec![f32::INFINITY; ps.len()];
+    for i in 0..ps.len() {
+        for j in 0..centers.len() {
+            let dd = d2(ps.row(i), centers.row(j));
+            if dd < mind2[i] {
+                mind2[i] = dd;
+                idx[i] = j as u32;
+            }
+        }
+    }
+    (idx, mind2)
+}
+
+#[test]
+fn kernels_match_serial_reference_across_thread_counts() {
+    for &threads in &[1usize, 4] {
+        std::env::set_var("FKMPP_THREADS", threads.to_string());
+        let mut rng = Pcg64::seed_from(0xBEEF ^ threads as u64);
+        for case in 0..8 {
+            // Random shapes, including degenerate ones (n=1, d=1, k=1)
+            // and shapes straddling the kernels' inline/parallel cutoffs.
+            let n = 1 + rng.index(9_000);
+            let d = 1 + rng.index(40);
+            let k = 1 + rng.index(70).min(n - 1);
+            let ps = random_points(n, d, &mut rng);
+            let centers = ps.gather(&(0..k).map(|_| rng.index(n)).collect::<Vec<_>>());
+            let ctx = format!("threads={threads} case={case} n={n} d={d} k={k}");
+
+            // d2_update_min: seeded with a random prior distance array so
+            // both the "update" and "keep" branches are exercised.
+            let prior: Vec<f32> = (0..n).map(|_| rng.next_f32() * 100.0).collect();
+            let mut got = prior.clone();
+            let mut want = prior.clone();
+            d2_kernel::d2_update_min(&ps, centers.row(0), &mut got);
+            naive_update_min(&ps, centers.row(0), &mut want);
+            assert_eq!(got, want, "d2_update_min {ctx}");
+
+            // assign_argmin (tiled + parallel) vs the naive double loop.
+            let (gi, gd) = assign::assign_argmin(&ps, &centers);
+            let (wi, wd) = naive_assign(&ps, &centers);
+            assert_eq!(gi, wi, "assign idx {ctx}");
+            assert_eq!(gd, wd, "assign d2 {ctx}");
+
+            // cost: parallel tree sum vs serial f64 fold over the naive
+            // assignment (different summation order -> relative epsilon).
+            let want_cost: f64 = wd.iter().map(|&v| v as f64).sum();
+            let got_cost = reduce::cost(&ps, &centers);
+            assert!(
+                (got_cost - want_cost).abs() <= 1e-9 * want_cost.max(1.0),
+                "cost {ctx}: {got_cost} vs {want_cost}"
+            );
+
+            // sum_f32 and block_sums over the distance array.
+            let want_sum: f64 = wd.iter().map(|&v| v as f64).sum();
+            let got_sum = reduce::sum_f32(&wd);
+            assert!(
+                (got_sum - want_sum).abs() <= 1e-9 * want_sum.max(1.0),
+                "sum_f32 {ctx}"
+            );
+            let block = 1 + rng.index(n.max(2));
+            let bs = reduce::block_sums(&wd, block);
+            assert_eq!(bs.len(), n.div_ceil(block), "block count {ctx}");
+            let total: f64 = bs.iter().sum();
+            assert!(
+                (total - want_sum).abs() <= 1e-9 * want_sum.max(1.0),
+                "block_sums total {ctx}"
+            );
+
+            // max_d2_to: exact (same per-element d2, max is order-free).
+            let pivot = ps.row(0).to_vec();
+            let want_max = (0..n).map(|i| d2(ps.row(i), &pivot)).fold(0.0f32, f32::max);
+            assert_eq!(reduce::max_d2_to(&ps, &pivot), want_max, "max_d2 {ctx}");
+        }
+    }
+
+    // End-to-end, same env-var ownership: the same seed must pick the
+    // same centers at 1 and 4 threads — the kernels may not let
+    // parallelism leak into results.
+    use fastkmeanspp::seeding::kmeanspp::kmeanspp;
+    let mut gen = Pcg64::seed_from(77);
+    let ps = random_points(4_000, 12, &mut gen);
+    let mut picked = Vec::new();
+    for &threads in &[1usize, 4] {
+        std::env::set_var("FKMPP_THREADS", threads.to_string());
+        let mut rng = Pcg64::seed_from(123);
+        picked.push(kmeanspp(&ps, 25, &mut rng).indices);
+    }
+    std::env::remove_var("FKMPP_THREADS");
+    assert_eq!(picked[0], picked[1], "seeding must be thread-count invariant");
+}
