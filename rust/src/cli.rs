@@ -2,9 +2,10 @@
 //!
 //! ```text
 //! fkmpp seed      --dataset kdd_sim --algo rejection -k 1000 [--lloyd 10]
-//! fkmpp grid      --datasets kdd_sim,song_sim --ks 100,500 --reps 5
+//! fkmpp grid      --datasets kdd_sim,song_sim --ks 100,500 --reps 5 [--json out.json]
 //! fkmpp table     --which 1..8|all [--profile scaled] [--reps 5]
 //! fkmpp datasets  gen [--profile scaled]
+//! fkmpp serve     --port 8080 [--data-dir data] [--fit-workers 1]
 //! fkmpp info
 //! ```
 
@@ -125,6 +126,7 @@ pub fn run(argv: &[String]) -> Result<String> {
         "grid" => cmd_grid(&args),
         "table" => cmd_table(&args),
         "datasets" => cmd_datasets(&args),
+        "serve" => cmd_serve(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => Ok(USAGE.to_string()),
         other => bail!("unknown command {other:?}\n{USAGE}"),
@@ -138,8 +140,11 @@ USAGE:
                  [--profile paper|scaled|smoke] [--seed N] [--lloyd ITERS]
                  [--c FLOAT] [--no-quantize]
   fkmpp grid     --datasets a,b --algos x,y --ks 100,500 --reps 5
+                 [--json results.json]
   fkmpp table    --which 1|2|...|8|all [--profile scaled] [--reps 5]
   fkmpp datasets gen [--profile scaled] [--data-dir data]
+  fkmpp serve    [--port 8080] [--host 127.0.0.1] [--data-dir data]
+                 [--http-workers 4] [--fit-workers 1] [--no-persist]
   fkmpp info
 
 Algorithms: kmeanspp fastkmeanspp rejection rejection-exact afkmc2 uniform";
@@ -202,6 +207,13 @@ fn cmd_grid(args: &Args) -> Result<String> {
     let cfg = config_from_args(args)?;
     let res = run_grid(&cfg, |line| eprintln!("[grid] {line}"))?;
     let mut out = String::new();
+    // `--json path`: machine-readable artifact alongside the tables (the
+    // BENCH_*.json perf trajectory), via the serving layer's emitter.
+    if let Some(path) = args.get("json") {
+        let doc = tables::grid_json(&res, &cfg);
+        std::fs::write(path, doc.emit()).with_context(|| format!("write {path:?}"))?;
+        out.push_str(&format!("wrote {path}\n"));
+    }
     for &ds in &cfg.datasets {
         out.push_str(&tables::runtime_table(&res, ds, &cfg.ks));
         out.push('\n');
@@ -238,7 +250,10 @@ fn cmd_table(args: &Args) -> Result<String> {
     if args.get("ks").is_none() {
         cfg.ks = k_grid_for(min_n);
         if cfg.ks.is_empty() {
-            cfg.ks = vec![min_n / 20.max(1)];
+            // `(min_n / 20).max(1)`, NOT `min_n / (20.max(1))`: the
+            // former keeps k >= 1 on tiny datasets; the latter (the old
+            // operator-precedence bug) yielded k = 0 for min_n < 20.
+            cfg.ks = vec![(min_n / 20).max(1)];
         }
     }
     let res = run_grid(&cfg, |line| eprintln!("[table] {line}"))?;
@@ -289,6 +304,38 @@ fn cmd_datasets(args: &Args) -> Result<String> {
         ));
     }
     Ok(out)
+}
+
+/// `fkmpp serve`: boot the clustering service ([`crate::server`]) and
+/// block until `POST /shutdown` (or the process is killed).
+fn cmd_serve(args: &Args) -> Result<String> {
+    let defaults = crate::server::ServeConfig::default();
+    let port = args.get_usize("port", defaults.port as usize)?;
+    if port > u16::MAX as usize {
+        bail!("--port {port} out of range (max 65535)");
+    }
+    let scfg = crate::server::ServeConfig {
+        host: args
+            .get("host")
+            .map(str::to_string)
+            .unwrap_or(defaults.host),
+        port: port as u16,
+        data_dir: args
+            .get("data-dir")
+            .map(PathBuf::from)
+            .unwrap_or(defaults.data_dir),
+        artifacts_dir: args
+            .get("artifacts-dir")
+            .map(PathBuf::from)
+            .unwrap_or(defaults.artifacts_dir),
+        http_workers: args.get_usize("http-workers", defaults.http_workers)?,
+        fit_workers: args.get_usize("fit-workers", defaults.fit_workers)?,
+        persist: args.get("no-persist").is_none(),
+    };
+    let server = crate::server::Server::bind(&scfg)?;
+    eprintln!("[serve] listening on http://{}", server.local_addr()?);
+    server.run()?;
+    Ok("server stopped\n".to_string())
 }
 
 fn cmd_info(args: &Args) -> Result<String> {
@@ -349,9 +396,38 @@ mod tests {
     }
 
     #[test]
+    fn serve_rejects_out_of_range_port() {
+        // Fails validation before any socket is bound.
+        assert!(run(&argv("serve --port 99999")).is_err());
+    }
+
+    #[test]
     fn help_prints_usage() {
         let out = run(&argv("help")).unwrap();
         assert!(out.contains("USAGE"));
+    }
+
+    #[test]
+    fn grid_json_artifact() {
+        let path = std::env::temp_dir().join("fkmpp_grid_cli_test.json");
+        let _ = std::fs::remove_file(&path);
+        let out = run(&argv(&format!(
+            "grid --datasets kdd_sim --algos uniform --ks 10 --reps 1 --profile smoke \
+             --data-dir /tmp/fkmpp_cli_test --artifacts-dir /nonexistent --seed 3 \
+             --json {}",
+            path.display()
+        )))
+        .unwrap();
+        assert!(out.contains("wrote"), "{out}");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = crate::server::json::parse(&text).unwrap();
+        assert_eq!(v.get("backend").and_then(|b| b.as_str()), Some("native"));
+        let cells = v.get("cells").and_then(|c| c.as_array()).unwrap();
+        assert_eq!(cells.len(), 1);
+        assert_eq!(
+            cells[0].get("algorithm").and_then(|a| a.as_str()),
+            Some("uniform")
+        );
     }
 
     #[test]

@@ -28,7 +28,11 @@
 //!   executed through PJRT ([`runtime`]);
 //! * dataset generators/registry matching the paper's evaluation scale
 //!   ([`data`]) and the experiment [`coordinator`] that regenerates every
-//!   table of the paper.
+//!   table of the paper;
+//! * a zero-dependency **serving layer** ([`server`], `fkmpp serve`):
+//!   HTTP/1.1 + hand-rolled JSON, an in-memory model registry with disk
+//!   persistence, async fit jobs, and batched assignment routed through
+//!   the kernel engine.
 //!
 //! Python/JAX appears only at build time (`make artifacts`); the request
 //! path is pure rust. The crate has **zero external dependencies**: error
@@ -66,6 +70,7 @@ pub mod rng;
 pub mod runtime;
 pub mod sampletree;
 pub mod seeding;
+pub mod server;
 
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {

@@ -148,6 +148,27 @@ impl Metrics {
         self.timings.lock().unwrap().get(name).cloned()
     }
 
+    /// Snapshot of every counter, name-ordered (the `/metrics` endpoint
+    /// and other machine-readable sinks).
+    pub fn counters_snapshot(&self) -> Vec<(&'static str, u64)> {
+        self.counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(&k, &v)| (k, v))
+            .collect()
+    }
+
+    /// Snapshot of every duration statistic, name-ordered.
+    pub fn timings_snapshot(&self) -> Vec<(&'static str, Stats)> {
+        self.timings
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(&k, s)| (k, s.clone()))
+            .collect()
+    }
+
     /// Render all metrics as aligned text (CLI `--metrics` output).
     pub fn render(&self) -> String {
         let mut out = String::new();
@@ -233,6 +254,19 @@ mod tests {
         assert!(d.as_nanos() > 0 || d.as_nanos() == 0); // no panic path
         let s = m.duration_stats("phase").unwrap();
         assert_eq!(s.count(), 2);
+    }
+
+    #[test]
+    fn snapshots_are_name_ordered() {
+        let m = Metrics::new();
+        m.incr("b", 2);
+        m.incr("a", 1);
+        m.record_duration("t", Duration::from_millis(1));
+        assert_eq!(m.counters_snapshot(), vec![("a", 1), ("b", 2)]);
+        let timings = m.timings_snapshot();
+        assert_eq!(timings.len(), 1);
+        assert_eq!(timings[0].0, "t");
+        assert_eq!(timings[0].1.count(), 1);
     }
 
     #[test]

@@ -1,0 +1,271 @@
+//! Minimal HTTP/1.1 protocol support for the serving layer — request
+//! parsing and response writing over plain `std::io` streams, zero
+//! dependencies.
+//!
+//! Scope is deliberately small: one request per connection
+//! (`Connection: close`), bodies framed by `Content-Length` only (no
+//! chunked transfer), no TLS. That covers `curl`, load-balancer health
+//! checks and the integration harness; anything fancier belongs in a
+//! fronting proxy. Parsing is generic over [`Read`]/[`Write`] so unit
+//! tests drive it with byte slices instead of sockets.
+
+use std::io::{BufRead, BufReader, Read, Write};
+
+use crate::bail;
+use crate::error::{Context, Result};
+
+/// Maximum accepted request body. Inline datasets can be sizeable, but
+/// the JSON layer materializes a parse tree several times the text size,
+/// so the cap stays conservative — ship bigger data via the named
+/// `dataset` fit path (disk-cached `.fbin`) instead of inline points.
+pub const MAX_BODY_BYTES: usize = 64 << 20;
+
+/// Maximum total header bytes before we drop the connection.
+const MAX_HEADER_BYTES: usize = 64 << 10;
+
+/// A parsed HTTP request. Headers other than `Content-Length` are
+/// skipped — the routes are path + body shaped.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    /// Path without the query string (e.g. `/models/m-1/assign`).
+    pub path: String,
+    /// Raw query string (without the `?`), empty if none.
+    pub query: String,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Body as UTF-8 text (JSON bodies).
+    pub fn body_str(&self) -> Result<&str> {
+        std::str::from_utf8(&self.body).context("request body is not UTF-8")
+    }
+}
+
+/// Read one `\n`-terminated line with a hard byte cap, so a client that
+/// streams an endless request/header line is cut off instead of growing
+/// the buffer without bound (`BufRead::read_line` has no such cap).
+fn read_line_capped<R: BufRead>(reader: &mut R, cap: usize) -> Result<String> {
+    let mut buf = Vec::new();
+    let mut byte = [0u8; 1];
+    loop {
+        if reader.read(&mut byte).context("read header byte")? == 0 {
+            break; // EOF
+        }
+        buf.push(byte[0]);
+        if byte[0] == b'\n' {
+            break;
+        }
+        if buf.len() > cap {
+            bail!("header line exceeds {cap} bytes");
+        }
+    }
+    String::from_utf8(buf).context("header is not UTF-8")
+}
+
+/// Read and parse one request from `stream`.
+pub fn read_request<S: Read>(stream: &mut S) -> Result<Request> {
+    let mut reader = BufReader::new(stream);
+    let line = read_line_capped(&mut reader, MAX_HEADER_BYTES).context("read request line")?;
+    if line.trim_end().is_empty() {
+        bail!("empty request");
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts
+        .next()
+        .context("missing method")?
+        .to_ascii_uppercase();
+    let target = parts.next().context("missing request target")?.to_string();
+    let version = parts.next().unwrap_or("HTTP/1.0");
+    if !version.starts_with("HTTP/1.") {
+        bail!("unsupported version {version:?}");
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target, String::new()),
+    };
+    let mut content_length = 0usize;
+    let mut header_bytes = line.len();
+    loop {
+        let budget = MAX_HEADER_BYTES.saturating_sub(header_bytes);
+        let header = read_line_capped(&mut reader, budget).context("read header")?;
+        if header.is_empty() {
+            bail!("connection closed mid-headers");
+        }
+        header_bytes += header.len();
+        if header_bytes > MAX_HEADER_BYTES {
+            bail!("headers exceed {MAX_HEADER_BYTES} bytes");
+        }
+        let header = header.trim_end();
+        if header.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = header.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length = value
+                    .trim()
+                    .parse()
+                    .with_context(|| format!("Content-Length {value:?}"))?;
+            }
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        bail!("body of {content_length} bytes exceeds limit {MAX_BODY_BYTES}");
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).context("read body")?;
+    Ok(Request {
+        method,
+        path,
+        query,
+        body,
+    })
+}
+
+/// An HTTP response about to be written.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    /// A JSON response.
+    pub fn json(status: u16, v: &super::json::Json) -> Response {
+        Response {
+            status,
+            content_type: "application/json",
+            body: v.emit().into_bytes(),
+        }
+    }
+
+    /// A plain-text response.
+    pub fn text(status: u16, body: impl Into<String>) -> Response {
+        Response {
+            status,
+            content_type: "text/plain; charset=utf-8",
+            body: body.into().into_bytes(),
+        }
+    }
+}
+
+/// Reason phrase for the status codes the server emits.
+pub fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write `resp` (status line + minimal headers + body) to `stream`.
+pub fn write_response<S: Write>(stream: &mut S, resp: &Response) -> Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        resp.status,
+        status_reason(resp.status),
+        resp.content_type,
+        resp.body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(&resp.body)?;
+    stream.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::json::Json;
+
+    fn parse_bytes(raw: &str) -> Result<Request> {
+        let mut cursor = raw.as_bytes();
+        read_request(&mut cursor)
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let req = parse_bytes(
+            "POST /fit?x=1 HTTP/1.1\r\nHost: localhost\r\nContent-Length: 11\r\n\r\nhello world",
+        )
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/fit");
+        assert_eq!(req.query, "x=1");
+        assert_eq!(req.body_str().unwrap(), "hello world");
+    }
+
+    #[test]
+    fn parses_get_without_body() {
+        let req = parse_bytes("GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/healthz");
+        assert_eq!(req.query, "");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn content_length_case_insensitive() {
+        let req =
+            parse_bytes("POST /x HTTP/1.1\r\ncontent-length: 3\r\n\r\nabc").unwrap();
+        assert_eq!(req.body, b"abc");
+    }
+
+    #[test]
+    fn rejects_bad_requests() {
+        assert!(parse_bytes("").is_err());
+        assert!(parse_bytes("\r\n").is_err());
+        assert!(parse_bytes("GET\r\n\r\n").is_err(), "missing target");
+        assert!(parse_bytes("GET / SPDY/3\r\n\r\n").is_err(), "bad version");
+        assert!(
+            parse_bytes("POST /x HTTP/1.1\r\nContent-Length: zap\r\n\r\n").is_err(),
+            "unparseable length"
+        );
+        assert!(
+            parse_bytes("POST /x HTTP/1.1\r\nContent-Length: 10\r\n\r\nshort").is_err(),
+            "truncated body"
+        );
+        assert!(
+            parse_bytes(&format!(
+                "POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+                MAX_BODY_BYTES + 1
+            ))
+            .is_err(),
+            "oversized body"
+        );
+        // A request line that never terminates must be cut off at the
+        // cap, not buffered without bound.
+        let endless = "GET /".to_string() + &"a".repeat(80 << 10);
+        assert!(parse_bytes(&endless).is_err(), "unterminated request line");
+    }
+
+    #[test]
+    fn response_wire_format() {
+        let mut out = Vec::new();
+        let resp = Response::json(200, &Json::obj(vec![("ok", Json::Bool(true))]));
+        write_response(&mut out, &resp).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("Content-Type: application/json\r\n"));
+        assert!(text.contains("Content-Length: 11\r\n"));
+        assert!(text.ends_with("\r\n\r\n{\"ok\":true}"));
+    }
+
+    #[test]
+    fn text_response_and_reasons() {
+        let mut out = Vec::new();
+        write_response(&mut out, &Response::text(404, "nope")).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 404 Not Found\r\n"));
+        assert!(text.ends_with("nope"));
+        assert_eq!(status_reason(500), "Internal Server Error");
+        assert_eq!(status_reason(999), "Unknown");
+    }
+}

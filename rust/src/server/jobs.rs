@@ -1,0 +1,431 @@
+//! Async fit jobs: `POST /fit` returns immediately with a job id while a
+//! bounded worker pool runs the seeder (and optional Lloyd refinement)
+//! off-thread.
+//!
+//! The queue is a `Mutex` + `Condvar` pair — the same std-only discipline
+//! as [`crate::parallel`] (which remains the only *data*-parallel thread
+//! spawner; the long-lived workers here are control-plane threads that
+//! delegate all distance work to the kernel engine via the seeders,
+//! [`crate::lloyd`] and [`crate::runtime::Backend`]). Job records are
+//! kept forever — the server is long-lived but jobs are few and small;
+//! eviction can come later if `/fit` traffic ever warrants it.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::bail;
+use crate::data::matrix::PointSet;
+use crate::data::registry::{DatasetId, Profile};
+use crate::error::Result;
+use crate::lloyd::{lloyd, LloydConfig};
+use crate::rng::Pcg64;
+use crate::runtime::Backend;
+use crate::seeding::SeedingAlgorithm;
+use crate::server::registry::{ModelMeta, ModelRegistry};
+
+/// What a fit job trains on.
+#[derive(Clone)]
+pub enum FitSource {
+    /// A registered dataset (materialized through the on-disk cache).
+    Dataset { id: DatasetId, profile: Profile },
+    /// Points shipped inline in the request body (shared, not copied,
+    /// between the request handler and the fit worker).
+    Inline(Arc<PointSet>),
+}
+
+impl FitSource {
+    pub fn describe(&self) -> String {
+        match self {
+            FitSource::Dataset { id, profile } => format!("{}:{}", id.name(), profile.name()),
+            FitSource::Inline(ps) => format!("inline(n={}, d={})", ps.len(), ps.dim()),
+        }
+    }
+}
+
+/// A fit request, fully resolved (parsing/validation happened at the
+/// HTTP layer; workers only execute).
+#[derive(Clone)]
+pub struct FitSpec {
+    pub source: FitSource,
+    pub algorithm: SeedingAlgorithm,
+    pub k: usize,
+    pub seed: u64,
+    /// Lloyd iterations after seeding (0 = seeding only).
+    pub lloyd_iters: usize,
+}
+
+/// Lifecycle of a job.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done { model_id: String },
+    Failed { error: String },
+}
+
+impl JobState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done { .. } => "done",
+            JobState::Failed { .. } => "failed",
+        }
+    }
+}
+
+/// What `GET /jobs/{id}` reports.
+#[derive(Clone, Debug)]
+pub struct JobInfo {
+    pub id: String,
+    pub state: JobState,
+    pub algorithm: SeedingAlgorithm,
+    pub k: usize,
+    pub source: String,
+    /// Total fit wall-clock seconds, once finished.
+    pub secs: Option<f64>,
+}
+
+struct QueueInner {
+    pending: VecDeque<(String, FitSpec)>,
+    jobs: BTreeMap<String, JobInfo>,
+}
+
+/// The job queue: submit from HTTP handlers, drain from fit workers.
+pub struct JobQueue {
+    inner: Mutex<QueueInner>,
+    cond: Condvar,
+    next_id: AtomicU64,
+    shutdown: AtomicBool,
+}
+
+impl Default for JobQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl JobQueue {
+    pub fn new() -> JobQueue {
+        JobQueue {
+            inner: Mutex::new(QueueInner {
+                pending: VecDeque::new(),
+                jobs: BTreeMap::new(),
+            }),
+            cond: Condvar::new(),
+            next_id: AtomicU64::new(1),
+            shutdown: AtomicBool::new(false),
+        }
+    }
+
+    /// Enqueue a job; returns its id immediately.
+    pub fn submit(&self, spec: FitSpec) -> String {
+        let id = format!("job-{}", self.next_id.fetch_add(1, Ordering::Relaxed));
+        let info = JobInfo {
+            id: id.clone(),
+            state: JobState::Queued,
+            algorithm: spec.algorithm,
+            k: spec.k,
+            source: spec.source.describe(),
+            secs: None,
+        };
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner.jobs.insert(id.clone(), info);
+            inner.pending.push_back((id.clone(), spec));
+        }
+        self.cond.notify_one();
+        id
+    }
+
+    pub fn get(&self, id: &str) -> Option<JobInfo> {
+        self.inner.lock().unwrap().jobs.get(id).cloned()
+    }
+
+    /// `(queued, running, done, failed)` counts for `/metrics`.
+    pub fn counts(&self) -> (usize, usize, usize, usize) {
+        let inner = self.inner.lock().unwrap();
+        let mut c = (0, 0, 0, 0);
+        for job in inner.jobs.values() {
+            match job.state {
+                JobState::Queued => c.0 += 1,
+                JobState::Running => c.1 += 1,
+                JobState::Done { .. } => c.2 += 1,
+                JobState::Failed { .. } => c.3 += 1,
+            }
+        }
+        c
+    }
+
+    /// Block until a job is available (marking it running) or shutdown.
+    fn next_job(&self) -> Option<(String, FitSpec)> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if self.shutdown.load(Ordering::SeqCst) {
+                return None;
+            }
+            if let Some(job) = inner.pending.pop_front() {
+                if let Some(info) = inner.jobs.get_mut(&job.0) {
+                    info.state = JobState::Running;
+                }
+                return Some(job);
+            }
+            inner = self.cond.wait(inner).unwrap();
+        }
+    }
+
+    fn finish(&self, job_id: &str, secs: f64, result: Result<String>) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(info) = inner.jobs.get_mut(job_id) {
+            info.secs = Some(secs);
+            info.state = match result {
+                Ok(model_id) => JobState::Done { model_id },
+                Err(e) => JobState::Failed {
+                    error: format!("{e:#}"),
+                },
+            };
+        }
+    }
+
+    /// Stop all workers after their current job (idempotent). Jobs still
+    /// queued are marked `Failed` — they will never run, and a poller
+    /// must see a terminal state rather than `queued` forever.
+    pub fn stop(&self) {
+        // Hold the queue mutex while flagging: a worker is either inside
+        // `next_job`'s flag check (will see `true`) or parked in
+        // `cond.wait` (will be notified) — never between the two, so the
+        // wakeup cannot be lost.
+        let mut inner = self.inner.lock().unwrap();
+        self.shutdown.store(true, Ordering::SeqCst);
+        while let Some((job_id, _)) = inner.pending.pop_front() {
+            if let Some(info) = inner.jobs.get_mut(&job_id) {
+                info.state = JobState::Failed {
+                    error: "server shut down before the job ran".to_string(),
+                };
+            }
+        }
+        drop(inner);
+        self.cond.notify_all();
+    }
+}
+
+/// Spawn the fit worker pool. Workers exit after [`JobQueue::stop`];
+/// join the returned handles to wait for in-flight fits.
+pub fn spawn_workers(
+    queue: &Arc<JobQueue>,
+    registry: &Arc<ModelRegistry>,
+    data_dir: PathBuf,
+    artifacts_dir: PathBuf,
+    workers: usize,
+) -> Vec<JoinHandle<()>> {
+    (0..workers.max(1))
+        .map(|_| {
+            let queue = Arc::clone(queue);
+            let registry = Arc::clone(registry);
+            let data_dir = data_dir.clone();
+            let artifacts_dir = artifacts_dir.clone();
+            std::thread::spawn(move || {
+                while let Some((job_id, spec)) = queue.next_job() {
+                    let t0 = Instant::now();
+                    // A panicking fit must fail the job, not kill the
+                    // worker — with fit_workers=1 a dead worker would
+                    // leave every later job queued forever.
+                    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        run_fit(&spec, &registry, &data_dir, &artifacts_dir)
+                    }))
+                    .unwrap_or_else(|panic| {
+                        let msg = panic
+                            .downcast_ref::<&str>()
+                            .map(|s| s.to_string())
+                            .or_else(|| panic.downcast_ref::<String>().cloned())
+                            .unwrap_or_else(|| "non-string panic payload".to_string());
+                        Err(crate::anyhow!("fit panicked: {msg}"))
+                    });
+                    queue.finish(&job_id, t0.elapsed().as_secs_f64(), result);
+                }
+            })
+        })
+        .collect()
+}
+
+/// Execute one fit: load/borrow the points, seed, optionally refine,
+/// evaluate the cost, and register the resulting model. Returns the new
+/// model id.
+fn run_fit(
+    spec: &FitSpec,
+    registry: &ModelRegistry,
+    data_dir: &Path,
+    artifacts_dir: &Path,
+) -> Result<String> {
+    let points: Arc<PointSet> = match &spec.source {
+        FitSource::Dataset { id, profile } => {
+            Arc::new(id.load_cached(data_dir, *profile, spec.seed)?)
+        }
+        FitSource::Inline(ps) => Arc::clone(ps),
+    };
+    if spec.k == 0 || spec.k > points.len() {
+        bail!("k={} out of range for n={}", spec.k, points.len());
+    }
+    let mut rng = Pcg64::seed_from(spec.seed);
+    let seeding = spec.algorithm.run(&points, spec.k, &mut rng);
+    let backend = Backend::auto(artifacts_dir);
+    let mut centers = points.gather(&seeding.indices);
+    if spec.lloyd_iters > 0 {
+        let refined = lloyd(
+            &points,
+            &centers,
+            &LloydConfig {
+                max_iters: spec.lloyd_iters,
+                tol: 1e-6,
+            },
+            &backend,
+        )?;
+        centers = refined.centers;
+    }
+    let cost = backend.cost(&points, &centers)?;
+    let meta = ModelMeta {
+        id: registry.fresh_id(),
+        algorithm: spec.algorithm.name().to_string(),
+        k: centers.len(),
+        dim: centers.dim(),
+        source: spec.source.describe(),
+        seed: spec.seed,
+        seeding_secs: seeding.stats.init_secs + seeding.stats.select_secs,
+        lloyd_iters: spec.lloyd_iters,
+        cost,
+    };
+    let model = registry.insert(meta, centers)?;
+    Ok(model.meta.id.clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gaussian_mixture, SynthSpec};
+    use std::time::Duration;
+
+    fn inline_spec(n: usize, k: usize) -> FitSpec {
+        let ps = gaussian_mixture(
+            &SynthSpec {
+                n,
+                d: 5,
+                k_true: 4,
+                ..Default::default()
+            },
+            9,
+        );
+        FitSpec {
+            source: FitSource::Inline(Arc::new(ps)),
+            algorithm: SeedingAlgorithm::KMeansPP,
+            k,
+            seed: 3,
+            lloyd_iters: 1,
+        }
+    }
+
+    fn wait_terminal(queue: &JobQueue, id: &str) -> JobInfo {
+        let deadline = Instant::now() + Duration::from_secs(60);
+        loop {
+            let info = queue.get(id).expect("job exists");
+            match info.state {
+                JobState::Done { .. } | JobState::Failed { .. } => return info,
+                _ => {
+                    assert!(Instant::now() < deadline, "job {id} stuck");
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn job_runs_to_done_and_registers_model() {
+        let queue = Arc::new(JobQueue::new());
+        let registry = Arc::new(ModelRegistry::new(None).unwrap());
+        let handles = spawn_workers(
+            &queue,
+            &registry,
+            std::env::temp_dir().join("fkmpp_jobs_test"),
+            PathBuf::from("/nonexistent"),
+            1,
+        );
+        let id = queue.submit(inline_spec(300, 6));
+        assert_eq!(id, "job-1");
+        let info = wait_terminal(&queue, &id);
+        let JobState::Done { model_id } = &info.state else {
+            panic!("expected done, got {:?}", info.state);
+        };
+        assert!(info.secs.unwrap() >= 0.0);
+        let model = registry.get(model_id).expect("model registered");
+        assert_eq!(model.meta.k, 6);
+        assert_eq!(model.meta.dim, 5);
+        assert_eq!(model.meta.algorithm, "kmeanspp");
+        assert!(model.meta.cost.is_finite() && model.meta.cost >= 0.0);
+        queue.stop();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn invalid_k_fails_cleanly() {
+        let queue = Arc::new(JobQueue::new());
+        let registry = Arc::new(ModelRegistry::new(None).unwrap());
+        let handles = spawn_workers(
+            &queue,
+            &registry,
+            std::env::temp_dir().join("fkmpp_jobs_test"),
+            PathBuf::from("/nonexistent"),
+            2,
+        );
+        let id = queue.submit(inline_spec(50, 500));
+        let info = wait_terminal(&queue, &id);
+        let JobState::Failed { error } = &info.state else {
+            panic!("expected failure, got {:?}", info.state);
+        };
+        assert!(error.contains("out of range"), "{error}");
+        assert!(registry.is_empty());
+        queue.stop();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn counts_and_unknown_job() {
+        let queue = JobQueue::new();
+        assert_eq!(queue.counts(), (0, 0, 0, 0));
+        assert!(queue.get("job-404").is_none());
+        // No workers: submitted jobs stay queued.
+        let ps = Arc::new(gaussian_mixture(
+            &SynthSpec {
+                n: 10,
+                d: 2,
+                k_true: 2,
+                ..Default::default()
+            },
+            1,
+        ));
+        queue.submit(FitSpec {
+            source: FitSource::Inline(ps),
+            algorithm: SeedingAlgorithm::Uniform,
+            k: 2,
+            seed: 1,
+            lloyd_iters: 0,
+        });
+        assert_eq!(queue.counts(), (1, 0, 0, 0));
+        assert_eq!(queue.get("job-1").unwrap().state.name(), "queued");
+        // stop() must give still-queued jobs a terminal state, not
+        // abandon them as "queued" forever.
+        queue.stop();
+        assert_eq!(queue.counts(), (0, 0, 0, 1));
+        let info = queue.get("job-1").unwrap();
+        let JobState::Failed { error } = &info.state else {
+            panic!("expected failed, got {:?}", info.state);
+        };
+        assert!(error.contains("shut down"), "{error}");
+    }
+}

@@ -1,0 +1,695 @@
+//! Hand-rolled JSON: parse + emit, zero dependencies (the offline build
+//! has no `serde`).
+//!
+//! This module is the crate's **single serialization point**: every JSON
+//! byte the serving layer reads or writes — request bodies, responses,
+//! persisted model metadata, `fkmpp grid --json` artifacts — goes through
+//! [`parse`] and [`Json::emit`]. Keeping one implementation means escape
+//! handling, number formatting and strictness (reject-on-trailing-garbage)
+//! are tested once and hold everywhere.
+//!
+//! Numbers are `f64`. The emitter uses Rust's shortest round-trip float
+//! formatting, so an `f32` widened to `f64`, emitted, parsed back and
+//! narrowed again is **bit-exact** — the property the serving layer's
+//! assignment-parity test relies on. Non-finite numbers emit as `null`
+//! (JSON has no `Infinity`/`NaN`).
+
+use std::fmt::Write as _;
+
+use crate::bail;
+use crate::data::matrix::PointSet;
+use crate::error::Result;
+use crate::metrics::Stats;
+
+/// Maximum nesting depth [`parse`] accepts (guards the recursive-descent
+/// parser's stack against adversarial request bodies).
+const MAX_DEPTH: usize = 128;
+
+/// A JSON value. Object fields keep insertion order (no map type needed;
+/// lookups are linear, and serving-layer objects are small).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Build an object from `(key, value)` pairs.
+    pub fn obj(fields: Vec<(&str, Json)>) -> Json {
+        Json::Obj(
+            fields
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), v))
+                .collect(),
+        )
+    }
+
+    /// Build a string value.
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    /// Build a number value.
+    pub fn num(x: f64) -> Json {
+        Json::Num(x)
+    }
+
+    /// Object field lookup (`None` on non-objects and missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// Non-negative integer view (rejects fractions and anything past
+    /// 2^53, where `f64` stops being exact).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 && *x <= 9_007_199_254_740_992.0 => {
+                Some(*x as u64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_u64().map(|v| v as usize)
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, Json::Null)
+    }
+
+    /// Compact serialization (no whitespace).
+    pub fn emit(&self) -> String {
+        let mut out = String::new();
+        self.emit_into(&mut out);
+        out
+    }
+
+    fn emit_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(true) => out.push_str("true"),
+            Json::Bool(false) => out.push_str("false"),
+            Json::Num(x) => {
+                if x.is_finite() {
+                    // `{}` on f64 is the shortest string that parses back
+                    // to the same bits (and never exponent notation).
+                    let _ = write!(out, "{x}");
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => emit_string(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.emit_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    emit_string(k, out);
+                    out.push(':');
+                    v.emit_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn emit_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            '\u{08}' => out.push_str("\\b"),
+            '\u{0C}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Parse a complete JSON document. Strict: exactly one value, and any
+/// non-whitespace after it is an error (reject-on-trailing-garbage).
+pub fn parse(src: &str) -> Result<Json> {
+    let mut p = Parser {
+        src,
+        bytes: src.as_bytes(),
+        pos: 0,
+        depth: 0,
+    };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        bail!("trailing garbage at byte {}", p.pos);
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    src: &'a str,
+    bytes: &'a [u8],
+    pos: usize,
+    depth: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while let Some(&b) = self.bytes.get(self.pos) {
+            if b == b' ' || b == b'\t' || b == b'\n' || b == b'\r' {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, want: u8) -> Result<()> {
+        if self.peek() == Some(want) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            bail!("expected {:?} at byte {}", want as char, self.pos)
+        }
+    }
+
+    fn literal(&mut self, lit: &str, value: Json) -> Result<Json> {
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(value)
+        } else {
+            bail!("invalid literal at byte {}", self.pos)
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            bail!("JSON nested deeper than {MAX_DEPTH}");
+        }
+        let v = match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => self.string().map(Json::Str),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(b'-') | Some(b'0'..=b'9') => self.number(),
+            Some(c) => bail!("unexpected {:?} at byte {}", c as char, self.pos),
+            None => bail!("unexpected end of input"),
+        };
+        self.depth -= 1;
+        v
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let val = self.value()?;
+            fields.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                _ => bail!("expected ',' or '}}' at byte {}", self.pos),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => bail!("expected ',' or ']' at byte {}", self.pos),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            // Plain run: stop only at ASCII bytes ('"', '\', controls), so
+            // the slice below always lands on char boundaries.
+            let start = self.pos;
+            while let Some(b) = self.peek() {
+                if b == b'"' || b == b'\\' || b < 0x20 {
+                    break;
+                }
+                self.pos += 1;
+            }
+            out.push_str(&self.src[start..self.pos]);
+            match self.peek() {
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    let esc = match self.peek() {
+                        Some(b) => b,
+                        None => bail!("unterminated escape"),
+                    };
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{08}'),
+                        b'f' => out.push('\u{0C}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            let cp = self.unicode_escape()?;
+                            out.push(cp);
+                        }
+                        other => bail!(
+                            "invalid escape \\{} at byte {}",
+                            other as char,
+                            self.pos
+                        ),
+                    }
+                }
+                Some(_) => bail!("raw control character in string at byte {}", self.pos),
+                None => bail!("unterminated string"),
+            }
+        }
+    }
+
+    /// The 4 hex digits after `\u`, combining surrogate pairs.
+    fn unicode_escape(&mut self) -> Result<char> {
+        let hi = self.hex4()?;
+        let cp = if (0xD800..0xDC00).contains(&hi) {
+            if self.peek() != Some(b'\\') {
+                bail!("high surrogate not followed by \\u escape");
+            }
+            self.pos += 1;
+            self.expect(b'u')?;
+            let lo = self.hex4()?;
+            if !(0xDC00..0xE000).contains(&lo) {
+                bail!("invalid low surrogate {lo:#06x}");
+            }
+            0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+        } else if (0xDC00..0xE000).contains(&hi) {
+            bail!("unpaired low surrogate {hi:#06x}");
+        } else {
+            hi
+        };
+        match char::from_u32(cp) {
+            Some(c) => Ok(c),
+            None => bail!("invalid code point {cp:#x}"),
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        let end = self.pos + 4;
+        let Some(digits) = self.bytes.get(self.pos..end) else {
+            bail!("truncated \\u escape");
+        };
+        if !digits.iter().all(|b| b.is_ascii_hexdigit()) {
+            bail!("bad \\u escape at byte {}", self.pos);
+        }
+        let s = std::str::from_utf8(digits).expect("hex digits are ASCII");
+        self.pos = end;
+        Ok(u32::from_str_radix(s, 16).expect("validated hex"))
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        match self.peek() {
+            Some(b'0') => self.pos += 1,
+            Some(b'1'..=b'9') => {
+                while matches!(self.peek(), Some(b'0'..=b'9')) {
+                    self.pos += 1;
+                }
+            }
+            _ => bail!("invalid number at byte {start}"),
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            if !matches!(self.peek(), Some(b'0'..=b'9')) {
+                bail!("invalid number at byte {start}");
+            }
+            while matches!(self.peek(), Some(b'0'..=b'9')) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            if !matches!(self.peek(), Some(b'0'..=b'9')) {
+                bail!("invalid number at byte {start}");
+            }
+            while matches!(self.peek(), Some(b'0'..=b'9')) {
+                self.pos += 1;
+            }
+        }
+        // The scanned span is all ASCII, so the slice is char-safe.
+        let text = &self.src[start..self.pos];
+        match text.parse::<f64>() {
+            Ok(x) => Ok(Json::Num(x)),
+            Err(_) => bail!("unparseable number {text:?}"),
+        }
+    }
+}
+
+/// `PointSet` → JSON array of rows. `f32 → f64` widening is exact, and
+/// the shortest round-trip emitter means coordinates survive an HTTP
+/// round trip bit-exactly.
+pub fn points_to_json(ps: &PointSet) -> Json {
+    Json::Arr(
+        (0..ps.len())
+            .map(|i| Json::Arr(ps.row(i).iter().map(|&x| Json::Num(x as f64)).collect()))
+            .collect(),
+    )
+}
+
+/// JSON array of equal-length numeric rows → `PointSet`. Rejects ragged,
+/// empty and non-finite input (a serving layer must not let `Infinity`
+/// smuggle itself into the kernels).
+pub fn points_from_json(v: &Json) -> Result<PointSet> {
+    let rows = match v {
+        Json::Arr(rows) if !rows.is_empty() => rows,
+        _ => bail!("\"points\" must be a non-empty array of rows"),
+    };
+    let mut out: Vec<Vec<f32>> = Vec::with_capacity(rows.len());
+    for (i, row) in rows.iter().enumerate() {
+        let vals = match row {
+            Json::Arr(vals) => vals,
+            _ => bail!("points[{i}] is not an array"),
+        };
+        if vals.is_empty() {
+            bail!("points[{i}] is empty");
+        }
+        let mut r = Vec::with_capacity(vals.len());
+        for (j, val) in vals.iter().enumerate() {
+            let x = match val.as_f64() {
+                Some(x) if x.is_finite() => x,
+                _ => bail!("points[{i}][{j}] is not a finite number"),
+            };
+            r.push(x as f32);
+        }
+        if let Some(first) = out.first() {
+            if r.len() != first.len() {
+                bail!(
+                    "ragged points: row {i} has {} cols, expected {}",
+                    r.len(),
+                    first.len()
+                );
+            }
+        }
+        out.push(r);
+    }
+    Ok(PointSet::from_rows(&out))
+}
+
+/// [`Stats`] → JSON (`null` when empty — min/max would be infinities).
+/// Shared by `GET /metrics` and the `fkmpp grid --json` artifact.
+pub fn stats_json(s: &Stats) -> Json {
+    if s.count() == 0 {
+        return Json::Null;
+    }
+    Json::obj(vec![
+        ("count", Json::num(s.count() as f64)),
+        ("mean", Json::num(s.mean())),
+        ("min", Json::num(s.min())),
+        ("max", Json::num(s.max())),
+        ("stddev", Json::num(s.stddev())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(v: &Json) {
+        let text = v.emit();
+        let back = parse(&text).unwrap_or_else(|e| panic!("reparse {text:?}: {e:#}"));
+        assert_eq!(&back, v, "round trip of {text:?}");
+    }
+
+    #[test]
+    fn scalars_roundtrip() {
+        for v in [
+            Json::Null,
+            Json::Bool(true),
+            Json::Bool(false),
+            Json::Num(0.0),
+            Json::Num(-1.5),
+            Json::Num(1e-9),
+            Json::Num(-2.5e17),
+            Json::Num(9_007_199_254_740_992.0),
+            Json::Str(String::new()),
+            Json::str("plain"),
+        ] {
+            roundtrip(&v);
+        }
+    }
+
+    #[test]
+    fn escapes_roundtrip() {
+        for s in [
+            "quote \" backslash \\ slash /",
+            "newline\ntab\tcr\rbackspace\u{08}formfeed\u{0C}",
+            "control \u{01}\u{1f} chars",
+            "unicode: héllo wörld — ∑ 🦀",
+        ] {
+            roundtrip(&Json::str(s));
+        }
+    }
+
+    #[test]
+    fn unicode_escapes_parse() {
+        assert_eq!(parse(r#""\u0041""#).unwrap(), Json::str("A"));
+        assert_eq!(parse(r#""\u00e9""#).unwrap(), Json::str("é"));
+        // Surrogate pair: U+1F600.
+        assert_eq!(parse(r#""\ud83d\ude00""#).unwrap(), Json::str("😀"));
+        assert!(parse(r#""\ud83d""#).is_err(), "unpaired high surrogate");
+        assert!(parse(r#""\ude00""#).is_err(), "unpaired low surrogate");
+        assert!(parse(r#""\uZZZZ""#).is_err());
+    }
+
+    #[test]
+    fn nested_structures_roundtrip() {
+        let v = Json::obj(vec![
+            ("a", Json::Arr(vec![Json::Num(1.0), Json::Null, Json::Bool(false)])),
+            (
+                "nested",
+                Json::obj(vec![
+                    ("empty_obj", Json::Obj(vec![])),
+                    ("empty_arr", Json::Arr(vec![])),
+                    ("deep", Json::Arr(vec![Json::Arr(vec![Json::Arr(vec![Json::num(3.0)])])])),
+                ]),
+            ),
+            ("key with \"quotes\"", Json::str("v")),
+        ]);
+        roundtrip(&v);
+    }
+
+    #[test]
+    fn number_grammar() {
+        assert_eq!(parse("0").unwrap(), Json::Num(0.0));
+        assert_eq!(parse("-0.5e+2").unwrap(), Json::Num(-50.0));
+        assert_eq!(parse("1E3").unwrap(), Json::Num(1000.0));
+        assert_eq!(parse("1e-9").unwrap(), Json::Num(1e-9));
+        assert!(parse(".5").is_err());
+        assert!(parse("1.").is_err());
+        assert!(parse("1e").is_err());
+        assert!(parse("+1").is_err());
+        assert!(parse("--1").is_err());
+        assert!(parse("NaN").is_err());
+        assert!(parse("Infinity").is_err());
+    }
+
+    #[test]
+    fn property_style_float_roundtrip() {
+        // Pseudo-random f32s (including awkward ones) must survive
+        // f32 → f64 → text → f64 → f32 bit-exactly.
+        let mut rng = crate::rng::Pcg64::seed_from(0xD1CE);
+        for i in 0..500 {
+            let x = if i % 7 == 0 {
+                (rng.next_f64() * 1e-9) as f32
+            } else {
+                ((rng.next_f64() - 0.5) * 1e6) as f32
+            };
+            let text = Json::Num(x as f64).emit();
+            let back = parse(&text).unwrap().as_f64().unwrap() as f32;
+            assert_eq!(x.to_bits(), back.to_bits(), "value {x} via {text:?}");
+        }
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        assert!(parse("{} {}").is_err());
+        assert!(parse("1 2").is_err());
+        assert!(parse("[1,2] x").is_err());
+        assert!(parse("null,").is_err());
+        // ... but trailing whitespace is fine.
+        assert!(parse(" [1, 2]\n\t ").is_ok());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        for bad in [
+            "", "{", "[", "\"", "{\"a\"}", "{\"a\":}", "{a:1}", "[1,]", "{\"a\":1,}",
+            "tru", "nul", "\"\\x\"", "\"raw \u{01} control\"", "[1 2]",
+        ] {
+            assert!(parse(bad).is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn depth_limit_enforced() {
+        let deep = "[".repeat(200) + &"]".repeat(200);
+        assert!(parse(&deep).is_err());
+        let ok = "[".repeat(100) + &"]".repeat(100);
+        assert!(parse(&ok).is_ok());
+    }
+
+    #[test]
+    fn integer_views() {
+        assert_eq!(parse("42").unwrap().as_usize(), Some(42));
+        assert_eq!(parse("42.5").unwrap().as_usize(), None);
+        assert_eq!(parse("-1").unwrap().as_u64(), None);
+        assert_eq!(parse("1e300").unwrap().as_u64(), None);
+    }
+
+    #[test]
+    fn get_and_views() {
+        let v = parse(r#"{"a": 1, "b": "x", "c": [true], "d": null}"#).unwrap();
+        assert_eq!(v.get("a").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(v.get("b").and_then(Json::as_str), Some("x"));
+        assert_eq!(v.get("c").and_then(Json::as_array).map(<[Json]>::len), Some(1));
+        assert!(v.get("d").map(Json::is_null).unwrap_or(false));
+        assert!(v.get("missing").is_none());
+        assert_eq!(v.get("c").unwrap().get("a"), None, "get on non-object");
+    }
+
+    #[test]
+    fn non_finite_emits_null() {
+        assert_eq!(Json::Num(f64::NAN).emit(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).emit(), "null");
+    }
+
+    #[test]
+    fn points_roundtrip_and_validation() {
+        let ps = PointSet::from_rows(&[
+            vec![1.0f32, -2.5, 1e-9],
+            vec![0.1, 0.2, 0.3],
+            vec![f32::MIN_POSITIVE, f32::MAX, -0.0],
+        ]);
+        let back = points_from_json(&points_to_json(&ps)).unwrap();
+        assert_eq!(ps, back);
+
+        assert!(points_from_json(&parse("[]").unwrap()).is_err());
+        assert!(points_from_json(&parse("[[1,2],[3]]").unwrap()).is_err());
+        assert!(points_from_json(&parse("[[1,\"x\"]]").unwrap()).is_err());
+        assert!(points_from_json(&parse("[[]]").unwrap()).is_err());
+        assert!(points_from_json(&parse("3").unwrap()).is_err());
+        assert!(points_from_json(&parse("[[1e999]]").unwrap()).is_err(), "inf rejected");
+    }
+
+    #[test]
+    fn stats_json_shape() {
+        let mut s = Stats::new();
+        assert!(stats_json(&s).is_null());
+        s.push(1.0);
+        s.push(3.0);
+        let v = stats_json(&s);
+        assert_eq!(v.get("count").and_then(Json::as_usize), Some(2));
+        assert_eq!(v.get("mean").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(v.get("min").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(v.get("max").and_then(Json::as_f64), Some(3.0));
+    }
+}

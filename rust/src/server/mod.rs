@@ -1,0 +1,636 @@
+//! Clustering-as-a-service: the `fkmpp serve` subsystem — a
+//! zero-dependency HTTP/1.1 server exposing the paper's seeders as an
+//! online service with a model registry, async fit jobs and batched
+//! assignment.
+//!
+//! ## Routes
+//!
+//! | Route | What it does |
+//! |---|---|
+//! | `POST /fit` | enqueue a fit (inline `points` or a named `dataset`); returns a job id immediately |
+//! | `GET /jobs/{id}` | job status; `model_id` once done |
+//! | `GET /models` | list fitted models (metadata) |
+//! | `GET /models/{id}` | one model, centers included |
+//! | `POST /models/{id}/assign` | batched nearest-center assignment for `points` |
+//! | `GET /healthz` | liveness + model/job counts |
+//! | `GET /metrics` | request counters, latency stats, job/model gauges |
+//! | `POST /shutdown` | graceful stop (drains fit workers) |
+//!
+//! ## Contracts
+//!
+//! * The server owns **no distance loops**: assignment goes through
+//!   [`crate::kernels::assign::assign_argmin`] (via [`registry::assign`])
+//!   and fits through the seeders/[`crate::lloyd`], same as the CLI.
+//! * [`json`] is the crate's **single serialization point** — every JSON
+//!   byte in or out passes through it.
+//! * State across requests lives in [`registry::ModelRegistry`]
+//!   (persisted under `{data_dir}/models/`) and [`jobs::JobQueue`].
+//!
+//! Threading mirrors [`crate::parallel`]'s bounded-pool discipline: a
+//! fixed set of HTTP workers drains an accept queue, and a fixed set of
+//! fit workers drains the job queue, so a burst of requests degrades to
+//! back-pressure instead of unbounded spawns.
+
+pub mod http;
+pub mod jobs;
+pub mod json;
+pub mod registry;
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::data::registry::{DatasetId, Profile};
+use crate::error::{Context, Result};
+use crate::metrics::Metrics;
+use crate::seeding::SeedingAlgorithm;
+use self::http::{Request, Response};
+use self::jobs::{FitSource, FitSpec, JobInfo, JobQueue, JobState};
+use self::json::Json;
+use self::registry::ModelRegistry;
+
+/// Serving configuration (`fkmpp serve` flags land here).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub host: String,
+    /// TCP port; 0 picks an ephemeral port (tests).
+    pub port: u16,
+    /// Dataset cache + model persistence root.
+    pub data_dir: PathBuf,
+    /// AOT artifacts directory (PJRT backend probe; falls back to native).
+    pub artifacts_dir: PathBuf,
+    /// HTTP worker threads (connection handling).
+    pub http_workers: usize,
+    /// Concurrent fit jobs.
+    pub fit_workers: usize,
+    /// Persist fitted models under `{data_dir}/models/`, reload on boot.
+    pub persist: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            host: "127.0.0.1".to_string(),
+            port: 8080,
+            data_dir: PathBuf::from("data"),
+            artifacts_dir: PathBuf::from("artifacts"),
+            http_workers: 4,
+            fit_workers: 1,
+            persist: true,
+        }
+    }
+}
+
+/// Shared state every request handler sees.
+pub struct ServerCtx {
+    pub registry: Arc<ModelRegistry>,
+    pub jobs: Arc<JobQueue>,
+    pub metrics: Metrics,
+    started: Instant,
+    shutdown: AtomicBool,
+}
+
+impl ServerCtx {
+    fn new(registry: Arc<ModelRegistry>, jobs: Arc<JobQueue>) -> ServerCtx {
+        ServerCtx {
+            registry,
+            jobs,
+            metrics: Metrics::new(),
+            started: Instant::now(),
+            shutdown: AtomicBool::new(false),
+        }
+    }
+}
+
+/// A bound (but not yet running) server.
+pub struct Server {
+    listener: TcpListener,
+    ctx: Arc<ServerCtx>,
+    cfg: ServeConfig,
+}
+
+impl Server {
+    /// Bind the listener and build the shared state (reloading persisted
+    /// models). The server does not accept connections until [`run`].
+    ///
+    /// [`run`]: Server::run
+    pub fn bind(cfg: &ServeConfig) -> Result<Server> {
+        let listener = TcpListener::bind((cfg.host.as_str(), cfg.port))
+            .with_context(|| format!("bind {}:{}", cfg.host, cfg.port))?;
+        let registry = Arc::new(ModelRegistry::new(if cfg.persist {
+            Some(cfg.data_dir.clone())
+        } else {
+            None
+        })?);
+        let jobs = Arc::new(JobQueue::new());
+        Ok(Server {
+            listener,
+            ctx: Arc::new(ServerCtx::new(registry, jobs)),
+            cfg: cfg.clone(),
+        })
+    }
+
+    /// The bound address (useful with `port: 0`).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Accept and serve until `POST /shutdown`. Blocks the calling
+    /// thread; drains both worker pools before returning.
+    pub fn run(&self) -> Result<()> {
+        let addr = self.local_addr()?;
+        let fit_handles = jobs::spawn_workers(
+            &self.ctx.jobs,
+            &self.ctx.registry,
+            self.cfg.data_dir.clone(),
+            self.cfg.artifacts_dir.clone(),
+            self.cfg.fit_workers,
+        );
+        // Bounded HTTP pool: accept here, hand streams to workers over a
+        // channel (the Mutex<Receiver> is the queue — the lock is only
+        // held while blocked on recv, not while handling).
+        let (conn_tx, conn_rx) = mpsc::channel::<TcpStream>();
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let mut http_handles = Vec::new();
+        for _ in 0..self.cfg.http_workers.max(1) {
+            let conn_rx = Arc::clone(&conn_rx);
+            let ctx = Arc::clone(&self.ctx);
+            http_handles.push(std::thread::spawn(move || loop {
+                let stream = match conn_rx.lock().unwrap().recv() {
+                    Ok(s) => s,
+                    Err(_) => break, // sender dropped: shutting down
+                };
+                handle_connection(stream, &ctx, addr);
+            }));
+        }
+        for conn in self.listener.incoming() {
+            if self.ctx.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            match conn {
+                Ok(stream) => {
+                    let _ = conn_tx.send(stream);
+                }
+                Err(e) => eprintln!("[serve] accept error: {e}"),
+            }
+        }
+        drop(conn_tx);
+        for h in http_handles {
+            let _ = h.join();
+        }
+        self.ctx.jobs.stop();
+        for h in fit_handles {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+}
+
+/// One connection = one request/response (Connection: close).
+///
+/// Timeouts are per-`read`/`write` syscall (the strongest guarantee
+/// `std::net` offers without a poll loop); a deliberately byte-trickling
+/// client can still hold a worker, which is an accepted limitation of
+/// this std-only layer — front with a real proxy for hostile networks.
+fn handle_connection(mut stream: TcpStream, ctx: &ServerCtx, addr: SocketAddr) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
+    let t0 = Instant::now();
+    // Count every accepted connection — including unparseable ones — so
+    // `http.errors <= http.requests` always holds in `/metrics`.
+    ctx.metrics.incr("http.requests", 1);
+    let resp = match http::read_request(&mut stream) {
+        Ok(req) => route(&req, ctx),
+        Err(e) => Response::json(400, &error_json(&format!("{e:#}"))),
+    };
+    if resp.status >= 400 {
+        ctx.metrics.incr("http.errors", 1);
+    }
+    let _ = http::write_response(&mut stream, &resp);
+    ctx.metrics.record_duration("http.latency_secs", t0.elapsed());
+    // The shutdown route sets the flag (single source of truth); nudge
+    // the blocking accept loop so it observes it. Target loopback — the
+    // listener may be bound to a wildcard address connect() can't reach
+    // on every platform.
+    if ctx.shutdown.load(Ordering::SeqCst) {
+        let mut nudge = addr;
+        if nudge.ip().is_unspecified() {
+            nudge.set_ip(match nudge.ip() {
+                std::net::IpAddr::V4(_) => std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST),
+                std::net::IpAddr::V6(_) => std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST),
+            });
+        }
+        let _ = TcpStream::connect(nudge);
+    }
+}
+
+fn error_json(msg: &str) -> Json {
+    Json::obj(vec![("error", Json::str(msg))])
+}
+
+/// Handler outcome: a response, or `(status, message)` for the error path.
+type RouteResult = std::result::Result<Response, (u16, String)>;
+
+/// Map a crate error onto a client error.
+fn bad(e: crate::error::Error) -> (u16, String) {
+    (400, format!("{e:#}"))
+}
+
+/// Dispatch a parsed request to its handler.
+fn route(req: &Request, ctx: &ServerCtx) -> Response {
+    let segments: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
+    let result: RouteResult = match (req.method.as_str(), segments.as_slice()) {
+        ("GET", ["healthz"]) => Ok(handle_healthz(ctx)),
+        ("GET", ["metrics"]) => Ok(handle_metrics(ctx)),
+        ("POST", ["fit"]) => handle_fit(req, ctx),
+        ("GET", ["jobs", id]) => handle_job(id, ctx),
+        ("GET", ["models"]) => Ok(handle_models(ctx)),
+        ("GET", ["models", id]) => handle_model(id, ctx),
+        ("POST", ["models", id, "assign"]) => handle_assign(id, req, ctx),
+        ("POST", ["shutdown"]) => Ok(handle_shutdown(ctx)),
+        // Wrong method on a known path reads better as 405 than 404.
+        (_, ["healthz" | "metrics" | "models" | "fit" | "shutdown", ..]) | (_, ["jobs", ..]) => {
+            Err((405, format!("method {} not allowed on {}", req.method, req.path)))
+        }
+        _ => Err((404, format!("no route for {} {}", req.method, req.path))),
+    };
+    match result {
+        Ok(resp) => resp,
+        Err((status, msg)) => Response::json(status, &error_json(&msg)),
+    }
+}
+
+/// `POST /shutdown`: flag the server to stop. The flag is set here — in
+/// the same route arm that produces the 200 — so response and action can
+/// never disagree about what counts as the shutdown path.
+fn handle_shutdown(ctx: &ServerCtx) -> Response {
+    ctx.shutdown.store(true, Ordering::SeqCst);
+    Response::json(
+        200,
+        &Json::obj(vec![("status", Json::str("shutting down"))]),
+    )
+}
+
+fn handle_healthz(ctx: &ServerCtx) -> Response {
+    let (queued, running, _, _) = ctx.jobs.counts();
+    Response::json(
+        200,
+        &Json::obj(vec![
+            ("status", Json::str("ok")),
+            ("uptime_secs", Json::num(ctx.started.elapsed().as_secs_f64())),
+            ("models", Json::num(ctx.registry.len() as f64)),
+            ("jobs_pending", Json::num((queued + running) as f64)),
+        ]),
+    )
+}
+
+fn handle_metrics(ctx: &ServerCtx) -> Response {
+    let (queued, running, done, failed) = ctx.jobs.counts();
+    let counters = Json::Obj(
+        ctx.metrics
+            .counters_snapshot()
+            .into_iter()
+            .map(|(name, v)| (name.to_string(), Json::num(v as f64)))
+            .collect(),
+    );
+    let timings = Json::Obj(
+        ctx.metrics
+            .timings_snapshot()
+            .into_iter()
+            .map(|(name, stats)| (name.to_string(), json::stats_json(&stats)))
+            .collect(),
+    );
+    Response::json(
+        200,
+        &Json::obj(vec![
+            ("uptime_secs", Json::num(ctx.started.elapsed().as_secs_f64())),
+            ("models", Json::num(ctx.registry.len() as f64)),
+            (
+                "jobs",
+                Json::obj(vec![
+                    ("queued", Json::num(queued as f64)),
+                    ("running", Json::num(running as f64)),
+                    ("done", Json::num(done as f64)),
+                    ("failed", Json::num(failed as f64)),
+                ]),
+            ),
+            ("counters", counters),
+            ("timings", timings),
+        ]),
+    )
+}
+
+/// `POST /fit` body:
+/// `{"points": [[..],..] | "dataset": "kdd_sim", "profile": "smoke",
+///   "algo": "rejection", "k": 10, "seed": 42, "lloyd": 0}`.
+fn handle_fit(req: &Request, ctx: &ServerCtx) -> RouteResult {
+    let body = req.body_str().map_err(bad)?;
+    let v = json::parse(body).map_err(bad)?;
+    let algo_name = v
+        .get("algo")
+        .or_else(|| v.get("algorithm"))
+        .and_then(Json::as_str)
+        .unwrap_or("rejection");
+    let algorithm = SeedingAlgorithm::parse(algo_name).map_err(bad)?;
+    let k = match v.get("k").and_then(Json::as_usize) {
+        Some(k) if k > 0 => k,
+        _ => return Err((400, "missing or invalid \"k\"".to_string())),
+    };
+    let seed = v.get("seed").and_then(Json::as_u64).unwrap_or(42);
+    let lloyd_iters = v.get("lloyd").and_then(Json::as_usize).unwrap_or(0);
+    let source = if let Some(pts) = v.get("points") {
+        FitSource::Inline(Arc::new(json::points_from_json(pts).map_err(bad)?))
+    } else if let Some(name) = v.get("dataset").and_then(Json::as_str) {
+        let id = DatasetId::parse(name).map_err(bad)?;
+        let profile = match v.get("profile").and_then(Json::as_str) {
+            Some(p) => Profile::parse(p).map_err(bad)?,
+            None => Profile::Smoke,
+        };
+        FitSource::Dataset { id, profile }
+    } else {
+        return Err((400, "body needs either \"points\" or \"dataset\"".to_string()));
+    };
+    ctx.metrics.incr("fit.submitted", 1);
+    let job_id = ctx.jobs.submit(FitSpec {
+        source,
+        algorithm,
+        k,
+        seed,
+        lloyd_iters,
+    });
+    Ok(Response::json(
+        202,
+        &Json::obj(vec![
+            ("job_id", Json::str(job_id.clone())),
+            ("status_url", Json::str(format!("/jobs/{job_id}"))),
+        ]),
+    ))
+}
+
+fn job_json(info: &JobInfo) -> Json {
+    let mut fields = vec![
+        ("id", Json::str(info.id.clone())),
+        ("state", Json::str(info.state.name())),
+        ("algorithm", Json::str(info.algorithm.name())),
+        ("k", Json::num(info.k as f64)),
+        ("source", Json::str(info.source.clone())),
+    ];
+    if let Some(secs) = info.secs {
+        fields.push(("secs", Json::num(secs)));
+    }
+    match &info.state {
+        JobState::Done { model_id } => {
+            fields.push(("model_id", Json::str(model_id.clone())));
+            fields.push(("model_url", Json::str(format!("/models/{model_id}"))));
+        }
+        JobState::Failed { error } => fields.push(("error", Json::str(error.clone()))),
+        _ => {}
+    }
+    Json::obj(fields)
+}
+
+fn handle_job(id: &str, ctx: &ServerCtx) -> RouteResult {
+    let info = ctx
+        .jobs
+        .get(id)
+        .ok_or_else(|| (404, format!("unknown job {id:?}")))?;
+    Ok(Response::json(200, &job_json(&info)))
+}
+
+fn handle_models(ctx: &ServerCtx) -> Response {
+    let models = ctx.registry.list();
+    Response::json(
+        200,
+        &Json::obj(vec![
+            ("count", Json::num(models.len() as f64)),
+            (
+                "models",
+                Json::Arr(models.iter().map(|m| m.meta.to_json()).collect()),
+            ),
+        ]),
+    )
+}
+
+fn handle_model(id: &str, ctx: &ServerCtx) -> RouteResult {
+    let model = ctx
+        .registry
+        .get(id)
+        .ok_or_else(|| (404, format!("unknown model {id:?}")))?;
+    Ok(Response::json(200, &model.full_json()))
+}
+
+/// `POST /models/{id}/assign` body: `{"points": [[..], ..]}`. Labels and
+/// squared distances come straight from the kernel engine.
+fn handle_assign(id: &str, req: &Request, ctx: &ServerCtx) -> RouteResult {
+    let model = ctx
+        .registry
+        .get(id)
+        .ok_or_else(|| (404, format!("unknown model {id:?}")))?;
+    let body = req.body_str().map_err(bad)?;
+    let v = json::parse(body).map_err(bad)?;
+    let pts = v
+        .get("points")
+        .ok_or_else(|| (400, "missing \"points\"".to_string()))?;
+    let points = json::points_from_json(pts).map_err(bad)?;
+    let timer = ctx.metrics.timer("assign.latency_secs");
+    let (labels, d2s) = registry::assign(&model, &points).map_err(bad)?;
+    timer.stop();
+    ctx.metrics.incr("assign.requests", 1);
+    ctx.metrics.incr("assign.points", points.len() as u64);
+    Ok(Response::json(
+        200,
+        &Json::obj(vec![
+            ("model_id", Json::str(model.meta.id.clone())),
+            ("n", Json::num(points.len() as f64)),
+            (
+                "labels",
+                Json::Arr(labels.iter().map(|&j| Json::num(j as f64)).collect()),
+            ),
+            (
+                "d2",
+                Json::Arr(d2s.iter().map(|&d| Json::num(d as f64)).collect()),
+            ),
+        ]),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gaussian_mixture, SynthSpec};
+
+    fn test_ctx() -> ServerCtx {
+        ServerCtx::new(
+            Arc::new(ModelRegistry::new(None).unwrap()),
+            Arc::new(JobQueue::new()),
+        )
+    }
+
+    fn get(path: &str) -> Request {
+        Request {
+            method: "GET".to_string(),
+            path: path.to_string(),
+            query: String::new(),
+            body: Vec::new(),
+        }
+    }
+
+    fn post(path: &str, body: &str) -> Request {
+        Request {
+            method: "POST".to_string(),
+            path: path.to_string(),
+            query: String::new(),
+            body: body.as_bytes().to_vec(),
+        }
+    }
+
+    fn body_json(resp: &Response) -> Json {
+        json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn healthz_and_metrics_routes() {
+        let ctx = test_ctx();
+        let resp = route(&get("/healthz"), &ctx);
+        assert_eq!(resp.status, 200);
+        let v = body_json(&resp);
+        assert_eq!(v.get("status").and_then(Json::as_str), Some("ok"));
+        assert_eq!(v.get("models").and_then(Json::as_usize), Some(0));
+
+        ctx.metrics.incr("http.requests", 3);
+        let resp = route(&get("/metrics"), &ctx);
+        assert_eq!(resp.status, 200);
+        let v = body_json(&resp);
+        assert_eq!(
+            v.get("counters")
+                .and_then(|c| c.get("http.requests"))
+                .and_then(Json::as_usize),
+            Some(3)
+        );
+        assert!(v.get("jobs").is_some());
+    }
+
+    #[test]
+    fn unknown_routes_and_methods() {
+        let ctx = test_ctx();
+        assert_eq!(route(&get("/nope"), &ctx).status, 404);
+        assert_eq!(route(&get("/jobs/job-1"), &ctx).status, 404);
+        assert_eq!(route(&get("/models/m-1"), &ctx).status, 404);
+        assert_eq!(route(&post("/healthz", ""), &ctx).status, 405);
+        assert_eq!(route(&get("/fit"), &ctx).status, 405);
+        assert_eq!(route(&get("/shutdown"), &ctx).status, 405);
+    }
+
+    #[test]
+    fn fit_validation() {
+        let ctx = test_ctx();
+        // Not JSON.
+        assert_eq!(route(&post("/fit", "not json"), &ctx).status, 400);
+        // Missing k.
+        assert_eq!(
+            route(&post("/fit", r#"{"points": [[1,2]]}"#), &ctx).status,
+            400
+        );
+        // Neither points nor dataset.
+        assert_eq!(route(&post("/fit", r#"{"k": 3}"#), &ctx).status, 400);
+        // Unknown algorithm / dataset / profile.
+        assert_eq!(
+            route(&post("/fit", r#"{"points": [[1,2]], "k": 1, "algo": "zap"}"#), &ctx).status,
+            400
+        );
+        assert_eq!(
+            route(&post("/fit", r#"{"dataset": "zap", "k": 1}"#), &ctx).status,
+            400
+        );
+        assert_eq!(
+            route(
+                &post("/fit", r#"{"dataset": "kdd_sim", "profile": "zap", "k": 1}"#),
+                &ctx
+            )
+            .status,
+            400
+        );
+        // Valid submissions enqueue (no workers in this test: stays queued).
+        let resp = route(
+            &post("/fit", r#"{"points": [[1,2],[3,4],[5,6]], "k": 2, "algo": "uniform"}"#),
+            &ctx,
+        );
+        assert_eq!(resp.status, 202);
+        let job_id = body_json(&resp)
+            .get("job_id")
+            .and_then(Json::as_str)
+            .unwrap()
+            .to_string();
+        let resp = route(&get(&format!("/jobs/{job_id}")), &ctx);
+        assert_eq!(resp.status, 200);
+        assert_eq!(
+            body_json(&resp).get("state").and_then(Json::as_str),
+            Some("queued")
+        );
+    }
+
+    #[test]
+    fn assign_via_route_matches_kernel() {
+        let ctx = test_ctx();
+        let cs = gaussian_mixture(
+            &SynthSpec {
+                n: 4,
+                d: 3,
+                k_true: 2,
+                ..Default::default()
+            },
+            5,
+        );
+        let meta = registry::ModelMeta {
+            id: ctx.registry.fresh_id(),
+            algorithm: "uniform".to_string(),
+            k: 4,
+            dim: 3,
+            source: "test".to_string(),
+            seed: 0,
+            seeding_secs: 0.0,
+            lloyd_iters: 0,
+            cost: 0.0,
+        };
+        ctx.registry.insert(meta, cs.clone()).unwrap();
+        let queries = gaussian_mixture(
+            &SynthSpec {
+                n: 30,
+                d: 3,
+                k_true: 2,
+                ..Default::default()
+            },
+            6,
+        );
+        let body = Json::obj(vec![("points", json::points_to_json(&queries))]).emit();
+        let resp = route(&post("/models/m-1/assign", &body), &ctx);
+        assert_eq!(resp.status, 200);
+        let v = body_json(&resp);
+        let labels: Vec<u32> = v
+            .get("labels")
+            .and_then(Json::as_array)
+            .unwrap()
+            .iter()
+            .map(|x| x.as_f64().unwrap() as u32)
+            .collect();
+        let (want, _) = crate::kernels::assign::assign_argmin(&queries, &cs);
+        assert_eq!(labels, want);
+        // Dimension mismatch → 400.
+        let bad = route(&post("/models/m-1/assign", r#"{"points": [[1,2]]}"#), &ctx);
+        assert_eq!(bad.status, 400);
+    }
+
+    #[test]
+    fn bind_on_ephemeral_port() {
+        let cfg = ServeConfig {
+            port: 0,
+            persist: false,
+            ..Default::default()
+        };
+        let server = Server::bind(&cfg).unwrap();
+        let addr = server.local_addr().unwrap();
+        assert_ne!(addr.port(), 0);
+    }
+}

@@ -1,0 +1,375 @@
+//! The in-memory model registry behind the serving layer: fitted models
+//! (centers + metadata), persisted to disk and reloaded on boot.
+//!
+//! Persistence reuses the crate's existing formats — centers go through
+//! [`crate::data::io`] as `.fbin` (the same layout the dataset cache
+//! uses) and metadata through [`crate::server::json`] — so a model
+//! directory is inspectable with the same tooling as everything else:
+//! `{data_dir}/models/{id}.fbin` + `{data_dir}/models/{id}.json`.
+//!
+//! Assignment requests route through the kernel engine
+//! ([`crate::kernels::assign::assign_argmin`]); per the PR 1 contract,
+//! this module owns **no distance loops**.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::bail;
+use crate::data::io::{read_fbin, write_fbin};
+use crate::data::matrix::PointSet;
+use crate::error::{Context, Result};
+use crate::kernels::assign::assign_argmin;
+use crate::server::json::{self, Json};
+
+/// Everything about a fitted model except the centers themselves.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    /// Registry id (`m-<seq>`).
+    pub id: String,
+    /// Seeding algorithm name (as in [`crate::seeding::SeedingAlgorithm`]).
+    pub algorithm: String,
+    /// Number of centers.
+    pub k: usize,
+    /// Center dimensionality.
+    pub dim: usize,
+    /// Where the training data came from (`dataset:profile` or
+    /// `inline(n=.., d=..)`).
+    pub source: String,
+    /// RNG seed the fit ran with.
+    pub seed: u64,
+    /// Wall-clock seconds spent seeding (init + select).
+    pub seeding_secs: f64,
+    /// Lloyd refinement iterations requested (0 = seeding only).
+    pub lloyd_iters: usize,
+    /// k-means objective of the final centers on the training data.
+    pub cost: f64,
+}
+
+impl ModelMeta {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::str(self.id.clone())),
+            ("algorithm", Json::str(self.algorithm.clone())),
+            ("k", Json::num(self.k as f64)),
+            ("dim", Json::num(self.dim as f64)),
+            ("source", Json::str(self.source.clone())),
+            ("seed", Json::num(self.seed as f64)),
+            ("seeding_secs", Json::num(self.seeding_secs)),
+            ("lloyd_iters", Json::num(self.lloyd_iters as f64)),
+            ("cost", Json::num(self.cost)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<ModelMeta> {
+        let text = |key: &str| -> Result<String> {
+            Ok(v.get(key)
+                .and_then(Json::as_str)
+                .with_context(|| format!("model meta: missing {key:?}"))?
+                .to_string())
+        };
+        Ok(ModelMeta {
+            id: text("id")?,
+            algorithm: text("algorithm")?,
+            k: v.get("k").and_then(Json::as_usize).context("model meta: k")?,
+            dim: v
+                .get("dim")
+                .and_then(Json::as_usize)
+                .context("model meta: dim")?,
+            source: text("source")?,
+            seed: v.get("seed").and_then(Json::as_u64).unwrap_or(0),
+            seeding_secs: v
+                .get("seeding_secs")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0),
+            lloyd_iters: v
+                .get("lloyd_iters")
+                .and_then(Json::as_usize)
+                .unwrap_or(0),
+            cost: v.get("cost").and_then(Json::as_f64).unwrap_or(f64::NAN),
+        })
+    }
+}
+
+/// A fitted model: metadata + the `k × d` center matrix.
+#[derive(Clone, Debug)]
+pub struct Model {
+    pub meta: ModelMeta,
+    pub centers: PointSet,
+}
+
+impl Model {
+    /// Metadata plus the full center matrix (the `GET /models/{id}` body).
+    pub fn full_json(&self) -> Json {
+        match self.meta.to_json() {
+            Json::Obj(mut fields) => {
+                fields.push(("centers".to_string(), json::points_to_json(&self.centers)));
+                Json::Obj(fields)
+            }
+            other => other,
+        }
+    }
+}
+
+/// Batched nearest-center assignment against a model — the serving
+/// layer's only path to distances, routed through the kernel engine.
+pub fn assign(model: &Model, points: &PointSet) -> Result<(Vec<u32>, Vec<f32>)> {
+    if points.dim() != model.centers.dim() {
+        bail!(
+            "dimension mismatch: model {} has d={}, query has d={}",
+            model.meta.id,
+            model.centers.dim(),
+            points.dim()
+        );
+    }
+    Ok(assign_argmin(points, &model.centers))
+}
+
+/// Thread-safe id → model map with optional on-disk persistence.
+pub struct ModelRegistry {
+    /// Persistence root (`{dir}/models/`); `None` = memory only.
+    dir: Option<PathBuf>,
+    models: RwLock<BTreeMap<String, Arc<Model>>>,
+    next_id: AtomicU64,
+}
+
+impl ModelRegistry {
+    /// Create a registry, reloading any models persisted under
+    /// `{dir}/models/` from a previous run.
+    pub fn new(dir: Option<PathBuf>) -> Result<ModelRegistry> {
+        let reg = ModelRegistry {
+            dir,
+            models: RwLock::new(BTreeMap::new()),
+            next_id: AtomicU64::new(1),
+        };
+        reg.load_persisted()?;
+        Ok(reg)
+    }
+
+    fn models_dir(&self) -> Option<PathBuf> {
+        self.dir.as_ref().map(|d| d.join("models"))
+    }
+
+    fn load_persisted(&self) -> Result<()> {
+        let Some(models_dir) = self.models_dir() else {
+            return Ok(());
+        };
+        if !models_dir.exists() {
+            return Ok(());
+        }
+        for entry in std::fs::read_dir(&models_dir)
+            .with_context(|| format!("read {models_dir:?}"))?
+        {
+            let path = entry?.path();
+            if path.extension().and_then(|e| e.to_str()) != Some("json") {
+                continue;
+            }
+            match Self::load_model(&path) {
+                Ok(model) => {
+                    // Keep fresh ids above every persisted one.
+                    if let Some(n) = model
+                        .meta
+                        .id
+                        .strip_prefix("m-")
+                        .and_then(|s| s.parse::<u64>().ok())
+                    {
+                        self.next_id.fetch_max(n + 1, Ordering::Relaxed);
+                    }
+                    self.models
+                        .write()
+                        .unwrap()
+                        .insert(model.meta.id.clone(), Arc::new(model));
+                }
+                // A corrupt file must not take the whole server down.
+                Err(e) => eprintln!("[serve] skipping unreadable model {path:?}: {e:#}"),
+            }
+        }
+        Ok(())
+    }
+
+    fn load_model(meta_path: &Path) -> Result<Model> {
+        let text = std::fs::read_to_string(meta_path)?;
+        let meta = ModelMeta::from_json(&json::parse(&text)?)?;
+        let centers = read_fbin(&meta_path.with_extension("fbin"))?;
+        if centers.len() != meta.k || centers.dim() != meta.dim {
+            bail!(
+                "centers shape {}x{} disagrees with meta k={} dim={}",
+                centers.len(),
+                centers.dim(),
+                meta.k,
+                meta.dim
+            );
+        }
+        Ok(Model { meta, centers })
+    }
+
+    /// Allocate the next model id (`m-<seq>`).
+    pub fn fresh_id(&self) -> String {
+        format!("m-{}", self.next_id.fetch_add(1, Ordering::Relaxed))
+    }
+
+    /// Register a model (persisting it first when a directory is set, so
+    /// a model is never visible in memory but missing on disk).
+    pub fn insert(&self, meta: ModelMeta, centers: PointSet) -> Result<Arc<Model>> {
+        let model = Arc::new(Model { meta, centers });
+        if let Some(models_dir) = self.models_dir() {
+            std::fs::create_dir_all(&models_dir)
+                .with_context(|| format!("create {models_dir:?}"))?;
+            write_fbin(
+                &model.centers,
+                &models_dir.join(format!("{}.fbin", model.meta.id)),
+            )?;
+            std::fs::write(
+                models_dir.join(format!("{}.json", model.meta.id)),
+                model.meta.to_json().emit(),
+            )
+            .context("write model meta")?;
+        }
+        self.models
+            .write()
+            .unwrap()
+            .insert(model.meta.id.clone(), Arc::clone(&model));
+        Ok(model)
+    }
+
+    pub fn get(&self, id: &str) -> Option<Arc<Model>> {
+        self.models.read().unwrap().get(id).cloned()
+    }
+
+    /// All models, id-ordered.
+    pub fn list(&self) -> Vec<Arc<Model>> {
+        self.models.read().unwrap().values().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gaussian_mixture, SynthSpec};
+    use crate::kernels::assign::nearest_center;
+
+    fn centers(n: usize, d: usize, seed: u64) -> PointSet {
+        gaussian_mixture(
+            &SynthSpec {
+                n,
+                d,
+                k_true: 3,
+                ..Default::default()
+            },
+            seed,
+        )
+    }
+
+    fn meta(id: &str, k: usize, dim: usize) -> ModelMeta {
+        ModelMeta {
+            id: id.to_string(),
+            algorithm: "rejection".to_string(),
+            k,
+            dim,
+            source: "inline(n=100, d=4)".to_string(),
+            seed: 7,
+            seeding_secs: 0.25,
+            lloyd_iters: 2,
+            cost: 123.5,
+        }
+    }
+
+    #[test]
+    fn meta_json_roundtrip() {
+        let m = meta("m-9", 5, 4);
+        let back = ModelMeta::from_json(&json::parse(&m.to_json().emit()).unwrap()).unwrap();
+        assert_eq!(back.id, "m-9");
+        assert_eq!(back.algorithm, "rejection");
+        assert_eq!(back.k, 5);
+        assert_eq!(back.dim, 4);
+        assert_eq!(back.seed, 7);
+        assert_eq!(back.lloyd_iters, 2);
+        assert!((back.cost - 123.5).abs() < 1e-12);
+        assert!(ModelMeta::from_json(&json::parse("{}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn insert_get_list_memory_only() {
+        let reg = ModelRegistry::new(None).unwrap();
+        assert!(reg.is_empty());
+        let id = reg.fresh_id();
+        assert_eq!(id, "m-1");
+        reg.insert(meta(&id, 6, 4), centers(6, 4, 1)).unwrap();
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg.get("m-1").unwrap().meta.k, 6);
+        assert!(reg.get("m-404").is_none());
+        assert_eq!(reg.list().len(), 1);
+        assert_eq!(reg.fresh_id(), "m-2");
+    }
+
+    #[test]
+    fn persistence_roundtrip() {
+        let dir = std::env::temp_dir().join("fkmpp_registry_persist_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cs = centers(5, 3, 2);
+        {
+            let reg = ModelRegistry::new(Some(dir.clone())).unwrap();
+            let id = reg.fresh_id();
+            reg.insert(meta(&id, 5, 3), cs.clone()).unwrap();
+        }
+        // Fresh registry over the same dir sees the model, bit-exact, and
+        // continues the id sequence past it.
+        let reg = ModelRegistry::new(Some(dir.clone())).unwrap();
+        assert_eq!(reg.len(), 1);
+        let m = reg.get("m-1").unwrap();
+        assert_eq!(m.centers, cs);
+        assert_eq!(m.meta.source, "inline(n=100, d=4)");
+        assert_eq!(reg.fresh_id(), "m-2");
+    }
+
+    #[test]
+    fn corrupt_persisted_model_skipped() {
+        let dir = std::env::temp_dir().join("fkmpp_registry_corrupt_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(dir.join("models")).unwrap();
+        std::fs::write(dir.join("models/m-1.json"), "{ not json").unwrap();
+        let reg = ModelRegistry::new(Some(dir)).unwrap();
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn assign_routes_through_kernel() {
+        let cs = centers(4, 3, 3);
+        let model = Model {
+            meta: meta("m-1", 4, 3),
+            centers: cs.clone(),
+        };
+        let queries = centers(50, 3, 4);
+        let (labels, d2s) = assign(&model, &queries).unwrap();
+        for i in 0..queries.len() {
+            let (want_j, want_d) = nearest_center(queries.row(i), &cs);
+            assert_eq!(labels[i], want_j);
+            assert_eq!(d2s[i], want_d);
+        }
+        // Dimension mismatch is a client error, not a panic.
+        let bad = centers(3, 7, 5);
+        assert!(assign(&model, &bad).is_err());
+    }
+
+    #[test]
+    fn full_json_contains_centers() {
+        let cs = centers(3, 2, 6);
+        let model = Model {
+            meta: meta("m-2", 3, 2),
+            centers: cs.clone(),
+        };
+        let v = model.full_json();
+        assert_eq!(v.get("id").and_then(Json::as_str), Some("m-2"));
+        let back = json::points_from_json(v.get("centers").unwrap()).unwrap();
+        assert_eq!(back, cs);
+    }
+}

@@ -1,0 +1,222 @@
+//! End-to-end serving-layer test: boots the `fkmpp serve` subsystem on
+//! an ephemeral port, drives the full `POST /fit` → `GET /jobs/{id}` →
+//! `POST /models/{id}/assign` lifecycle over real TCP with a raw HTTP/1.1
+//! client, and asserts that served labels match a direct
+//! `kernels::assign::assign_argmin` call **exactly** (the ISSUE 2
+//! acceptance criterion).
+//!
+//! Exactness holds because the JSON layer's shortest-round-trip float
+//! emitter makes `f32 → f64 → text → f64 → f32` bit-exact in both
+//! directions, so the server computes on the same bits we do.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use fastkmeanspp::data::synth::{gaussian_mixture, SynthSpec};
+use fastkmeanspp::kernels::assign::assign_argmin;
+use fastkmeanspp::server::json::{self, Json};
+use fastkmeanspp::server::registry::ModelRegistry;
+use fastkmeanspp::server::{ServeConfig, Server};
+
+/// Minimal blocking HTTP client: one request, `Connection: close`, parse
+/// status + JSON body.
+fn http(addr: &str, method: &str, path: &str, body: Option<&str>) -> (u16, Json) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let body = body.unwrap_or("");
+    let request = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(request.as_bytes()).expect("write request");
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).expect("read response");
+    let status: u16 = raw
+        .split_whitespace()
+        .nth(1)
+        .unwrap_or_else(|| panic!("no status line in {raw:?}"))
+        .parse()
+        .expect("status code");
+    let split = raw.find("\r\n\r\n").expect("header/body split");
+    let body = &raw[split + 4..];
+    let parsed = if body.is_empty() {
+        Json::Null
+    } else {
+        json::parse(body).unwrap_or_else(|e| panic!("bad JSON body {body:?}: {e:#}"))
+    };
+    (status, parsed)
+}
+
+#[test]
+fn serve_fit_job_assign_roundtrip() {
+    let dir = std::env::temp_dir().join("fkmpp_serve_e2e");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let cfg = ServeConfig {
+        host: "127.0.0.1".to_string(),
+        port: 0, // ephemeral
+        data_dir: dir.clone(),
+        artifacts_dir: "/nonexistent".into(),
+        http_workers: 2,
+        fit_workers: 1,
+        persist: true,
+    };
+    let server = Server::bind(&cfg).expect("bind ephemeral port");
+    let addr = server.local_addr().expect("local addr").to_string();
+    let server_thread = std::thread::spawn(move || server.run());
+
+    // Liveness.
+    let (status, health) = http(&addr, "GET", "/healthz", None);
+    assert_eq!(status, 200, "{health:?}");
+    assert_eq!(health.get("status").and_then(Json::as_str), Some("ok"));
+
+    // Fit: inline points through the paper's rejection sampler + Lloyd.
+    let train = gaussian_mixture(
+        &SynthSpec {
+            n: 400,
+            d: 6,
+            k_true: 5,
+            ..Default::default()
+        },
+        11,
+    );
+    let fit_body = Json::obj(vec![
+        ("points", json::points_to_json(&train)),
+        ("algo", Json::str("rejection")),
+        ("k", Json::num(5.0)),
+        ("seed", Json::num(7.0)),
+        ("lloyd", Json::num(2.0)),
+    ])
+    .emit();
+    let (status, fit) = http(&addr, "POST", "/fit", Some(&fit_body));
+    assert_eq!(status, 202, "{fit:?}");
+    let job_id = fit
+        .get("job_id")
+        .and_then(Json::as_str)
+        .expect("job_id")
+        .to_string();
+
+    // The job id comes back immediately; poll it to completion.
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let model_id = loop {
+        let (status, job) = http(&addr, "GET", &format!("/jobs/{job_id}"), None);
+        assert_eq!(status, 200, "{job:?}");
+        match job.get("state").and_then(Json::as_str) {
+            Some("done") => {
+                assert!(job.get("secs").and_then(Json::as_f64).unwrap() >= 0.0);
+                break job
+                    .get("model_id")
+                    .and_then(Json::as_str)
+                    .expect("model_id")
+                    .to_string();
+            }
+            Some("failed") => panic!("fit failed: {job:?}"),
+            _ => {
+                assert!(Instant::now() < deadline, "fit did not finish in time");
+                std::thread::sleep(Duration::from_millis(25));
+            }
+        }
+    };
+
+    // The model is listed and fully retrievable.
+    let (status, models) = http(&addr, "GET", "/models", None);
+    assert_eq!(status, 200);
+    assert_eq!(models.get("count").and_then(Json::as_usize), Some(1));
+    let (status, model) = http(&addr, "GET", &format!("/models/{model_id}"), None);
+    assert_eq!(status, 200, "{model:?}");
+    assert_eq!(model.get("algorithm").and_then(Json::as_str), Some("rejection"));
+    let centers =
+        json::points_from_json(model.get("centers").expect("centers")).expect("parse centers");
+    assert_eq!(centers.len(), 5);
+    assert_eq!(centers.dim(), 6);
+
+    // Batched assignment through the server...
+    let queries = gaussian_mixture(
+        &SynthSpec {
+            n: 120,
+            d: 6,
+            k_true: 5,
+            ..Default::default()
+        },
+        23,
+    );
+    let assign_body = Json::obj(vec![("points", json::points_to_json(&queries))]).emit();
+    let (status, assigned) = http(
+        &addr,
+        "POST",
+        &format!("/models/{model_id}/assign"),
+        Some(&assign_body),
+    );
+    assert_eq!(status, 200, "{assigned:?}");
+    let labels: Vec<u32> = assigned
+        .get("labels")
+        .and_then(Json::as_array)
+        .expect("labels")
+        .iter()
+        .map(|v| v.as_f64().expect("numeric label") as u32)
+        .collect();
+    let served_d2: Vec<f32> = assigned
+        .get("d2")
+        .and_then(Json::as_array)
+        .expect("d2")
+        .iter()
+        .map(|v| v.as_f64().expect("numeric d2") as f32)
+        .collect();
+
+    // ...must exactly match the kernel engine on the same bits.
+    let (want_labels, want_d2) = assign_argmin(&queries, &centers);
+    assert_eq!(
+        labels, want_labels,
+        "served labels must match kernels::assign::assign_argmin exactly"
+    );
+    assert_eq!(served_d2, want_d2, "served distances must match the kernel");
+
+    // Error paths stay clean under load.
+    let (status, _) = http(&addr, "GET", "/jobs/job-999", None);
+    assert_eq!(status, 404);
+    let (status, _) = http(&addr, "GET", "/nope", None);
+    assert_eq!(status, 404);
+    let (status, _) = http(&addr, "POST", "/fit", Some("not json"));
+    assert_eq!(status, 400);
+
+    // Metrics saw the traffic.
+    let (status, metrics) = http(&addr, "GET", "/metrics", None);
+    assert_eq!(status, 200);
+    assert_eq!(metrics.get("models").and_then(Json::as_usize), Some(1));
+    assert!(
+        metrics
+            .get("counters")
+            .and_then(|c| c.get("http.requests"))
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0)
+            >= 5.0,
+        "{metrics:?}"
+    );
+    assert!(
+        metrics
+            .get("counters")
+            .and_then(|c| c.get("assign.points"))
+            .and_then(Json::as_usize)
+            == Some(120),
+        "{metrics:?}"
+    );
+
+    // Graceful shutdown drains the pools and run() returns Ok.
+    let (status, _) = http(&addr, "POST", "/shutdown", None);
+    assert_eq!(status, 200);
+    server_thread
+        .join()
+        .expect("server thread")
+        .expect("server run");
+
+    // Persistence: a fresh registry over the same data dir reloads the
+    // model bit-exactly (what a server restart would see).
+    let reloaded = ModelRegistry::new(Some(dir)).expect("reload registry");
+    let model = reloaded.get(&model_id).expect("model persisted");
+    assert_eq!(model.centers, centers);
+    assert_eq!(model.meta.k, 5);
+}
