@@ -1,15 +1,28 @@
 //! PJRT-vs-native throughput for the dense entry points (`cost`,
 //! `assign`, `lloyd_step`, `d2_update`) — the L1/L2 artifacts against
-//! the tuned rust kernels on identical inputs — plus the **kernel
-//! thread-scaling table**: `d2_update_min` / `assign_argmin` / `cost`
-//! at 1/2/4/8 threads for d in {16, 128} on n = 100k (the shapes the
-//! paper's Tables 1–3 runtimes are built from).
+//! the tuned rust kernels on identical inputs — plus the kernel-engine
+//! section (`--kernels-only`):
+//!
+//! * **kernels v1 vs v2**: the naive direct-distance loops against the
+//!   blocked norm-trick loops, single thread, at the acceptance shape
+//!   n = 100k, d = 128, k = 64 (plus d = 16 in full mode). The measured
+//!   cells are written as `BENCH_kernels.json` (the `grid_json`-shaped
+//!   perf-trajectory artifact, via `coordinator/tables.rs::kernels_json`);
+//! * the **kernel thread-scaling table**: `d2_update_min` /
+//!   `assign_argmin` / `cost` at 1/2/4/8 threads for d in {16, 128} on
+//!   n = 100k (the shapes the paper's Tables 1–3 runtimes are built
+//!   from), through the autotuned dispatch as shipped.
 //!
 //! ```bash
 //! cargo bench --bench micro_runtime
 //! cargo bench --bench micro_runtime -- --n 100000 --k 512
 //! cargo bench --bench micro_runtime -- --kernels-only
+//! cargo bench --bench micro_runtime -- --kernels-only --short --reps 2  # CI smoke
 //! ```
+//!
+//! `--kernels-only` flags: `--short` (headline shape only, skip the
+//! scaling table), `--json <path>` (artifact path, default
+//! `BENCH_kernels.json`), `--seed <u64>`.
 //!
 //! The PJRT section skips (with a note) when `artifacts/` is missing or
 //! the `pjrt` feature is off. The useful output is points/second per
@@ -21,10 +34,111 @@
 use std::time::Instant;
 
 use fastkmeanspp::cli::Args;
+use fastkmeanspp::coordinator::tables::{kernels_json, KernelCell};
 use fastkmeanspp::data::synth::{gaussian_mixture, SynthSpec};
+use fastkmeanspp::error::Context;
 use fastkmeanspp::kernels;
+use fastkmeanspp::metrics::Stats;
 use fastkmeanspp::rng::Pcg64;
 use fastkmeanspp::runtime::{native, pjrt::PjrtRuntime};
+
+/// Wall-clock `Stats` over `reps` calls of `f` (one warmup call first).
+fn time_reps(reps: usize, mut f: impl FnMut()) -> Stats {
+    f();
+    let mut s = Stats::new();
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        f();
+        s.push(t0.elapsed().as_secs_f64());
+    }
+    s
+}
+
+/// Kernels v1 vs v2, single thread — the ISSUE 3 acceptance table
+/// (>= 1.5x for `assign_argmin` at n=100k, d=128, k=64). Returns the
+/// measured cells for the `BENCH_kernels.json` artifact.
+fn kernels_v2_compare(reps: usize, short: bool, seed: u64) -> Vec<KernelCell> {
+    std::env::set_var("FKMPP_THREADS", "1");
+    let shapes: &[(usize, usize, usize)] = if short {
+        &[(100_000, 128, 64)]
+    } else {
+        &[(100_000, 16, 64), (100_000, 128, 64)]
+    };
+    let mut cells = Vec::new();
+    println!("\n== kernels v2 (blocked norm-trick) vs v1 (naive), 1 thread ==\n");
+    println!("| kernel | n | d | k | v1 s | v2 s | speedup |");
+    println!("|---|---|---|---|---|---|---|");
+    for &(n, d, k) in shapes {
+        let ps = gaussian_mixture(
+            &SynthSpec {
+                n,
+                d,
+                k_true: k,
+                ..Default::default()
+            },
+            seed,
+        );
+        let centers = ps.gather(&(0..k).map(|j| j * (n / k)).collect::<Vec<_>>());
+        let pn = kernels::norms::squared_norms(&ps);
+        let cn = kernels::norms::squared_norms(&centers);
+        let center = ps.row(0).to_vec();
+        let mut buf = vec![f32::INFINITY; n];
+        let dataset = format!("synth_n{n}_d{d}");
+
+        let mut record = |name: &str, v1: Stats, v2: Stats| {
+            let speedup = v1.mean() / v2.mean();
+            println!(
+                "| {name} | {n} | {d} | {k} | {:.4} | {:.4} | {speedup:.2}x |",
+                v1.mean(),
+                v2.mean()
+            );
+            cells.push(KernelCell {
+                dataset: dataset.clone(),
+                algorithm: format!("{name}_v1_naive"),
+                k,
+                seconds: v1,
+                speedup_vs_naive: 1.0,
+            });
+            cells.push(KernelCell {
+                dataset: dataset.clone(),
+                algorithm: format!("{name}_v2_blocked"),
+                k,
+                seconds: v2,
+                speedup_vs_naive: speedup,
+            });
+        };
+
+        let v1 = time_reps(reps, || {
+            kernels::d2::d2_update_min(&ps, &center, &mut buf);
+        });
+        let v2 = time_reps(reps, || {
+            kernels::blocked::d2_update_min_blocked(&ps, &center, &pn, &mut buf);
+        });
+        record("d2_update_min", v1, v2);
+
+        let v1 = time_reps(reps, || {
+            std::hint::black_box(kernels::assign::assign_argmin_naive(&ps, &centers));
+        });
+        let v2 = time_reps(reps, || {
+            let r = kernels::blocked::assign_argmin_blocked(&ps, &pn, &centers, &cn);
+            std::hint::black_box(r);
+        });
+        record("assign_argmin", v1, v2);
+
+        let v1 = time_reps(reps, || {
+            std::hint::black_box(kernels::reduce::cost_naive(&ps, &centers));
+        });
+        std::env::set_var("FKMPP_KERNEL", "blocked");
+        let v2 = time_reps(reps, || {
+            let c = kernels::reduce::cost_cached(&ps, Some(&pn), &centers, Some(&cn));
+            std::hint::black_box(c);
+        });
+        std::env::remove_var("FKMPP_KERNEL");
+        record("cost", v1, v2);
+    }
+    std::env::remove_var("FKMPP_THREADS");
+    cells
+}
 
 /// Kernel thread-scaling: the acceptance shape for the kernel engine is
 /// >1.5x at 4 threads on n=100k, d=128; the table prints the measured
@@ -97,7 +211,16 @@ fn main() -> fastkmeanspp::error::Result<()> {
     let reps = args.get_usize("reps", 5)?;
 
     if args.get("kernels-only").is_some() {
-        kernel_scaling(reps);
+        let short = args.get("short").is_some();
+        let seed = args.get_u64("seed", 7)?;
+        let cells = kernels_v2_compare(reps, short, seed);
+        if !short {
+            kernel_scaling(reps);
+        }
+        let path = args.get("json").unwrap_or("BENCH_kernels.json");
+        let doc = kernels_json(&cells, reps, seed, 1);
+        std::fs::write(path, doc.emit() + "\n").with_context(|| format!("write {path}"))?;
+        println!("\nwrote {path}");
         return Ok(());
     }
 

@@ -10,6 +10,7 @@
 use crate::coordinator::config::ExperimentConfig;
 use crate::coordinator::runner::GridResults;
 use crate::data::registry::DatasetId;
+use crate::metrics::Stats;
 use crate::seeding::SeedingAlgorithm;
 use crate::server::json::{stats_json, Json};
 
@@ -171,6 +172,55 @@ pub fn grid_json(res: &GridResults, cfg: &ExperimentConfig) -> Json {
     ])
 }
 
+/// One cell of the kernel micro-bench sweep
+/// (`benches/micro_runtime.rs --kernels-only`).
+pub struct KernelCell {
+    /// Synthetic instance label, e.g. `synth_n100000_d128`.
+    pub dataset: String,
+    /// Kernel + implementation, e.g. `assign_argmin_v2_blocked`.
+    pub algorithm: String,
+    pub k: usize,
+    /// Per-rep wall-clock seconds.
+    pub seconds: Stats,
+    /// Single-thread speedup vs the v1 naive kernel on the same cell
+    /// (1.0 for the v1 rows themselves).
+    pub speedup_vs_naive: f64,
+}
+
+/// `BENCH_kernels.json` — the kernel micro-bench artifact, first entry of
+/// the perf trajectory. Same top-level shape and cell fields as
+/// [`grid_json`] (`profile`/`reps`/`seed`/`backend`/`cells` with
+/// `dataset`/`algorithm`/`k`/`seconds`), so one consumer reads every
+/// `BENCH_*.json`; kernel cells carry no cost statistics (null, like
+/// unpopulated grid stats) and add `speedup_vs_naive`.
+pub fn kernels_json(cells: &[KernelCell], reps: usize, seed: u64, threads: usize) -> Json {
+    let cell_docs: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            Json::obj(vec![
+                ("dataset", Json::str(c.dataset.clone())),
+                ("algorithm", Json::str(c.algorithm.clone())),
+                ("k", Json::num(c.k as f64)),
+                ("seconds", stats_json(&c.seconds)),
+                ("cost", Json::Null),
+                ("lloyd_cost", Json::Null),
+                ("proposals_per_center", Json::Null),
+                ("speedup_vs_naive", Json::num(c.speedup_vs_naive)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("profile", Json::str("kernel_bench")),
+        ("reps", Json::num(reps as f64)),
+        ("seed", Json::num(seed as f64)),
+        ("quantize", Json::Bool(false)),
+        ("lloyd_iters", Json::num(0.0)),
+        ("backend", Json::str("native")),
+        ("threads", Json::num(threads as f64)),
+        ("cells", Json::Arr(cell_docs)),
+    ])
+}
+
 /// Lemma 5.3 diagnostic: proposals per accepted center for the rejection
 /// sampler (expected `O(c^2 d^2)`, far smaller in practice).
 pub fn rejection_diagnostics(res: &GridResults, dataset: DatasetId, ks: &[usize]) -> String {
@@ -278,6 +328,46 @@ mod tests {
         assert!(first.get("seconds").unwrap().get("mean").is_some());
         // Empty stats (no lloyd runs in the fake grid) emit null.
         assert!(first.get("lloyd_cost").map(Json::is_null).unwrap());
+    }
+
+    #[test]
+    fn kernels_json_round_trips_with_grid_shape() {
+        let mut s = Stats::new();
+        s.push(0.5);
+        s.push(0.6);
+        let cells = vec![
+            KernelCell {
+                dataset: "synth_n100000_d128".to_string(),
+                algorithm: "assign_argmin_v1_naive".to_string(),
+                k: 64,
+                seconds: s.clone(),
+                speedup_vs_naive: 1.0,
+            },
+            KernelCell {
+                dataset: "synth_n100000_d128".to_string(),
+                algorithm: "assign_argmin_v2_blocked".to_string(),
+                k: 64,
+                seconds: s,
+                speedup_vs_naive: 1.8,
+            },
+        ];
+        let doc = kernels_json(&cells, 2, 7, 1);
+        let back = crate::server::json::parse(&doc.emit()).unwrap();
+        // Same top-level fields as grid_json...
+        assert_eq!(back.get("profile").and_then(Json::as_str), Some("kernel_bench"));
+        assert_eq!(back.get("reps").and_then(Json::as_usize), Some(2));
+        assert_eq!(back.get("backend").and_then(Json::as_str), Some("native"));
+        let arr = back.get("cells").and_then(Json::as_array).unwrap();
+        assert_eq!(arr.len(), 2);
+        // ...and the same per-cell field names.
+        let cell = &arr[1];
+        let algo = cell.get("algorithm").and_then(Json::as_str);
+        assert_eq!(algo, Some("assign_argmin_v2_blocked"));
+        assert_eq!(cell.get("k").and_then(Json::as_usize), Some(64));
+        assert!(cell.get("seconds").unwrap().get("mean").is_some());
+        assert!(cell.get("cost").map(Json::is_null).unwrap());
+        let speedup = cell.get("speedup_vs_naive").and_then(Json::as_f64).unwrap();
+        assert!((speedup - 1.8).abs() < 1e-12);
     }
 
     #[test]

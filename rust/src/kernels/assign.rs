@@ -1,7 +1,15 @@
 //! Nearest-center assignment: the `O(nkd)` kernel behind Lloyd steps and
 //! cost evaluation (the `assign` PJRT artifact's native twin).
+//!
+//! [`assign_argmin`] dispatches between the v1 tiled scalar loop
+//! ([`assign_argmin_naive`]) and the v2 blocked norm-trick loop
+//! ([`crate::kernels::blocked::assign_argmin_blocked`]) via the runtime
+//! autotuner ([`crate::kernels::tune`]). Callers holding norm caches use
+//! [`assign_argmin_cached`] so the v2 path skips its `O(nd)`/`O(kd)`
+//! norm passes.
 
 use crate::data::matrix::{d2, PointSet};
+use crate::kernels::{blocked, norms, tune};
 use crate::parallel::parallel_chunks_mut2;
 
 /// Center rows per tile. A tile of `32 x 128` f32 coordinates is 16 KiB —
@@ -30,9 +38,40 @@ pub fn nearest_center(row: &[f32], centers: &PointSet) -> (u32, f32) {
 }
 
 /// Nearest center per point over the whole set:
-/// `(argmin indices, min squared distances)`, computed in parallel point
-/// chunks with center tiling.
+/// `(argmin indices, min squared distances)`. Implementation (v1 tiled
+/// scalar vs v2 blocked norm-trick) chosen by the runtime autotuner;
+/// ties always resolve to the lowest center index.
 pub fn assign_argmin(ps: &PointSet, centers: &PointSet) -> (Vec<u32>, Vec<f32>) {
+    assign_argmin_cached(ps, None, centers, None)
+}
+
+/// [`assign_argmin`] with optional precomputed squared-norm caches
+/// ([`crate::kernels::norms::squared_norms`] of `ps` / `centers`). The
+/// caches are consulted only when the autotuner picks the v2 kernel;
+/// missing ones are computed on the fly.
+pub fn assign_argmin_cached(
+    ps: &PointSet,
+    point_norms: Option<&[f32]>,
+    centers: &PointSet,
+    center_norms: Option<&[f32]>,
+) -> (Vec<u32>, Vec<f32>) {
+    assert_eq!(ps.dim(), centers.dim(), "dimension mismatch");
+    assert!(!centers.is_empty(), "no centers");
+    match tune::kernel_for(tune::Op::Assign, ps.len(), ps.dim(), centers.len()) {
+        tune::Kernel::Naive => assign_argmin_naive(ps, centers),
+        tune::Kernel::Blocked => {
+            let (mut pn_owned, mut cn_owned) = (None, None);
+            let pn = norms::resolve(point_norms, ps, &mut pn_owned);
+            let cn = norms::resolve(center_norms, centers, &mut cn_owned);
+            blocked::assign_argmin_blocked(ps, pn, centers, cn)
+        }
+    }
+}
+
+/// The v1 implementation: parallel point chunks with center tiling,
+/// direct scalar distances. Kept public as the reference the parity
+/// suites and the autotuner probe measure against.
+pub fn assign_argmin_naive(ps: &PointSet, centers: &PointSet) -> (Vec<u32>, Vec<f32>) {
     assert_eq!(ps.dim(), centers.dim(), "dimension mismatch");
     assert!(!centers.is_empty(), "no centers");
     let n = ps.len();

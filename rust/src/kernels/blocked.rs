@@ -1,0 +1,328 @@
+//! Kernels v2: 8-lane-blocked, norm-trick distance loops.
+//!
+//! The v1 kernels compute `‖x − c‖²` directly (subtract, square, add —
+//! two instructions per coordinate once vectorized). The v2 formulation
+//! precomputes `‖x‖²` and `‖c‖²` ([`crate::kernels::norms`]) and reduces
+//! every distance to a **dot product** plus `O(1)` scalar work:
+//!
+//! ```text
+//!   ‖x − c‖² = ‖x‖² + ‖c‖² − 2·x·c
+//! ```
+//!
+//! One fused multiply-add per coordinate, and — for the `O(nkd)`
+//! assignment shape — the inner loop becomes a tiny GEMM micro-kernel:
+//! each tile of [`LANES`] centers is transposed into an interleaved
+//! panel, so the per-coordinate step is `acc[0..8] += x * panel[t][0..8]`,
+//! exactly the shape LLVM turns into one 8-wide vector FMA. Remainder
+//! coordinates and remainder centers (`d % 8`, `k % 8`) take scalar
+//! lanes.
+//!
+//! Two contracts shared with v1, checked by `rust/tests/kernel_parity_v2.rs`:
+//!
+//! * **Tie-breaking**: argmin scans run in ascending center order with a
+//!   strict `<`, so among centers with bitwise-equal computed distances
+//!   the lowest index wins — identical to v1. (Near-ties that round
+//!   differently under the two formulations may legitimately pick
+//!   different, equally-near centers.)
+//! * **Rescored outputs**: the norm trick cancels catastrophically when
+//!   `‖x − c‖² ≪ ‖x‖²`, so argmin/cost kernels use the trick only to
+//!   *choose* the nearest center, then recompute the winner's distance
+//!   with the direct scalar kernel ([`crate::data::matrix::d2`]) — one
+//!   extra `O(d)` per point (`1/k` of the work). Returned distances and
+//!   cost sums therefore carry v1-grade rounding, and summed results stay
+//!   thread-count-invariant (fixed block boundaries, see
+//!   [`crate::kernels::reduce`]).
+//!
+//! `d2_update_min` (one center, `O(nd)`) keeps its norm-trick value
+//! un-rescored — a rescore would cost as much as the update itself —
+//! clamped at `0.0`; the `D²` sampling weights it feeds are tolerant of
+//! norm-scale rounding, and self-distances are still exactly `0.0` (see
+//! [`crate::kernels::norms`]).
+
+use crate::data::matrix::{d2, PointSet};
+use crate::parallel::{parallel_chunks_mut, parallel_chunks_mut2};
+
+/// Accumulator lanes of the blocked loops (8 f32 = one AVX/NEON-pair
+/// vector register).
+pub const LANES: usize = 8;
+
+/// Center rows per tile — same 32-row / 16 KiB L1 budget as the v1
+/// assignment kernel, processed as four 8-lane groups.
+const CENTER_TILE: usize = 4 * LANES;
+
+/// Points per worker below which the update runs inline (matches v1).
+const MIN_POINTS_PER_THREAD_UPDATE: usize = 4096;
+
+/// Points per worker below which assignment runs inline (matches v1).
+const MIN_POINTS_PER_THREAD_ASSIGN: usize = 1024;
+
+/// 8-lane blocked dot product, remainder coordinates scalar. The lane
+/// accumulators combine in a fixed tree order, so the result is a pure
+/// function of the inputs (no dependence on threads or call site) — the
+/// property the norm caches need for exact self-distance cancellation.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let blocks = a.len() / LANES;
+    let (a8, a_rest) = a.split_at(blocks * LANES);
+    let (b8, b_rest) = b.split_at(blocks * LANES);
+    let mut acc = [0.0f32; LANES];
+    for (ca, cb) in a8.chunks_exact(LANES).zip(b8.chunks_exact(LANES)) {
+        for l in 0..LANES {
+            acc[l] += ca[l] * cb[l];
+        }
+    }
+    let mut tail = 0.0f32;
+    for (x, y) in a_rest.iter().zip(b_rest) {
+        tail += x * y;
+    }
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7])) + tail
+}
+
+/// v2 incremental `D²` update:
+/// `cur_d2[i] = min(cur_d2[i], ‖x_i‖² + ‖c‖² − 2·x_i·c)` (clamped at 0),
+/// in parallel chunks. `point_norms` must be
+/// [`crate::kernels::norms::squared_norms`] of `ps`.
+pub fn d2_update_min_blocked(
+    ps: &PointSet,
+    center: &[f32],
+    point_norms: &[f32],
+    cur_d2: &mut [f32],
+) {
+    assert_eq!(center.len(), ps.dim(), "center dimension mismatch");
+    assert_eq!(cur_d2.len(), ps.len(), "distance array length mismatch");
+    assert_eq!(point_norms.len(), ps.len(), "norm cache length mismatch");
+    let cn = dot(center, center);
+    parallel_chunks_mut(cur_d2, 1, MIN_POINTS_PER_THREAD_UPDATE, |start, chunk| {
+        for (slot, i) in chunk.iter_mut().zip(start..) {
+            let dd = (point_norms[i] + cn - 2.0 * dot(ps.row(i), center)).max(0.0);
+            if dd < *slot {
+                *slot = dd;
+            }
+        }
+    });
+}
+
+/// v2 nearest-center assignment over the whole set. Same signature
+/// contract as the v1 [`crate::kernels::assign::assign_argmin`]:
+/// `(argmin indices, min squared distances)`, ties to the lowest center
+/// index, distances rescored with the direct scalar kernel.
+pub fn assign_argmin_blocked(
+    ps: &PointSet,
+    point_norms: &[f32],
+    centers: &PointSet,
+    center_norms: &[f32],
+) -> (Vec<u32>, Vec<f32>) {
+    assert_eq!(ps.dim(), centers.dim(), "dimension mismatch");
+    assert!(!centers.is_empty(), "no centers");
+    assert_eq!(point_norms.len(), ps.len(), "point norm cache length mismatch");
+    assert_eq!(center_norms.len(), centers.len(), "center norm cache mismatch");
+    let n = ps.len();
+    let mut idx = vec![0u32; n];
+    let mut mind2 = vec![f32::INFINITY; n];
+    parallel_chunks_mut2(
+        &mut idx,
+        &mut mind2,
+        MIN_POINTS_PER_THREAD_ASSIGN,
+        |start, ids, ds| {
+            argmin_core(ps, point_norms, centers, center_norms, start, ids, ds);
+            rescore_block(ps, centers, start, ids, ds);
+        },
+    );
+    (idx, mind2)
+}
+
+/// Norm-trick argmin over one contiguous point block: fills `ids` with
+/// the nearest-center index per point and `ds` with the *norm-trick*
+/// minimum value (callers rescore via [`rescore_block`]). `ds` must
+/// arrive filled with `f32::INFINITY`-or-larger sentinels (freshly
+/// allocated or `fill`ed).
+pub(crate) fn argmin_core(
+    ps: &PointSet,
+    point_norms: &[f32],
+    centers: &PointSet,
+    center_norms: &[f32],
+    start: usize,
+    ids: &mut [u32],
+    ds: &mut [f32],
+) {
+    let k = centers.len();
+    let d = centers.dim();
+    // Interleaved panel for the lane-complete part of the current tile:
+    // panel[g*LANES*d + t*LANES + l] = centers.row(tile_base + g*LANES + l)[t].
+    let mut panel = vec![0.0f32; CENTER_TILE * d];
+    let mut c0 = 0usize;
+    while c0 < k {
+        let c1 = (c0 + CENTER_TILE).min(k);
+        let groups = (c1 - c0) / LANES;
+        let full = groups * LANES;
+        for g in 0..groups {
+            for l in 0..LANES {
+                let row = centers.row(c0 + g * LANES + l);
+                let pane = &mut panel[g * LANES * d..(g + 1) * LANES * d];
+                for (t, &v) in row.iter().enumerate() {
+                    pane[t * LANES + l] = v;
+                }
+            }
+        }
+        for (t, (id, dmin)) in ids.iter_mut().zip(ds.iter_mut()).enumerate() {
+            let row = ps.row(start + t);
+            let p = point_norms[start + t];
+            for g in 0..groups {
+                let pane = &panel[g * LANES * d..(g + 1) * LANES * d];
+                let mut acc = [0.0f32; LANES];
+                for (c8, &x) in pane.chunks_exact(LANES).zip(row) {
+                    for l in 0..LANES {
+                        acc[l] += x * c8[l];
+                    }
+                }
+                let base = c0 + g * LANES;
+                for (l, &a) in acc.iter().enumerate() {
+                    let dd = (p + center_norms[base + l] - 2.0 * a).max(0.0);
+                    if dd < *dmin {
+                        *dmin = dd;
+                        *id = (base + l) as u32;
+                    }
+                }
+            }
+            // Remainder centers of this tile (k % 8): scalar lane. The
+            // cross term MUST accumulate in the same sequential
+            // per-coordinate order as the panel lanes above — a
+            // different summation order (e.g. the tree-order [`dot`])
+            // would round differently, and a center bitwise-equal to a
+            // panel center could then beat it by an ulp, breaking the
+            // lowest-index tie contract across the k % 8 boundary.
+            for j in (c0 + full)..c1 {
+                let mut acc = 0.0f32;
+                for (&x, &c) in row.iter().zip(centers.row(j)) {
+                    acc += x * c;
+                }
+                let dd = (p + center_norms[j] - 2.0 * acc).max(0.0);
+                if dd < *dmin {
+                    *dmin = dd;
+                    *id = j as u32;
+                }
+            }
+        }
+        c0 = c1;
+    }
+}
+
+/// Replace each point's norm-trick minimum with the direct
+/// `‖x_i − c_{ids[i]}‖²` of its chosen center — v1-grade rounding for
+/// everything downstream (returned distances, cost sums).
+pub(crate) fn rescore_block(
+    ps: &PointSet,
+    centers: &PointSet,
+    start: usize,
+    ids: &[u32],
+    ds: &mut [f32],
+) {
+    for (t, (&id, dmin)) in ids.iter().zip(ds.iter_mut()).enumerate() {
+        *dmin = d2(ps.row(start + t), centers.row(id as usize));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gaussian_mixture, SynthSpec};
+    use crate::kernels::norms::squared_norms;
+    use crate::rng::Pcg64;
+
+    fn case(n: usize, d: usize, k: usize, seed: u64) -> (PointSet, PointSet) {
+        let ps = gaussian_mixture(
+            &SynthSpec {
+                n,
+                d,
+                k_true: 6,
+                ..Default::default()
+            },
+            seed,
+        );
+        let step = (n / k).max(1);
+        let centers = ps.gather(&(0..k).map(|j| (j * step) % n).collect::<Vec<_>>());
+        (ps, centers)
+    }
+
+    #[test]
+    fn dot_matches_naive_all_lengths() {
+        let mut rng = Pcg64::seed_from(1);
+        for len in [0usize, 1, 2, 7, 8, 9, 15, 16, 17, 64, 127, 128] {
+            let a: Vec<f32> = (0..len).map(|_| rng.next_gaussian() as f32).collect();
+            let b: Vec<f32> = (0..len).map(|_| rng.next_gaussian() as f32).collect();
+            let naive: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+            let got = dot(&a, &b) as f64;
+            assert!(
+                (got - naive).abs() <= 1e-4 * naive.abs().max(1.0),
+                "len={len} got={got} naive={naive}"
+            );
+        }
+    }
+
+    #[test]
+    fn assign_agrees_with_v1_on_random_data() {
+        let (ps, centers) = case(3_000, 17, 41, 2);
+        let pn = squared_norms(&ps);
+        let cn = squared_norms(&centers);
+        let (gi, gd) = assign_argmin_blocked(&ps, &pn, &centers, &cn);
+        let (wi, wd) = crate::kernels::assign::assign_argmin_naive(&ps, &centers);
+        for i in 0..ps.len() {
+            let scale = pn[i] + cn[wi[i] as usize] + 1.0;
+            if gi[i] == wi[i] {
+                // Same winner => rescored distance is bitwise v1.
+                assert_eq!(gd[i], wd[i], "i={i}");
+            } else {
+                // Near-tie: the blocked choice must be as near as v1's.
+                assert!(
+                    (gd[i] - wd[i]).abs() <= 1e-4 * scale,
+                    "i={i}: v2 picked {} (d2={}), v1 picked {} (d2={})",
+                    gi[i],
+                    gd[i],
+                    wi[i],
+                    wd[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn duplicate_centers_tie_break_to_lowest_index() {
+        let ps = PointSet::from_rows(&[vec![1.0f32, 1.0], vec![5.0, 5.0]]);
+        let dup = PointSet::from_rows(&vec![vec![1.0f32, 1.0]; CENTER_TILE + LANES + 3]);
+        let pn = squared_norms(&ps);
+        let cn = squared_norms(&dup);
+        let (idx, mind2) = assign_argmin_blocked(&ps, &pn, &dup, &cn);
+        assert_eq!(idx, vec![0, 0]);
+        assert_eq!(mind2[0], 0.0);
+    }
+
+    #[test]
+    fn self_distance_is_exactly_zero() {
+        let (ps, _) = case(500, 11, 4, 3);
+        let pn = squared_norms(&ps);
+        let mut cur = vec![f32::INFINITY; ps.len()];
+        d2_update_min_blocked(&ps, ps.row(123), &pn, &mut cur);
+        assert_eq!(cur[123], 0.0);
+        for (i, &v) in cur.iter().enumerate() {
+            assert!(v >= 0.0, "negative clamped distance at {i}");
+        }
+    }
+
+    #[test]
+    fn update_matches_v1_within_norm_scale() {
+        let (ps, _) = case(2_000, 13, 4, 5);
+        let pn = squared_norms(&ps);
+        let center = ps.row(7).to_vec();
+        let cnorm = dot(&center, &center);
+        let mut got = vec![f32::INFINITY; ps.len()];
+        let mut want = vec![f32::INFINITY; ps.len()];
+        d2_update_min_blocked(&ps, &center, &pn, &mut got);
+        crate::kernels::d2::d2_update_min(&ps, &center, &mut want);
+        for i in 0..ps.len() {
+            let scale = pn[i] + cnorm + 1.0;
+            let diff = (got[i] - want[i]).abs();
+            assert!(diff <= 1e-4 * scale, "i={i}: {} vs {}", got[i], want[i]);
+        }
+    }
+}

@@ -2,15 +2,36 @@
 //! k-means++ (and the `d2_update` PJRT artifact's native twin).
 
 use crate::data::matrix::{d2, PointSet};
+use crate::kernels::{blocked, tune};
 use crate::parallel::parallel_chunks_mut;
 
 /// Points per worker below which the update runs inline (spawning
 /// threads costs more than the arithmetic saves).
 const MIN_POINTS_PER_THREAD: usize = 4096;
 
+/// [`d2_update_min`] for callers holding a point-norm cache
+/// ([`crate::kernels::norms::squared_norms`] of `ps`, reusable across
+/// rounds): dispatches between the v1 direct loop and the v2 norm-trick
+/// loop ([`crate::kernels::blocked::d2_update_min_blocked`]) via the
+/// runtime autotuner. Without a cache the norm trick cannot win (its
+/// one-off `O(nd)` norm pass costs what it saves), so the uncached
+/// [`d2_update_min`] is always the v1 loop.
+pub fn d2_update_min_cached(
+    ps: &PointSet,
+    center: &[f32],
+    point_norms: &[f32],
+    cur_d2: &mut [f32],
+) {
+    match tune::kernel_for(tune::Op::Update, ps.len(), ps.dim(), 1) {
+        tune::Kernel::Naive => d2_update_min(ps, center, cur_d2),
+        tune::Kernel::Blocked => blocked::d2_update_min_blocked(ps, center, point_norms, cur_d2),
+    }
+}
+
 /// `cur_d2[i] = min(cur_d2[i], ||x_i - center||^2)` for every point, in
 /// parallel chunks. `center` is an arbitrary point of dimension
-/// `ps.dim()`; pass `ps.row(j)` to open dataset point `j`.
+/// `ps.dim()`; pass `ps.row(j)` to open dataset point `j`. This is the
+/// v1 direct-distance loop (the reference semantics).
 pub fn d2_update_min(ps: &PointSet, center: &[f32], cur_d2: &mut [f32]) {
     assert_eq!(center.len(), ps.dim(), "center dimension mismatch");
     assert_eq!(cur_d2.len(), ps.len(), "distance array length mismatch");

@@ -17,13 +17,30 @@
 //!   weight sums, per-block partial sums (the prefix structure `D^2`
 //!   sampling scans), and the max-distance bound the tree embedding needs.
 //!
+//! **Kernels v2.** Each of the three primitives has two implementations
+//! behind one entry point: the v1 *naive* direct-distance loops (the
+//! scalar reference semantics) and the v2 *blocked* norm-trick loops
+//! ([`blocked`]: `||x-c||^2 = ||x||^2 + ||c||^2 - 2·x·c` with 8-lane
+//! accumulators and per-tile interleaved center panels). The v2 kernels
+//! consume squared-norm caches ([`norms`]) owned by the call sites that
+//! can reuse them across rounds — seeders, Lloyd, the server's model
+//! registry. A small runtime autotuner ([`tune`]) picks the
+//! implementation per `(op, n, d, k)` shape at first use; pin it with
+//! `FKMPP_KERNEL=naive|blocked`.
+//!
 //! Threading policy is inherited from [`crate::parallel::num_threads`]
 //! (override with `FKMPP_THREADS`); every kernel degrades to a single
 //! inline call for small inputs, so tiny test instances pay no spawn
 //! cost. The PJRT artifacts implement the same contracts
 //! ([`crate::runtime`]); `rust/tests/kernel_parity.rs` property-tests the
-//! kernels against naive serial references across thread counts.
+//! v1 kernels against naive serial references across thread counts, and
+//! `rust/tests/kernel_parity_v2.rs` pits the v2 kernels against the v1
+//! references (remainder lanes, degenerate inputs, tie-breaking, and
+//! thread-count-invariant sums).
 
 pub mod assign;
+pub mod blocked;
 pub mod d2;
+pub mod norms;
 pub mod reduce;
+pub mod tune;

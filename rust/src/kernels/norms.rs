@@ -1,0 +1,107 @@
+//! Squared-norm caches for the kernels-v2 norm-trick formulation
+//! (`‖x − c‖² = ‖x‖² + ‖c‖² − 2·x·c`).
+//!
+//! Every v2 kernel ([`crate::kernels::blocked`]) consumes precomputed
+//! per-row squared norms. Computing them costs one `O(nd)` pass — the
+//! trick only pays when the cache is **reused**, so the norm arrays are
+//! owned by the call sites with cross-round lifetime:
+//!
+//! * point norms: once per seeding run (`seeding/kmeanspp.rs`,
+//!   `seeding/afkmc2.rs`, `seeding/rejection.rs`) and once per Lloyd run
+//!   (`lloyd.rs`) — the points never change between rounds/iterations;
+//! * center norms: once per registered model
+//!   (`server/registry.rs::Model`), reused across every assign request.
+//!
+//! Norms are computed with the same 8-lane blocked dot product
+//! ([`crate::kernels::blocked::dot`]) the v2 kernels use for the cross
+//! term. That shared arithmetic gives an exact identity the seeders rely
+//! on: for a point whose bits equal the center's,
+//! `‖x‖² + ‖c‖² − 2·x·c` evaluates to exactly `0.0` (all three dots
+//! return the same f32, and doubling/halving is exact), so opened centers
+//! keep exact-zero `D²` weight and can never be re-sampled.
+
+use crate::data::matrix::PointSet;
+use crate::kernels::blocked;
+use crate::parallel::parallel_chunks_mut;
+
+/// Points per worker below which the norm pass runs inline.
+const MIN_POINTS_PER_THREAD: usize = 4096;
+
+/// Resolve an optional caller-provided norm cache for a v2 kernel: use
+/// the cache when given, otherwise compute into `owned` and borrow it.
+/// Shared by the dispatching entry points so the compute-on-miss
+/// fallback cannot diverge between assign and cost.
+pub(crate) fn resolve<'a>(
+    cached: Option<&'a [f32]>,
+    ps: &PointSet,
+    owned: &'a mut Option<Vec<f32>>,
+) -> &'a [f32] {
+    match cached {
+        Some(c) => c,
+        None => &*owned.insert(squared_norms(ps)),
+    }
+}
+
+/// Per-row squared Euclidean norms `‖x_i‖²`, computed in parallel chunks
+/// with the v2 dot product (see the module docs for why that matters).
+pub fn squared_norms(ps: &PointSet) -> Vec<f32> {
+    let mut out = vec![0.0f32; ps.len()];
+    parallel_chunks_mut(&mut out, 1, MIN_POINTS_PER_THREAD, |start, chunk| {
+        for (slot, i) in chunk.iter_mut().zip(start..) {
+            let row = ps.row(i);
+            *slot = blocked::dot(row, row);
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gaussian_mixture, SynthSpec};
+
+    #[test]
+    fn matches_serial_reference() {
+        let ps = gaussian_mixture(
+            &SynthSpec {
+                n: 10_000,
+                d: 13,
+                k_true: 4,
+                ..Default::default()
+            },
+            3,
+        );
+        let norms = squared_norms(&ps);
+        for i in (0..ps.len()).step_by(503) {
+            let want: f64 = ps.row(i).iter().map(|&v| (v as f64) * (v as f64)).sum();
+            let got = norms[i] as f64;
+            let tol = 1e-4 * want.max(1.0);
+            assert!((got - want).abs() <= tol, "i={i} got={got} want={want}");
+        }
+    }
+
+    #[test]
+    fn zero_rows_have_zero_norm() {
+        let ps = PointSet::zeros(5, 7);
+        assert_eq!(squared_norms(&ps), vec![0.0; 5]);
+    }
+
+    #[test]
+    fn matches_blocked_dot_bitwise() {
+        // The cache MUST be the same arithmetic as the v2 cross term —
+        // this is what makes self-distances exactly zero.
+        let ps = gaussian_mixture(
+            &SynthSpec {
+                n: 100,
+                d: 9,
+                k_true: 3,
+                ..Default::default()
+            },
+            4,
+        );
+        let norms = squared_norms(&ps);
+        for i in 0..ps.len() {
+            assert_eq!(norms[i], blocked::dot(ps.row(i), ps.row(i)), "i={i}");
+        }
+    }
+}

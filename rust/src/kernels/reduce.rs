@@ -14,6 +14,7 @@
 
 use crate::data::matrix::{d2, PointSet};
 use crate::kernels::assign::min_d2_block;
+use crate::kernels::{blocked, norms, tune};
 use crate::parallel::{parallel_chunks_mut, parallel_reduce};
 
 /// Leaf block size of the two-level tree sum.
@@ -53,10 +54,40 @@ pub fn block_sums(w: &[f32], block: usize) -> Vec<f64> {
 
 /// k-means cost: Σ_i min_j `||x_i - c_j||^2` — `O(nkd)` work, fused
 /// min-distance + sum. Each fixed `SUM_BLOCK`-point block is evaluated
-/// with the center-tiled distance core ([`crate::kernels::assign`]) into
-/// a per-worker scratch, then summed; blocks combine in order — cache-hot
-/// on the center matrix, bounded rounding error, thread-count-invariant.
+/// with the center-tiled distance core (v1, [`crate::kernels::assign`])
+/// or the blocked norm-trick core (v2, [`crate::kernels::blocked`],
+/// winners rescored with the direct kernel) into a per-worker scratch,
+/// then summed; blocks combine in order — cache-hot on the center
+/// matrix, bounded rounding error, thread-count-invariant either way
+/// (the block boundaries never move).
 pub fn cost(ps: &PointSet, centers: &PointSet) -> f64 {
+    cost_cached(ps, None, centers, None)
+}
+
+/// [`cost`] with optional precomputed squared-norm caches (consulted
+/// only when the autotuner picks the v2 kernel; missing ones are
+/// computed on the fly).
+pub fn cost_cached(
+    ps: &PointSet,
+    point_norms: Option<&[f32]>,
+    centers: &PointSet,
+    center_norms: Option<&[f32]>,
+) -> f64 {
+    assert_eq!(ps.dim(), centers.dim(), "dimension mismatch");
+    assert!(!centers.is_empty(), "no centers");
+    match tune::kernel_for(tune::Op::Assign, ps.len(), ps.dim(), centers.len()) {
+        tune::Kernel::Naive => cost_naive(ps, centers),
+        tune::Kernel::Blocked => {
+            let (mut pn_owned, mut cn_owned) = (None, None);
+            let pn = norms::resolve(point_norms, ps, &mut pn_owned);
+            let cn = norms::resolve(center_norms, centers, &mut cn_owned);
+            cost_blocked(ps, pn, centers, cn)
+        }
+    }
+}
+
+/// The v1 cost reduction (direct distances, center-tiled).
+pub fn cost_naive(ps: &PointSet, centers: &PointSet) -> f64 {
     assert_eq!(ps.dim(), centers.dim(), "dimension mismatch");
     assert!(!centers.is_empty(), "no centers");
     let n = ps.len();
@@ -69,6 +100,31 @@ pub fn cost(ps: &PointSet, centers: &PointSet) -> f64 {
             let hi = (lo + SUM_BLOCK).min(n);
             let ds = &mut scratch[..hi - lo];
             min_d2_block(ps, centers, lo, ds);
+            *slot = ds.iter().map(|&v| v as f64).sum();
+        }
+    });
+    partials.iter().sum()
+}
+
+/// The v2 cost reduction: blocked norm-trick argmin per fixed block,
+/// winners rescored with the direct scalar kernel before summing, so the
+/// sum carries v1-grade rounding (no norm-scale cancellation error).
+fn cost_blocked(ps: &PointSet, pn: &[f32], centers: &PointSet, cn: &[f32]) -> f64 {
+    let n = ps.len();
+    let nblocks = n.div_ceil(SUM_BLOCK);
+    let mut partials = vec![0.0f64; nblocks];
+    parallel_chunks_mut(&mut partials, 1, 1, |start, chunk| {
+        let mut ds_scratch = vec![0.0f32; SUM_BLOCK];
+        let mut ids_scratch = vec![0u32; SUM_BLOCK];
+        for (slot, b) in chunk.iter_mut().zip(start..) {
+            let lo = b * SUM_BLOCK;
+            let hi = (lo + SUM_BLOCK).min(n);
+            let ds = &mut ds_scratch[..hi - lo];
+            let ids = &mut ids_scratch[..hi - lo];
+            ds.fill(f32::INFINITY);
+            ids.fill(0);
+            blocked::argmin_core(ps, pn, centers, cn, lo, ids, ds);
+            blocked::rescore_block(ps, centers, lo, ids, ds);
             *slot = ds.iter().map(|&v| v as f64).sum();
         }
     });

@@ -1,0 +1,203 @@
+//! Runtime kernel autotuner: picks the v1 (naive direct-distance) or v2
+//! (blocked norm-trick, [`crate::kernels::blocked`]) implementation per
+//! `(op, n, d, k)` shape at first use.
+//!
+//! Policy, in order:
+//!
+//! 1. **`FKMPP_KERNEL=naive|blocked`** pins the choice globally
+//!    (checked on every call — tests and benches own this env var the
+//!    same way they own `FKMPP_THREADS`). Pinning also makes seeding
+//!    bit-reproducible across *processes*: the two formulations round
+//!    differently at the f32 level, so an unpinned timing-based decision
+//!    may legitimately flip knife-edge `D²` samples between runs.
+//! 2. **Small shapes run naive without probing**: below a ~4M
+//!    multiply-accumulate work floor (`SMALL_WORK`) the kernels finish
+//!    in microseconds either way, a probe would cost more than it saves,
+//!    and unit tests on tiny instances stay on the bitwise-v1 reference
+//!    path.
+//! 3. Otherwise the first call for a shape class probes both
+//!    implementations on a small synthetic instance of the same `d`/`k`
+//!    and caches the winner for the process lifetime (shape classes
+//!    bucket `k` by power of two; `d` is kept exact — it drives the
+//!    vectorizer). Probes run under whatever `FKMPP_THREADS` is current,
+//!    but the probe shapes sit below the kernels' parallel cutoffs, so
+//!    the measured single-thread ratio is what the decision encodes.
+//!
+//! The cached decision is process-wide, so within one process every
+//! caller — seeders, Lloyd, the server, tests comparing against a direct
+//! kernel call — agrees on the implementation and the exact bits it
+//! produces.
+
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::data::matrix::PointSet;
+use crate::kernels::{blocked, norms};
+use crate::rng::Pcg64;
+
+/// Which kernel implementation to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// v1 direct-distance loops (the scalar reference semantics).
+    Naive,
+    /// v2 8-lane-blocked norm-trick loops.
+    Blocked,
+}
+
+impl Kernel {
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Naive => "naive",
+            Kernel::Blocked => "blocked",
+        }
+    }
+}
+
+/// Kernel shape family being dispatched.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Op {
+    /// `d2_update_min`: one center, `O(nd)`.
+    Update,
+    /// `assign_argmin` / `cost`: `k` centers, `O(nkd)`.
+    Assign,
+}
+
+/// Below this many multiply-accumulates (`n·d·k`) dispatch returns
+/// [`Kernel::Naive`] without probing.
+const SMALL_WORK: usize = 1 << 22;
+
+/// Points in the probe instance — below every parallel cutoff, so probes
+/// measure the single-thread inner loops.
+const PROBE_N: usize = 1024;
+
+fn decisions() -> &'static Mutex<HashMap<(Op, usize, u32), Kernel>> {
+    static DECISIONS: OnceLock<Mutex<HashMap<(Op, usize, u32), Kernel>>> = OnceLock::new();
+    DECISIONS.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Resolve the kernel implementation for one call of shape `(n, d, k)`
+/// (`k = 1` for the update family).
+pub fn kernel_for(op: Op, n: usize, d: usize, k: usize) -> Kernel {
+    if let Ok(v) = std::env::var("FKMPP_KERNEL") {
+        match v.as_str() {
+            "naive" => return Kernel::Naive,
+            "blocked" => return Kernel::Blocked,
+            other => {
+                // A typo'd pin must not silently hand control back to
+                // the (timing-dependent) autotuner: say so, once.
+                static WARNED: std::sync::Once = std::sync::Once::new();
+                WARNED.call_once(|| {
+                    eprintln!(
+                        "[fkmpp] ignoring unknown FKMPP_KERNEL={other:?} \
+                         (expected naive|blocked); autotuning instead"
+                    );
+                });
+            }
+        }
+    }
+    let work = n.saturating_mul(d).saturating_mul(k.max(1));
+    if work < SMALL_WORK {
+        return Kernel::Naive;
+    }
+    let key = (op, d, k.max(1).ilog2());
+    if let Some(&choice) = decisions().lock().unwrap().get(&key) {
+        return choice;
+    }
+    // Probe OUTSIDE the lock so a first-touch probe (tens of ms) never
+    // stalls concurrent dispatches of other shapes. Two racers on the
+    // same shape both probe; the first insert wins and both return the
+    // stored value, so the process-wide-agreement property holds.
+    let probed = probe(op, d, k);
+    *decisions().lock().unwrap().entry(key).or_insert(probed)
+}
+
+/// Best-of-2 wall-clock of `f` (after one warmup call), in seconds.
+fn best_time(mut f: impl FnMut()) -> f64 {
+    f(); // warmup
+    let mut best = f64::INFINITY;
+    for _ in 0..2 {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+/// Measure both implementations on a deterministic synthetic instance of
+/// the same `d` (and `k` for the assign family) and return the faster.
+fn probe(op: Op, d: usize, k: usize) -> Kernel {
+    let mut rng = Pcg64::seed_from(0xA070_BEE5);
+    let data: Vec<f32> = (0..PROBE_N * d).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+    let ps = PointSet::from_flat(PROBE_N, d, data);
+    let pn = norms::squared_norms(&ps);
+    match op {
+        Op::Assign => {
+            let kk = k.clamp(1, 128).min(PROBE_N);
+            let centers = ps.gather(&(0..kk).collect::<Vec<_>>());
+            let cn = norms::squared_norms(&centers);
+            let t_naive = best_time(|| {
+                std::hint::black_box(crate::kernels::assign::assign_argmin_naive(&ps, &centers));
+            });
+            let t_blocked = best_time(|| {
+                std::hint::black_box(blocked::assign_argmin_blocked(&ps, &pn, &centers, &cn));
+            });
+            if t_blocked < t_naive {
+                Kernel::Blocked
+            } else {
+                Kernel::Naive
+            }
+        }
+        Op::Update => {
+            let center = ps.row(0).to_vec();
+            let mut buf = vec![f32::INFINITY; PROBE_N];
+            let t_naive = best_time(|| {
+                crate::kernels::d2::d2_update_min(&ps, &center, &mut buf);
+                std::hint::black_box(&buf);
+            });
+            let t_blocked = best_time(|| {
+                blocked::d2_update_min_blocked(&ps, &center, &pn, &mut buf);
+                std::hint::black_box(&buf);
+            });
+            if t_blocked < t_naive {
+                Kernel::Blocked
+            } else {
+                Kernel::Naive
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: no test here mutates FKMPP_KERNEL — env vars are process
+    // globals and unit tests share one process. Env-override behavior is
+    // covered by `rust/tests/kernel_parity_v2.rs`, which owns the var in
+    // a single test function (the same discipline as FKMPP_THREADS).
+
+    #[test]
+    fn small_shapes_stay_naive() {
+        // Regardless of cache state, tiny work units never probe.
+        assert_eq!(kernel_for(Op::Assign, 100, 8, 4), Kernel::Naive);
+        assert_eq!(kernel_for(Op::Update, 1_000, 16, 1), Kernel::Naive);
+    }
+
+    #[test]
+    fn probe_decision_is_cached() {
+        let n = 200_000; // over SMALL_WORK for d=32, k=16
+        let a = kernel_for(Op::Assign, n, 32, 16);
+        let b = kernel_for(Op::Assign, n, 32, 16);
+        assert_eq!(a, b, "second lookup must hit the cache");
+        // Same bucket (k in [16, 31]) resolves identically.
+        let c = kernel_for(Op::Assign, n, 32, 17);
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn kernel_names() {
+        assert_eq!(Kernel::Naive.name(), "naive");
+        assert_eq!(Kernel::Blocked.name(), "blocked");
+    }
+}

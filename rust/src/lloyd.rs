@@ -56,8 +56,18 @@ pub fn lloyd(
     let mut centers = seed_centers.clone();
     let mut history = Vec::with_capacity(cfg.max_iters + 1);
     let mut iterations = 0;
+    // Kernels-v2 norm cache: the points never change across iterations,
+    // so one O(nd) pass here serves every step, repair assignment and
+    // the final cost evaluation (centers change per iteration — their
+    // norms are recomputed inside the kernels, an O(kd) triviality).
+    // PJRT has no norm-cache contract and its backend arms ignore the
+    // slice, so skip the pass there (empty slice = "no cache").
+    let point_norms = match backend {
+        Backend::Native => crate::kernels::norms::squared_norms(ps),
+        Backend::Pjrt(_) => Vec::new(),
+    };
     for _ in 0..cfg.max_iters {
-        let (sums, counts, cost) = backend.lloyd_step(ps, &centers)?;
+        let (sums, counts, cost) = backend.lloyd_step_cached(ps, &point_norms, &centers)?;
         history.push(cost);
         // New centers = cluster means; empty clusters re-seeded below.
         let mut next = PointSet::zeros(k, d);
@@ -76,7 +86,7 @@ pub fn lloyd(
         if !empties.is_empty() {
             // Re-seed each empty cluster with the point currently farthest
             // from its center (one extra assignment pass).
-            let (_, mind2) = backend.assign(ps, &centers)?;
+            let (_, mind2) = backend.assign_cached(ps, &point_norms, &centers)?;
             let mut order: Vec<usize> = (0..ps.len()).collect();
             order.sort_by(|&a, &b| mind2[b].partial_cmp(&mind2[a]).unwrap());
             for (slot, j) in empties.into_iter().enumerate() {
@@ -96,7 +106,7 @@ pub fn lloyd(
             }
         }
     }
-    history.push(backend.cost(ps, &centers)?);
+    history.push(backend.cost_cached(ps, &point_norms, &centers)?);
     Ok(LloydResult {
         centers,
         history,

@@ -49,6 +49,19 @@ pub trait NnOracle {
         self.query(ps, q).map_or(false, |(_, d)| d < threshold)
     }
 
+    /// [`NnOracle::dist_below`] for callers holding the query point's
+    /// squared norm (`q_norm2 = ‖q‖²` from the seeder's per-run norm
+    /// cache). Implementations that store per-candidate norms (the exact
+    /// oracle) use it to evaluate candidates via the kernels-v2 norm
+    /// trick — one fused multiply-add per coordinate instead of the
+    /// subtract/square pair — which perturbs the decision only at the
+    /// f32-rounding level (the candidate set, early-exit semantics and
+    /// monotonicity are unchanged). The default ignores the cache.
+    fn dist_below_cached(&self, ps: &PointSet, q: &[f32], q_norm2: f32, threshold: f32) -> bool {
+        let _ = q_norm2;
+        self.dist_below(ps, q, threshold)
+    }
+
     /// Number of inserted points.
     fn len(&self) -> usize;
     fn is_empty(&self) -> bool {
@@ -59,14 +72,23 @@ pub trait NnOracle {
 /// Exact oracle: linear scan over inserted points. `O(|S| d)` per query —
 /// this is exactly the `Ω(k^2)` bottleneck the paper's LSH removes, kept
 /// as the correctness oracle and as the `rejection-exact` ablation.
+///
+/// Kernels v2: each inserted center's squared norm is cached once at
+/// insertion and reused by every [`NnOracle::dist_below_cached`] scan
+/// across all later rounds (`query`/`dist_below` keep the direct v1
+/// arithmetic — they are the reference semantics the oracle tests pin).
 #[derive(Default, Clone, Debug)]
 pub struct ExactNn {
     inserted: Vec<u32>,
+    /// `‖c‖²` per entry of `inserted`, via [`crate::kernels::blocked::dot`].
+    norms: Vec<f32>,
 }
 
 impl NnOracle for ExactNn {
-    fn insert(&mut self, _ps: &PointSet, i: u32) {
+    fn insert(&mut self, ps: &PointSet, i: u32) {
+        let row = ps.row(i as usize);
         self.inserted.push(i);
+        self.norms.push(crate::kernels::blocked::dot(row, row));
     }
 
     fn query(&self, ps: &PointSet, q: &[f32]) -> Option<(u32, f32)> {
@@ -85,6 +107,17 @@ impl NnOracle for ExactNn {
         self.inserted
             .iter()
             .any(|&i| crate::data::matrix::d2(ps.row(i as usize), q) < t2)
+    }
+
+    fn dist_below_cached(&self, ps: &PointSet, q: &[f32], q_norm2: f32, threshold: f32) -> bool {
+        let t2 = threshold * threshold;
+        for (&i, &cn) in self.inserted.iter().zip(&self.norms) {
+            let dd = q_norm2 + cn - 2.0 * crate::kernels::blocked::dot(ps.row(i as usize), q);
+            if dd.max(0.0) < t2 {
+                return true;
+            }
+        }
+        false
     }
 
     fn len(&self) -> usize {

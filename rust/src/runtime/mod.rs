@@ -57,10 +57,40 @@ impl Backend {
         }
     }
 
+    /// [`Backend::assign`] with a precomputed point-norm cache
+    /// ([`crate::kernels::norms::squared_norms`] of `ps`). The native
+    /// path hands it to the autotuned v2 kernels; PJRT artifacts have no
+    /// norm-cache contract and ignore it.
+    pub fn assign_cached(
+        &self,
+        ps: &PointSet,
+        point_norms: &[f32],
+        centers: &PointSet,
+    ) -> Result<(Vec<u32>, Vec<f32>)> {
+        match self {
+            Backend::Native => Ok(native::assign_cached(ps, point_norms, centers)),
+            Backend::Pjrt(rt) => rt.assign(ps, centers),
+        }
+    }
+
     /// k-means objective under `centers`.
     pub fn cost(&self, ps: &PointSet, centers: &PointSet) -> Result<f64> {
         match self {
             Backend::Native => Ok(native::cost(ps, centers)),
+            Backend::Pjrt(rt) => rt.cost(ps, centers),
+        }
+    }
+
+    /// [`Backend::cost`] with a precomputed point-norm cache (see
+    /// [`Backend::assign_cached`] for the PJRT caveat).
+    pub fn cost_cached(
+        &self,
+        ps: &PointSet,
+        point_norms: &[f32],
+        centers: &PointSet,
+    ) -> Result<f64> {
+        match self {
+            Backend::Native => Ok(native::cost_cached(ps, point_norms, centers)),
             Backend::Pjrt(rt) => rt.cost(ps, centers),
         }
     }
@@ -74,6 +104,20 @@ impl Backend {
     ) -> Result<(Vec<f64>, Vec<u64>, f64)> {
         match self {
             Backend::Native => Ok(native::lloyd_step(ps, centers)),
+            Backend::Pjrt(rt) => rt.lloyd_step(ps, centers),
+        }
+    }
+
+    /// [`Backend::lloyd_step`] with a precomputed point-norm cache (see
+    /// [`Backend::assign_cached`] for the PJRT caveat).
+    pub fn lloyd_step_cached(
+        &self,
+        ps: &PointSet,
+        point_norms: &[f32],
+        centers: &PointSet,
+    ) -> Result<(Vec<f64>, Vec<u64>, f64)> {
+        match self {
+            Backend::Native => Ok(native::lloyd_step_cached(ps, point_norms, centers)),
             Backend::Pjrt(rt) => rt.lloyd_step(ps, centers),
         }
     }

@@ -4,9 +4,13 @@
 //! the `runtime_pjrt_matches_native` integration test.
 //!
 //! Assignment and cost delegate to the shared parallel kernel engine
-//! ([`crate::kernels`]); `lloyd_step` keeps its fused fold here (its
-//! per-cluster accumulators are backend-contract specific) but routes its
-//! inner distance loop through [`crate::kernels::assign::nearest_center`].
+//! ([`crate::kernels`], autotuned v1/v2 since the kernels-v2 rework);
+//! `lloyd_step` keeps its fused fold here (its per-cluster accumulators
+//! are backend-contract specific) but routes its inner distance loop
+//! through [`crate::kernels::assign::nearest_center`]. The `*_cached`
+//! variants accept the caller's point-norm cache (one `O(nd)` pass per
+//! Lloyd run, reused by every iteration) so the v2 kernels skip their
+//! norm pass.
 
 use crate::data::matrix::PointSet;
 use crate::kernels::assign::nearest_center;
@@ -18,9 +22,76 @@ pub fn assign(ps: &PointSet, centers: &PointSet) -> (Vec<u32>, Vec<f32>) {
     crate::kernels::assign::assign_argmin(ps, centers)
 }
 
+/// Empty slice = "no cache" (the Backend convention — PJRT callers pass
+/// `&[]`): map it to `None` so the kernels compute norms themselves
+/// instead of asserting on the length.
+fn cache_of(point_norms: &[f32]) -> Option<&[f32]> {
+    (!point_norms.is_empty()).then_some(point_norms)
+}
+
+/// [`assign`] with a precomputed point-norm cache.
+pub fn assign_cached(
+    ps: &PointSet,
+    point_norms: &[f32],
+    centers: &PointSet,
+) -> (Vec<u32>, Vec<f32>) {
+    crate::kernels::assign::assign_argmin_cached(ps, cache_of(point_norms), centers, None)
+}
+
 /// k-means cost (sum over points of the min squared distance).
 pub fn cost(ps: &PointSet, centers: &PointSet) -> f64 {
     reduce::cost(ps, centers)
+}
+
+/// [`cost`] with a precomputed point-norm cache.
+pub fn cost_cached(ps: &PointSet, point_norms: &[f32], centers: &PointSet) -> f64 {
+    reduce::cost_cached(ps, cache_of(point_norms), centers, None)
+}
+
+/// [`lloyd_step`] with a precomputed point-norm cache: the assignment
+/// runs through the autotuned kernel engine (v2 blocked when it wins),
+/// then a second `O(nd)` pass folds the per-cluster sums/counts from the
+/// label array. At `k ≥ 8` the assignment pass dominates, so the extra
+/// pass costs a few percent and the blocked argmin pays for it severalfold.
+pub fn lloyd_step_cached(
+    ps: &PointSet,
+    point_norms: &[f32],
+    centers: &PointSet,
+) -> (Vec<f64>, Vec<u64>, f64) {
+    assert_eq!(ps.dim(), centers.dim());
+    assert!(!centers.is_empty());
+    let k = centers.len();
+    let d = ps.dim();
+    let (idx, mind2) = assign_cached(ps, point_norms, centers);
+    parallel_reduce(
+        ps.len(),
+        2048,
+        (vec![0.0f64; k * d], vec![0u64; k], 0.0f64),
+        |range| {
+            let mut sums = vec![0.0f64; k * d];
+            let mut counts = vec![0u64; k];
+            let mut cost = 0.0f64;
+            for i in range {
+                let j = idx[i] as usize;
+                cost += mind2[i] as f64;
+                counts[j] += 1;
+                let s = &mut sums[j * d..(j + 1) * d];
+                for (acc, &v) in s.iter_mut().zip(ps.row(i)) {
+                    *acc += v as f64;
+                }
+            }
+            (sums, counts, cost)
+        },
+        |(mut sa, mut ca, costa), (sb, cb, costb)| {
+            for (a, b) in sa.iter_mut().zip(&sb) {
+                *a += b;
+            }
+            for (a, b) in ca.iter_mut().zip(&cb) {
+                *a += b;
+            }
+            (sa, ca, costa + costb)
+        },
+    )
 }
 
 /// One Lloyd step over the whole set: per-cluster coordinate sums (f64,
@@ -125,6 +196,19 @@ mod tests {
             assert!((global - parts).abs() < 1e-3 * global.abs().max(1.0));
         }
         assert!((c - cost(&ps, &cs)).abs() <= 1e-6 * c);
+    }
+
+    #[test]
+    fn lloyd_step_cached_matches_fused() {
+        let (ps, cs) = case();
+        let pn = crate::kernels::norms::squared_norms(&ps);
+        let (sums_a, counts_a, cost_a) = lloyd_step(&ps, &cs);
+        let (sums_b, counts_b, cost_b) = lloyd_step_cached(&ps, &pn, &cs);
+        assert_eq!(counts_a, counts_b);
+        for (a, b) in sums_a.iter().zip(&sums_b) {
+            assert!((a - b).abs() <= 1e-6 * a.abs().max(1.0), "{a} vs {b}");
+        }
+        assert!((cost_a - cost_b).abs() <= 1e-6 * cost_a.max(1.0));
     }
 
     #[test]

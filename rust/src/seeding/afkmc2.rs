@@ -17,8 +17,9 @@
 
 use std::time::Instant;
 
-use crate::data::matrix::{d2, PointSet};
-use crate::kernels::d2::d2_update_min;
+use crate::data::matrix::PointSet;
+use crate::kernels::d2::d2_update_min_cached;
+use crate::kernels::{blocked, norms};
 use crate::rng::Pcg64;
 use crate::seeding::{Seeding, SeedingStats};
 
@@ -47,7 +48,13 @@ pub fn afkmc2(ps: &PointSet, k: usize, cfg: &Afkmc2Config, rng: &mut Pcg64) -> S
     let c1 = rng.index(n);
     let c1_row = ps.row(c1).to_vec();
     let mut d2_c1 = vec![f32::INFINITY; n];
-    d2_update_min(ps, &c1_row, &mut d2_c1);
+    // Kernels-v2 norm cache: one O(nd) pass reused across every chain
+    // step of every round — both endpoints of a chain-step distance are
+    // dataset points, so `DIST(y, S)^2` evaluations (the O(m k^2 d)
+    // dominant term) run on the norm trick with zero per-step norm work.
+    // The dense proposal build below shares the same cache.
+    let point_norms = norms::squared_norms(ps);
+    d2_update_min_cached(ps, &c1_row, &point_norms, &mut d2_c1);
     let mut q = vec![0.0f64; n];
     let mut total = 0.0f64;
     for (qi, &dd) in q.iter_mut().zip(&d2_c1) {
@@ -71,11 +78,16 @@ pub fn afkmc2(ps: &PointSet, k: usize, cfg: &Afkmc2Config, rng: &mut Pcg64) -> S
     let t1 = Instant::now();
     let mut indices = vec![c1];
 
-    // dist^2 to the current center set, evaluated by scanning S.
+    // dist^2 to the current center set, evaluated by scanning S on the
+    // norm trick (clamped at 0; both norms come from the per-run cache).
     let dist_to_set = |x: usize, set: &[usize]| -> f64 {
         let row = ps.row(x);
+        let xn = point_norms[x];
         set.iter()
-            .map(|&s| d2(row, ps.row(s)) as f64)
+            .map(|&s| {
+                let dd = xn + point_norms[s] - 2.0 * blocked::dot(row, ps.row(s));
+                dd.max(0.0) as f64
+            })
             .fold(f64::INFINITY, f64::min)
     };
     // O(log n) inverse-CDF sampling from q.

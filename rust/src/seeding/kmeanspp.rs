@@ -11,7 +11,7 @@
 use std::time::Instant;
 
 use crate::data::matrix::PointSet;
-use crate::kernels::{d2 as d2_kernel, reduce};
+use crate::kernels::{d2 as d2_kernel, norms, reduce};
 use crate::rng::Pcg64;
 use crate::seeding::{Seeding, SeedingStats};
 
@@ -23,13 +23,16 @@ pub fn kmeanspp(ps: &PointSet, k: usize, rng: &mut Pcg64) -> Seeding {
     let mut cur_d2 = vec![f32::INFINITY; n];
     let mut indices = Vec::with_capacity(k);
     let mut stats = SeedingStats::default();
+    // Kernels-v2 norm cache: one O(nd) pass here, reused by all k update
+    // rounds (the points never change).
+    let point_norms = norms::squared_norms(ps);
     stats.init_secs = t0.elapsed().as_secs_f64();
 
     let t1 = Instant::now();
     // First center uniform.
     let first = rng.index(n);
     indices.push(first);
-    update_d2_parallel(ps, first, &mut cur_d2);
+    update_round(ps, first, &point_norms, &mut cur_d2);
     stats.proposals += 1;
 
     while indices.len() < k {
@@ -46,10 +49,17 @@ pub fn kmeanspp(ps: &PointSet, k: usize, rng: &mut Pcg64) -> Seeding {
             }
         };
         indices.push(next);
-        update_d2_parallel(ps, next, &mut cur_d2);
+        update_round(ps, next, &point_norms, &mut cur_d2);
     }
     stats.select_secs = t1.elapsed().as_secs_f64();
     Seeding::from_indices(ps, indices, stats)
+}
+
+/// One seeding round's `D^2` update against dataset point `center`,
+/// through the autotuned kernel with the per-run norm cache.
+fn update_round(ps: &PointSet, center: usize, point_norms: &[f32], cur_d2: &mut [f32]) {
+    let c = ps.row(center).to_vec();
+    d2_kernel::d2_update_min_cached(ps, &c, point_norms, cur_d2);
 }
 
 /// `cur[i] = min(cur[i], ||x_i - center||^2)` against dataset point
@@ -113,9 +123,11 @@ pub fn kmeanspp_greedy(ps: &PointSet, k: usize, trials: usize, rng: &mut Pcg64) 
 
     let mut cur_d2 = vec![f32::INFINITY; n];
     let mut indices = Vec::with_capacity(k);
+    // One norm pass shared by every trial of every round.
+    let point_norms = norms::squared_norms(ps);
     let first = rng.index(n);
     indices.push(first);
-    update_d2_parallel(ps, first, &mut cur_d2);
+    update_round(ps, first, &point_norms, &mut cur_d2);
     stats.proposals += 1;
 
     let mut scratch = vec![0.0f32; n];
@@ -126,7 +138,7 @@ pub fn kmeanspp_greedy(ps: &PointSet, k: usize, trials: usize, rng: &mut Pcg64) 
             stats.proposals += 1;
             let Some(cand) = sample_d2(&cur_d2, rng) else { break };
             scratch.copy_from_slice(&cur_d2);
-            update_d2_parallel_to(ps, ps.row(cand), &mut scratch);
+            d2_kernel::d2_update_min_cached(ps, ps.row(cand), &point_norms, &mut scratch);
             let cost = reduce::sum_f32(&scratch);
             if best.as_ref().map_or(true, |(_, bc, _)| cost < *bc) {
                 best = Some((cand, cost, scratch.clone()));
@@ -144,7 +156,7 @@ pub fn kmeanspp_greedy(ps: &PointSet, k: usize, trials: usize, rng: &mut Pcg64) 
                 match (0..n).find(|i| !indices.contains(i)) {
                     Some(i) => {
                         indices.push(i);
-                        update_d2_parallel(ps, i, &mut cur_d2);
+                        update_round(ps, i, &point_norms, &mut cur_d2);
                     }
                     None => break,
                 }

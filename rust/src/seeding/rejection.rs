@@ -121,6 +121,19 @@ pub fn rejection_sampling(
     });
     let work: &PointSet = projected.as_ref().unwrap_or(ps);
 
+    // Kernels-v2 norm cache over the working set, computed once and
+    // reused by every acceptance test across all rounds: the exact
+    // oracle scans candidates via the norm trick (`dist_below_cached`),
+    // with the proposal's ‖x‖² looked up here and the opened centers'
+    // norms cached inside the oracle at insertion. The LSH oracles
+    // ignore the cache (their bucket probes are hash-bound, not
+    // distance-bound), so the O(nd) pass is only paid for the oracle
+    // that consumes it.
+    let work_norms = match cfg.oracle {
+        OracleKind::Exact => crate::kernels::norms::squared_norms(work),
+        OracleKind::LshPractical | OracleKind::LshRigorous => Vec::new(),
+    };
+
     let mut mt = MultiTree::init(work, &cfg.multitree, rng);
     let mut oracle: Box<dyn NnOracle> = match cfg.oracle {
         OracleKind::Exact => Box::new(ExactNn::default()),
@@ -180,7 +193,10 @@ pub fn rejection_sampling(
             debug_assert!(w_x > 0.0, "sampled an opened center");
             let u = rng.next_f64();
             let threshold = (u * c2 * w_x).sqrt() as f32;
-            !oracle.dist_below(work, work.row(x), threshold)
+            // `q_norm2` is only read by oracles that cache norms; the
+            // 0.0 placeholder feeds the default (ignoring) impl.
+            let q_norm2 = work_norms.get(x).copied().unwrap_or(0.0);
+            !oracle.dist_below_cached(work, work.row(x), q_norm2, threshold)
         };
         if accept {
             indices.push(x);

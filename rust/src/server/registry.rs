@@ -20,7 +20,7 @@ use crate::bail;
 use crate::data::io::{read_fbin, write_fbin};
 use crate::data::matrix::PointSet;
 use crate::error::{Context, Result};
-use crate::kernels::assign::assign_argmin;
+use crate::kernels::assign::assign_argmin_cached;
 use crate::server::json::{self, Json};
 
 /// Everything about a fitted model except the centers themselves.
@@ -92,14 +92,31 @@ impl ModelMeta {
     }
 }
 
-/// A fitted model: metadata + the `k × d` center matrix.
+/// A fitted model: metadata + the `k × d` center matrix + the squared
+/// center norms the v2 assignment kernel consumes.
 #[derive(Clone, Debug)]
 pub struct Model {
     pub meta: ModelMeta,
     pub centers: PointSet,
+    /// `‖c_j‖²` per center, computed **once** at registration/load
+    /// ([`Model::new`]) and reused by every assign request — the
+    /// kernels-v2 fix for re-deriving center distances from scratch per
+    /// request. Not persisted: it is a pure function of `centers`, so a
+    /// reload recomputes identical bits.
+    pub center_norms: Vec<f32>,
 }
 
 impl Model {
+    /// Build a model, deriving the center-norm cache.
+    pub fn new(meta: ModelMeta, centers: PointSet) -> Model {
+        let center_norms = crate::kernels::norms::squared_norms(&centers);
+        Model {
+            meta,
+            centers,
+            center_norms,
+        }
+    }
+
     /// Metadata plus the full center matrix (the `GET /models/{id}` body).
     pub fn full_json(&self) -> Json {
         match self.meta.to_json() {
@@ -113,7 +130,12 @@ impl Model {
 }
 
 /// Batched nearest-center assignment against a model — the serving
-/// layer's only path to distances, routed through the kernel engine.
+/// layer's only path to distances, routed through the kernel engine
+/// with the model's cached center norms (query-point norms are derived
+/// per request when the autotuned v2 kernel runs; the labels and
+/// distances are bitwise identical to an uncached
+/// [`crate::kernels::assign::assign_argmin`] call on the same bits, so
+/// repeated identical requests serve byte-identical responses).
 pub fn assign(model: &Model, points: &PointSet) -> Result<(Vec<u32>, Vec<f32>)> {
     if points.dim() != model.centers.dim() {
         bail!(
@@ -123,7 +145,7 @@ pub fn assign(model: &Model, points: &PointSet) -> Result<(Vec<u32>, Vec<f32>)> 
             points.dim()
         );
     }
-    Ok(assign_argmin(points, &model.centers))
+    Ok(assign_argmin_cached(points, None, &model.centers, Some(&model.center_norms)))
 }
 
 /// Thread-safe id → model map with optional on-disk persistence.
@@ -201,7 +223,7 @@ impl ModelRegistry {
                 meta.dim
             );
         }
-        Ok(Model { meta, centers })
+        Ok(Model::new(meta, centers))
     }
 
     /// Allocate the next model id (`m-<seq>`).
@@ -212,7 +234,7 @@ impl ModelRegistry {
     /// Register a model (persisting it first when a directory is set, so
     /// a model is never visible in memory but missing on disk).
     pub fn insert(&self, meta: ModelMeta, centers: PointSet) -> Result<Arc<Model>> {
-        let model = Arc::new(Model { meta, centers });
+        let model = Arc::new(Model::new(meta, centers));
         if let Some(models_dir) = self.models_dir() {
             std::fs::create_dir_all(&models_dir)
                 .with_context(|| format!("create {models_dir:?}"))?;
@@ -344,10 +366,7 @@ mod tests {
     #[test]
     fn assign_routes_through_kernel() {
         let cs = centers(4, 3, 3);
-        let model = Model {
-            meta: meta("m-1", 4, 3),
-            centers: cs.clone(),
-        };
+        let model = Model::new(meta("m-1", 4, 3), cs.clone());
         let queries = centers(50, 3, 4);
         let (labels, d2s) = assign(&model, &queries).unwrap();
         for i in 0..queries.len() {
@@ -361,12 +380,27 @@ mod tests {
     }
 
     #[test]
+    fn center_norm_cache_survives_reload() {
+        // The cache is derived, not persisted: a reload must recompute
+        // identical bits from the identical center matrix.
+        let dir = std::env::temp_dir().join("fkmpp_registry_norms_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cs = centers(6, 4, 9);
+        {
+            let reg = ModelRegistry::new(Some(dir.clone())).unwrap();
+            let id = reg.fresh_id();
+            let m = reg.insert(meta(&id, 6, 4), cs.clone()).unwrap();
+            assert_eq!(m.center_norms, crate::kernels::norms::squared_norms(&cs));
+        }
+        let reg = ModelRegistry::new(Some(dir)).unwrap();
+        let m = reg.get("m-1").unwrap();
+        assert_eq!(m.center_norms, crate::kernels::norms::squared_norms(&cs));
+    }
+
+    #[test]
     fn full_json_contains_centers() {
         let cs = centers(3, 2, 6);
-        let model = Model {
-            meta: meta("m-2", 3, 2),
-            centers: cs.clone(),
-        };
+        let model = Model::new(meta("m-2", 3, 2), cs.clone());
         let v = model.full_json();
         assert_eq!(v.get("id").and_then(Json::as_str), Some("m-2"));
         let back = json::points_from_json(v.get("centers").unwrap()).unwrap();

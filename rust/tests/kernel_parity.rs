@@ -1,8 +1,8 @@
-//! Property tests for the parallel distance-kernel engine: on random
-//! instances, every kernel must agree with a naive serial reference —
-//! bit-exactly where the arithmetic order is identical, within tree-sum
-//! rounding otherwise — across thread counts (`FKMPP_THREADS` in
-//! {1, 4}).
+//! Property tests for the **v1** parallel distance-kernel engine: on
+//! random instances, every kernel must agree with a naive serial
+//! reference — bit-exactly where the arithmetic order is identical,
+//! within tree-sum rounding otherwise — across thread counts
+//! (`FKMPP_THREADS` in {1, 4}).
 //!
 //! The thread-count sweep lives in ONE test function on purpose: the
 //! kernels read `FKMPP_THREADS` per call, so a single test owning the
@@ -10,6 +10,14 @@
 //! thread count on an assertion that depends on it (no kernel result
 //! may depend on the thread count — that is exactly what this file
 //! checks).
+//!
+//! Since the kernels-v2 rework the public entry points dispatch between
+//! the v1 loops and the blocked norm-trick loops
+//! (`FKMPP_KERNEL`, `rust/src/kernels/tune.rs`). This file pins
+//! `FKMPP_KERNEL=naive` — its references ARE the v1 semantics, and the
+//! bit-exact assertions below would be meaningless against the other
+//! formulation's rounding. The v2 kernels get the same treatment in
+//! `rust/tests/kernel_parity_v2.rs`.
 
 use fastkmeanspp::data::matrix::{d2, PointSet};
 use fastkmeanspp::kernels::{assign, d2 as d2_kernel, reduce};
@@ -50,6 +58,8 @@ fn naive_assign(ps: &PointSet, centers: &PointSet) -> (Vec<u32>, Vec<f32>) {
 
 #[test]
 fn kernels_match_serial_reference_across_thread_counts() {
+    // This binary has exactly one test, so it owns both env vars.
+    std::env::set_var("FKMPP_KERNEL", "naive");
     for &threads in &[1usize, 4] {
         std::env::set_var("FKMPP_THREADS", threads.to_string());
         let mut rng = Pcg64::seed_from(0xBEEF ^ threads as u64);
@@ -123,5 +133,6 @@ fn kernels_match_serial_reference_across_thread_counts() {
         picked.push(kmeanspp(&ps, 25, &mut rng).indices);
     }
     std::env::remove_var("FKMPP_THREADS");
+    std::env::remove_var("FKMPP_KERNEL");
     assert_eq!(picked[0], picked[1], "seeding must be thread-count invariant");
 }

@@ -1,0 +1,233 @@
+//! Property tests for the **kernels v2** blocked norm-trick engine
+//! (`rust/src/kernels/blocked.rs`) against the v1 scalar references:
+//!
+//! * dimensions d in {1, 3, 7, 8, 9, 16, 127, 128} — every remainder-lane
+//!   configuration around the 8-lane block width;
+//! * degenerate inputs: duplicate points, duplicate centers (exact ties),
+//!   zero vectors, n < k;
+//! * `FKMPP_THREADS` in {1, 4}, with blocked results (argmin, rescored
+//!   distances, cost sums) required to be **bitwise identical** across
+//!   thread counts — the PR 1 thread-invariance contract extended to the
+//!   v2 accumulators;
+//! * the `FKMPP_KERNEL=naive|blocked` dispatch override.
+//!
+//! Agreement contract: argmin **tie-breaking** is identical (bitwise-equal
+//! computed distances resolve to the lowest center index — exercised via
+//! duplicate centers, where the norm-trick values of the duplicates are
+//! bitwise equal too). On random data a *near*-tie may round differently
+//! under the two formulations, so where the argmins differ the two chosen
+//! centers' direct distances must agree within a 1e-4 relative tolerance
+//! — relative to the computation scale `‖x‖² + ‖c‖²`, the scale at which
+//! the norm trick's cancellation error lives. Where the argmins agree the
+//! v2 distance is asserted **bitwise equal** to v1 (v2 rescores winners
+//! with the same scalar kernel).
+//!
+//! Everything lives in ONE test function: this binary owns both env vars
+//! (same discipline as `kernel_parity.rs`).
+
+use fastkmeanspp::data::matrix::{d2, PointSet};
+use fastkmeanspp::kernels::{assign, blocked, norms, reduce};
+use fastkmeanspp::rng::Pcg64;
+
+/// Random points with injected degeneracies: one all-zeros row, one pair
+/// of duplicate rows.
+fn random_points(n: usize, d: usize, rng: &mut Pcg64) -> PointSet {
+    let mut rows: Vec<Vec<f32>> = (0..n)
+        .map(|_| (0..d).map(|_| (rng.next_gaussian() * 10.0) as f32).collect())
+        .collect();
+    if n >= 2 {
+        rows[n / 2] = vec![0.0; d]; // zero vector
+    }
+    if n >= 4 {
+        let dup = rows[1].clone();
+        rows[n - 1] = dup; // duplicate point
+    }
+    PointSet::from_rows(&rows)
+}
+
+/// v1 reference: scalar double loop, ascending center order, strict `<`.
+fn naive_assign(ps: &PointSet, centers: &PointSet) -> (Vec<u32>, Vec<f32>) {
+    let mut idx = vec![0u32; ps.len()];
+    let mut mind2 = vec![f32::INFINITY; ps.len()];
+    for i in 0..ps.len() {
+        for j in 0..centers.len() {
+            let dd = d2(ps.row(i), centers.row(j));
+            if dd < mind2[i] {
+                mind2[i] = dd;
+                idx[i] = j as u32;
+            }
+        }
+    }
+    (idx, mind2)
+}
+
+fn naive_update_min(ps: &PointSet, center: &[f32], cur: &mut [f32]) {
+    for i in 0..ps.len() {
+        let dd = d2(ps.row(i), center);
+        if dd < cur[i] {
+            cur[i] = dd;
+        }
+    }
+}
+
+#[test]
+fn blocked_kernels_match_v1_references() {
+    const DIMS: [usize; 8] = [1, 3, 7, 8, 9, 16, 127, 128];
+    // Per-(threads) collected fingerprints for the cross-thread bitwise
+    // invariance check: (assign ids, assign d2s, cost sum) per case.
+    let mut fingerprints: Vec<Vec<(Vec<u32>, Vec<f32>, f64)>> = Vec::new();
+
+    for &threads in &[1usize, 4] {
+        std::env::set_var("FKMPP_THREADS", threads.to_string());
+        let mut case_prints = Vec::new();
+        // Same seed for both thread counts: identical instances, so the
+        // fingerprints are comparable bit-for-bit.
+        let mut rng = Pcg64::seed_from(0x5EED_F00D);
+
+        for &d in &DIMS {
+            // Sizes straddle the kernels' inline/parallel cutoffs while
+            // keeping the scalar reference affordable at d=128.
+            let n = if d >= 127 { 1_400 } else { 4_600 };
+            let ps = random_points(n, d, &mut rng);
+            let pn = norms::squared_norms(&ps);
+
+            // k sweep crosses the 8-lane and 32-center-tile boundaries.
+            for &k in &[1usize, 7, 8, 9, 33, 40] {
+                let centers = ps.gather(&(0..k).map(|_| rng.index(n)).collect::<Vec<_>>());
+                let cn = norms::squared_norms(&centers);
+                let ctx = format!("threads={threads} d={d} n={n} k={k}");
+
+                let (gi, gd) = blocked::assign_argmin_blocked(&ps, &pn, &centers, &cn);
+                let (wi, wd) = naive_assign(&ps, &centers);
+                for i in 0..n {
+                    let scale = pn[i] + cn[wi[i] as usize] + 1.0;
+                    if gi[i] == wi[i] {
+                        assert_eq!(gd[i], wd[i], "rescored distance {ctx} i={i}");
+                    } else {
+                        // Near-tie: both choices must be equally near.
+                        assert!(
+                            (gd[i] - wd[i]).abs() <= 1e-4 * scale,
+                            "{ctx} i={i}: v2 center {} d2={} vs v1 center {} d2={}",
+                            gi[i],
+                            gd[i],
+                            wi[i],
+                            wd[i]
+                        );
+                    }
+                    assert!(gd[i] >= 0.0, "negative distance {ctx} i={i}");
+                }
+
+                // Cost reduction (forced blocked): rescored sums must
+                // match the v1 reference sum within the near-tie budget.
+                std::env::set_var("FKMPP_KERNEL", "blocked");
+                let got_cost = reduce::cost(&ps, &centers);
+                std::env::remove_var("FKMPP_KERNEL");
+                let want_cost: f64 = wd.iter().map(|&v| v as f64).sum();
+                let cost_scale: f64 = pn.iter().map(|&v| v as f64).sum::<f64>() + 1.0;
+                assert!(
+                    (got_cost - want_cost).abs() <= 1e-4 * cost_scale,
+                    "cost {ctx}: {got_cost} vs {want_cost}"
+                );
+
+                case_prints.push((gi, gd, got_cost));
+            }
+
+            // d2_update_min against a dataset row: norm-trick values agree
+            // within the norm scale; the opened point's own slot is
+            // EXACTLY zero (the norm-cache/dot-product identity).
+            let center_idx = n / 3;
+            let center = ps.row(center_idx).to_vec();
+            let cnorm = blocked::dot(&center, &center);
+            let mut got: Vec<f32> = (0..n).map(|_| rng.next_f32() * 500.0).collect();
+            got[center_idx] = f32::INFINITY;
+            let mut want = got.clone();
+            blocked::d2_update_min_blocked(&ps, &center, &pn, &mut got);
+            naive_update_min(&ps, &center, &mut want);
+            for i in 0..n {
+                let scale = pn[i] + cnorm + 1.0;
+                assert!(
+                    (got[i] - want[i]).abs() <= 1e-4 * scale,
+                    "d2_update d={d} i={i}: {} vs {}",
+                    got[i],
+                    want[i]
+                );
+                assert!(got[i] >= 0.0, "negative update d={d} i={i}");
+            }
+            assert_eq!(got[center_idx], 0.0, "self-distance must be exactly 0 (d={d})");
+        }
+
+        // Exact ties: a run of bitwise-duplicate centers (spanning
+        // multiple lane groups and the tile boundary) must resolve to the
+        // FIRST occurrence — identical to v1 — for every point.
+        {
+            let d = 9;
+            let ps = random_points(300, d, &mut rng);
+            let pn = norms::squared_norms(&ps);
+            let template = ps.row(17).to_vec();
+            let dup = PointSet::from_rows(&vec![template; 67]);
+            let cn = norms::squared_norms(&dup);
+            let (gi, gd) = blocked::assign_argmin_blocked(&ps, &pn, &dup, &cn);
+            let (wi, wd) = naive_assign(&ps, &dup);
+            assert_eq!(gi, wi, "duplicate-center tie-break (threads={threads})");
+            assert!(gi.iter().all(|&j| j == 0), "all ties must pick index 0");
+            assert_eq!(gd, wd, "tie distances are rescored => bitwise v1");
+            assert_eq!(gd[17], 0.0, "the template point sits on the center");
+        }
+
+        // n < k: more centers than points (seeders clamp, kernels must not).
+        {
+            let d = 7;
+            let ps = random_points(5, d, &mut rng);
+            let pn = norms::squared_norms(&ps);
+            let centers = ps.gather(&(0..17).map(|j| j % ps.len()).collect::<Vec<_>>());
+            let cn = norms::squared_norms(&centers);
+            let (gi, gd) = blocked::assign_argmin_blocked(&ps, &pn, &centers, &cn);
+            let (wi, wd) = naive_assign(&ps, &centers);
+            // Every point coincides with some center (gather repeats), so
+            // distances are exactly zero and ties resolve identically.
+            assert_eq!(gi, wi, "n<k tie-break (threads={threads})");
+            assert_eq!(gd, wd);
+            assert!(gd.iter().all(|&v| v == 0.0));
+        }
+
+        fingerprints.push(case_prints);
+    }
+    std::env::remove_var("FKMPP_THREADS");
+
+    // Thread-count invariance of the v2 kernels: identical bits at 1 and
+    // 4 threads — argmin, rescored distances AND the fixed-boundary cost
+    // sums (f64 equality, not tolerance).
+    assert_eq!(fingerprints[0].len(), fingerprints[1].len());
+    for (c, (a, b)) in fingerprints[0].iter().zip(&fingerprints[1]).enumerate() {
+        assert_eq!(a.0, b.0, "case {c}: argmin differs across thread counts");
+        assert_eq!(a.1, b.1, "case {c}: distances differ across thread counts");
+        assert_eq!(a.2.to_bits(), b.2.to_bits(), "case {c}: cost sum thread-variant");
+    }
+
+    // Dispatch override: FKMPP_KERNEL pins the implementation exactly.
+    {
+        let mut rng = Pcg64::seed_from(0xD15_BA7C4);
+        let ps = random_points(2_000, 16, &mut rng);
+        let centers = ps.gather(&(0..24).map(|_| rng.index(2_000)).collect::<Vec<_>>());
+        let pn = norms::squared_norms(&ps);
+        let cn = norms::squared_norms(&centers);
+
+        std::env::set_var("FKMPP_KERNEL", "naive");
+        let (ni, nd) = assign::assign_argmin(&ps, &centers);
+        let (ri, rd) = assign::assign_argmin_naive(&ps, &centers);
+        assert_eq!(ni, ri, "naive override must route to the v1 kernel");
+        assert_eq!(nd, rd);
+
+        std::env::set_var("FKMPP_KERNEL", "blocked");
+        let (bi, bd) = assign::assign_argmin(&ps, &centers);
+        let (vi, vd) = blocked::assign_argmin_blocked(&ps, &pn, &centers, &cn);
+        assert_eq!(bi, vi, "blocked override must route to the v2 kernel");
+        assert_eq!(bd, vd, "cached and on-the-fly norms must be the same bits");
+
+        // The cached entry point with explicit norms: same bits again.
+        let (ci, cd) = assign::assign_argmin_cached(&ps, Some(&pn), &centers, Some(&cn));
+        assert_eq!(ci, vi);
+        assert_eq!(cd, vd);
+        std::env::remove_var("FKMPP_KERNEL");
+    }
+}

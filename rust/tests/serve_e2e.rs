@@ -175,6 +175,29 @@ fn serve_fit_job_assign_roundtrip() {
     );
     assert_eq!(served_d2, want_d2, "served distances must match the kernel");
 
+    // Kernels-v2 satellite: the model's center-norm cache is computed
+    // once at registration; repeated identical assign requests must
+    // serve BYTE-identical label/distance vectors (no per-request
+    // recomputation drift).
+    let first_emit = (
+        assigned.get("labels").expect("labels").emit(),
+        assigned.get("d2").expect("d2").emit(),
+    );
+    for rep in 0..3 {
+        let (status, again) = http(
+            &addr,
+            "POST",
+            &format!("/models/{model_id}/assign"),
+            Some(&assign_body),
+        );
+        assert_eq!(status, 200, "repeat {rep}: {again:?}");
+        let emit = (
+            again.get("labels").expect("labels").emit(),
+            again.get("d2").expect("d2").emit(),
+        );
+        assert_eq!(emit, first_emit, "repeat {rep}: response must be byte-identical");
+    }
+
     // Error paths stay clean under load.
     let (status, _) = http(&addr, "GET", "/jobs/job-999", None);
     assert_eq!(status, 404);
@@ -196,12 +219,13 @@ fn serve_fit_job_assign_roundtrip() {
             >= 5.0,
         "{metrics:?}"
     );
+    // 120 query points x (1 + 3 repeated) assign calls.
     assert!(
         metrics
             .get("counters")
             .and_then(|c| c.get("assign.points"))
             .and_then(Json::as_usize)
-            == Some(120),
+            == Some(480),
         "{metrics:?}"
     );
 
