@@ -18,11 +18,18 @@
 //! cargo bench --bench micro_runtime -- --n 100000 --k 512
 //! cargo bench --bench micro_runtime -- --kernels-only
 //! cargo bench --bench micro_runtime -- --kernels-only --short --reps 2  # CI smoke
+//! cargo bench --bench micro_runtime -- --shard-only                     # k-means‖ table
 //! ```
 //!
 //! `--kernels-only` flags: `--short` (headline shape only, skip the
 //! scaling table), `--json <path>` (artifact path, default
 //! `BENCH_kernels.json`), `--seed <u64>`.
+//!
+//! `--shard-only`: k-means‖ (shards ∈ {1,4,8}) vs exact k-means++ vs
+//! fastkmeans++ seeding wall-clock at n=100k, d=128, k=64 (`--short`:
+//! n=20k, d=64), written as `BENCH_shard.json` via
+//! `coordinator/tables.rs::shard_json`. Same `--json`/`--seed`/`--reps`
+//! flags.
 //!
 //! The PJRT section skips (with a note) when `artifacts/` is missing or
 //! the `pjrt` feature is off. The useful output is points/second per
@@ -34,13 +41,16 @@
 use std::time::Instant;
 
 use fastkmeanspp::cli::Args;
-use fastkmeanspp::coordinator::tables::{kernels_json, KernelCell};
+use fastkmeanspp::coordinator::tables::{kernels_json, shard_json, KernelCell, ShardCell};
+use fastkmeanspp::data::matrix::PointSet;
 use fastkmeanspp::data::synth::{gaussian_mixture, SynthSpec};
 use fastkmeanspp::error::Context;
 use fastkmeanspp::kernels;
 use fastkmeanspp::metrics::Stats;
 use fastkmeanspp::rng::Pcg64;
 use fastkmeanspp::runtime::{native, pjrt::PjrtRuntime};
+use fastkmeanspp::seeding::Seeding;
+use fastkmeanspp::shard::kmeanspar::{kmeans_par, KMeansParConfig};
 
 /// Wall-clock `Stats` over `reps` calls of `f` (one warmup call first).
 fn time_reps(reps: usize, mut f: impl FnMut()) -> Stats {
@@ -140,6 +150,92 @@ fn kernels_v2_compare(reps: usize, short: bool, seed: u64) -> Vec<KernelCell> {
     cells
 }
 
+/// Sharded seeding wall-clock (`--shard-only`): k-means‖ at shards ∈
+/// {1, 4, 8} against the exact k-means++ and fastkmeans++ baselines at
+/// the acceptance shape n=100k, d=128, k=64 (`--short` shrinks to
+/// n=20k, d=64 for CI smoke). Threads stay at the ambient
+/// `FKMPP_THREADS` — the point of this table is the sharded engine's
+/// behavior under real parallelism. Cells land in `BENCH_shard.json`
+/// (the `grid_json`-shaped artifact, `tables::shard_json`).
+fn shard_compare(reps: usize, short: bool, seed: u64) -> Vec<ShardCell> {
+    let (n, d, k) = if short {
+        (20_000, 64, 64)
+    } else {
+        (100_000, 128, 64)
+    };
+    let ps = gaussian_mixture(
+        &SynthSpec {
+            n,
+            d,
+            k_true: k,
+            ..Default::default()
+        },
+        seed,
+    );
+    let dataset = format!("synth_n{n}_d{d}");
+    let mut cells: Vec<ShardCell> = Vec::new();
+    println!(
+        "\n== sharded seeding: kmeans-par vs kmeans++ vs fastkmeans++ \
+         (n={n}, d={d}, k={k}, threads={}) ==\n",
+        fastkmeanspp::parallel::num_threads()
+    );
+    println!("| algorithm | shards | mean s | min s | mean cost |");
+    println!("|---|---|---|---|---|");
+
+    fn bench_seeder(
+        ps: &PointSet,
+        reps: usize,
+        seed: u64,
+        f: &dyn Fn(&PointSet, &mut Pcg64) -> Seeding,
+    ) -> (Stats, Stats) {
+        let mut secs = Stats::new();
+        let mut cost = Stats::new();
+        for rep in 0..reps.max(1) {
+            let mut rng = Pcg64::seed_from(seed.wrapping_add(rep as u64));
+            let t0 = Instant::now();
+            let s = f(ps, &mut rng);
+            secs.push(t0.elapsed().as_secs_f64());
+            cost.push(kernels::reduce::cost(ps, &s.centers));
+        }
+        (secs, cost)
+    }
+
+    let mut record = |name: String, shards: usize, secs: Stats, cost: Stats| {
+        println!(
+            "| {name} | {shards} | {:.4} | {:.4} | {:.4e} |",
+            secs.mean(),
+            secs.min(),
+            cost.mean()
+        );
+        cells.push(ShardCell {
+            dataset: dataset.clone(),
+            algorithm: name,
+            k,
+            shards,
+            seconds: secs,
+            cost,
+        });
+    };
+
+    for &shards in &[1usize, 4, 8] {
+        let cfg = KMeansParConfig {
+            shards,
+            ..Default::default()
+        };
+        let (secs, cost) = bench_seeder(&ps, reps, seed, &|ps, rng| kmeans_par(ps, k, &cfg, rng));
+        record(format!("kmeans-par_s{shards}"), shards, secs, cost);
+    }
+    let (secs, cost) = bench_seeder(&ps, reps, seed, &|ps, rng| {
+        fastkmeanspp::seeding::kmeanspp::kmeanspp(ps, k, rng)
+    });
+    record("kmeanspp".to_string(), 1, secs, cost);
+    let (secs, cost) = bench_seeder(&ps, reps, seed, &|ps, rng| {
+        fastkmeanspp::seeding::fastkmeanspp::fast_kmeanspp(ps, k, &Default::default(), rng)
+    });
+    record("fastkmeanspp".to_string(), 1, secs, cost);
+    cells
+}
+
 /// Kernel thread-scaling: the acceptance shape for the kernel engine is
 /// >1.5x at 4 threads on n=100k, d=128; the table prints the measured
 /// speedup per (kernel, d, threads) cell so regressions are visible in
@@ -209,6 +305,17 @@ fn main() -> fastkmeanspp::error::Result<()> {
     let k = args.get_usize("k", 256)?;
     let d = args.get_usize("d", 74)?;
     let reps = args.get_usize("reps", 5)?;
+
+    if args.get("shard-only").is_some() {
+        let short = args.get("short").is_some();
+        let seed = args.get_u64("seed", 7)?;
+        let cells = shard_compare(reps, short, seed);
+        let path = args.get("json").unwrap_or("BENCH_shard.json");
+        let doc = shard_json(&cells, reps, seed, fastkmeanspp::parallel::num_threads());
+        std::fs::write(path, doc.emit() + "\n").with_context(|| format!("write {path}"))?;
+        println!("\nwrote {path}");
+        return Ok(());
+    }
 
     if args.get("kernels-only").is_some() {
         let short = args.get("short").is_some();

@@ -76,6 +76,13 @@ impl Args {
             None => Ok(default),
         }
     }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?}")),
+            None => Ok(default),
+        }
+    }
 }
 
 /// Assemble an [`ExperimentConfig`] from common flags.
@@ -108,6 +115,15 @@ pub fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     cfg.seed = args.get_u64("seed", cfg.seed)?;
     cfg.lloyd_iters = args.get_usize("lloyd", cfg.lloyd_iters)?;
     cfg.rejection.c = args.get_f32("c", cfg.rejection.c)?;
+    cfg.kmeanspar.shards = args.get_usize("shards", cfg.kmeanspar.shards)?;
+    cfg.kmeanspar.rounds = args.get_usize("rounds", cfg.kmeanspar.rounds)?;
+    cfg.kmeanspar.oversample = args.get_f64("oversample", cfg.kmeanspar.oversample)?;
+    if cfg.kmeanspar.shards == 0 || cfg.kmeanspar.rounds == 0 {
+        bail!("--shards and --rounds must be >= 1");
+    }
+    if !(cfg.kmeanspar.oversample > 0.0) {
+        bail!("--oversample must be > 0");
+    }
     cfg.quantize = args.get("no-quantize").is_none();
     if let Some(dir) = args.get("data-dir") {
         cfg.data_dir = PathBuf::from(dir);
@@ -139,6 +155,7 @@ USAGE:
   fkmpp seed     --dataset <kdd_sim|song_sim|census_sim> --algo <name> -k <K>
                  [--profile paper|scaled|smoke] [--seed N] [--lloyd ITERS]
                  [--c FLOAT] [--no-quantize]
+                 [--shards S] [--rounds R] [--oversample L]   (kmeans-par)
   fkmpp grid     --datasets a,b --algos x,y --ks 100,500 --reps 5
                  [--json results.json]
   fkmpp table    --which 1|2|...|8|all [--profile scaled] [--reps 5]
@@ -147,7 +164,8 @@ USAGE:
                  [--http-workers 4] [--fit-workers 1] [--no-persist]
   fkmpp info
 
-Algorithms: kmeanspp fastkmeanspp rejection rejection-exact afkmc2 uniform";
+Algorithms: kmeanspp fastkmeanspp rejection rejection-exact afkmc2 uniform greedy
+            kmeans-par (sharded k-means|| + weighted k-means++ recluster)";
 
 fn cmd_seed(args: &Args) -> Result<String> {
     let cfg = config_from_args(args)?;

@@ -8,6 +8,7 @@ use crate::data::registry::{DatasetId, Profile};
 use crate::seeding::afkmc2::Afkmc2Config;
 use crate::seeding::rejection::RejectionConfig;
 use crate::seeding::SeedingAlgorithm;
+use crate::shard::kmeanspar::KMeansParConfig;
 
 /// Full sweep specification.
 #[derive(Clone, Debug)]
@@ -30,6 +31,8 @@ pub struct ExperimentConfig {
     pub artifacts_dir: PathBuf,
     pub rejection: RejectionConfig,
     pub afkmc2: Afkmc2Config,
+    /// Sharded k-means‖ knobs (`--shards`, `--rounds`, `--oversample`).
+    pub kmeanspar: KMeansParConfig,
     /// Lloyd refinement iterations after seeding (0 = seeding only, as in
     /// the paper's tables).
     pub lloyd_iters: usize,
@@ -49,6 +52,7 @@ impl Default for ExperimentConfig {
             artifacts_dir: PathBuf::from("artifacts"),
             rejection: RejectionConfig::default(),
             afkmc2: Afkmc2Config::default(),
+            kmeanspar: KMeansParConfig::default(),
             lloyd_iters: 0,
         }
     }

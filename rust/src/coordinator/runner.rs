@@ -108,6 +108,9 @@ pub fn run_seeding(
         SeedingAlgorithm::KMeansPPGreedy => {
             crate::seeding::kmeanspp::kmeanspp_greedy(ps, k, 5, rng)
         }
+        SeedingAlgorithm::KMeansPar => {
+            crate::shard::kmeanspar::kmeans_par(ps, k, &cfg.kmeanspar, rng)
+        }
     }
 }
 

@@ -23,6 +23,20 @@ pub fn cost_scale(dataset: DatasetId) -> f64 {
     }
 }
 
+/// Non-paper algorithms appended to table renderings when (and only
+/// when) they have at least one cell for the dataset — the paper's five
+/// rows stay pinned to [`SeedingAlgorithm::paper_order`].
+fn extension_rows(res: &GridResults, dataset: DatasetId, ks: &[usize]) -> Vec<SeedingAlgorithm> {
+    [
+        SeedingAlgorithm::KMeansPar,
+        SeedingAlgorithm::KMeansPPGreedy,
+        SeedingAlgorithm::RejectionExact,
+    ]
+    .into_iter()
+    .filter(|&a| ks.iter().any(|&k| res.get(dataset, a, k).is_some()))
+    .collect()
+}
+
 fn header(ks: &[usize]) -> String {
     let mut s = String::from("| Algorithm |");
     for k in ks {
@@ -45,12 +59,13 @@ pub fn runtime_table(res: &GridResults, dataset: DatasetId, ks: &[usize]) -> Str
         dataset.name()
     );
     out.push_str(&header(ks));
-    let algos = [
+    let mut algos = vec![
         SeedingAlgorithm::FastKMeansPP,
         SeedingAlgorithm::Rejection,
         SeedingAlgorithm::KMeansPP,
         SeedingAlgorithm::Afkmc2,
     ];
+    algos.extend(extension_rows(res, dataset, ks));
     for algo in algos {
         let mut row = format!("| {} |", algo.paper_name());
         for &k in ks {
@@ -81,7 +96,10 @@ pub fn cost_table(res: &GridResults, dataset: DatasetId, ks: &[usize]) -> String
         dataset.name()
     );
     out.push_str(&header(ks));
-    for algo in SeedingAlgorithm::paper_order() {
+    let algos = SeedingAlgorithm::paper_order()
+        .into_iter()
+        .chain(extension_rows(res, dataset, ks));
+    for algo in algos {
         let mut row = format!("| {} |", algo.paper_name());
         for &k in ks {
             match res.get(dataset, algo, k) {
@@ -211,6 +229,56 @@ pub fn kernels_json(cells: &[KernelCell], reps: usize, seed: u64, threads: usize
         .collect();
     Json::obj(vec![
         ("profile", Json::str("kernel_bench")),
+        ("reps", Json::num(reps as f64)),
+        ("seed", Json::num(seed as f64)),
+        ("quantize", Json::Bool(false)),
+        ("lloyd_iters", Json::num(0.0)),
+        ("backend", Json::str("native")),
+        ("threads", Json::num(threads as f64)),
+        ("cells", Json::Arr(cell_docs)),
+    ])
+}
+
+/// One cell of the shard bench sweep
+/// (`benches/micro_runtime.rs --shard-only`): a seeder timed at one
+/// shard count.
+pub struct ShardCell {
+    /// Synthetic instance label, e.g. `synth_n100000_d128`.
+    pub dataset: String,
+    /// Seeder + shard count, e.g. `kmeans-par_s4` (`kmeanspp` /
+    /// `fastkmeanspp` rows carry their plain names — shards don't apply).
+    pub algorithm: String,
+    pub k: usize,
+    /// Shard count the cell ran with (1 for the unsharded baselines).
+    pub shards: usize,
+    /// Per-rep seeding wall-clock seconds.
+    pub seconds: Stats,
+    /// Per-rep seeding cost (k-means objective of the chosen centers).
+    pub cost: Stats,
+}
+
+/// `BENCH_shard.json` — the sharded-seeding bench artifact. Same
+/// top-level shape and per-cell field names as [`grid_json`] /
+/// [`kernels_json`] (one consumer reads every `BENCH_*.json`); shard
+/// cells add `shards` and carry real cost statistics.
+pub fn shard_json(cells: &[ShardCell], reps: usize, seed: u64, threads: usize) -> Json {
+    let cell_docs: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            Json::obj(vec![
+                ("dataset", Json::str(c.dataset.clone())),
+                ("algorithm", Json::str(c.algorithm.clone())),
+                ("k", Json::num(c.k as f64)),
+                ("shards", Json::num(c.shards as f64)),
+                ("seconds", stats_json(&c.seconds)),
+                ("cost", stats_json(&c.cost)),
+                ("lloyd_cost", Json::Null),
+                ("proposals_per_center", Json::Null),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("profile", Json::str("shard_bench")),
         ("reps", Json::num(reps as f64)),
         ("seed", Json::num(seed as f64)),
         ("quantize", Json::Bool(false)),
@@ -368,6 +436,58 @@ mod tests {
         assert!(cell.get("cost").map(Json::is_null).unwrap());
         let speedup = cell.get("speedup_vs_naive").and_then(Json::as_f64).unwrap();
         assert!((speedup - 1.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn extension_rows_render_only_when_present() {
+        let mut res = fake_results();
+        // No kmeans-par cells yet: the paper tables stay exactly five rows.
+        let t = cost_table(&res, DatasetId::KddSim, &[100]);
+        assert!(!t.contains("KMEANSPAR"), "{t}");
+        // Add one kmeans-par cell: it appears after the paper rows.
+        let mut cell = CellResult::default();
+        cell.seconds.push(1.1);
+        cell.cost.push(2.8e7);
+        res.cells.insert(
+            CellKey {
+                dataset: DatasetId::KddSim,
+                algorithm: SeedingAlgorithm::KMeansPar,
+                k: 100,
+            },
+            cell,
+        );
+        let t = cost_table(&res, DatasetId::KddSim, &[100]);
+        assert!(t.contains("KMEANSPAR"), "{t}");
+        let rt = runtime_table(&res, DatasetId::KddSim, &[100]);
+        assert!(rt.contains("KMEANSPAR"), "{rt}");
+    }
+
+    #[test]
+    fn shard_json_round_trips_with_grid_shape() {
+        let mut s = Stats::new();
+        s.push(0.4);
+        let mut c = Stats::new();
+        c.push(3.1e7);
+        let cells = vec![ShardCell {
+            dataset: "synth_n100000_d128".to_string(),
+            algorithm: "kmeans-par_s4".to_string(),
+            k: 64,
+            shards: 4,
+            seconds: s,
+            cost: c,
+        }];
+        let doc = shard_json(&cells, 3, 7, 4);
+        let back = crate::server::json::parse(&doc.emit()).unwrap();
+        assert_eq!(back.get("profile").and_then(Json::as_str), Some("shard_bench"));
+        assert_eq!(back.get("reps").and_then(Json::as_usize), Some(3));
+        let arr = back.get("cells").and_then(Json::as_array).unwrap();
+        assert_eq!(arr.len(), 1);
+        let cell = &arr[0];
+        assert_eq!(cell.get("algorithm").and_then(Json::as_str), Some("kmeans-par_s4"));
+        assert_eq!(cell.get("shards").and_then(Json::as_usize), Some(4));
+        assert!(cell.get("seconds").unwrap().get("mean").is_some());
+        assert!(cell.get("cost").unwrap().get("mean").is_some());
+        assert!(cell.get("lloyd_cost").map(Json::is_null).unwrap());
     }
 
     #[test]

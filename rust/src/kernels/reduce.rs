@@ -131,6 +131,101 @@ fn cost_blocked(ps: &PointSet, pn: &[f32], centers: &PointSet, cn: &[f32]) -> f6
     partials.iter().sum()
 }
 
+/// Weighted k-means cost: `Σ_i w_i · min_j ||x_i - c_j||²` — the
+/// objective of a [`crate::shard::weighted::WeightedPointSet`] (candidate
+/// sets whose weights are assignment counts, coresets). Same fused
+/// min-distance + fixed-`SUM_BLOCK` f64 reduction as [`cost`]; the
+/// weight multiply happens in f64 *after* the f32 min-distance, so
+/// `w ≡ 1` reproduces [`cost`] bit-for-bit and results stay
+/// thread-count-invariant (block boundaries never move).
+pub fn cost_weighted(ps: &PointSet, weights: &[f32], centers: &PointSet) -> f64 {
+    cost_weighted_cached(ps, weights, None, centers, None)
+}
+
+/// [`cost_weighted`] with optional precomputed squared-norm caches
+/// (consulted only when the autotuner picks the v2 kernel).
+pub fn cost_weighted_cached(
+    ps: &PointSet,
+    weights: &[f32],
+    point_norms: Option<&[f32]>,
+    centers: &PointSet,
+    center_norms: Option<&[f32]>,
+) -> f64 {
+    assert_eq!(ps.dim(), centers.dim(), "dimension mismatch");
+    assert_eq!(weights.len(), ps.len(), "weight array length mismatch");
+    assert!(!centers.is_empty(), "no centers");
+    match tune::kernel_for(tune::Op::Assign, ps.len(), ps.dim(), centers.len()) {
+        tune::Kernel::Naive => cost_weighted_naive(ps, weights, centers),
+        tune::Kernel::Blocked => {
+            let (mut pn_owned, mut cn_owned) = (None, None);
+            let pn = norms::resolve(point_norms, ps, &mut pn_owned);
+            let cn = norms::resolve(center_norms, centers, &mut cn_owned);
+            cost_weighted_blocked(ps, weights, pn, centers, cn)
+        }
+    }
+}
+
+/// The v1 weighted cost reduction (direct distances, center-tiled) —
+/// the reference the weighted-parity suite measures against.
+pub fn cost_weighted_naive(ps: &PointSet, weights: &[f32], centers: &PointSet) -> f64 {
+    assert_eq!(ps.dim(), centers.dim(), "dimension mismatch");
+    assert_eq!(weights.len(), ps.len(), "weight array length mismatch");
+    assert!(!centers.is_empty(), "no centers");
+    let n = ps.len();
+    let nblocks = n.div_ceil(SUM_BLOCK);
+    let mut partials = vec![0.0f64; nblocks];
+    parallel_chunks_mut(&mut partials, 1, 1, |start, chunk| {
+        let mut scratch = vec![0.0f32; SUM_BLOCK];
+        for (slot, b) in chunk.iter_mut().zip(start..) {
+            let lo = b * SUM_BLOCK;
+            let hi = (lo + SUM_BLOCK).min(n);
+            let ds = &mut scratch[..hi - lo];
+            min_d2_block(ps, centers, lo, ds);
+            *slot = ds
+                .iter()
+                .zip(&weights[lo..hi])
+                .map(|(&d, &w)| d as f64 * w as f64)
+                .sum();
+        }
+    });
+    partials.iter().sum()
+}
+
+/// The v2 weighted cost reduction: blocked norm-trick argmin per fixed
+/// block, winners rescored with the direct scalar kernel, weights folded
+/// in f64 (same rounding discipline as [`cost`]'s v2 path).
+fn cost_weighted_blocked(
+    ps: &PointSet,
+    weights: &[f32],
+    pn: &[f32],
+    centers: &PointSet,
+    cn: &[f32],
+) -> f64 {
+    let n = ps.len();
+    let nblocks = n.div_ceil(SUM_BLOCK);
+    let mut partials = vec![0.0f64; nblocks];
+    parallel_chunks_mut(&mut partials, 1, 1, |start, chunk| {
+        let mut ds_scratch = vec![0.0f32; SUM_BLOCK];
+        let mut ids_scratch = vec![0u32; SUM_BLOCK];
+        for (slot, b) in chunk.iter_mut().zip(start..) {
+            let lo = b * SUM_BLOCK;
+            let hi = (lo + SUM_BLOCK).min(n);
+            let ds = &mut ds_scratch[..hi - lo];
+            let ids = &mut ids_scratch[..hi - lo];
+            ds.fill(f32::INFINITY);
+            ids.fill(0);
+            blocked::argmin_core(ps, pn, centers, cn, lo, ids, ds);
+            blocked::rescore_block(ps, centers, lo, ids, ds);
+            *slot = ds
+                .iter()
+                .zip(&weights[lo..hi])
+                .map(|(&d, &w)| d as f64 * w as f64)
+                .sum();
+        }
+    });
+    partials.iter().sum()
+}
+
 /// `max_i ||x_i - pivot||^2` — the parallel max-reduction behind the
 /// `MAXDIST` upper bound every tree embedding build starts with.
 pub fn max_d2_to(ps: &PointSet, pivot: &[f32]) -> f32 {
@@ -210,6 +305,31 @@ mod tests {
     fn cost_zero_when_centers_cover() {
         let ps = ps(50, 4);
         assert_eq!(cost(&ps, &ps), 0.0);
+    }
+
+    #[test]
+    fn cost_weighted_unit_weights_matches_cost_bitwise() {
+        let ps = ps(6_000, 8);
+        let centers = ps.gather(&[3, 500, 4_000]);
+        let unit = vec![1.0f32; ps.len()];
+        assert_eq!(cost_weighted(&ps, &unit, &centers), cost(&ps, &centers));
+    }
+
+    #[test]
+    fn cost_weighted_matches_serial_reference() {
+        let ps = ps(5_000, 6);
+        let centers = ps.gather(&[0, 999, 2_500, 4_999]);
+        let weights: Vec<f32> = (0..ps.len()).map(|i| (i % 7) as f32 * 0.5).collect();
+        let (_, mind2) = crate::kernels::assign::assign_argmin(&ps, &centers);
+        let want: f64 = mind2
+            .iter()
+            .zip(&weights)
+            .map(|(&d, &w)| d as f64 * w as f64)
+            .sum();
+        let got = cost_weighted(&ps, &weights, &centers);
+        assert!((got - want).abs() <= 1e-9 * want.max(1.0), "{got} vs {want}");
+        // Zero weights kill the whole sum regardless of distances.
+        assert_eq!(cost_weighted(&ps, &vec![0.0; ps.len()], &centers), 0.0);
     }
 
     #[test]

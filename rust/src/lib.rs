@@ -32,7 +32,12 @@
 //! * a zero-dependency **serving layer** ([`server`], `fkmpp serve`):
 //!   HTTP/1.1 + hand-rolled JSON, an in-memory model registry with disk
 //!   persistence, async fit jobs, and batched assignment routed through
-//!   the kernel engine.
+//!   the kernel engine;
+//! * a **sharded seeding engine** ([`shard`], `--algo kmeans-par`):
+//!   k-means‖ oversampling rounds over data shards plus weighted
+//!   k-means++ reclustering of the candidate set — the first explicit
+//!   coordinator/shard split, with bitwise shard-count and thread-count
+//!   invariance.
 //!
 //! Python/JAX appears only at build time (`make artifacts`); the request
 //! path is pure rust. The crate has **zero external dependencies**: error
@@ -71,6 +76,7 @@ pub mod runtime;
 pub mod sampletree;
 pub mod seeding;
 pub mod server;
+pub mod shard;
 
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
@@ -85,4 +91,7 @@ pub mod prelude {
     pub use crate::seeding::{
         afkmc2::Afkmc2Config, rejection::RejectionConfig, Seeding, SeedingAlgorithm,
     };
+    pub use crate::shard::kmeanspar::KMeansParConfig;
+    pub use crate::shard::weighted::WeightedPointSet;
+    pub use crate::shard::ShardedDataset;
 }

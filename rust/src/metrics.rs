@@ -196,6 +196,18 @@ impl Metrics {
     }
 }
 
+/// Process-wide metrics sink for components that run without a context
+/// handle — the sharded seeding engine ([`crate::shard`]) records its
+/// round counters and timings here from wherever it is invoked (CLI,
+/// benches, or a server fit worker). `fkmpp serve` merges this sink into
+/// the `/metrics` payload, so shard-round counters are observable after
+/// a `kmeans_par` fit. Counters only ever accumulate; readers must
+/// assert deltas or lower bounds, not absolute values.
+pub fn global() -> &'static Metrics {
+    static GLOBAL: std::sync::OnceLock<Metrics> = std::sync::OnceLock::new();
+    GLOBAL.get_or_init(Metrics::new)
+}
+
 /// Format a duration as human-readable seconds/millis.
 pub fn fmt_duration(d: Duration) -> String {
     let s = d.as_secs_f64();

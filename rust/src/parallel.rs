@@ -173,6 +173,59 @@ where
         .collect()
 }
 
+/// Split a mutable slice at the given end offsets (strictly increasing,
+/// last one == `data.len()`) and run `f(piece_index, piece)` on each
+/// piece in parallel, pieces claimed dynamically.
+///
+/// Unlike [`parallel_chunks_mut`] the pieces may be **uneven** — this is
+/// the shape of the sharded seeding engine, where each piece is one data
+/// shard's slice of a global `D²` array and the last shard takes the
+/// remainder. Piece identity (not a flat offset) is passed to `f` so the
+/// callback can pair each slice with its shard's context.
+pub fn parallel_slices_mut<T, F>(data: &mut [T], ends: &[usize], f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert_eq!(ends.last().copied().unwrap_or(0), data.len(), "ends must cover data");
+    let threads = num_threads().min(ends.len()).max(1);
+    if threads <= 1 {
+        let mut lo = 0;
+        for (p, &hi) in ends.iter().enumerate() {
+            f(p, &mut data[lo..hi]);
+            lo = hi;
+        }
+        return;
+    }
+    // Pre-split into disjoint pieces; workers pop (index, piece) pairs
+    // off a shared iterator, so ownership of each &mut sub-slice moves
+    // into exactly one worker without unsafe.
+    let mut pieces: Vec<(usize, &mut [T])> = Vec::with_capacity(ends.len());
+    let mut rest = data;
+    let mut lo = 0;
+    for (p, &hi) in ends.iter().enumerate() {
+        assert!(hi >= lo, "ends must be non-decreasing");
+        let (piece, tail) = rest.split_at_mut(hi - lo);
+        pieces.push((p, piece));
+        rest = tail;
+        lo = hi;
+    }
+    let queue = Mutex::new(pieces.into_iter());
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            let f = &f;
+            let queue = &queue;
+            s.spawn(move || loop {
+                let next = queue.lock().unwrap().next();
+                match next {
+                    Some((p, piece)) => f(p, piece),
+                    None => break,
+                }
+            });
+        }
+    });
+}
+
 /// Work-stealing-ish dynamic parallel-for over indivisible items (used
 /// where per-item cost is very uneven, e.g. per-k bench cells).
 pub fn parallel_items<F>(n: usize, f: F)
@@ -290,6 +343,32 @@ mod tests {
             assert_eq!(a[i], i as u64);
             assert_eq!(b[i], 2 * i as u64);
         }
+    }
+
+    #[test]
+    fn slices_mut_covers_uneven_pieces() {
+        // Shard-shaped split: uneven piece lengths, remainder in the last.
+        let n = 10_007;
+        let mut data = vec![0u32; n];
+        let ends = vec![3_000, 3_001, 7_777, n];
+        parallel_slices_mut(&mut data, &ends, |p, piece| {
+            for slot in piece.iter_mut() {
+                *slot = p as u32 + 1;
+            }
+        });
+        let mut lo = 0;
+        for (p, &hi) in ends.iter().enumerate() {
+            assert!(data[lo..hi].iter().all(|&v| v == p as u32 + 1), "piece {p}");
+            lo = hi;
+        }
+        // Degenerate shapes: empty data, single piece.
+        parallel_slices_mut(&mut [] as &mut [u32], &[], |_, _| panic!("no pieces"));
+        let mut one = vec![0u8; 5];
+        parallel_slices_mut(&mut one, &[5], |p, piece| {
+            assert_eq!(p, 0);
+            piece.fill(9);
+        });
+        assert_eq!(one, vec![9; 5]);
     }
 
     #[test]

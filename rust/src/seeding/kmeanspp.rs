@@ -16,31 +16,90 @@ use crate::rng::Pcg64;
 use crate::seeding::{Seeding, SeedingStats};
 
 /// Exact k-means++ seeding.
+///
+/// The first center is drawn uniformly through the same blocked prefix
+/// scan as every later `D²` draw ([`sample_d2`] over unit weights), so
+/// the weighted generalization ([`kmeanspp_core`] with `Some(weights)`,
+/// the engine behind [`crate::shard::weighted::weighted_kmeanspp`]) is
+/// bitwise-identical to this function when all weights are 1.
 pub fn kmeanspp(ps: &PointSet, k: usize, rng: &mut Pcg64) -> Seeding {
+    kmeanspp_core(ps, None, k, rng)
+}
+
+/// The exact `D²`-seeding engine, optionally **weighted**: with
+/// `weights = Some(w)` the first center is drawn `∝ w_i` and every later
+/// round samples `∝ w_i · D²(x_i)` — honest weighted k-means++ over
+/// weighted instances (candidate sets with assignment-count weights,
+/// coresets). With `None` it is the plain paper baseline.
+///
+/// **Unit-weight parity contract** (locked by
+/// `rust/tests/weighted_parity.rs`): `Some(&[1.0; n])` runs bitwise
+/// identically to `None` under the same RNG state. Both paths make the
+/// same [`sample_d2`] calls on bitwise-equal arrays — the first draw
+/// scans the weight array itself (all ones ≡ the unweighted unit array)
+/// and the round draws scan `w_i · D²_i`, which is `D²_i` exactly when
+/// `w_i = 1.0` (IEEE multiplication by one is exact).
+pub fn kmeanspp_core(
+    ps: &PointSet,
+    weights: Option<&[f32]>,
+    k: usize,
+    rng: &mut Pcg64,
+) -> Seeding {
     let k = k.min(ps.len());
     let t0 = Instant::now();
     let n = ps.len();
+    if let Some(w) = weights {
+        assert_eq!(w.len(), n, "weight array length mismatch");
+    }
     let mut cur_d2 = vec![f32::INFINITY; n];
     let mut indices = Vec::with_capacity(k);
     let mut stats = SeedingStats::default();
+    if k == 0 {
+        return Seeding::from_indices(ps, indices, stats);
+    }
     // Kernels-v2 norm cache: one O(nd) pass here, reused by all k update
     // rounds (the points never change).
     let point_norms = norms::squared_norms(ps);
     stats.init_secs = t0.elapsed().as_secs_f64();
 
     let t1 = Instant::now();
-    // First center uniform.
-    let first = rng.index(n);
+    // First center ∝ weight (uniform when unweighted), via the same
+    // blocked prefix scan as the round draws. A degenerate all-zero
+    // weight array falls back to a uniform index.
+    let first = {
+        let unit;
+        let w: &[f32] = match weights {
+            Some(w) => w,
+            None => {
+                unit = vec![1.0f32; n];
+                &unit
+            }
+        };
+        sample_d2(w, rng).unwrap_or_else(|| rng.index(n))
+    };
     indices.push(first);
     update_round(ps, first, &point_norms, &mut cur_d2);
     stats.proposals += 1;
 
+    // Weighted sampling scratch: sw[i] = w[i] · D²[i], recomputed per
+    // round. The unweighted path samples `cur_d2` directly — bitwise the
+    // same draws, since 1.0 · x == x.
+    let mut sw = weights.map(|_| vec![0.0f32; n]);
     while indices.len() < k {
         stats.proposals += 1;
-        let next = match sample_d2(&cur_d2, rng) {
+        let sampled = match (weights, sw.as_mut()) {
+            (Some(w), Some(sw)) => {
+                for ((s, &wi), &di) in sw.iter_mut().zip(w).zip(&cur_d2) {
+                    *s = wi * di;
+                }
+                sample_d2(sw, rng)
+            }
+            _ => sample_d2(&cur_d2, rng),
+        };
+        let next = match sampled {
             Some(i) => i,
             None => {
-                // All remaining points coincide with centers; fill with
+                // All remaining mass sits on chosen centers; fill with
                 // arbitrary distinct indices to honor the k contract.
                 match (0..n).find(|i| !indices.contains(i)) {
                     Some(i) => i,

@@ -10,6 +10,7 @@
 //! | `fastkmeanspp`   | Alg. 3    | `O(nd log(dΔ) + n log(dΔ) log n)` |
 //! | `rejection`      | Alg. 4    | near-linear + LSH terms        |
 //! | `rejection-exact`| ablation  | the `Ω(k^2)` no-LSH variant §5 |
+//! | `kmeans-par`     | extension | k-means‖ over data shards ([`crate::shard`]) |
 
 pub mod afkmc2;
 pub mod fastkmeanspp;
@@ -72,9 +73,29 @@ pub enum SeedingAlgorithm {
     /// Greedy k-means++ (best of several D^2 draws per round) — the
     /// quality upper-bound reference; not in the paper's tables.
     KMeansPPGreedy,
+    /// k-means‖ over data shards with a weighted k-means++ recluster
+    /// ([`crate::shard::kmeanspar`]) — the scale-out seeder; not in the
+    /// paper's tables.
+    KMeansPar,
 }
 
 impl SeedingAlgorithm {
+    /// Every registered algorithm (paper five + extensions), in registry
+    /// order. The single source of truth for round-trip tests and the
+    /// parse error message.
+    pub fn all() -> [SeedingAlgorithm; 8] {
+        [
+            SeedingAlgorithm::KMeansPP,
+            SeedingAlgorithm::FastKMeansPP,
+            SeedingAlgorithm::Rejection,
+            SeedingAlgorithm::RejectionExact,
+            SeedingAlgorithm::Afkmc2,
+            SeedingAlgorithm::Uniform,
+            SeedingAlgorithm::KMeansPPGreedy,
+            SeedingAlgorithm::KMeansPar,
+        ]
+    }
+
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s {
             "kmeanspp" | "kmeans++" => SeedingAlgorithm::KMeansPP,
@@ -84,10 +105,13 @@ impl SeedingAlgorithm {
             "rejection-exact" => SeedingAlgorithm::RejectionExact,
             "afkmc2" => SeedingAlgorithm::Afkmc2,
             "uniform" => SeedingAlgorithm::Uniform,
-            _ => bail!(
-                "unknown algorithm {s:?} (kmeanspp|fastkmeanspp|rejection|\
-                 rejection-exact|afkmc2|uniform|greedy)"
-            ),
+            "kmeans-par" | "kmeanspar" | "kmeans_par" | "kmeans||" => SeedingAlgorithm::KMeansPar,
+            _ => {
+                // Enumerate the canonical names from the registry so the
+                // message can never drift from the actual algorithm set.
+                let names: Vec<&str> = Self::all().iter().map(|a| a.name()).collect();
+                bail!("unknown algorithm {s:?} (valid: {})", names.join("|"))
+            }
         })
     }
 
@@ -100,6 +124,7 @@ impl SeedingAlgorithm {
             SeedingAlgorithm::Afkmc2 => "afkmc2",
             SeedingAlgorithm::Uniform => "uniform",
             SeedingAlgorithm::KMeansPPGreedy => "greedy",
+            SeedingAlgorithm::KMeansPar => "kmeans-par",
         }
     }
 
@@ -113,10 +138,13 @@ impl SeedingAlgorithm {
             SeedingAlgorithm::Afkmc2 => "AFKMC2",
             SeedingAlgorithm::Uniform => "UNIFORMSAMPLING",
             SeedingAlgorithm::KMeansPPGreedy => "GREEDY-K-MEANS++",
+            SeedingAlgorithm::KMeansPar => "KMEANSPAR",
         }
     }
 
-    /// All algorithms in the paper's table order.
+    /// All algorithms in the paper's table order. Pinned to the paper's
+    /// five — extensions (`greedy`, `kmeans-par`) are appended to tables
+    /// only when their cells exist ([`crate::coordinator::tables`]).
     pub fn paper_order() -> [SeedingAlgorithm; 5] {
         [
             SeedingAlgorithm::FastKMeansPP,
@@ -149,6 +177,9 @@ impl SeedingAlgorithm {
             }
             SeedingAlgorithm::Uniform => uniform::uniform_sampling(ps, k, rng),
             SeedingAlgorithm::KMeansPPGreedy => kmeanspp::kmeanspp_greedy(ps, k, 5, rng),
+            SeedingAlgorithm::KMeansPar => {
+                crate::shard::kmeanspar::kmeans_par(ps, k, &Default::default(), rng)
+            }
         }
     }
 }
@@ -160,24 +191,44 @@ mod tests {
 
     #[test]
     fn parse_all_names() {
-        for a in [
-            SeedingAlgorithm::KMeansPP,
-            SeedingAlgorithm::FastKMeansPP,
-            SeedingAlgorithm::Rejection,
-            SeedingAlgorithm::RejectionExact,
-            SeedingAlgorithm::Afkmc2,
-            SeedingAlgorithm::Uniform,
-            SeedingAlgorithm::KMeansPPGreedy,
-        ] {
+        for a in SeedingAlgorithm::all() {
             assert_eq!(SeedingAlgorithm::parse(a.name()).unwrap(), a);
         }
+        // The serve-layer spelling of the sharded seeder.
+        assert_eq!(
+            SeedingAlgorithm::parse("kmeans_par").unwrap(),
+            SeedingAlgorithm::KMeansPar
+        );
         assert!(SeedingAlgorithm::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn parse_error_enumerates_every_algorithm_name() {
+        // Satellite lock: the error message must name every valid
+        // algorithm (it is the CLI's discovery surface), and the paper
+        // table order must stay pinned to the paper's five.
+        let err = format!("{:#}", SeedingAlgorithm::parse("bogus").unwrap_err());
+        for a in SeedingAlgorithm::all() {
+            assert!(err.contains(a.name()), "{:?} missing from {err:?}", a.name());
+        }
+        assert!(err.contains("kmeans-par"), "{err:?}");
+        assert_eq!(
+            SeedingAlgorithm::paper_order(),
+            [
+                SeedingAlgorithm::FastKMeansPP,
+                SeedingAlgorithm::Rejection,
+                SeedingAlgorithm::KMeansPP,
+                SeedingAlgorithm::Afkmc2,
+                SeedingAlgorithm::Uniform,
+            ],
+            "paper_order must stay the paper's five"
+        );
     }
 
     #[test]
     fn every_algorithm_returns_k_distinct_valid_indices() {
         let ps = separated_grid(5, 40, 4, 1);
-        for a in SeedingAlgorithm::paper_order() {
+        for a in SeedingAlgorithm::all() {
             let mut rng = Pcg64::seed_from(2);
             let s = a.run(&ps, 8, &mut rng);
             assert_eq!(s.k(), 8, "{}", a.name());

@@ -288,20 +288,28 @@ fn handle_healthz(ctx: &ServerCtx) -> Response {
 
 fn handle_metrics(ctx: &ServerCtx) -> Response {
     let (queued, running, done, failed) = ctx.jobs.counts();
-    let counters = Json::Obj(
-        ctx.metrics
-            .counters_snapshot()
-            .into_iter()
-            .map(|(name, v)| (name.to_string(), Json::num(v as f64)))
-            .collect(),
-    );
-    let timings = Json::Obj(
-        ctx.metrics
-            .timings_snapshot()
-            .into_iter()
-            .map(|(name, stats)| (name.to_string(), json::stats_json(&stats)))
-            .collect(),
-    );
+    // Request-scoped counters live on the server context; engine-level
+    // counters (the shard seeding rounds, `shard.*`) accumulate in the
+    // process-wide sink because fits run deep inside workers with no
+    // context handle. `/metrics` surfaces both, merged name-ordered (the
+    // namespaces are disjoint: `http.`/`fit.`/`assign.` vs `shard.`).
+    let global = crate::metrics::global();
+    let counters: std::collections::BTreeMap<String, Json> = ctx
+        .metrics
+        .counters_snapshot()
+        .into_iter()
+        .chain(global.counters_snapshot())
+        .map(|(name, v)| (name.to_string(), Json::num(v as f64)))
+        .collect();
+    let counters = Json::Obj(counters.into_iter().collect());
+    let timings: std::collections::BTreeMap<String, Json> = ctx
+        .metrics
+        .timings_snapshot()
+        .into_iter()
+        .chain(global.timings_snapshot())
+        .map(|(name, stats)| (name.to_string(), json::stats_json(&stats)))
+        .collect();
+    let timings = Json::Obj(timings.into_iter().collect());
     Response::json(
         200,
         &Json::obj(vec![
@@ -325,6 +333,9 @@ fn handle_metrics(ctx: &ServerCtx) -> Response {
 /// `POST /fit` body:
 /// `{"points": [[..],..] | "dataset": "kdd_sim", "profile": "smoke",
 ///   "algo": "rejection", "k": 10, "seed": 42, "lloyd": 0}`.
+/// With `"algo"/"algorithm": "kmeans_par"` the sharded seeder runs;
+/// optional `"shards"`, `"rounds"` and `"oversample"` override its
+/// defaults.
 fn handle_fit(req: &Request, ctx: &ServerCtx) -> RouteResult {
     let body = req.body_str().map_err(bad)?;
     let v = json::parse(body).map_err(bad)?;
@@ -340,6 +351,22 @@ fn handle_fit(req: &Request, ctx: &ServerCtx) -> RouteResult {
     };
     let seed = v.get("seed").and_then(Json::as_u64).unwrap_or(42);
     let lloyd_iters = v.get("lloyd").and_then(Json::as_usize).unwrap_or(0);
+    let mut kmeanspar = crate::shard::kmeanspar::KMeansParConfig::default();
+    if let Some(s) = v.get("shards").and_then(Json::as_usize) {
+        kmeanspar.shards = s;
+    }
+    if let Some(r) = v.get("rounds").and_then(Json::as_usize) {
+        kmeanspar.rounds = r;
+    }
+    if let Some(l) = v.get("oversample").and_then(Json::as_f64) {
+        kmeanspar.oversample = l;
+    }
+    if kmeanspar.shards == 0 || kmeanspar.rounds == 0 || !(kmeanspar.oversample > 0.0) {
+        return Err((
+            400,
+            "\"shards\"/\"rounds\" must be >= 1 and \"oversample\" > 0".to_string(),
+        ));
+    }
     let source = if let Some(pts) = v.get("points") {
         FitSource::Inline(Arc::new(json::points_from_json(pts).map_err(bad)?))
     } else if let Some(name) = v.get("dataset").and_then(Json::as_str) {
@@ -359,6 +386,7 @@ fn handle_fit(req: &Request, ctx: &ServerCtx) -> RouteResult {
         k,
         seed,
         lloyd_iters,
+        kmeanspar,
     });
     Ok(Response::json(
         202,
@@ -568,6 +596,60 @@ mod tests {
         assert_eq!(
             body_json(&resp).get("state").and_then(Json::as_str),
             Some("queued")
+        );
+    }
+
+    #[test]
+    fn fit_kmeans_par_accepts_shard_knobs() {
+        let ctx = test_ctx();
+        // The serve-layer spelling plus explicit shard knobs enqueues.
+        let resp = route(
+            &post(
+                "/fit",
+                r#"{"points": [[1,2],[3,4],[5,6]], "k": 2, "algorithm": "kmeans_par",
+                    "shards": 2, "rounds": 3, "oversample": 1.5}"#,
+            ),
+            &ctx,
+        );
+        assert_eq!(resp.status, 202);
+        // Degenerate knobs are rejected at the HTTP layer.
+        for body in [
+            r#"{"points": [[1,2]], "k": 1, "algo": "kmeans-par", "shards": 0}"#,
+            r#"{"points": [[1,2]], "k": 1, "algo": "kmeans-par", "rounds": 0}"#,
+            r#"{"points": [[1,2]], "k": 1, "algo": "kmeans-par", "oversample": 0}"#,
+        ] {
+            assert_eq!(route(&post("/fit", body), &ctx).status, 400, "{body}");
+        }
+    }
+
+    #[test]
+    fn metrics_include_global_shard_counters() {
+        let ctx = test_ctx();
+        // Drive the sharded engine directly; its counters land in the
+        // process-wide sink and must surface through /metrics.
+        let ps = gaussian_mixture(
+            &SynthSpec {
+                n: 200,
+                d: 4,
+                k_true: 3,
+                ..Default::default()
+            },
+            8,
+        );
+        let mut rng = crate::rng::Pcg64::seed_from(1);
+        crate::shard::kmeanspar::kmeans_par(&ps, 5, &Default::default(), &mut rng);
+        let resp = route(&get("/metrics"), &ctx);
+        assert_eq!(resp.status, 200);
+        let v = body_json(&resp);
+        let rounds = v
+            .get("counters")
+            .and_then(|c| c.get("shard.rounds"))
+            .and_then(Json::as_usize)
+            .unwrap_or(0);
+        assert!(rounds >= 1, "{v:?}");
+        assert!(
+            v.get("timings").and_then(|t| t.get("shard.round_secs")).is_some(),
+            "{v:?}"
         );
     }
 

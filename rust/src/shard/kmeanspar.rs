@@ -1,0 +1,426 @@
+//! k-means‖ over data shards: oversampling rounds + weighted k-means++
+//! recluster — the `kmeans-par` seeding algorithm.
+//!
+//! ## Round lifecycle
+//!
+//! 1. **Partition** (coordinator): [`ShardedDataset::partition`] splits
+//!    the dataset into contiguous shards, each with its own norm cache.
+//! 2. **Seed** (coordinator): one uniform first center, as in k-means++.
+//! 3. **Rounds** (`R = rounds`): every shard, in parallel
+//!    ([`crate::parallel::parallel_slices_mut`] /
+//!    [`crate::parallel::parallel_map`]):
+//!    * maintains its slice of the global `D²` array against the newest
+//!      candidates through the kernel engine (the same
+//!      `d2_update_min` contract as exact k-means++);
+//!    * Poisson-samples its rows — each point `x` joins the candidate
+//!      set independently with probability `min(1, ℓ·D²(x)/cost)`,
+//!      `ℓ = oversample · k` (Bahmani et al.'s oversampling; a handful
+//!      of rounds suffices per Makarychev–Reddy–Shan).
+//!    The coordinator merges per-shard candidates in shard order
+//!    (= ascending global index) and broadcasts them to all shards.
+//! 4. **Weights** (shards → coordinator): each shard assigns its rows to
+//!    the nearest candidate; per-candidate assignment counts, summed in
+//!    `u64` across shards, become the candidate weights.
+//! 5. **Recluster** (coordinator): weighted k-means++
+//!    ([`crate::shard::weighted::weighted_kmeanspp`]) reduces the small
+//!    weighted candidate set to the final `k` centers.
+//!
+//! ## RNG stream-splitting contract
+//!
+//! The run RNG is touched exactly twice before the recluster — one
+//! `stream_root` tag, then the uniform first center — so its consumption
+//! is independent of `n`, the shard count and the round outcomes. Round
+//! sampling draws come from counter-based streams split from
+//! `stream_root` per **(round, global point index)** (finer than
+//! per-shard): a point's membership coin is a pure function of
+//! `(seed, round, i)`, so the candidate set is bitwise invariant to the
+//! shard and thread layout. The recluster then resumes the run RNG.
+//!
+//! ## Invariance argument (shard count & thread count, bitwise)
+//!
+//! * `D²` maintenance is per-point exact; min-folds over candidates are
+//!   order-free; the kernel *implementation* (v1/v2) is resolved once on
+//!   the **global** shape ([`crate::kernels::tune::kernel_for`]) and
+//!   executed per shard, so per-shard dispatch can never diverge between
+//!   shard layouts.
+//! * The round cost is a fixed-boundary tree sum over the global `D²`
+//!   array ([`crate::kernels::reduce::sum_f32`]) — shard boundaries
+//!   never move the summation blocks.
+//! * Membership coins are per-point counter streams (above).
+//! * Candidate weights are exact `u64` count sums.
+//! * The recluster operates on shard-independent inputs with the run
+//!   RNG.
+//!
+//! Cross-*process* bit-reproducibility additionally requires pinning
+//! `FKMPP_KERNEL`, exactly as for the rest of the engine (PR 3).
+
+use std::time::Instant;
+
+use crate::data::matrix::PointSet;
+use crate::kernels::{assign, blocked, d2 as d2_kernel, norms, reduce, tune};
+use crate::metrics;
+use crate::parallel::{parallel_map, parallel_slices_mut};
+use crate::rng::{splitmix64, Pcg64};
+use crate::seeding::{Seeding, SeedingStats};
+use crate::shard::weighted::{weighted_kmeanspp, WeightedPointSet};
+use crate::shard::ShardedDataset;
+
+/// k-means‖ knobs (`fkmpp seed --algo kmeans-par --shards S --rounds R
+/// --oversample L`).
+#[derive(Clone, Debug)]
+pub struct KMeansParConfig {
+    /// Number of data shards `S` (clamped to `[1, n]`).
+    pub shards: usize,
+    /// Oversampling rounds `R`.
+    pub rounds: usize,
+    /// Oversampling factor: each round samples `ℓ = oversample · k`
+    /// candidates in expectation.
+    pub oversample: f64,
+}
+
+impl Default for KMeansParConfig {
+    fn default() -> Self {
+        KMeansParConfig {
+            shards: 4,
+            rounds: 5,
+            oversample: 2.0,
+        }
+    }
+}
+
+/// One membership coin: uniform in `[0, 1)`, a pure function of
+/// `(round_tag, global point index)` — the counter-based stream split
+/// that makes sampling independent of the shard/thread layout.
+#[inline]
+fn point_uniform(round_tag: u64, i: u64) -> f64 {
+    let x = splitmix64(round_tag.wrapping_add(splitmix64(i.wrapping_add(0x6A09_E667_F3BC_C909))));
+    (x >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Update every shard's slice of the global `D²` array against the new
+/// candidates, with the globally-resolved kernel implementation.
+///
+/// One parallel layer only ([`crate::shard::OUTER_PARALLEL_MAX_SHARD`]):
+/// big shards run serially here and the kernel parallelizes internally;
+/// small shards run in parallel with the kernel calls inline. Identical
+/// bits either way — per-point kernel work is layout-independent.
+fn update_shards(
+    sd: &ShardedDataset,
+    kernel: tune::Kernel,
+    ends: &[usize],
+    ps: &PointSet,
+    new: &[usize],
+    cur_d2: &mut [f32],
+) {
+    let apply = |s: usize, slice: &mut [f32]| {
+        let sh = &sd.shards()[s];
+        for &c in new {
+            let row = ps.row(c);
+            match kernel {
+                tune::Kernel::Naive => d2_kernel::d2_update_min(&sh.points, row, slice),
+                tune::Kernel::Blocked => {
+                    blocked::d2_update_min_blocked(&sh.points, row, &sh.norms, slice)
+                }
+            }
+        }
+    };
+    if sd.shard_size() > crate::shard::OUTER_PARALLEL_MAX_SHARD {
+        let mut lo = 0;
+        for (s, &hi) in ends.iter().enumerate() {
+            apply(s, &mut cur_d2[lo..hi]);
+            lo = hi;
+        }
+    } else {
+        parallel_slices_mut(cur_d2, ends, apply);
+    }
+}
+
+/// k-means‖ seeding: `R` oversampling rounds over `S` data shards, then
+/// a weighted k-means++ recluster of the candidates down to `k`. See the
+/// module docs for the lifecycle and the invariance contract. Round
+/// counters and timings land in the process-wide metrics sink
+/// ([`crate::metrics::global`], `shard.*` — surfaced by `fkmpp serve`
+/// `/metrics`).
+pub fn kmeans_par(ps: &PointSet, k: usize, cfg: &KMeansParConfig, rng: &mut Pcg64) -> Seeding {
+    let m = metrics::global();
+    m.incr("shard.runs", 1);
+    let k = k.min(ps.len());
+    let mut stats = SeedingStats::default();
+    if k == 0 {
+        return Seeding::from_indices(ps, Vec::new(), stats);
+    }
+    let n = ps.len();
+    let t0 = Instant::now();
+    let sharded = ShardedDataset::partition(ps, cfg.shards);
+    let ends = sharded.boundaries();
+    // Resolve both kernel implementations once, on the GLOBAL shape:
+    // per-shard dispatch would couple the implementation (and its f32
+    // rounding) to the shard size, breaking shard-count invariance.
+    let upd_kernel = tune::kernel_for(tune::Op::Update, n, ps.dim(), 1);
+    stats.init_secs = t0.elapsed().as_secs_f64();
+
+    let t1 = Instant::now();
+    // RNG discipline: exactly two run-RNG draws before the recluster.
+    let stream_root = rng.next_u64();
+    let first = rng.index(n);
+    let mut cur_d2 = vec![f32::INFINITY; n];
+    let mut candidates = vec![first];
+    let mut is_candidate = vec![false; n];
+    is_candidate[first] = true;
+    stats.proposals += 1;
+    update_shards(&sharded, upd_kernel, &ends, ps, &[first], &mut cur_d2);
+
+    let ell = cfg.oversample * k as f64;
+    for round in 0..cfg.rounds.max(1) {
+        let timer = m.timer("shard.round_secs");
+        // Global cost at fixed block boundaries: shard-count-invariant.
+        let cost = reduce::sum_f32(&cur_d2);
+        if !(cost > 0.0) || !cost.is_finite() {
+            // Candidates already cover every point exactly.
+            timer.stop();
+            break;
+        }
+        let round_tag = splitmix64(stream_root ^ splitmix64(round as u64 ^ 0x9E37_79B9_7F4A_7C15));
+        // Every shard thins its own slice; merging per-shard candidate
+        // lists in shard order IS ascending global-index order.
+        let per_shard: Vec<Vec<usize>> = parallel_map(sharded.num_shards(), |s| {
+            let sh = &sharded.shards()[s];
+            let mut local = Vec::new();
+            for r in 0..sh.len() {
+                let i = sh.offset + r;
+                if is_candidate[i] {
+                    continue;
+                }
+                let di = cur_d2[i] as f64;
+                if di <= 0.0 {
+                    continue;
+                }
+                if point_uniform(round_tag, i as u64) * cost < ell * di {
+                    local.push(i);
+                }
+            }
+            local
+        });
+        let new: Vec<usize> = per_shard.into_iter().flatten().collect();
+        m.incr("shard.rounds", 1);
+        m.incr("shard.candidates", new.len() as u64);
+        stats.proposals += new.len() as u64;
+        if !new.is_empty() {
+            update_shards(&sharded, upd_kernel, &ends, ps, &new, &mut cur_d2);
+            for &i in &new {
+                is_candidate[i] = true;
+            }
+            candidates.extend_from_slice(&new);
+        }
+        timer.stop();
+    }
+
+    // Candidate weights = per-candidate assignment counts, summed
+    // exactly in u64 across shards.
+    let weights_timer = m.timer("shard.weights_secs");
+    let cand_ps = ps.gather(&candidates);
+    let asg_kernel = tune::kernel_for(tune::Op::Assign, n, ps.dim(), cand_ps.len());
+    let cand_norms = norms::squared_norms(&cand_ps);
+    let shard_counts = |s: usize| {
+        let sh = &sharded.shards()[s];
+        let (labels, _) = match asg_kernel {
+            tune::Kernel::Naive => assign::assign_argmin_naive(&sh.points, &cand_ps),
+            tune::Kernel::Blocked => {
+                blocked::assign_argmin_blocked(&sh.points, &sh.norms, &cand_ps, &cand_norms)
+            }
+        };
+        let mut counts = vec![0u64; cand_ps.len()];
+        for &l in &labels {
+            counts[l as usize] += 1;
+        }
+        counts
+    };
+    // Same single-parallel-layer policy as update_shards: the assign
+    // kernel parallelizes internally on big shards.
+    let per_shard_counts: Vec<Vec<u64>> =
+        if sharded.shard_size() > crate::shard::OUTER_PARALLEL_MAX_SHARD {
+            (0..sharded.num_shards()).map(shard_counts).collect()
+        } else {
+            parallel_map(sharded.num_shards(), shard_counts)
+        };
+    let mut weights = vec![0u64; cand_ps.len()];
+    for counts in per_shard_counts {
+        for (w, c) in weights.iter_mut().zip(counts) {
+            *w += c;
+        }
+    }
+    let weights: Vec<f32> = weights.into_iter().map(|w| w as f32).collect();
+    weights_timer.stop();
+
+    // Weighted recluster of the small candidate set down to k, resuming
+    // the run RNG.
+    let recluster_timer = m.timer("shard.recluster_secs");
+    let wps = WeightedPointSet::new(cand_ps, weights);
+    let sub = weighted_kmeanspp(&wps, k, rng);
+    let mut indices: Vec<usize> = sub.indices.iter().map(|&ci| candidates[ci]).collect();
+    // Degenerate top-up (fewer candidates than k on tiny inputs): honor
+    // the k-distinct contract with arbitrary unchosen indices.
+    if indices.len() < k {
+        for i in 0..n {
+            if indices.len() >= k {
+                break;
+            }
+            if !indices.contains(&i) {
+                indices.push(i);
+            }
+        }
+    }
+    recluster_timer.stop();
+    stats.select_secs = t1.elapsed().as_secs_f64();
+    Seeding::from_indices(ps, indices, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gaussian_mixture, separated_grid, SynthSpec};
+    use crate::lloyd::cost_native;
+
+    fn mixture(n: usize, seed: u64) -> PointSet {
+        gaussian_mixture(
+            &SynthSpec {
+                n,
+                d: 6,
+                k_true: 8,
+                ..Default::default()
+            },
+            seed,
+        )
+    }
+
+    #[test]
+    fn returns_k_distinct_valid_indices() {
+        let ps = mixture(2_000, 1);
+        for shards in [1usize, 3, 8] {
+            let cfg = KMeansParConfig {
+                shards,
+                ..Default::default()
+            };
+            let mut rng = Pcg64::seed_from(7);
+            let s = kmeans_par(&ps, 20, &cfg, &mut rng);
+            assert_eq!(s.k(), 20, "shards={shards}");
+            let mut idx = s.indices.clone();
+            idx.sort_unstable();
+            idx.dedup();
+            assert_eq!(idx.len(), 20, "shards={shards}: duplicate centers");
+            assert!(idx.iter().all(|&i| i < ps.len()));
+        }
+    }
+
+    #[test]
+    fn bitwise_invariant_to_shard_count() {
+        let ps = mixture(3_000, 2);
+        let base = {
+            let mut rng = Pcg64::seed_from(11);
+            kmeans_par(
+                &ps,
+                16,
+                &KMeansParConfig {
+                    shards: 1,
+                    ..Default::default()
+                },
+                &mut rng,
+            )
+        };
+        for shards in [2usize, 4, 7] {
+            let mut rng = Pcg64::seed_from(11);
+            let s = kmeans_par(
+                &ps,
+                16,
+                &KMeansParConfig {
+                    shards,
+                    ..Default::default()
+                },
+                &mut rng,
+            );
+            assert_eq!(s.indices, base.indices, "shards={shards}");
+            assert_eq!(s.centers, base.centers, "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn deterministic_for_fixed_seed() {
+        let ps = mixture(1_500, 3);
+        let cfg = KMeansParConfig::default();
+        let mut r1 = Pcg64::seed_from(5);
+        let mut r2 = Pcg64::seed_from(5);
+        let a = kmeans_par(&ps, 12, &cfg, &mut r1);
+        let b = kmeans_par(&ps, 12, &cfg, &mut r2);
+        assert_eq!(a.indices, b.indices);
+    }
+
+    #[test]
+    fn covers_separated_clusters() {
+        // Oversampling + weighted recluster must find every cluster of a
+        // hugely separated instance essentially always.
+        let ps = separated_grid(8, 60, 3, 21);
+        let mut hits = 0;
+        for seed in 0..10u64 {
+            let mut rng = Pcg64::seed_from(seed);
+            let s = kmeans_par(&ps, 8, &KMeansParConfig::default(), &mut rng);
+            let mut clusters: Vec<usize> = s.indices.iter().map(|&i| i / 60).collect();
+            clusters.sort_unstable();
+            clusters.dedup();
+            if clusters.len() == 8 {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 9, "only {hits}/10 runs covered all clusters");
+    }
+
+    #[test]
+    fn quality_close_to_exact_kmeanspp() {
+        let ps = mixture(4_000, 4);
+        let (mut par, mut exact) = (0.0, 0.0);
+        for seed in 0..5u64 {
+            let mut r1 = Pcg64::seed_from(300 + seed);
+            par += cost_native(
+                &ps,
+                &kmeans_par(&ps, 24, &KMeansParConfig::default(), &mut r1).centers,
+            );
+            let mut r2 = Pcg64::seed_from(400 + seed);
+            exact += cost_native(
+                &ps,
+                &crate::seeding::kmeanspp::kmeanspp(&ps, 24, &mut r2).centers,
+            );
+        }
+        assert!(
+            par <= 1.3 * exact,
+            "kmeans_par {par:.4e} far worse than exact {exact:.4e}"
+        );
+    }
+
+    #[test]
+    fn k_larger_than_n_clamps_and_k_zero_is_empty() {
+        let ps = mixture(15, 5);
+        let mut rng = Pcg64::seed_from(6);
+        let s = kmeans_par(&ps, 50, &KMeansParConfig::default(), &mut rng);
+        assert_eq!(s.k(), 15);
+        let mut idx = s.indices.clone();
+        idx.sort_unstable();
+        idx.dedup();
+        assert_eq!(idx.len(), 15);
+        let empty = kmeans_par(&ps, 0, &KMeansParConfig::default(), &mut rng);
+        assert_eq!(empty.k(), 0);
+    }
+
+    #[test]
+    fn records_round_metrics() {
+        let before = metrics::global().counter("shard.rounds");
+        let ps = mixture(800, 7);
+        let mut rng = Pcg64::seed_from(9);
+        let cfg = KMeansParConfig {
+            rounds: 3,
+            ..Default::default()
+        };
+        kmeans_par(&ps, 10, &cfg, &mut rng);
+        let after = metrics::global().counter("shard.rounds");
+        assert!(after >= before + 1, "no shard rounds recorded");
+        assert!(metrics::global().counter("shard.runs") >= 1);
+    }
+}

@@ -1,0 +1,232 @@
+//! The sharded seeding engine — the first subsystem with an explicit
+//! **coordinator / shard split**, the stepping stone from "parallel on
+//! one machine" to true multi-node sharding.
+//!
+//! The paper's rejection sampler makes a single machine near-linear;
+//! this layer scales seeding *across data shards* with k-means‖
+//! (Bahmani et al.; analysis tightened by Makarychev–Reddy–Shan, see
+//! PAPERS.md): a few oversampling rounds in which every shard thins its
+//! own slice against the current candidate set, then a **weighted
+//! k-means++** recluster of the small candidate set down to `k`.
+//!
+//! * [`ShardedDataset`] ([`Shard`]) — deterministic contiguous
+//!   partition of a [`PointSet`]; each shard owns its row slice plus a
+//!   per-shard squared-norm cache with shard lifetime (the kernels-v2
+//!   cache discipline of [`crate::kernels::norms`]).
+//! * [`kmeanspar`] — the round driver: per-shard `D²` maintenance
+//!   through the kernel engine, Poisson (independent Bernoulli)
+//!   oversampling with per-point RNG streams split from the run seed,
+//!   coordinator-side candidate merge and assignment-count weights.
+//! * [`weighted`] — [`weighted::WeightedPointSet`] and weighted
+//!   `D²`-seeding/cost on top of the shared exact-`D²` core
+//!   ([`crate::seeding::kmeanspp::kmeanspp_core`]) and the weighted
+//!   reductions ([`crate::kernels::reduce::cost_weighted_cached`]).
+//!
+//! **Invariance contract.** For a fixed seed, the selected centers are
+//! bitwise invariant to the shard count *and* the thread count: shard
+//! boundaries never change any per-point value (updates are per-point
+//! exact), global sums run at fixed block boundaries
+//! ([`crate::kernels::reduce::sum_f32`]), sampling streams split per
+//! *point*, and the driver resolves the kernel implementation once on
+//! the global shape so every shard computes identical bits (see
+//! [`kmeanspar`] for the full argument).
+
+pub mod kmeanspar;
+pub mod weighted;
+
+use crate::data::matrix::PointSet;
+use crate::kernels::norms;
+use crate::parallel::parallel_map;
+
+/// Points-per-shard threshold that picks the engine's single parallel
+/// layer: above it, shards are processed **serially** and each kernel
+/// call parallelizes internally (the kernels spawn their own workers
+/// past their inline cutoffs); at or below it, shards run **in
+/// parallel** and the per-shard kernel calls stay inline. Either way
+/// exactly one layer spawns threads — no nested scopes oversubscribing
+/// the machine — and results are bitwise identical, because per-point
+/// kernel work is layout-independent. Matches the largest kernel inline
+/// cutoff (`MIN_POINTS_PER_THREAD` of the update/norm kernels).
+pub(crate) const OUTER_PARALLEL_MAX_SHARD: usize = 4096;
+
+/// One data shard: a contiguous row slice of the parent dataset, owned
+/// (as a node would own its partition), plus the shard-lifetime
+/// squared-norm cache the v2 kernels consume.
+pub struct Shard {
+    /// Global index of this shard's first row.
+    pub offset: usize,
+    /// The shard's rows (parent rows `offset .. offset + points.len()`).
+    pub points: PointSet,
+    /// `‖x‖²` per shard row ([`crate::kernels::norms::squared_norms`]),
+    /// computed once at partition time and reused by every round.
+    pub norms: Vec<f32>,
+}
+
+impl Shard {
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+}
+
+/// A [`PointSet`] partitioned into `S` deterministic contiguous shards:
+/// shard `s` owns rows `[s·⌈n/S⌉, (s+1)·⌈n/S⌉) ∩ [0, n)`. The partition
+/// is a pure function of `(n, S)` — no RNG — so a run can be replayed
+/// with any shard count and the engine's invariance contract is
+/// testable bitwise.
+pub struct ShardedDataset {
+    shards: Vec<Shard>,
+    n: usize,
+    dim: usize,
+    shard_size: usize,
+}
+
+impl ShardedDataset {
+    /// Partition `ps` into (at most) `s` contiguous shards. `s` is
+    /// clamped to `[1, n]`; trailing empty shards are dropped, so every
+    /// shard is non-empty.
+    pub fn partition(ps: &PointSet, s: usize) -> ShardedDataset {
+        let n = ps.len();
+        let s = s.max(1).min(n.max(1));
+        let shard_size = n.div_ceil(s).max(1);
+        let nshards = n.div_ceil(shard_size).max(1).min(s);
+        // Shard slices are copied out — each shard *owns* its rows, as a
+        // node owns its partition in the multi-node deployment this
+        // subsystem rehearses. That is a deliberate trade-off: one
+        // O(nd) copy and a transient 2x dataset memory per kmeans_par
+        // run buys the explicit ownership boundary (and node-local norm
+        // caches) the coordinator/shard split is about. Each norm cache
+        // is built from the shard's own rows — the same per-row
+        // arithmetic as a global cache (bitwise identical, see the
+        // `shard_norms_match_global_cache_bitwise` test), so the
+        // exact-zero self-distance identity of `kernels::norms` holds
+        // shard-locally too.
+        let build = |si: usize| {
+            let lo = si * shard_size;
+            let hi = (lo + shard_size).min(n);
+            let points = PointSet::from_flat(
+                hi - lo,
+                ps.dim(),
+                ps.flat()[lo * ps.dim()..hi * ps.dim()].to_vec(),
+            );
+            let norms = norms::squared_norms(&points);
+            Shard {
+                offset: lo,
+                points,
+                norms,
+            }
+        };
+        // One parallel layer only (see OUTER_PARALLEL_MAX_SHARD): big
+        // shards build serially with the norm kernel parallelizing
+        // inside; small shards build in parallel with inline norms.
+        let shards = if shard_size > OUTER_PARALLEL_MAX_SHARD {
+            (0..nshards).map(build).collect()
+        } else {
+            parallel_map(nshards, build)
+        };
+        ShardedDataset {
+            shards,
+            n,
+            dim: ps.dim(),
+            shard_size,
+        }
+    }
+
+    /// Total point count across shards.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shards(&self) -> &[Shard] {
+        &self.shards
+    }
+
+    /// Rows per shard (the last shard may hold fewer).
+    pub fn shard_size(&self) -> usize {
+        self.shard_size
+    }
+
+    /// Global end offset of each shard, in shard order — the piece
+    /// boundaries for splitting a global per-point array
+    /// ([`crate::parallel::parallel_slices_mut`]).
+    pub fn boundaries(&self) -> Vec<usize> {
+        self.shards
+            .iter()
+            .map(|sh| sh.offset + sh.len())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gaussian_mixture, SynthSpec};
+
+    fn ps(n: usize) -> PointSet {
+        gaussian_mixture(
+            &SynthSpec {
+                n,
+                d: 7,
+                k_true: 3,
+                ..Default::default()
+            },
+            5,
+        )
+    }
+
+    #[test]
+    fn partition_covers_rows_in_order() {
+        let ps = ps(1_003);
+        for s in [1usize, 2, 4, 7, 1_003, 5_000] {
+            let sd = ShardedDataset::partition(&ps, s);
+            assert_eq!(sd.len(), 1_003);
+            assert_eq!(sd.dim(), 7);
+            assert!(sd.num_shards() <= s.min(1_003));
+            let mut next = 0usize;
+            for sh in sd.shards() {
+                assert_eq!(sh.offset, next, "s={s}");
+                assert!(!sh.is_empty(), "s={s}: empty shard");
+                for r in 0..sh.len() {
+                    assert_eq!(sh.points.row(r), ps.row(sh.offset + r), "s={s}");
+                }
+                assert_eq!(sh.norms.len(), sh.len());
+                next += sh.len();
+            }
+            assert_eq!(next, 1_003, "s={s}: rows lost");
+            assert_eq!(*sd.boundaries().last().unwrap(), 1_003);
+        }
+    }
+
+    #[test]
+    fn shard_norms_match_global_cache_bitwise() {
+        let ps = ps(500);
+        let global = crate::kernels::norms::squared_norms(&ps);
+        let sd = ShardedDataset::partition(&ps, 3);
+        for sh in sd.shards() {
+            assert_eq!(sh.norms, &global[sh.offset..sh.offset + sh.len()]);
+        }
+    }
+
+    #[test]
+    fn single_point_and_oversharded() {
+        let ps = ps(1);
+        let sd = ShardedDataset::partition(&ps, 8);
+        assert_eq!(sd.num_shards(), 1);
+        assert_eq!(sd.shards()[0].len(), 1);
+    }
+}

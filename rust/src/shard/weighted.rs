@@ -1,0 +1,197 @@
+//! Weighted instances: [`WeightedPointSet`] plus weighted `D²`-seeding
+//! and weighted cost.
+//!
+//! The k-means‖ recluster reduces the full dataset to a small candidate
+//! set whose **weights are assignment counts** — clustering the weighted
+//! candidates approximates clustering the original points. The same
+//! weighted-instance machinery serves coreset-style workloads (Shah et
+//! al., PAPERS.md).
+//!
+//! **Weight semantics.** `weights[i]` multiplies point `i`'s mass
+//! everywhere it appears: the first center is drawn `∝ w_i`, every later
+//! `D²` draw `∝ w_i · D²(x_i)`, and the objective is
+//! `Σ w_i · min_j ‖x_i − c_j‖²`
+//! ([`crate::kernels::reduce::cost_weighted_cached`]). A zero-weight
+//! point is never sampled and contributes nothing to the cost, but can
+//! still be *covered* by centers chosen for other points. All weights
+//! equal to 1 reduces every operation bitwise to its unweighted
+//! counterpart (locked by `rust/tests/weighted_parity.rs`).
+
+use crate::data::matrix::PointSet;
+use crate::kernels::{norms, reduce};
+use crate::rng::Pcg64;
+use crate::seeding::kmeanspp::kmeanspp_core;
+use crate::seeding::Seeding;
+
+/// A point set with one non-negative finite f32 weight per row.
+pub struct WeightedPointSet {
+    pub points: PointSet,
+    pub weights: Vec<f32>,
+}
+
+impl WeightedPointSet {
+    /// Pair points with weights. Panics on length mismatch or a
+    /// negative/non-finite weight (weights are masses, not scores).
+    pub fn new(points: PointSet, weights: Vec<f32>) -> WeightedPointSet {
+        assert_eq!(points.len(), weights.len(), "weight array length mismatch");
+        assert!(
+            weights.iter().all(|w| w.is_finite() && *w >= 0.0),
+            "weights must be finite and non-negative"
+        );
+        WeightedPointSet { points, weights }
+    }
+
+    /// Unit weights — the embedding of a plain point set.
+    pub fn unit(points: PointSet) -> WeightedPointSet {
+        let weights = vec![1.0; points.len()];
+        WeightedPointSet { points, weights }
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.points.dim()
+    }
+
+    /// Total mass `Σ w_i` (f64, fixed-boundary tree sum).
+    pub fn total_weight(&self) -> f64 {
+        reduce::sum_f32(&self.weights)
+    }
+}
+
+/// Weighted k-means++: exact `D²` seeding where every draw is weighted
+/// by instance mass — the recluster step of k-means‖, and an honest
+/// seeder for coresets. Delegates to the shared exact-`D²` engine
+/// ([`kmeanspp_core`]), so unit weights reproduce
+/// [`crate::seeding::kmeanspp::kmeanspp`] bitwise.
+pub fn weighted_kmeanspp(wps: &WeightedPointSet, k: usize, rng: &mut Pcg64) -> Seeding {
+    kmeanspp_core(&wps.points, Some(&wps.weights), k, rng)
+}
+
+/// Weighted k-means objective `Σ_i w_i · min_j ‖x_i − c_j‖²`.
+pub fn weighted_cost(wps: &WeightedPointSet, centers: &PointSet) -> f64 {
+    reduce::cost_weighted(&wps.points, &wps.weights, centers)
+}
+
+/// [`weighted_cost`] with caller-owned squared-norm caches (the
+/// kernels-v2 reuse discipline: compute once, evaluate many candidate
+/// center sets).
+pub fn weighted_cost_cached(
+    wps: &WeightedPointSet,
+    point_norms: &[f32],
+    centers: &PointSet,
+) -> f64 {
+    let cn = norms::squared_norms(centers);
+    reduce::cost_weighted_cached(
+        &wps.points,
+        &wps.weights,
+        Some(point_norms),
+        centers,
+        Some(&cn),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gaussian_mixture, SynthSpec};
+
+    fn ps(n: usize, seed: u64) -> PointSet {
+        gaussian_mixture(
+            &SynthSpec {
+                n,
+                d: 5,
+                k_true: 4,
+                ..Default::default()
+            },
+            seed,
+        )
+    }
+
+    #[test]
+    fn returns_k_distinct_indices() {
+        let points = ps(400, 8);
+        let weights: Vec<f32> = (0..400).map(|i| 1.0 + (i % 5) as f32).collect();
+        let wps = WeightedPointSet::new(points, weights);
+        let mut rng = Pcg64::seed_from(3);
+        let s = weighted_kmeanspp(&wps, 12, &mut rng);
+        assert_eq!(s.k(), 12);
+        let mut idx = s.indices.clone();
+        idx.sort_unstable();
+        idx.dedup();
+        assert_eq!(idx.len(), 12);
+    }
+
+    #[test]
+    fn zero_weight_points_are_never_sampled() {
+        // Half the points carry zero mass: no draw may land on them.
+        let points = ps(300, 9);
+        let weights: Vec<f32> = (0..300)
+            .map(|i| if i % 2 == 0 { 1.0 } else { 0.0 })
+            .collect();
+        let wps = WeightedPointSet::new(points, weights);
+        for seed in 0..5u64 {
+            let mut rng = Pcg64::seed_from(seed);
+            let s = weighted_kmeanspp(&wps, 10, &mut rng);
+            for &i in &s.indices {
+                assert_eq!(i % 2, 0, "zero-weight point {i} was sampled");
+            }
+        }
+    }
+
+    #[test]
+    fn heavy_weight_attracts_the_first_center() {
+        // One point with overwhelming mass: it must be the first center
+        // essentially always.
+        let points = ps(200, 10);
+        let mut weights = vec![1e-6f32; 200];
+        weights[77] = 1.0;
+        let wps = WeightedPointSet::new(points, weights);
+        let mut hits = 0;
+        for seed in 0..20u64 {
+            let mut rng = Pcg64::seed_from(100 + seed);
+            let s = weighted_kmeanspp(&wps, 1, &mut rng);
+            if s.indices[0] == 77 {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 19, "only {hits}/20 first draws hit the heavy point");
+    }
+
+    #[test]
+    fn weighted_cost_scales_with_mass() {
+        let points = ps(500, 11);
+        let centers = points.gather(&[0, 250]);
+        let unit = WeightedPointSet::unit(points.clone());
+        let doubled = WeightedPointSet::new(points, vec![2.0; 500]);
+        let c1 = weighted_cost(&unit, &centers);
+        let c2 = weighted_cost(&doubled, &centers);
+        assert!((c2 - 2.0 * c1).abs() <= 1e-9 * c2.abs().max(1.0));
+        assert_eq!(unit.total_weight(), 500.0);
+    }
+
+    #[test]
+    fn cached_cost_matches_uncached() {
+        let points = ps(2_000, 12);
+        let weights: Vec<f32> = (0..2_000).map(|i| (i % 3) as f32).collect();
+        let wps = WeightedPointSet::new(points, weights);
+        let centers = wps.points.gather(&[5, 600, 1_500]);
+        let pn = crate::kernels::norms::squared_norms(&wps.points);
+        assert_eq!(
+            weighted_cost(&wps, &centers),
+            weighted_cost_cached(&wps, &pn, &centers)
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "finite and non-negative")]
+    fn negative_weights_rejected() {
+        WeightedPointSet::new(ps(4, 13), vec![1.0, -1.0, 1.0, 1.0]);
+    }
+}

@@ -10,15 +10,18 @@
 //!    claim, Tables 4–6), while median uniform seeding must be
 //!    measurably worse.
 //!
-//! Determinism: every cost below is a pure function of the fixed seeds.
-//! The dense kernel shapes sit below the kernel autotuner's probe
-//! threshold (`rust/src/kernels/tune.rs::SMALL_WORK`), so those run the
-//! v1 reference path regardless of probe timing; the seeders' candidate
-//! scans (rejection acceptance, AFK-MC² chains) are deterministic
-//! functions of their inputs whichever formulation they use. No test
-//! here touches `FKMPP_KERNEL`/`FKMPP_THREADS` (kernel results are
-//! thread-count invariant by the parity suites' contract). The 1.15×
-//! and 2× margins
+//! Determinism: every cost below is a pure function of the fixed seeds
+//! *within one process*. The paper seeders' dense kernel shapes sit
+//! below the kernel autotuner's probe threshold
+//! (`rust/src/kernels/tune.rs::SMALL_WORK`), so those run the v1
+//! reference path regardless of probe timing; KMEANSPAR's final
+//! weights-assignment shape can cross the floor, but its dispatch is
+//! resolved once per process on the global shape, so the bitwise
+//! determinism and shard-invariance assertions below are
+//! timing-independent (cross-process bit-identity additionally needs
+//! `FKMPP_KERNEL` pinned — the PR 3 contract). No test here touches
+//! `FKMPP_KERNEL`/`FKMPP_THREADS` (kernel results are thread-count
+//! invariant by the parity suites' contract). The 1.15× and 2× margins
 //! are structural, not tuned: both families are strongly separated
 //! mixtures with k > k_true, where every D²-family seeder covers every
 //! cluster (cost ≈ within-cluster variance for all of them — ratios near
@@ -191,7 +194,15 @@ fn statistical_tree_seeders_match_exact_within_1_15x() {
     for fam in [family_separated(), family_skewed()] {
         let exact = median(seed_costs(&fam, SeedingAlgorithm::KMeansPP));
         assert!(exact > 0.0, "{}: degenerate exact cost", fam.name);
-        for algo in [SeedingAlgorithm::FastKMeansPP, SeedingAlgorithm::Rejection] {
+        for algo in [
+            SeedingAlgorithm::FastKMeansPP,
+            SeedingAlgorithm::Rejection,
+            // Sharded-seeding PR: k-means‖ + weighted recluster joins the
+            // acceptance suite with the same 1.15x bar (oversampling
+            // covers every cluster on these families, so the weighted
+            // recluster sees the full structure).
+            SeedingAlgorithm::KMeansPar,
+        ] {
             let m = median(seed_costs(&fam, algo));
             assert!(
                 m <= 1.15 * exact,
@@ -199,6 +210,40 @@ fn statistical_tree_seeders_match_exact_within_1_15x() {
                 algo.name(),
                 fam.name
             );
+        }
+    }
+}
+
+#[test]
+fn statistical_kmeanspar_deterministic_and_shard_invariant() {
+    // ISSUE 4 acceptance: for a fixed seed, KMEANSPAR is bitwise
+    // deterministic and invariant to the shard count. Checked on both
+    // families across --shards ∈ {1, 4}.
+    use fastkmeanspp::shard::kmeanspar::{kmeans_par, KMeansParConfig};
+    for fam in [family_separated(), family_skewed()] {
+        for r in [0u64, 10] {
+            let run = |shards: usize| {
+                let mut rng = Pcg64::seed_from(7_000 + 97 * r);
+                kmeans_par(
+                    &fam.ps,
+                    fam.k,
+                    &KMeansParConfig {
+                        shards,
+                        ..Default::default()
+                    },
+                    &mut rng,
+                )
+            };
+            let s1 = run(1);
+            let s1_again = run(1);
+            assert_eq!(s1.indices, s1_again.indices, "{}: nondeterministic", fam.name);
+            let s4 = run(4);
+            assert_eq!(
+                s1.indices, s4.indices,
+                "{}: shard count changed the seeding (seed offset {r})",
+                fam.name
+            );
+            assert_eq!(s1.centers, s4.centers, "{}", fam.name);
         }
     }
 }

@@ -198,6 +198,78 @@ fn serve_fit_job_assign_roundtrip() {
         assert_eq!(emit, first_emit, "repeat {rep}: response must be byte-identical");
     }
 
+    // Sharded-seeding satellite: a `kmeans_par` fit runs through the
+    // shard engine and its round counters/timings surface at /metrics.
+    let par_fit_body = Json::obj(vec![
+        ("points", json::points_to_json(&train)),
+        ("algorithm", Json::str("kmeans_par")),
+        ("k", Json::num(5.0)),
+        ("seed", Json::num(13.0)),
+        ("shards", Json::num(2.0)),
+        ("rounds", Json::num(3.0)),
+        ("oversample", Json::num(2.0)),
+    ])
+    .emit();
+    let (status, par_fit) = http(&addr, "POST", "/fit", Some(&par_fit_body));
+    assert_eq!(status, 202, "{par_fit:?}");
+    let par_job = par_fit
+        .get("job_id")
+        .and_then(Json::as_str)
+        .expect("job_id")
+        .to_string();
+    let par_deadline = Instant::now() + Duration::from_secs(120);
+    let par_model_id = loop {
+        let (status, job) = http(&addr, "GET", &format!("/jobs/{par_job}"), None);
+        assert_eq!(status, 200, "{job:?}");
+        match job.get("state").and_then(Json::as_str) {
+            Some("done") => {
+                break job
+                    .get("model_id")
+                    .and_then(Json::as_str)
+                    .expect("model_id")
+                    .to_string()
+            }
+            Some("failed") => panic!("kmeans_par fit failed: {job:?}"),
+            _ => {
+                assert!(Instant::now() < par_deadline, "kmeans_par fit did not finish");
+                std::thread::sleep(Duration::from_millis(25));
+            }
+        }
+    };
+    let (status, par_model) = http(&addr, "GET", &format!("/models/{par_model_id}"), None);
+    assert_eq!(status, 200, "{par_model:?}");
+    assert_eq!(
+        par_model.get("algorithm").and_then(Json::as_str),
+        Some("kmeans-par")
+    );
+    let (status, shard_metrics) = http(&addr, "GET", "/metrics", None);
+    assert_eq!(status, 200);
+    let shard_rounds = shard_metrics
+        .get("counters")
+        .and_then(|c| c.get("shard.rounds"))
+        .and_then(Json::as_usize)
+        .unwrap_or(0);
+    // The fit asked for 3 rounds (early-exit only if candidates cover
+    // every point exactly, impossible on a Gaussian mixture with k=5).
+    assert!(shard_rounds >= 3, "{shard_metrics:?}");
+    assert!(
+        shard_metrics
+            .get("counters")
+            .and_then(|c| c.get("shard.runs"))
+            .and_then(Json::as_usize)
+            .unwrap_or(0)
+            >= 1,
+        "{shard_metrics:?}"
+    );
+    assert!(
+        shard_metrics
+            .get("timings")
+            .and_then(|t| t.get("shard.round_secs"))
+            .and_then(|s| s.get("mean"))
+            .is_some(),
+        "{shard_metrics:?}"
+    );
+
     // Error paths stay clean under load.
     let (status, _) = http(&addr, "GET", "/jobs/job-999", None);
     assert_eq!(status, 404);
@@ -206,10 +278,10 @@ fn serve_fit_job_assign_roundtrip() {
     let (status, _) = http(&addr, "POST", "/fit", Some("not json"));
     assert_eq!(status, 400);
 
-    // Metrics saw the traffic.
+    // Metrics saw the traffic (two models now: rejection + kmeans_par).
     let (status, metrics) = http(&addr, "GET", "/metrics", None);
     assert_eq!(status, 200);
-    assert_eq!(metrics.get("models").and_then(Json::as_usize), Some(1));
+    assert_eq!(metrics.get("models").and_then(Json::as_usize), Some(2));
     assert!(
         metrics
             .get("counters")

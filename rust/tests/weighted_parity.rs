@@ -1,0 +1,200 @@
+//! Weighted-machinery parity suite (sharded-seeding PR):
+//!
+//! 1. **Unit-weight reduction**: weighted k-means++ with all weights = 1
+//!    is **bitwise identical** to unweighted `kmeanspp` under the same
+//!    seed — the contract that makes the k-means‖ recluster an honest
+//!    generalization rather than a near-miss reimplementation.
+//! 2. **Duplicated points ≍ integer weights**: weighting by `w` matches
+//!    repeating a point `w` times, up to tree-sum slack.
+//! 3. **Weighted-cost kernel parity**: `cost_weighted` matches a naive
+//!    serial reference at `FKMPP_THREADS ∈ {1, 4}` (fixed-block f64
+//!    reduction ⇒ thread-count-invariant bits).
+//! 4. **Sharded-seeding invariance**: a full `kmeans_par` run returns
+//!    bitwise-identical centers across thread counts AND shard counts —
+//!    including with `FKMPP_KERNEL=blocked` pinned, which
+//!    deterministically exercises the v2 path the global-shape dispatch
+//!    exists to protect (unpinned, these shapes sit below the autotune
+//!    work floor and always run v1).
+//!
+//! Env discipline (the `kernel_parity.rs` precedent): this binary has
+//! exactly ONE `#[test]`, so it owns `FKMPP_THREADS` and `FKMPP_KERNEL`
+//! with no cross-test interleaving.
+
+use fastkmeanspp::data::matrix::{d2, PointSet};
+use fastkmeanspp::kernels::reduce;
+use fastkmeanspp::rng::Pcg64;
+use fastkmeanspp::seeding::kmeanspp::kmeanspp;
+use fastkmeanspp::shard::kmeanspar::{kmeans_par, KMeansParConfig};
+use fastkmeanspp::shard::weighted::{weighted_kmeanspp, WeightedPointSet};
+
+fn random_points(n: usize, d: usize, rng: &mut Pcg64) -> PointSet {
+    let data: Vec<f32> = (0..n * d)
+        .map(|_| (rng.next_gaussian() * 5.0) as f32)
+        .collect();
+    PointSet::from_flat(n, d, data)
+}
+
+fn unit_weights_reproduce_unweighted_kmeanspp_bitwise() {
+    let mut shapes_rng = Pcg64::seed_from(0xD15C);
+    for case in 0..6u64 {
+        let n = 50 + shapes_rng.index(3_000);
+        let d = 1 + shapes_rng.index(12);
+        let k = 1 + shapes_rng.index(40).min(n - 1);
+        let ps = random_points(n, d, &mut shapes_rng);
+        let seed = 9_000 + case;
+
+        let mut r_plain = Pcg64::seed_from(seed);
+        let plain = kmeanspp(&ps, k, &mut r_plain);
+
+        let mut r_weighted = Pcg64::seed_from(seed);
+        let wps = WeightedPointSet::unit(ps.clone());
+        let weighted = weighted_kmeanspp(&wps, k, &mut r_weighted);
+
+        assert_eq!(
+            weighted.indices, plain.indices,
+            "case {case} (n={n} d={d} k={k}): index sequences diverged"
+        );
+        assert_eq!(
+            weighted.centers, plain.centers,
+            "case {case}: center rows diverged"
+        );
+        // Both engines must also leave the RNG in the same state — the
+        // strongest form of "same code path".
+        assert_eq!(
+            r_plain.next_u64(),
+            r_weighted.next_u64(),
+            "case {case}: RNG streams diverged"
+        );
+    }
+}
+
+fn duplicated_points_match_integer_weights() {
+    // Weighting a point by w must behave like repeating it w times:
+    // compare weighted cost on the compact set vs plain cost on the
+    // expanded set (up to the documented f64 tree-sum slack).
+    let mut rng = Pcg64::seed_from(0xACED);
+    let base = random_points(400, 6, &mut rng);
+    let weights: Vec<f32> = (0..400).map(|i| 1.0 + (i % 4) as f32).collect();
+    let mut expanded_rows = Vec::new();
+    for i in 0..400 {
+        for _ in 0..weights[i] as usize {
+            expanded_rows.push(base.row(i).to_vec());
+        }
+    }
+    let expanded = PointSet::from_rows(&expanded_rows);
+    let centers = base.gather(&[0, 57, 200, 399]);
+    let wps = WeightedPointSet::new(base.clone(), weights);
+    let compact = fastkmeanspp::shard::weighted::weighted_cost(&wps, &centers);
+    let full = reduce::cost(&expanded, &centers);
+    assert!(
+        (compact - full).abs() <= 1e-6 * full.max(1.0),
+        "weighted cost {compact} vs expanded cost {full}"
+    );
+}
+
+/// Weighted-cost kernel vs a naive serial reference, swept over
+/// `FKMPP_THREADS ∈ {1, 4}`; the measured values must also agree
+/// bitwise across the two sweeps.
+fn weighted_cost_matches_serial_reference_across_thread_counts() {
+    let mut results: Vec<Vec<f64>> = Vec::new();
+    for &threads in &[1usize, 4] {
+        std::env::set_var("FKMPP_THREADS", threads.to_string());
+        let mut per_thread = Vec::new();
+        let mut rng = Pcg64::seed_from(0xFEED ^ threads as u64);
+        for case in 0..5 {
+            let n = 1 + rng.index(7_000);
+            let d = 1 + rng.index(16);
+            let k = 1 + rng.index(30).min(n - 1);
+            let ps = random_points(n, d, &mut rng);
+            let centers = ps.gather(&(0..k).map(|_| rng.index(n)).collect::<Vec<_>>());
+            let weights: Vec<f32> = (0..n).map(|_| rng.next_f32() * 3.0).collect();
+
+            // Naive serial reference with the same scalar d2.
+            let want: f64 = (0..n)
+                .map(|i| {
+                    let mut best = f32::INFINITY;
+                    for j in 0..k {
+                        best = best.min(d2(ps.row(i), centers.row(j)));
+                    }
+                    best as f64 * weights[i] as f64
+                })
+                .sum();
+            let got = reduce::cost_weighted(&ps, &weights, &centers);
+            assert!(
+                (got - want).abs() <= 1e-9 * want.abs().max(1.0),
+                "threads={threads} case={case} n={n} d={d} k={k}: {got} vs {want}"
+            );
+            per_thread.push(got);
+        }
+        results.push(per_thread);
+    }
+    // Fixed-boundary reduction: the kernel's bits must not move with the
+    // thread count (same seeds → same instances in both sweeps).
+    assert_eq!(results[0], results[1], "cost_weighted is thread-dependent");
+}
+
+/// `kmeans_par` must return bitwise-identical seedings across thread
+/// counts and shard counts — on the default (autotuned, here always v1)
+/// dispatch AND with the v2 blocked kernels pinned.
+fn kmeans_par_invariant_across_threads_shards_and_kernels() {
+    let mut gen = Pcg64::seed_from(0xBEAD);
+    let ps = random_points(2_500, 8, &mut gen);
+    let run = |shards: usize, seed: u64| {
+        let cfg = KMeansParConfig {
+            shards,
+            ..Default::default()
+        };
+        let mut rng = Pcg64::seed_from(seed);
+        kmeans_par(&ps, 16, &cfg, &mut rng)
+    };
+
+    // Default dispatch (v1 at these shapes), threads x shards sweep.
+    let mut runs = Vec::new();
+    for &(threads, shards) in &[(1usize, 4usize), (4, 4), (4, 1), (1, 7)] {
+        std::env::set_var("FKMPP_THREADS", threads.to_string());
+        runs.push(run(shards, 0x5EED));
+    }
+    for r in &runs[1..] {
+        assert_eq!(
+            r.indices, runs[0].indices,
+            "kmeans_par depends on the thread/shard layout (v1 path)"
+        );
+        assert_eq!(r.centers, runs[0].centers);
+    }
+
+    // Pinned v2: same sweep with FKMPP_KERNEL=blocked, so the blocked
+    // update/assign cores run regardless of the autotune work floor —
+    // the path the resolve-once-on-the-global-shape dispatch protects.
+    std::env::set_var("FKMPP_KERNEL", "blocked");
+    let mut v2_runs = Vec::new();
+    for &(threads, shards) in &[(1usize, 1usize), (4, 4), (1, 7)] {
+        std::env::set_var("FKMPP_THREADS", threads.to_string());
+        v2_runs.push(run(shards, 0xB10C));
+    }
+    // Unit-weight parity must also hold while v2 is pinned (same-kernel
+    // both sides — the parity argument is implementation-independent).
+    let mut r_plain = Pcg64::seed_from(0x99);
+    let plain = kmeanspp(&ps, 12, &mut r_plain);
+    let mut r_weighted = Pcg64::seed_from(0x99);
+    let weighted = weighted_kmeanspp(&WeightedPointSet::unit(ps.clone()), 12, &mut r_weighted);
+    std::env::remove_var("FKMPP_KERNEL");
+    std::env::remove_var("FKMPP_THREADS");
+    for r in &v2_runs[1..] {
+        assert_eq!(
+            r.indices, v2_runs[0].indices,
+            "kmeans_par depends on the thread/shard layout (blocked v2 path)"
+        );
+        assert_eq!(r.centers, v2_runs[0].centers);
+    }
+    assert_eq!(weighted.indices, plain.indices, "unit-weight parity under v2");
+}
+
+#[test]
+fn weighted_parity_suite() {
+    // This binary has exactly one test, so it owns both env vars.
+    unit_weights_reproduce_unweighted_kmeanspp_bitwise();
+    duplicated_points_match_integer_weights();
+    weighted_cost_matches_serial_reference_across_thread_counts();
+    kmeans_par_invariant_across_threads_shards_and_kernels();
+    std::env::remove_var("FKMPP_THREADS");
+}
