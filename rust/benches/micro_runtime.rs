@@ -19,6 +19,7 @@
 //! cargo bench --bench micro_runtime -- --kernels-only
 //! cargo bench --bench micro_runtime -- --kernels-only --short --reps 2  # CI smoke
 //! cargo bench --bench micro_runtime -- --shard-only                     # k-means‖ table
+//! cargo bench --bench micro_runtime -- --rejection-only                 # oracle sweep
 //! ```
 //!
 //! `--kernels-only` flags: `--short` (headline shape only, skip the
@@ -31,6 +32,12 @@
 //! `coordinator/tables.rs::shard_json`. Same `--json`/`--seed`/`--reps`
 //! flags.
 //!
+//! `--rejection-only`: Algorithm 4 with each ANN oracle (exact / lsh /
+//! lsh-rigorous) at n=100k, d=128, k ∈ {64, 1000} (`--short`: n=20k,
+//! d=64, k=150 — above PREFIX_CAP so the smoke rows exercise real bucket
+//! probes), written as `BENCH_rejection.json` via
+//! `coordinator/tables.rs::rejection_json`. Same flags.
+//!
 //! The PJRT section skips (with a note) when `artifacts/` is missing or
 //! the `pjrt` feature is off. The useful output is points/second per
 //! entry point; on this CPU-only image the native path typically wins
@@ -41,7 +48,9 @@
 use std::time::Instant;
 
 use fastkmeanspp::cli::Args;
-use fastkmeanspp::coordinator::tables::{kernels_json, shard_json, KernelCell, ShardCell};
+use fastkmeanspp::coordinator::tables::{
+    kernels_json, rejection_json, shard_json, KernelCell, RejectionCell, ShardCell,
+};
 use fastkmeanspp::data::matrix::PointSet;
 use fastkmeanspp::data::synth::{gaussian_mixture, SynthSpec};
 use fastkmeanspp::error::Context;
@@ -236,6 +245,82 @@ fn shard_compare(reps: usize, short: bool, seed: u64) -> Vec<ShardCell> {
     cells
 }
 
+/// Rejection-oracle sweep (`--rejection-only`): Algorithm 4 timed with
+/// each ANN oracle — exact linear scan (the `Ω(k²)` ablation) vs
+/// practical single-scale LSH vs rigorous multi-scale LSH — at
+/// n=100k, d=128, k ∈ {64, 1000} (`--short`: n=20k, d=64, k=150 for CI
+/// smoke — past PREFIX_CAP so bucket probes are actually on the path).
+/// Cost and proposals-per-center ride along so the speed/quality
+/// trade-off the oracle buys is visible in one table. Cells land in
+/// `BENCH_rejection.json` (`grid_json`-shaped, `tables::rejection_json`;
+/// cells add `oracle`).
+fn rejection_compare(reps: usize, short: bool, seed: u64) -> Vec<RejectionCell> {
+    use fastkmeanspp::seeding::rejection::{rejection_sampling, OracleKind, RejectionConfig};
+    // Short mode keeps n/d CI-sized but pins k = 150 > PREFIX_CAP (128):
+    // below the cap every oracle answers from the exact insertion prefix
+    // and the three rows would measure one configuration.
+    let (n, d, ks): (usize, usize, &[usize]) = if short {
+        (20_000, 64, &[150])
+    } else {
+        (100_000, 128, &[64, 1000])
+    };
+    let ps = gaussian_mixture(
+        &SynthSpec {
+            n,
+            d,
+            k_true: 64,
+            ..Default::default()
+        },
+        seed,
+    );
+    let dataset = format!("synth_n{n}_d{d}");
+    let mut cells: Vec<RejectionCell> = Vec::new();
+    println!(
+        "\n== rejection sampling: exact vs lsh vs lsh-rigorous oracle \
+         (n={n}, d={d}, threads={}) ==\n",
+        fastkmeanspp::parallel::num_threads()
+    );
+    println!("| oracle | k | mean s | min s | mean cost | proposals/center |");
+    println!("|---|---|---|---|---|---|");
+    for &k in ks {
+        for oracle in OracleKind::all() {
+            let cfg = RejectionConfig {
+                oracle,
+                ..Default::default()
+            };
+            let mut secs = Stats::new();
+            let mut cost = Stats::new();
+            let mut ppc = Stats::new();
+            for rep in 0..reps.max(1) {
+                let mut rng = Pcg64::seed_from(seed.wrapping_add(rep as u64));
+                let t0 = Instant::now();
+                let s = rejection_sampling(&ps, k, &cfg, &mut rng);
+                secs.push(t0.elapsed().as_secs_f64());
+                cost.push(kernels::reduce::cost(&ps, &s.centers));
+                ppc.push(s.stats.proposals as f64 / k.max(1) as f64);
+            }
+            println!(
+                "| {} | {k} | {:.4} | {:.4} | {:.4e} | {:.2} |",
+                oracle.name(),
+                secs.mean(),
+                secs.min(),
+                cost.mean(),
+                ppc.mean()
+            );
+            cells.push(RejectionCell {
+                dataset: dataset.clone(),
+                algorithm: "rejection".to_string(),
+                oracle: oracle.name().to_string(),
+                k,
+                seconds: secs,
+                cost,
+                proposals_per_center: ppc,
+            });
+        }
+    }
+    cells
+}
+
 /// Kernel thread-scaling: the acceptance shape for the kernel engine is
 /// >1.5x at 4 threads on n=100k, d=128; the table prints the measured
 /// speedup per (kernel, d, threads) cell so regressions are visible in
@@ -312,6 +397,17 @@ fn main() -> fastkmeanspp::error::Result<()> {
         let cells = shard_compare(reps, short, seed);
         let path = args.get("json").unwrap_or("BENCH_shard.json");
         let doc = shard_json(&cells, reps, seed, fastkmeanspp::parallel::num_threads());
+        std::fs::write(path, doc.emit() + "\n").with_context(|| format!("write {path}"))?;
+        println!("\nwrote {path}");
+        return Ok(());
+    }
+
+    if args.get("rejection-only").is_some() {
+        let short = args.get("short").is_some();
+        let seed = args.get_u64("seed", 7)?;
+        let cells = rejection_compare(reps, short, seed);
+        let path = args.get("json").unwrap_or("BENCH_rejection.json");
+        let doc = rejection_json(&cells, reps, seed, fastkmeanspp::parallel::num_threads());
         std::fs::write(path, doc.emit() + "\n").with_context(|| format!("write {path}"))?;
         println!("\nwrote {path}");
         return Ok(());

@@ -115,6 +115,24 @@ pub fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     cfg.seed = args.get_u64("seed", cfg.seed)?;
     cfg.lloyd_iters = args.get_usize("lloyd", cfg.lloyd_iters)?;
     cfg.rejection.c = args.get_f32("c", cfg.rejection.c)?;
+    // Rejection-oracle selection + LSH knobs. `--oracle` steers plain
+    // `rejection`; the `rejection-exact` / `rejection-rigorous` variants
+    // pin theirs regardless (SeedingAlgorithm::forced_oracle).
+    if let Some(o) = args.get("oracle") {
+        cfg.rejection.oracle = crate::seeding::rejection::OracleKind::parse(o)?;
+    }
+    cfg.rejection.lsh.tables = args.get_usize("lsh-tables", cfg.rejection.lsh.tables)?;
+    cfg.rejection.lsh.m = args.get_usize("lsh-m", cfg.rejection.lsh.m)?;
+    cfg.rejection.lsh.probe_limit =
+        args.get_usize("lsh-probe-limit", cfg.rejection.lsh.probe_limit)?;
+    if let Some(w) = args.get("lsh-bucket-width") {
+        let w: f32 = w.parse().with_context(|| format!("--lsh-bucket-width {w:?}"))?;
+        // An explicit width wins over the data-driven estimate.
+        cfg.rejection.lsh.bucket_width = w;
+        cfg.rejection.auto_bucket_width = false;
+    }
+    cfg.rejection.max_proposals = args.get_u64("max-proposals", cfg.rejection.max_proposals)?;
+    cfg.rejection.validate()?;
     cfg.kmeanspar.shards = args.get_usize("shards", cfg.kmeanspar.shards)?;
     cfg.kmeanspar.rounds = args.get_usize("rounds", cfg.kmeanspar.rounds)?;
     cfg.kmeanspar.oversample = args.get_f64("oversample", cfg.kmeanspar.oversample)?;
@@ -155,6 +173,9 @@ USAGE:
   fkmpp seed     --dataset <kdd_sim|song_sim|census_sim> --algo <name> -k <K>
                  [--profile paper|scaled|smoke] [--seed N] [--lloyd ITERS]
                  [--c FLOAT] [--no-quantize]
+                 [--oracle exact|lsh|lsh-rigorous]            (rejection)
+                 [--lsh-tables L] [--lsh-m M] [--lsh-probe-limit P]
+                 [--lsh-bucket-width W] [--max-proposals N]
                  [--shards S] [--rounds R] [--oversample L]   (kmeans-par)
   fkmpp grid     --datasets a,b --algos x,y --ks 100,500 --reps 5
                  [--json results.json]
@@ -164,7 +185,8 @@ USAGE:
                  [--http-workers 4] [--fit-workers 1] [--no-persist]
   fkmpp info
 
-Algorithms: kmeanspp fastkmeanspp rejection rejection-exact afkmc2 uniform greedy
+Algorithms: kmeanspp fastkmeanspp rejection rejection-exact rejection-rigorous
+            afkmc2 uniform greedy
             kmeans-par (sharded k-means|| + weighted k-means++ recluster)";
 
 fn cmd_seed(args: &Args) -> Result<String> {
@@ -446,6 +468,52 @@ mod tests {
             cells[0].get("algorithm").and_then(|a| a.as_str()),
             Some("uniform")
         );
+    }
+
+    #[test]
+    fn oracle_flag_reaches_rejection_config() {
+        use crate::seeding::rejection::OracleKind;
+        let a = Args::parse(&argv(
+            "seed --dataset kdd_sim --algo rejection --oracle lsh-rigorous",
+        ))
+        .unwrap();
+        let cfg = config_from_args(&a).unwrap();
+        assert_eq!(cfg.rejection.oracle, OracleKind::LshRigorous);
+        // Unknown oracle: the error enumerates the valid names.
+        let a = Args::parse(&argv("seed --oracle bogus")).unwrap();
+        let err = format!("{:#}", config_from_args(&a).unwrap_err());
+        for o in OracleKind::all() {
+            assert!(err.contains(o.name()), "{:?} missing from {err:?}", o.name());
+        }
+    }
+
+    #[test]
+    fn lsh_knobs_validated_and_explicit_width_disables_autotune() {
+        for bad in [
+            "seed --lsh-tables 0",
+            "seed --lsh-m 0",
+            "seed --lsh-probe-limit 0",
+            "seed --lsh-bucket-width 0",
+            "seed --c 0.5",
+        ] {
+            let a = Args::parse(&argv(bad)).unwrap();
+            assert!(config_from_args(&a).is_err(), "{bad} should fail validation");
+        }
+        let a = Args::parse(&argv("seed --lsh-bucket-width 12.5 --lsh-tables 4")).unwrap();
+        let cfg = config_from_args(&a).unwrap();
+        assert_eq!(cfg.rejection.lsh.bucket_width, 12.5);
+        assert_eq!(cfg.rejection.lsh.tables, 4);
+        assert!(!cfg.rejection.auto_bucket_width);
+    }
+
+    #[test]
+    fn seed_smoke_run_with_lsh_oracle() {
+        let out = run(&argv(
+            "seed --dataset kdd_sim --algo rejection --oracle lsh -k 10 --profile smoke \
+             --data-dir /tmp/fkmpp_cli_test --artifacts-dir /nonexistent --seed 3",
+        ))
+        .unwrap();
+        assert!(out.contains("seeding cost"), "{out}");
     }
 
     #[test]

@@ -97,10 +97,13 @@ pub fn run_seeding(
     match algo {
         SeedingAlgorithm::KMeansPP => kmeanspp(ps, k, rng),
         SeedingAlgorithm::FastKMeansPP => fast_kmeanspp(ps, k, &Default::default(), rng),
-        SeedingAlgorithm::Rejection => rejection_sampling(ps, k, &cfg.rejection, rng),
-        SeedingAlgorithm::RejectionExact => {
-            let mut rc = cfg.rejection.clone();
-            rc.oracle = crate::seeding::rejection::OracleKind::Exact;
+        SeedingAlgorithm::Rejection
+        | SeedingAlgorithm::RejectionExact
+        | SeedingAlgorithm::RejectionLshRigorous => {
+            // Plain `rejection` honors the sweep's configured oracle
+            // (`--oracle`); the ablation variants pin theirs so grid rows
+            // stay comparable across configs.
+            let rc = algo.resolved_rejection_config(&cfg.rejection);
             rejection_sampling(ps, k, &rc, rng)
         }
         SeedingAlgorithm::Afkmc2 => afkmc2(ps, k, &cfg.afkmc2, rng),
@@ -235,6 +238,31 @@ mod tests {
             .get(DatasetId::KddSim, SeedingAlgorithm::Uniform, 15)
             .unwrap();
         assert!(cell.lloyd_cost.mean() <= cell.cost.mean());
+    }
+
+    #[test]
+    fn rejection_oracle_variants_all_produce_cells() {
+        // The three rejection-family rows run end-to-end through the
+        // grid: plain (configured oracle), exact, and rigorous.
+        let mut cfg = tiny_cfg();
+        cfg.algorithms = vec![
+            SeedingAlgorithm::Rejection,
+            SeedingAlgorithm::RejectionExact,
+            SeedingAlgorithm::RejectionLshRigorous,
+        ];
+        cfg.ks = vec![10];
+        cfg.reps = 1;
+        let res = run_grid(&cfg, |_| {}).unwrap();
+        assert_eq!(res.cells.len(), 3);
+        for algo in cfg.algorithms {
+            let cell = res.get(DatasetId::KddSim, algo, 10).unwrap();
+            assert!(cell.cost.mean() > 0.0, "{}", algo.name());
+            assert!(
+                cell.proposals_per_center.count() > 0,
+                "{} reported no proposals",
+                algo.name()
+            );
+        }
     }
 
     #[test]

@@ -31,6 +31,7 @@ fn extension_rows(res: &GridResults, dataset: DatasetId, ks: &[usize]) -> Vec<Se
         SeedingAlgorithm::KMeansPar,
         SeedingAlgorithm::KMeansPPGreedy,
         SeedingAlgorithm::RejectionExact,
+        SeedingAlgorithm::RejectionLshRigorous,
     ]
     .into_iter()
     .filter(|&a| ks.iter().any(|&k| res.get(dataset, a, k).is_some()))
@@ -205,6 +206,30 @@ pub struct KernelCell {
     pub speedup_vs_naive: f64,
 }
 
+/// Shared `BENCH_*.json` envelope: every bench emitter wraps its cells
+/// in the same top-level fields as [`grid_json`] (`profile`/`reps`/
+/// `seed`/`quantize`/`lloyd_iters`/`backend`/`threads`/`cells`), so one
+/// consumer reads every artifact in the perf trajectory and the contract
+/// lives in exactly one place.
+fn bench_json(
+    profile: &'static str,
+    cells: Vec<Json>,
+    reps: usize,
+    seed: u64,
+    threads: usize,
+) -> Json {
+    Json::obj(vec![
+        ("profile", Json::str(profile)),
+        ("reps", Json::num(reps as f64)),
+        ("seed", Json::num(seed as f64)),
+        ("quantize", Json::Bool(false)),
+        ("lloyd_iters", Json::num(0.0)),
+        ("backend", Json::str("native")),
+        ("threads", Json::num(threads as f64)),
+        ("cells", Json::Arr(cells)),
+    ])
+}
+
 /// `BENCH_kernels.json` — the kernel micro-bench artifact, first entry of
 /// the perf trajectory. Same top-level shape and cell fields as
 /// [`grid_json`] (`profile`/`reps`/`seed`/`backend`/`cells` with
@@ -227,16 +252,7 @@ pub fn kernels_json(cells: &[KernelCell], reps: usize, seed: u64, threads: usize
             ])
         })
         .collect();
-    Json::obj(vec![
-        ("profile", Json::str("kernel_bench")),
-        ("reps", Json::num(reps as f64)),
-        ("seed", Json::num(seed as f64)),
-        ("quantize", Json::Bool(false)),
-        ("lloyd_iters", Json::num(0.0)),
-        ("backend", Json::str("native")),
-        ("threads", Json::num(threads as f64)),
-        ("cells", Json::Arr(cell_docs)),
-    ])
+    bench_json("kernel_bench", cell_docs, reps, seed, threads)
 }
 
 /// One cell of the shard bench sweep
@@ -277,16 +293,50 @@ pub fn shard_json(cells: &[ShardCell], reps: usize, seed: u64, threads: usize) -
             ])
         })
         .collect();
-    Json::obj(vec![
-        ("profile", Json::str("shard_bench")),
-        ("reps", Json::num(reps as f64)),
-        ("seed", Json::num(seed as f64)),
-        ("quantize", Json::Bool(false)),
-        ("lloyd_iters", Json::num(0.0)),
-        ("backend", Json::str("native")),
-        ("threads", Json::num(threads as f64)),
-        ("cells", Json::Arr(cell_docs)),
-    ])
+    bench_json("shard_bench", cell_docs, reps, seed, threads)
+}
+
+/// One cell of the rejection-oracle bench sweep
+/// (`benches/micro_runtime.rs --rejection-only`): Algorithm 4 timed with
+/// one ANN oracle backing the acceptance test.
+pub struct RejectionCell {
+    /// Synthetic instance label, e.g. `synth_n100000_d128`.
+    pub dataset: String,
+    /// Always `rejection` — the oracle is the swept axis.
+    pub algorithm: String,
+    /// Oracle name (`exact` / `lsh` / `lsh-rigorous`).
+    pub oracle: String,
+    pub k: usize,
+    /// Per-rep seeding wall-clock seconds.
+    pub seconds: Stats,
+    /// Per-rep seeding cost (k-means objective of the chosen centers).
+    pub cost: Stats,
+    /// Per-rep proposals per accepted center (Lemma 5.3 check).
+    pub proposals_per_center: Stats,
+}
+
+/// `BENCH_rejection.json` — the oracle-sweep bench artifact. Same
+/// top-level shape and per-cell field names as [`grid_json`] /
+/// [`kernels_json`] / [`shard_json`] (one consumer reads every
+/// `BENCH_*.json`); rejection cells add `oracle` and carry real cost +
+/// proposals statistics.
+pub fn rejection_json(cells: &[RejectionCell], reps: usize, seed: u64, threads: usize) -> Json {
+    let cell_docs: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            Json::obj(vec![
+                ("dataset", Json::str(c.dataset.clone())),
+                ("algorithm", Json::str(c.algorithm.clone())),
+                ("oracle", Json::str(c.oracle.clone())),
+                ("k", Json::num(c.k as f64)),
+                ("seconds", stats_json(&c.seconds)),
+                ("cost", stats_json(&c.cost)),
+                ("lloyd_cost", Json::Null),
+                ("proposals_per_center", stats_json(&c.proposals_per_center)),
+            ])
+        })
+        .collect();
+    bench_json("rejection_bench", cell_docs, reps, seed, threads)
 }
 
 /// Lemma 5.3 diagnostic: proposals per accepted center for the rejection
@@ -297,7 +347,11 @@ pub fn rejection_diagnostics(res: &GridResults, dataset: DatasetId, ks: &[usize]
         dataset.name()
     );
     out.push_str(&header(ks));
-    for algo in [SeedingAlgorithm::Rejection, SeedingAlgorithm::RejectionExact] {
+    for algo in [
+        SeedingAlgorithm::Rejection,
+        SeedingAlgorithm::RejectionExact,
+        SeedingAlgorithm::RejectionLshRigorous,
+    ] {
         let mut row = format!("| {} |", algo.paper_name());
         let mut any = false;
         for &k in ks {
@@ -488,6 +542,64 @@ mod tests {
         assert!(cell.get("seconds").unwrap().get("mean").is_some());
         assert!(cell.get("cost").unwrap().get("mean").is_some());
         assert!(cell.get("lloyd_cost").map(Json::is_null).unwrap());
+    }
+
+    #[test]
+    fn rejection_json_round_trips_with_grid_shape() {
+        let mut s = Stats::new();
+        s.push(0.8);
+        let mut c = Stats::new();
+        c.push(2.9e7);
+        let mut p = Stats::new();
+        p.push(3.5);
+        let cells = vec![RejectionCell {
+            dataset: "synth_n100000_d128".to_string(),
+            algorithm: "rejection".to_string(),
+            oracle: "lsh-rigorous".to_string(),
+            k: 64,
+            seconds: s,
+            cost: c,
+            proposals_per_center: p,
+        }];
+        let doc = rejection_json(&cells, 2, 7, 4);
+        let back = crate::server::json::parse(&doc.emit()).unwrap();
+        assert_eq!(
+            back.get("profile").and_then(Json::as_str),
+            Some("rejection_bench")
+        );
+        assert_eq!(back.get("reps").and_then(Json::as_usize), Some(2));
+        let arr = back.get("cells").and_then(Json::as_array).unwrap();
+        assert_eq!(arr.len(), 1);
+        let cell = &arr[0];
+        assert_eq!(cell.get("algorithm").and_then(Json::as_str), Some("rejection"));
+        assert_eq!(cell.get("oracle").and_then(Json::as_str), Some("lsh-rigorous"));
+        assert_eq!(cell.get("k").and_then(Json::as_usize), Some(64));
+        assert!(cell.get("seconds").unwrap().get("mean").is_some());
+        assert!(cell.get("cost").unwrap().get("mean").is_some());
+        assert!(cell.get("proposals_per_center").unwrap().get("mean").is_some());
+        assert!(cell.get("lloyd_cost").map(Json::is_null).unwrap());
+    }
+
+    #[test]
+    fn rejection_rigorous_renders_as_extension_row() {
+        let mut res = fake_results();
+        let t = cost_table(&res, DatasetId::KddSim, &[100]);
+        assert!(!t.contains("REJECTION-RIGOROUS"), "{t}");
+        let mut cell = CellResult::default();
+        cell.seconds.push(1.2);
+        cell.cost.push(3.0e7);
+        res.cells.insert(
+            CellKey {
+                dataset: DatasetId::KddSim,
+                algorithm: SeedingAlgorithm::RejectionLshRigorous,
+                k: 100,
+            },
+            cell,
+        );
+        let t = cost_table(&res, DatasetId::KddSim, &[100]);
+        assert!(t.contains("REJECTION-RIGOROUS"), "{t}");
+        let rt = runtime_table(&res, DatasetId::KddSim, &[100]);
+        assert!(rt.contains("REJECTION-RIGOROUS"), "{rt}");
     }
 
     #[test]

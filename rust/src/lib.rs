@@ -89,7 +89,9 @@ pub mod prelude {
     pub use crate::rng::Pcg64;
     pub use crate::sampletree::SampleTree;
     pub use crate::seeding::{
-        afkmc2::Afkmc2Config, rejection::RejectionConfig, Seeding, SeedingAlgorithm,
+        afkmc2::Afkmc2Config,
+        rejection::{OracleKind, RejectionConfig},
+        Seeding, SeedingAlgorithm,
     };
     pub use crate::shard::kmeanspar::KMeansParConfig;
     pub use crate::shard::weighted::WeightedPointSet;

@@ -21,6 +21,7 @@
 use std::collections::HashMap;
 
 use crate::data::matrix::{d2, PointSet};
+use crate::kernels::blocked::dot;
 use crate::lsh::pstable::TableHash;
 use crate::rng::Pcg64;
 
@@ -61,8 +62,11 @@ impl Default for GapConfig {
 pub struct GapStructure {
     cfg: GapConfig,
     hashes: Vec<TableHash>,
-    /// One bucket map per table; values are append-only point-id lists.
-    buckets: Vec<HashMap<u64, Vec<u32>>>,
+    /// One bucket map per table; values are append-only `(point id, ‖p‖²)`
+    /// lists — the squared norm rides along with the id so cached probes
+    /// can evaluate candidates via the kernels-v2 norm trick without an
+    /// extra row pass.
+    buckets: Vec<HashMap<u64, Vec<(u32, f32)>>>,
     inserted: usize,
 }
 
@@ -90,13 +94,38 @@ impl GapStructure {
         self.inserted == 0
     }
 
+    /// Hash evaluations one `bucket_keys` call performs (tables × m) —
+    /// the per-point hashing cost in d-dimensional dot products, used by
+    /// the multiscale oracle to decide whether key hashing is worth
+    /// parallelizing.
+    pub fn hashes_per_point(&self) -> usize {
+        self.cfg.tables * self.cfg.m
+    }
+
+    /// Per-table bucket keys for `p` — the `O(tables · m · d)` hashing
+    /// work, split out so [`crate::lsh::multiscale::MonotoneLsh`] can
+    /// compute keys for many structures in parallel (hashing is pure)
+    /// while the cheap bucket appends stay serial and deterministic.
+    pub fn bucket_keys(&self, p: &[f32]) -> Vec<u64> {
+        self.hashes.iter().map(|h| h.bucket(p)).collect()
+    }
+
+    /// Append `i` (with its cached `‖p_i‖²`) under precomputed per-table
+    /// `keys` (from [`GapStructure::bucket_keys`]).
+    pub fn insert_hashed(&mut self, keys: &[u64], i: u32, norm: f32) {
+        debug_assert_eq!(keys.len(), self.buckets.len());
+        for (table, &key) in self.buckets.iter_mut().zip(keys) {
+            table.entry(key).or_default().push((i, norm));
+        }
+        self.inserted += 1;
+    }
+
     /// Append `i` to its bucket in every table.
     pub fn insert(&mut self, ps: &PointSet, i: u32) {
         let p = ps.row(i as usize);
-        for (hash, table) in self.hashes.iter().zip(self.buckets.iter_mut()) {
-            table.entry(hash.bucket(p)).or_default().push(i);
-        }
-        self.inserted += 1;
+        let norm = dot(p, p);
+        let keys = self.bucket_keys(p);
+        self.insert_hashed(&keys, i, norm);
     }
 
     /// Candidate per table, then the closest overall. Returns
@@ -116,7 +145,7 @@ impl GapStructure {
             let Some(bucket) = table.get(&hash.bucket(q)) else {
                 continue;
             };
-            for &i in bucket.iter().take(self.cfg.probe_limit) {
+            for &(i, _) in bucket.iter().take(self.cfg.probe_limit) {
                 let dist = d2(ps.row(i as usize), q).sqrt();
                 if dist <= radius {
                     if best.map_or(true, |(_, bd)| dist < bd) {
@@ -136,20 +165,65 @@ impl GapStructure {
     ///
     /// [`query`]: GapStructure::query
     pub fn dist_below(&self, ps: &PointSet, q: &[f32], threshold: f32) -> bool {
-        let radius = (self.cfg.c * self.cfg.r_scale).min(threshold);
         let t2 = threshold * threshold;
         for (hash, table) in self.hashes.iter().zip(&self.buckets) {
             let Some(bucket) = table.get(&hash.bucket(q)) else {
                 continue;
             };
-            for &i in bucket.iter().take(self.cfg.probe_limit) {
-                let dd = d2(ps.row(i as usize), q);
-                if dd < t2 && dd.sqrt() <= radius {
-                    return true;
-                }
+            if self.scan_bucket_direct(ps, bucket, q, threshold, t2) {
+                return true;
             }
         }
         false
+    }
+
+    /// [`GapStructure::dist_below`] over precomputed per-table `keys`,
+    /// evaluating candidates via the norm trick
+    /// (`‖q‖² + ‖c‖² − 2 q·c`, with `‖c‖²` cached in the bucket entry).
+    /// Same candidate set and early-exit semantics as the direct scan;
+    /// the arithmetic differs only at the f32-rounding level. Returns
+    /// `(witness_found, candidates_evaluated)` so the caller can
+    /// aggregate probe counters.
+    pub fn dist_below_hashed_cached(
+        &self,
+        ps: &PointSet,
+        keys: &[u64],
+        q: &[f32],
+        q_norm2: f32,
+        threshold: f32,
+    ) -> (bool, u64) {
+        let radius = (self.cfg.c * self.cfg.r_scale).min(threshold);
+        let t2 = threshold * threshold;
+        let mut probes = 0u64;
+        for (table, &key) in self.buckets.iter().zip(keys) {
+            let Some(bucket) = table.get(&key) else {
+                continue;
+            };
+            for &(i, cn) in bucket.iter().take(self.cfg.probe_limit) {
+                probes += 1;
+                let dd = (q_norm2 + cn - 2.0 * dot(ps.row(i as usize), q)).max(0.0);
+                if dd < t2 && dd.sqrt() <= radius {
+                    return (true, probes);
+                }
+            }
+        }
+        (false, probes)
+    }
+
+    #[inline]
+    fn scan_bucket_direct(
+        &self,
+        ps: &PointSet,
+        bucket: &[(u32, f32)],
+        q: &[f32],
+        threshold: f32,
+        t2: f32,
+    ) -> bool {
+        let radius = (self.cfg.c * self.cfg.r_scale).min(threshold);
+        bucket.iter().take(self.cfg.probe_limit).any(|&(i, _)| {
+            let dd = d2(ps.row(i as usize), q);
+            dd < t2 && dd.sqrt() <= radius
+        })
     }
 }
 
@@ -254,6 +328,33 @@ mod tests {
                 last = d;
             } else {
                 assert_eq!(last, f32::INFINITY, "candidate disappeared");
+            }
+        }
+    }
+
+    #[test]
+    fn cached_witness_scan_matches_direct() {
+        // The norm-trick probe (`dist_below_hashed_cached`) must agree
+        // with the direct scan on the same candidate set (thresholds are
+        // fixed and off the f32-rounding knife edge, so the decision is
+        // arithmetic-independent).
+        let ps = dataset(300, 11);
+        let mut rng = Pcg64::seed_from(12);
+        let mut g = GapStructure::new(10, cfg_unit(), &mut rng);
+        for i in 0..150u32 {
+            g.insert(&ps, i);
+        }
+        let norms = crate::kernels::norms::squared_norms(&ps);
+        for q in (150..300).step_by(3) {
+            let row = ps.row(q);
+            let keys = g.bucket_keys(row);
+            for t in [0.5f32, 2.0, 8.0, 64.0] {
+                let direct = g.dist_below(&ps, row, t);
+                let (cached, probes) = g.dist_below_hashed_cached(&ps, &keys, row, norms[q], t);
+                assert_eq!(direct, cached, "q={q} t={t}");
+                if cached {
+                    assert!(probes >= 1);
+                }
             }
         }
     }

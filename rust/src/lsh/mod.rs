@@ -23,7 +23,26 @@ pub mod gap;
 pub mod multiscale;
 pub mod pstable;
 
+use std::cell::Cell;
+
 use crate::data::matrix::PointSet;
+
+/// Cumulative probe counters an oracle may expose — monitoring only
+/// (the rejection seeder flushes them to [`crate::metrics::global`] as
+/// `oracle.probes` / `oracle.prefix_hits` / `oracle.scale.*`). Counting
+/// happens on the cached witness path only (the seeding hot path);
+/// `query`/`dist_below` keep the untracked reference semantics.
+#[derive(Clone, Debug, Default)]
+pub struct OracleProbes {
+    /// Candidate distance evaluations across all cached witness scans.
+    pub probes: u64,
+    /// Witnesses found in the exact insertion-prefix scan (LSH only).
+    pub prefix_hits: u64,
+    /// Witnesses per scale level of the multi-scale stack (index =
+    /// structure index; single-scale practical mode has one entry;
+    /// empty for oracles without scales).
+    pub scale_hits: Vec<u64>,
+}
 
 /// Approximate nearest-neighbor oracle over a fixed point set, inserting
 /// dataset indices. The contract mirrors Theorem 5.1:
@@ -67,6 +86,11 @@ pub trait NnOracle {
     fn is_empty(&self) -> bool {
         self.len() == 0
     }
+
+    /// Cumulative probe counters (default: none tracked).
+    fn probe_stats(&self) -> OracleProbes {
+        OracleProbes::default()
+    }
 }
 
 /// Exact oracle: linear scan over inserted points. `O(|S| d)` per query —
@@ -82,6 +106,10 @@ pub struct ExactNn {
     inserted: Vec<u32>,
     /// `‖c‖²` per entry of `inserted`, via [`crate::kernels::blocked::dot`].
     norms: Vec<f32>,
+    /// Candidate evaluations on the cached witness path (`Cell`: the
+    /// scan takes `&self`; oracles run on the single-threaded
+    /// acceptance loop).
+    probes: Cell<u64>,
 }
 
 impl NnOracle for ExactNn {
@@ -111,17 +139,29 @@ impl NnOracle for ExactNn {
 
     fn dist_below_cached(&self, ps: &PointSet, q: &[f32], q_norm2: f32, threshold: f32) -> bool {
         let t2 = threshold * threshold;
+        let mut probes = 0u64;
+        let mut found = false;
         for (&i, &cn) in self.inserted.iter().zip(&self.norms) {
+            probes += 1;
             let dd = q_norm2 + cn - 2.0 * crate::kernels::blocked::dot(ps.row(i as usize), q);
             if dd.max(0.0) < t2 {
-                return true;
+                found = true;
+                break;
             }
         }
-        false
+        self.probes.set(self.probes.get() + probes);
+        found
     }
 
     fn len(&self) -> usize {
         self.inserted.len()
+    }
+
+    fn probe_stats(&self) -> OracleProbes {
+        OracleProbes {
+            probes: self.probes.get(),
+            ..OracleProbes::default()
+        }
     }
 }
 

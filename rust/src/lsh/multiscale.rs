@@ -15,9 +15,12 @@
 //! in Algorithm 4 absorbs overestimates) and cannot break monotonicity:
 //! the candidate set still only grows.
 
+use std::cell::Cell;
+
 use crate::data::matrix::{d2, PointSet};
+use crate::kernels::blocked::dot;
 use crate::lsh::gap::{GapConfig, GapStructure};
-use crate::lsh::NnOracle;
+use crate::lsh::{NnOracle, OracleProbes};
 use crate::rng::Pcg64;
 
 /// Which Appendix-D construction to use.
@@ -66,6 +69,15 @@ impl Default for LshParams {
 /// Past the cap the scan costs a constant `PREFIX_CAP * d` per query.
 pub const PREFIX_CAP: usize = 128;
 
+/// Once the total per-**insert** hashing work (structures × tables × m ×
+/// d multiply-adds) crosses this floor, insertion bucket keys are
+/// computed through [`crate::parallel::parallel_map`] (one task per gap
+/// structure) instead of serially. The floor sits well above
+/// `parallel_map`'s scoped-thread spawn cost (~tens of µs), and inserts
+/// only happen k times per seeding run — queries never pay it: the
+/// witness path hashes lazily per structure with early exit.
+const PARALLEL_HASH_MIN_MACS: usize = 262_144;
+
 /// Monotone approximate-NN oracle (implements [`NnOracle`]).
 pub struct MonotoneLsh {
     structures: Vec<GapStructure>,
@@ -75,8 +87,22 @@ pub struct MonotoneLsh {
     /// the scan is the per-query hot loop and sequential access beats
     /// `PREFIX_CAP` random row gathers (§Perf log).
     prefix_rows: Vec<f32>,
+    /// `‖row‖²` per prefix slot — lets the cached witness scan use the
+    /// kernels-v2 norm trick over the same contiguous buffer.
+    prefix_norms: Vec<f32>,
     dim: usize,
     inserted: usize,
+    /// Monitoring counters ([`OracleProbes`]). `Cell`: witness scans take
+    /// `&self` and the oracle lives on the single-threaded acceptance
+    /// loop; the cells are never touched from the parallel hash tasks.
+    probes: Cell<u64>,
+    prefix_hits: Cell<u64>,
+    scale_hits: Vec<Cell<u64>>,
+    /// Structure index that produced the most recent witness — probed
+    /// first on the next query. Pure probe-order heuristic: `dist_below`
+    /// is an existence test over a fixed candidate set, so the order can
+    /// change probe counts but never the decision.
+    last_hit: Cell<usize>,
 }
 
 impl MonotoneLsh {
@@ -90,12 +116,22 @@ impl MonotoneLsh {
             bucket_width: params.bucket_width,
             probe_limit: params.probe_limit,
         };
+        Self::from_structures(vec![GapStructure::new(dim, cfg, rng)], dim)
+    }
+
+    fn from_structures(structures: Vec<GapStructure>, dim: usize) -> Self {
+        let scale_hits = (0..structures.len()).map(|_| Cell::new(0)).collect();
         MonotoneLsh {
-            structures: vec![GapStructure::new(dim, cfg, rng)],
+            structures,
             prefix: Vec::new(),
             prefix_rows: Vec::new(),
+            prefix_norms: Vec::new(),
             dim,
             inserted: 0,
+            probes: Cell::new(0),
+            prefix_hits: Cell::new(0),
+            scale_hits,
+            last_hit: Cell::new(0),
         }
     }
 
@@ -127,13 +163,7 @@ impl MonotoneLsh {
                 GapStructure::new(dim, cfg, &mut sr)
             })
             .collect();
-        MonotoneLsh {
-            structures,
-            prefix: Vec::new(),
-            prefix_rows: Vec::new(),
-            dim,
-            inserted: 0,
-        }
+        Self::from_structures(structures, dim)
     }
 
     /// Build from a mode descriptor.
@@ -145,16 +175,43 @@ impl MonotoneLsh {
             }
         }
     }
+
+    /// Per-point bucket keys of every structure — the insert path.
+    /// Hashing is the bulk of the per-insert cost on deep rigorous
+    /// stacks, and it is pure, so it fans out over
+    /// [`crate::parallel::parallel_map`] (order-preserving — results are
+    /// bit-identical to the serial path) once the total work crosses
+    /// [`PARALLEL_HASH_MIN_MACS`]. The practical single-scale mode stays
+    /// inline.
+    fn all_keys(&self, q: &[f32]) -> Vec<Vec<u64>> {
+        let structures = &self.structures;
+        let macs: usize = structures
+            .iter()
+            .map(|s| s.hashes_per_point() * self.dim)
+            .sum();
+        if structures.len() > 1 && macs >= PARALLEL_HASH_MIN_MACS {
+            crate::parallel::parallel_map(structures.len(), |s| structures[s].bucket_keys(q))
+        } else {
+            structures.iter().map(|s| s.bucket_keys(q)).collect()
+        }
+    }
 }
 
 impl NnOracle for MonotoneLsh {
     fn insert(&mut self, ps: &PointSet, i: u32) {
+        let row = ps.row(i as usize);
+        let norm = dot(row, row);
         if self.prefix.len() < PREFIX_CAP {
             self.prefix.push(i);
-            self.prefix_rows.extend_from_slice(ps.row(i as usize));
+            self.prefix_rows.extend_from_slice(row);
+            self.prefix_norms.push(norm);
         }
-        for s in self.structures.iter_mut() {
-            s.insert(ps, i);
+        // Hash every (structure, table) key — in parallel on deep stacks
+        // — then do the cheap bucket appends serially, preserving the
+        // append-only insertion order the monotonicity argument needs.
+        let keys = self.all_keys(row);
+        for (s, k) in keys.iter().enumerate() {
+            self.structures[s].insert_hashed(k, i, norm);
         }
         self.inserted += 1;
     }
@@ -201,8 +258,56 @@ impl NnOracle for MonotoneLsh {
             .any(|s| s.dist_below(ps, q, threshold))
     }
 
+    fn dist_below_cached(&self, ps: &PointSet, q: &[f32], q_norm2: f32, threshold: f32) -> bool {
+        let t2 = threshold * threshold;
+        let mut probes = 0u64;
+        // (1) Exact prefix scan via the norm trick over the contiguous
+        // buffer — rejects (the common case) usually find their witness
+        // here without touching a single hash.
+        for (slot, &cn) in self.prefix_norms.iter().enumerate() {
+            probes += 1;
+            let row = &self.prefix_rows[slot * self.dim..(slot + 1) * self.dim];
+            let dd = (q_norm2 + cn - 2.0 * dot(row, q)).max(0.0);
+            if dd < t2 {
+                self.probes.set(self.probes.get() + probes);
+                self.prefix_hits.set(self.prefix_hits.get() + 1);
+                return true;
+            }
+        }
+        // (2) Bucket probes over every scale, most-recent-witness
+        // structure first (order affects probe counts, never the
+        // decision — `dist_below` is an existence test). Keys are hashed
+        // lazily per structure so an early witness skips the remaining
+        // scales' hashing entirely (the dominant per-probe cost).
+        let n = self.structures.len();
+        let start = self.last_hit.get().min(n.saturating_sub(1));
+        for step in 0..n {
+            let s = (start + step) % n;
+            let keys = self.structures[s].bucket_keys(q);
+            let (hit, p) =
+                self.structures[s].dist_below_hashed_cached(ps, &keys, q, q_norm2, threshold);
+            probes += p;
+            if hit {
+                self.scale_hits[s].set(self.scale_hits[s].get() + 1);
+                self.last_hit.set(s);
+                self.probes.set(self.probes.get() + probes);
+                return true;
+            }
+        }
+        self.probes.set(self.probes.get() + probes);
+        false
+    }
+
     fn len(&self) -> usize {
         self.inserted
+    }
+
+    fn probe_stats(&self) -> OracleProbes {
+        OracleProbes {
+            probes: self.probes.get(),
+            prefix_hits: self.prefix_hits.get(),
+            scale_hits: self.scale_hits.iter().map(Cell::get).collect(),
+        }
     }
 }
 
@@ -406,6 +511,42 @@ mod tests {
             within as f64 >= 0.6 * total as f64,
             "only {within}/{total} within 2x of exact"
         );
+    }
+
+    #[test]
+    fn cached_witness_matches_uncached_both_modes() {
+        // The norm-trick witness path (what the rejection seeder drives)
+        // must agree with the reference scan away from the f32 knife
+        // edge, and the probe counters must advance.
+        let ps = dataset(500, 13);
+        let norms = crate::kernels::norms::squared_norms(&ps);
+        let mut rng = Pcg64::seed_from(14);
+        let p = params(&ps, &mut rng);
+        let max_dist = ps.max_dist_upper_bound();
+        for rigorous in [false, true] {
+            let mut lsh = if rigorous {
+                MonotoneLsh::rigorous(12, &p, max_dist, 512.0, &mut rng)
+            } else {
+                MonotoneLsh::practical(12, &p, &mut rng)
+            };
+            for i in 0..250u32 {
+                lsh.insert(&ps, i);
+            }
+            for q in (250..500).step_by(5) {
+                let (_, dist) = lsh.query(&ps, ps.row(q)).unwrap();
+                for mult in [0.5f32, 2.0] {
+                    let t = dist * mult;
+                    assert_eq!(
+                        lsh.dist_below(&ps, ps.row(q), t),
+                        lsh.dist_below_cached(&ps, ps.row(q), norms[q], t),
+                        "rigorous={rigorous} q={q} mult={mult}"
+                    );
+                }
+            }
+            let stats = lsh.probe_stats();
+            assert!(stats.probes > 0, "rigorous={rigorous}");
+            assert_eq!(stats.scale_hits.len(), lsh.structures.len());
+        }
     }
 
     #[test]

@@ -8,9 +8,15 @@
 //! | `afkmc2`         | baseline  | `O(nd + mk^2 d)` (MCMC)        |
 //! | `uniform`        | baseline  | `O(kd)`                        |
 //! | `fastkmeanspp`   | Alg. 3    | `O(nd log(dΔ) + n log(dΔ) log n)` |
-//! | `rejection`      | Alg. 4    | near-linear + LSH terms        |
+//! | `rejection`      | Alg. 4    | near-linear + LSH terms (practical single-scale oracle) |
+//! | `rejection-rigorous` | Alg. 4 + App. D.2 | the Theorem-5.1 multi-scale oracle stack |
 //! | `rejection-exact`| ablation  | the `Ω(k^2)` no-LSH variant §5 |
 //! | `kmeans-par`     | extension | k-means‖ over data shards ([`crate::shard`]) |
+//!
+//! The rejection family carries its ANN-oracle choice: `rejection`
+//! honors the configured [`rejection::RejectionConfig::oracle`] (default
+//! practical LSH, overridable via `--oracle`), while `rejection-exact` /
+//! `rejection-rigorous` pin theirs ([`SeedingAlgorithm::forced_oracle`]).
 
 pub mod afkmc2;
 pub mod fastkmeanspp;
@@ -62,6 +68,13 @@ impl Seeding {
 }
 
 /// The algorithm registry (CLI names match the paper's).
+///
+/// New variants are APPENDED, never inserted: the discriminant feeds
+/// fixed-seed derivations (`algo as u64` in the sweep runner's cell
+/// seeds and the statistical suite's `seed_costs`), so inserting a
+/// variant mid-enum would silently re-roll every later algorithm's
+/// "fixed" seeds. Listing order for humans lives in
+/// [`SeedingAlgorithm::all`], which is free to group related variants.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SeedingAlgorithm {
     KMeansPP,
@@ -77,18 +90,22 @@ pub enum SeedingAlgorithm {
     /// ([`crate::shard::kmeanspar`]) — the scale-out seeder; not in the
     /// paper's tables.
     KMeansPar,
+    /// Algorithm 4 with the rigorous multi-scale LSH oracle pinned
+    /// (Appendix D.2 / Theorem 5.1) — the guarantee-grade variant.
+    RejectionLshRigorous,
 }
 
 impl SeedingAlgorithm {
     /// Every registered algorithm (paper five + extensions), in registry
     /// order. The single source of truth for round-trip tests and the
     /// parse error message.
-    pub fn all() -> [SeedingAlgorithm; 8] {
+    pub fn all() -> [SeedingAlgorithm; 9] {
         [
             SeedingAlgorithm::KMeansPP,
             SeedingAlgorithm::FastKMeansPP,
             SeedingAlgorithm::Rejection,
             SeedingAlgorithm::RejectionExact,
+            SeedingAlgorithm::RejectionLshRigorous,
             SeedingAlgorithm::Afkmc2,
             SeedingAlgorithm::Uniform,
             SeedingAlgorithm::KMeansPPGreedy,
@@ -101,8 +118,11 @@ impl SeedingAlgorithm {
             "kmeanspp" | "kmeans++" => SeedingAlgorithm::KMeansPP,
             "greedy" | "kmeanspp-greedy" => SeedingAlgorithm::KMeansPPGreedy,
             "fastkmeanspp" | "fast" => SeedingAlgorithm::FastKMeansPP,
-            "rejection" | "rejectionsampling" => SeedingAlgorithm::Rejection,
+            "rejection" | "rejectionsampling" | "rejection-lsh" => SeedingAlgorithm::Rejection,
             "rejection-exact" => SeedingAlgorithm::RejectionExact,
+            "rejection-rigorous" | "rejection-lsh-rigorous" => {
+                SeedingAlgorithm::RejectionLshRigorous
+            }
             "afkmc2" => SeedingAlgorithm::Afkmc2,
             "uniform" => SeedingAlgorithm::Uniform,
             "kmeans-par" | "kmeanspar" | "kmeans_par" | "kmeans||" => SeedingAlgorithm::KMeansPar,
@@ -121,6 +141,7 @@ impl SeedingAlgorithm {
             SeedingAlgorithm::FastKMeansPP => "fastkmeanspp",
             SeedingAlgorithm::Rejection => "rejection",
             SeedingAlgorithm::RejectionExact => "rejection-exact",
+            SeedingAlgorithm::RejectionLshRigorous => "rejection-rigorous",
             SeedingAlgorithm::Afkmc2 => "afkmc2",
             SeedingAlgorithm::Uniform => "uniform",
             SeedingAlgorithm::KMeansPPGreedy => "greedy",
@@ -135,6 +156,7 @@ impl SeedingAlgorithm {
             SeedingAlgorithm::FastKMeansPP => "FASTK-MEANS++",
             SeedingAlgorithm::Rejection => "REJECTIONSAMPLING",
             SeedingAlgorithm::RejectionExact => "REJECTION-EXACT",
+            SeedingAlgorithm::RejectionLshRigorous => "REJECTION-RIGOROUS",
             SeedingAlgorithm::Afkmc2 => "AFKMC2",
             SeedingAlgorithm::Uniform => "UNIFORMSAMPLING",
             SeedingAlgorithm::KMeansPPGreedy => "GREEDY-K-MEANS++",
@@ -155,6 +177,46 @@ impl SeedingAlgorithm {
         ]
     }
 
+    /// The ANN oracle a rejection-family variant pins, if any. `None`
+    /// means "honor the configured [`rejection::RejectionConfig::oracle`]"
+    /// (which is how `--oracle` reaches plain `rejection`); the ablation
+    /// variants always force theirs, so `rejection-exact` stays the
+    /// paper's `Ω(k²)` baseline no matter what the config says.
+    pub fn forced_oracle(self) -> Option<rejection::OracleKind> {
+        match self {
+            SeedingAlgorithm::RejectionExact => Some(rejection::OracleKind::Exact),
+            SeedingAlgorithm::RejectionLshRigorous => Some(rejection::OracleKind::LshRigorous),
+            _ => None,
+        }
+    }
+
+    /// The rejection config this variant should actually run with:
+    /// `base` with the variant's pinned oracle (if any) applied. The one
+    /// place the pinning rule lives — `run()`, the sweep runner and the
+    /// server fit worker all resolve through here.
+    pub fn resolved_rejection_config(
+        self,
+        base: &rejection::RejectionConfig,
+    ) -> rejection::RejectionConfig {
+        let mut rc = base.clone();
+        if let Some(oracle) = self.forced_oracle() {
+            rc.oracle = oracle;
+        }
+        rc
+    }
+
+    /// Whether this algorithm runs through
+    /// [`rejection::rejection_sampling`] (and therefore honors a
+    /// [`rejection::RejectionConfig`]).
+    pub fn is_rejection(self) -> bool {
+        matches!(
+            self,
+            SeedingAlgorithm::Rejection
+                | SeedingAlgorithm::RejectionExact
+                | SeedingAlgorithm::RejectionLshRigorous
+        )
+    }
+
     /// Run with default per-algorithm configs.
     pub fn run(self, ps: &PointSet, k: usize, rng: &mut Pcg64) -> Seeding {
         match self {
@@ -162,14 +224,10 @@ impl SeedingAlgorithm {
             SeedingAlgorithm::FastKMeansPP => {
                 fastkmeanspp::fast_kmeanspp(ps, k, &Default::default(), rng)
             }
-            SeedingAlgorithm::Rejection => {
-                rejection::rejection_sampling(ps, k, &Default::default(), rng)
-            }
-            SeedingAlgorithm::RejectionExact => {
-                let cfg = rejection::RejectionConfig {
-                    oracle: rejection::OracleKind::Exact,
-                    ..Default::default()
-                };
+            SeedingAlgorithm::Rejection
+            | SeedingAlgorithm::RejectionExact
+            | SeedingAlgorithm::RejectionLshRigorous => {
+                let cfg = self.resolved_rejection_config(&Default::default());
                 rejection::rejection_sampling(ps, k, &cfg, rng)
             }
             SeedingAlgorithm::Afkmc2 => {
@@ -199,7 +257,58 @@ mod tests {
             SeedingAlgorithm::parse("kmeans_par").unwrap(),
             SeedingAlgorithm::KMeansPar
         );
+        // Oracle-explicit spellings of the rejection family.
+        assert_eq!(
+            SeedingAlgorithm::parse("rejection-lsh").unwrap(),
+            SeedingAlgorithm::Rejection
+        );
+        assert_eq!(
+            SeedingAlgorithm::parse("rejection-lsh-rigorous").unwrap(),
+            SeedingAlgorithm::RejectionLshRigorous
+        );
         assert!(SeedingAlgorithm::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn rejection_family_carries_its_oracle() {
+        use crate::seeding::rejection::OracleKind;
+        assert_eq!(
+            SeedingAlgorithm::RejectionExact.forced_oracle(),
+            Some(OracleKind::Exact)
+        );
+        assert_eq!(
+            SeedingAlgorithm::RejectionLshRigorous.forced_oracle(),
+            Some(OracleKind::LshRigorous)
+        );
+        // Plain `rejection` honors the config (default = practical LSH).
+        assert_eq!(SeedingAlgorithm::Rejection.forced_oracle(), None);
+        // resolved_rejection_config applies the pin, keeps the rest.
+        let base = rejection::RejectionConfig {
+            c: 2.5,
+            oracle: OracleKind::LshPractical,
+            ..Default::default()
+        };
+        let rc = SeedingAlgorithm::RejectionExact.resolved_rejection_config(&base);
+        assert_eq!(rc.oracle, OracleKind::Exact);
+        assert_eq!(rc.c, 2.5);
+        let rc = SeedingAlgorithm::Rejection.resolved_rejection_config(&base);
+        assert_eq!(rc.oracle, OracleKind::LshPractical);
+        for a in SeedingAlgorithm::all() {
+            assert_eq!(
+                a.is_rejection(),
+                matches!(
+                    a,
+                    SeedingAlgorithm::Rejection
+                        | SeedingAlgorithm::RejectionExact
+                        | SeedingAlgorithm::RejectionLshRigorous
+                ),
+                "{}",
+                a.name()
+            );
+            if a.forced_oracle().is_some() {
+                assert!(a.is_rejection(), "{}", a.name());
+            }
+        }
     }
 
     #[test]

@@ -14,17 +14,19 @@
 //! `D^2` distribution, giving the `O(c^6 log k)` guarantee (Theorem 5.4).
 //! Lemma 5.3: the expected number of loop iterations is `O(c^2 d^2 k)`.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
+use crate::bail;
 use crate::data::matrix::PointSet;
 use crate::embed::multitree::{MultiTree, MultiTreeConfig};
+use crate::error::Result;
 use crate::lsh::multiscale::{LshMode, LshParams, MonotoneLsh};
 use crate::lsh::{ExactNn, NnOracle};
 use crate::rng::Pcg64;
 use crate::seeding::{Seeding, SeedingStats};
 
 /// Which NN oracle backs `Query`.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum OracleKind {
     /// Practical single-scale LSH (Appendix D.3) — the paper's setup.
     #[default]
@@ -34,6 +36,42 @@ pub enum OracleKind {
     /// Exact linear scan — the `Ω(k^2)` no-LSH variant (§5), used as the
     /// ablation and correctness oracle.
     Exact,
+}
+
+impl OracleKind {
+    /// Every oracle, in registry order — the single source of truth for
+    /// the parse error, CLI/server validation, and the oracle sweeps.
+    pub fn all() -> [OracleKind; 3] {
+        [
+            OracleKind::LshPractical,
+            OracleKind::LshRigorous,
+            OracleKind::Exact,
+        ]
+    }
+
+    /// Canonical flag/JSON spelling (`fkmpp seed --oracle <name>`,
+    /// `POST /fit {"oracle": <name>}`).
+    pub fn name(self) -> &'static str {
+        match self {
+            OracleKind::LshPractical => "lsh",
+            OracleKind::LshRigorous => "lsh-rigorous",
+            OracleKind::Exact => "exact",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "lsh" | "lsh-practical" | "practical" => OracleKind::LshPractical,
+            "lsh-rigorous" | "rigorous" => OracleKind::LshRigorous,
+            "exact" | "linear" => OracleKind::Exact,
+            _ => {
+                // Enumerate the canonical names from the registry so the
+                // message can never drift from the actual oracle set.
+                let names: Vec<&str> = Self::all().iter().map(|o| o.name()).collect();
+                bail!("unknown oracle {s:?} (valid: {})", names.join("|"))
+            }
+        })
+    }
 }
 
 /// Rejection-sampling configuration.
@@ -80,6 +118,25 @@ impl Default for RejectionConfig {
     }
 }
 
+impl RejectionConfig {
+    /// Validate user-supplied knobs. The single check both untrusted
+    /// entry points route through (`fkmpp seed` flags in `cli.rs`,
+    /// `POST /fit` keys in `server/mod.rs`) so the bounds cannot drift
+    /// between them.
+    pub fn validate(&self) -> Result<()> {
+        if !(self.c >= 1.0) {
+            bail!("rejection `c` must be >= 1 (the LSH approximation factor)");
+        }
+        if self.lsh.tables == 0 || self.lsh.m == 0 || self.lsh.probe_limit == 0 {
+            bail!("LSH tables/m/probe-limit must all be >= 1");
+        }
+        if !(self.lsh.bucket_width > 0.0) {
+            bail!("LSH bucket width must be > 0");
+        }
+        Ok(())
+    }
+}
+
 /// Resolve the projection target: auto = `max(16, ~4 log2 n)` capped at d.
 fn projection_target(cfg: &RejectionConfig, n: usize, d: usize) -> Option<usize> {
     let target = match cfg.project_dim {
@@ -122,17 +179,13 @@ pub fn rejection_sampling(
     let work: &PointSet = projected.as_ref().unwrap_or(ps);
 
     // Kernels-v2 norm cache over the working set, computed once and
-    // reused by every acceptance test across all rounds: the exact
-    // oracle scans candidates via the norm trick (`dist_below_cached`),
-    // with the proposal's ‖x‖² looked up here and the opened centers'
-    // norms cached inside the oracle at insertion. The LSH oracles
-    // ignore the cache (their bucket probes are hash-bound, not
-    // distance-bound), so the O(nd) pass is only paid for the oracle
-    // that consumes it.
-    let work_norms = match cfg.oracle {
-        OracleKind::Exact => crate::kernels::norms::squared_norms(work),
-        OracleKind::LshPractical | OracleKind::LshRigorous => Vec::new(),
-    };
+    // reused by every acceptance test across all rounds: every oracle's
+    // cached witness scan (`dist_below_cached`) evaluates candidates via
+    // the norm trick, with the proposal's ‖x‖² looked up here and the
+    // opened centers' norms cached inside the oracle at insertion (the
+    // exact oracle's candidate list, the LSH prefix buffer, and the LSH
+    // bucket entries all carry their norms).
+    let work_norms = crate::kernels::norms::squared_norms(work);
 
     let mut mt = MultiTree::init(work, &cfg.multitree, rng);
     let mut oracle: Box<dyn NnOracle> = match cfg.oracle {
@@ -169,45 +222,87 @@ pub fn rejection_sampling(
         (200 * (c2 as u64 + 1) * d * d * k as u64).max(100_000)
     };
 
+    // RNG stream-split contract: proposal draws and acceptance coins come
+    // from separate streams forked from one root, re-derived per accepted
+    // -center round. Consequences: (a) the root fork count is fixed (2
+    // per round), so round r+1's draws are independent of how many
+    // proposals round r consumed; (b) for a fixed seed the whole loop is
+    // bitwise deterministic and thread-count-invariant — nothing below
+    // this line is parallel over RNG state (oracle hashing parallelism
+    // is pure), asserted in `rust/tests/oracle_determinism.rs`.
+    let mut stream_root = rng.fork(0x0AC1_E5);
+    // Sampled probe-latency durations (see PROBE_TIMER_SAMPLE).
+    let mut probe_samples: Vec<Duration> = Vec::new();
     let mut indices: Vec<usize> = Vec::with_capacity(k);
-    while indices.len() < k && stats.proposals < budget {
-        stats.proposals += 1;
-        let x = match mt.sample(rng) {
-            Some(x) => x,
-            None => match (0..ps.len()).find(|i| !indices.contains(i)) {
-                Some(i) => i,
-                None => break,
-            },
-        };
-        // Line 5: accept with probability min{1, dist^2 / (c^2 w_x)}
-        // (1 on the first iteration). Evaluated in indicator form: for
-        // u ~ U[0,1), accept iff dist(x, Query(x))^2 >= u * c^2 * w_x,
-        // i.e. iff NO oracle candidate lies below the threshold — which
-        // lets the oracle early-exit on the first witness instead of
-        // computing the exact minimum (identical distribution, ~10x
-        // cheaper on the reject-heavy loop; §Perf log).
-        let accept = if indices.is_empty() {
-            true
-        } else {
-            let w_x = mt.weight(x);
-            debug_assert!(w_x > 0.0, "sampled an opened center");
-            let u = rng.next_f64();
-            let threshold = (u * c2 * w_x).sqrt() as f32;
-            // `q_norm2` is only read by oracles that cache norms; the
-            // 0.0 placeholder feeds the default (ignoring) impl.
-            let q_norm2 = work_norms.get(x).copied().unwrap_or(0.0);
-            !oracle.dist_below_cached(work, work.row(x), q_norm2, threshold)
-        };
-        if accept {
-            indices.push(x);
-            mt.open(x);
-            oracle.insert(work, x as u32);
-        } else {
+    'rounds: while indices.len() < k {
+        let round = indices.len() as u64;
+        let mut proposal_rng = stream_root.fork(2 * round);
+        let mut accept_rng = stream_root.fork(2 * round + 1);
+        loop {
+            if stats.proposals >= budget {
+                break 'rounds;
+            }
+            stats.proposals += 1;
+            let x = match mt.sample(&mut proposal_rng) {
+                Some(x) => x,
+                None => {
+                    // Residual D² mass is zero: every unopened point
+                    // coincides with an opened center, so any choice has
+                    // equal (zero) mass — open the first unopened point
+                    // deterministically instead of running an accept test
+                    // against a zero weight.
+                    match (0..ps.len()).find(|i| !indices.contains(i)) {
+                        Some(i) => {
+                            indices.push(i);
+                            mt.open(i);
+                            oracle.insert(work, i as u32);
+                            continue 'rounds;
+                        }
+                        None => break 'rounds,
+                    }
+                }
+            };
+            // Line 5: accept with probability min{1, dist^2 / (c^2 w_x)}
+            // (1 on the first iteration). Evaluated in indicator form: for
+            // u ~ U[0,1), accept iff dist(x, Query(x))^2 >= u * c^2 * w_x,
+            // i.e. iff NO oracle candidate lies below the threshold — which
+            // lets the oracle early-exit on the first witness instead of
+            // computing the exact minimum (identical distribution, ~10x
+            // cheaper on the reject-heavy loop; §Perf log).
+            let accept = if indices.is_empty() {
+                true
+            } else {
+                let w_x = mt.weight(x);
+                debug_assert!(w_x > 0.0, "sampled an opened center");
+                let u = accept_rng.next_f64();
+                let threshold = (u * c2 * w_x).sqrt() as f32;
+                // Per-probe Instant pairs would tax the reject-heavy
+                // loop (the metrics.rs contract is coarse-phase timers
+                // only), so the latency is SAMPLED: the first real probe
+                // (proposals == 2) plus every PROBE_TIMER_SAMPLE-th one.
+                let below = if stats.proposals % PROBE_TIMER_SAMPLE == 2 {
+                    let tp = Instant::now();
+                    let b = oracle.dist_below_cached(work, work.row(x), work_norms[x], threshold);
+                    probe_samples.push(tp.elapsed());
+                    b
+                } else {
+                    oracle.dist_below_cached(work, work.row(x), work_norms[x], threshold)
+                };
+                !below
+            };
+            if accept {
+                indices.push(x);
+                mt.open(x);
+                oracle.insert(work, x as u32);
+                continue 'rounds;
+            }
             stats.rejections += 1;
         }
     }
     // Budget exhausted (pathological c / oracle): top up deterministically
-    // so callers always get k centers; counted in `rejections`.
+    // so callers always get k centers. Fills are not proposals — they
+    // advance no loop counter and surface only in `oracle.accepts`, so
+    // accepts + rejects can exceed proposals on a budget-exhausted run.
     while indices.len() < k {
         if let Some(i) = (0..ps.len()).find(|i| !indices.contains(i)) {
             indices.push(i);
@@ -218,7 +313,61 @@ pub fn rejection_sampling(
         }
     }
     stats.select_secs = t1.elapsed().as_secs_f64();
+
+    // Oracle observability: flush loop + probe counters to the
+    // process-wide sink (same pattern as `shard.*` — fits run deep in
+    // workers with no ctx handle; `/metrics` merges this sink). Counters
+    // only accumulate, so readers assert deltas, not absolutes.
+    let m = crate::metrics::global();
+    m.incr("oracle.proposals", stats.proposals);
+    m.incr("oracle.accepts", indices.len() as u64);
+    m.incr("oracle.rejects", stats.rejections);
+    let probe = oracle.probe_stats();
+    m.incr("oracle.probes", probe.probes);
+    for d in probe_samples {
+        m.record_duration("oracle.probe_secs", d);
+    }
+    if probe.prefix_hits > 0 {
+        m.incr("oracle.prefix_hits", probe.prefix_hits);
+    }
+    for (level, &hits) in probe.scale_hits.iter().enumerate() {
+        if hits > 0 {
+            m.incr(scale_level_name(level), hits);
+        }
+    }
     Seeding::from_indices(ps, indices, stats)
+}
+
+/// Acceptance-probe latency sampling period: `oracle.probe_secs` records
+/// the duration of the first real probe (the loop's second proposal —
+/// always sampled so even tiny fits surface the metric) and of every
+/// `PROBE_TIMER_SAMPLE`-th proposal thereafter. Per-probe `Instant`
+/// pairs would be a double-digit-percent tax on the reject-heavy loop;
+/// a 1/64 sample keeps the metric a faithful latency distribution at
+/// ~1.5% of that cost.
+const PROBE_TIMER_SAMPLE: u64 = 64;
+
+/// Static counter names for the per-scale witness histogram
+/// ([`crate::metrics::Metrics::incr`] takes `&'static str`); levels past
+/// the table are clamped into the last bucket. Scale 0 is the finest
+/// gap structure (the practical mode's only one).
+const SCALE_NAMES: [&str; 12] = [
+    "oracle.scale.0",
+    "oracle.scale.1",
+    "oracle.scale.2",
+    "oracle.scale.3",
+    "oracle.scale.4",
+    "oracle.scale.5",
+    "oracle.scale.6",
+    "oracle.scale.7",
+    "oracle.scale.8",
+    "oracle.scale.9",
+    "oracle.scale.10",
+    "oracle.scale.11plus",
+];
+
+fn scale_level_name(level: usize) -> &'static str {
+    SCALE_NAMES[level.min(SCALE_NAMES.len() - 1)]
 }
 
 #[cfg(test)]
@@ -251,7 +400,7 @@ mod tests {
             OracleKind::Exact,
         ] {
             let cfg = RejectionConfig {
-                oracle: oracle.clone(),
+                oracle,
                 ..Default::default()
             };
             let mut rng = Pcg64::seed_from(2);
@@ -371,6 +520,96 @@ mod tests {
             uni += cost_native(&ps, &uniform_sampling(&ps, 10, &mut r2).centers);
         }
         assert!(rej < uni, "rejection={rej} uniform={uni}");
+    }
+
+    #[test]
+    fn oracle_kind_parse_round_trips_and_enumerates() {
+        for o in OracleKind::all() {
+            assert_eq!(OracleKind::parse(o.name()).unwrap(), o);
+        }
+        assert_eq!(OracleKind::parse("practical").unwrap(), OracleKind::LshPractical);
+        assert_eq!(OracleKind::parse("rigorous").unwrap(), OracleKind::LshRigorous);
+        let err = format!("{:#}", OracleKind::parse("bogus").unwrap_err());
+        for o in OracleKind::all() {
+            assert!(err.contains(o.name()), "{:?} missing from {err:?}", o.name());
+        }
+    }
+
+    #[test]
+    fn config_validate_bounds() {
+        assert!(RejectionConfig::default().validate().is_ok());
+        let bad = [
+            RejectionConfig {
+                c: 0.5,
+                ..Default::default()
+            },
+            RejectionConfig {
+                lsh: LshParams {
+                    tables: 0,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+            RejectionConfig {
+                lsh: LshParams {
+                    bucket_width: 0.0,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        ];
+        for cfg in bad {
+            assert!(cfg.validate().is_err(), "{cfg:?} should fail validation");
+        }
+    }
+
+    #[test]
+    fn scale_level_names_are_static_and_clamped() {
+        assert_eq!(scale_level_name(0), "oracle.scale.0");
+        assert_eq!(scale_level_name(10), "oracle.scale.10");
+        assert_eq!(scale_level_name(11), "oracle.scale.11plus");
+        assert_eq!(scale_level_name(40), "oracle.scale.11plus");
+    }
+
+    #[test]
+    fn oracle_metrics_flush_to_global_sink() {
+        // Every run flushes loop + probe counters to `metrics::global()`
+        // (counters accumulate process-wide: assert deltas only).
+        let ps = data(400, 6, 21);
+        let m = crate::metrics::global();
+        let before = (
+            m.counter("oracle.proposals"),
+            m.counter("oracle.accepts"),
+            m.counter("oracle.probes"),
+        );
+        let mut rng = Pcg64::seed_from(22);
+        let s = rejection_sampling(&ps, 20, &RejectionConfig::default(), &mut rng);
+        assert_eq!(s.k(), 20);
+        assert!(m.counter("oracle.proposals") >= before.0 + s.stats.proposals);
+        assert!(m.counter("oracle.accepts") >= before.1 + 20);
+        assert!(m.counter("oracle.probes") > before.2);
+        assert!(m.duration_stats("oracle.probe_secs").is_some());
+    }
+
+    #[test]
+    fn per_round_streams_make_fixed_seeds_bitwise_stable() {
+        // The per-round proposal/acceptance stream split must be
+        // deterministic for every oracle kind.
+        let ps = data(800, 8, 23);
+        for oracle in OracleKind::all() {
+            let cfg = RejectionConfig {
+                oracle,
+                ..Default::default()
+            };
+            let run = || {
+                let mut rng = Pcg64::seed_from(24);
+                rejection_sampling(&ps, 30, &cfg, &mut rng)
+            };
+            let (a, b) = (run(), run());
+            assert_eq!(a.indices, b.indices, "{oracle:?}");
+            assert_eq!(a.stats.proposals, b.stats.proposals, "{oracle:?}");
+            assert_eq!(a.stats.rejections, b.stats.rejections, "{oracle:?}");
+        }
     }
 
     #[test]

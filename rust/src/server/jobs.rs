@@ -24,6 +24,7 @@ use crate::error::Result;
 use crate::lloyd::{lloyd, LloydConfig};
 use crate::rng::Pcg64;
 use crate::runtime::Backend;
+use crate::seeding::rejection::{rejection_sampling, RejectionConfig};
 use crate::seeding::SeedingAlgorithm;
 use crate::server::registry::{ModelMeta, ModelRegistry};
 use crate::shard::kmeanspar::{kmeans_par, KMeansParConfig};
@@ -61,6 +62,12 @@ pub struct FitSpec {
     /// [`SeedingAlgorithm::KMeansPar`] (request keys `shards` / `rounds`
     /// / `oversample`; defaults otherwise).
     pub kmeanspar: KMeansParConfig,
+    /// Rejection-sampling knobs, used when `algorithm` is in the
+    /// rejection family (request keys `oracle` / `c` / `lsh_tables` /
+    /// `lsh_m` / `lsh_probe_limit`; defaults otherwise). The
+    /// `rejection-exact` / `rejection-rigorous` variants still pin their
+    /// oracle over this config's choice.
+    pub rejection: RejectionConfig,
 }
 
 /// Lifecycle of a job.
@@ -278,6 +285,10 @@ fn run_fit(
     let mut rng = Pcg64::seed_from(spec.seed);
     let seeding = match spec.algorithm {
         SeedingAlgorithm::KMeansPar => kmeans_par(&points, spec.k, &spec.kmeanspar, &mut rng),
+        algo if algo.is_rejection() => {
+            let rc = algo.resolved_rejection_config(&spec.rejection);
+            rejection_sampling(&points, spec.k, &rc, &mut rng)
+        }
         algo => algo.run(&points, spec.k, &mut rng),
     };
     let backend = Backend::auto(artifacts_dir);
@@ -333,6 +344,7 @@ mod tests {
             seed: 3,
             lloyd_iters: 1,
             kmeanspar: KMeansParConfig::default(),
+            rejection: RejectionConfig::default(),
         }
     }
 
@@ -415,6 +427,44 @@ mod tests {
     }
 
     #[test]
+    fn rejection_lsh_fit_uses_oracle_config_and_flushes_counters() {
+        use crate::seeding::rejection::OracleKind;
+        let queue = Arc::new(JobQueue::new());
+        let registry = Arc::new(ModelRegistry::new(None).unwrap());
+        let handles = spawn_workers(
+            &queue,
+            &registry,
+            std::env::temp_dir().join("fkmpp_jobs_test"),
+            PathBuf::from("/nonexistent"),
+            1,
+        );
+        let mut spec = inline_spec(500, 8);
+        spec.algorithm = SeedingAlgorithm::Rejection;
+        spec.lloyd_iters = 0;
+        spec.rejection = RejectionConfig {
+            oracle: OracleKind::LshPractical,
+            ..Default::default()
+        };
+        let probes_before = crate::metrics::global().counter("oracle.probes");
+        let accepts_before = crate::metrics::global().counter("oracle.accepts");
+        let id = queue.submit(spec);
+        let info = wait_terminal(&queue, &id);
+        let JobState::Done { model_id } = &info.state else {
+            panic!("expected done, got {:?}", info.state);
+        };
+        let model = registry.get(model_id).expect("model registered");
+        assert_eq!(model.meta.k, 8);
+        assert_eq!(model.meta.algorithm, "rejection");
+        // The fit drove the oracle-backed acceptance loop: counters advanced.
+        assert!(crate::metrics::global().counter("oracle.probes") > probes_before);
+        assert!(crate::metrics::global().counter("oracle.accepts") >= accepts_before + 8);
+        queue.stop();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
     fn invalid_k_fails_cleanly() {
         let queue = Arc::new(JobQueue::new());
         let registry = Arc::new(ModelRegistry::new(None).unwrap());
@@ -460,6 +510,7 @@ mod tests {
             seed: 1,
             lloyd_iters: 0,
             kmeanspar: KMeansParConfig::default(),
+            rejection: RejectionConfig::default(),
         });
         assert_eq!(queue.counts(), (1, 0, 0, 0));
         assert_eq!(queue.get("job-1").unwrap().state.name(), "queued");

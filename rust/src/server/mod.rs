@@ -335,7 +335,10 @@ fn handle_metrics(ctx: &ServerCtx) -> Response {
 ///   "algo": "rejection", "k": 10, "seed": 42, "lloyd": 0}`.
 /// With `"algo"/"algorithm": "kmeans_par"` the sharded seeder runs;
 /// optional `"shards"`, `"rounds"` and `"oversample"` override its
-/// defaults.
+/// defaults. For the rejection family, optional `"oracle"`
+/// (`exact|lsh|lsh-rigorous`), `"c"`, `"lsh_tables"`, `"lsh_m"` and
+/// `"lsh_probe_limit"` steer the ANN oracle behind the acceptance test
+/// (`rejection-exact`/`rejection-rigorous` still pin their oracle).
 fn handle_fit(req: &Request, ctx: &ServerCtx) -> RouteResult {
     let body = req.body_str().map_err(bad)?;
     let v = json::parse(body).map_err(bad)?;
@@ -367,6 +370,25 @@ fn handle_fit(req: &Request, ctx: &ServerCtx) -> RouteResult {
             "\"shards\"/\"rounds\" must be >= 1 and \"oversample\" > 0".to_string(),
         ));
     }
+    let mut rejection = crate::seeding::rejection::RejectionConfig::default();
+    if let Some(o) = v.get("oracle").and_then(Json::as_str) {
+        rejection.oracle = crate::seeding::rejection::OracleKind::parse(o).map_err(bad)?;
+    }
+    if let Some(c) = v.get("c").and_then(Json::as_f64) {
+        rejection.c = c as f32;
+    }
+    if let Some(t) = v.get("lsh_tables").and_then(Json::as_usize) {
+        rejection.lsh.tables = t;
+    }
+    if let Some(m) = v.get("lsh_m").and_then(Json::as_usize) {
+        rejection.lsh.m = m;
+    }
+    if let Some(p) = v.get("lsh_probe_limit").and_then(Json::as_usize) {
+        rejection.lsh.probe_limit = p;
+    }
+    // Same bound check as the CLI (`RejectionConfig::validate`), mapped
+    // onto a client error.
+    rejection.validate().map_err(bad)?;
     let source = if let Some(pts) = v.get("points") {
         FitSource::Inline(Arc::new(json::points_from_json(pts).map_err(bad)?))
     } else if let Some(name) = v.get("dataset").and_then(Json::as_str) {
@@ -387,6 +409,7 @@ fn handle_fit(req: &Request, ctx: &ServerCtx) -> RouteResult {
         seed,
         lloyd_iters,
         kmeanspar,
+        rejection,
     });
     Ok(Response::json(
         202,
@@ -617,6 +640,32 @@ mod tests {
             r#"{"points": [[1,2]], "k": 1, "algo": "kmeans-par", "shards": 0}"#,
             r#"{"points": [[1,2]], "k": 1, "algo": "kmeans-par", "rounds": 0}"#,
             r#"{"points": [[1,2]], "k": 1, "algo": "kmeans-par", "oversample": 0}"#,
+        ] {
+            assert_eq!(route(&post("/fit", body), &ctx).status, 400, "{body}");
+        }
+    }
+
+    #[test]
+    fn fit_rejection_accepts_oracle_knobs() {
+        let ctx = test_ctx();
+        // Oracle-explicit rejection fits enqueue (no workers: stay queued).
+        for body in [
+            r#"{"points": [[1,2],[3,4],[5,6]], "k": 2, "algo": "rejection", "oracle": "lsh"}"#,
+            r#"{"points": [[1,2],[3,4],[5,6]], "k": 2, "algo": "rejection",
+                "oracle": "lsh-rigorous", "c": 2.0, "lsh_tables": 4, "lsh_m": 8,
+                "lsh_probe_limit": 12}"#,
+            r#"{"points": [[1,2],[3,4],[5,6]], "k": 2, "algo": "rejection-rigorous"}"#,
+            r#"{"points": [[1,2],[3,4],[5,6]], "k": 2, "algo": "rejection", "oracle": "exact"}"#,
+        ] {
+            assert_eq!(route(&post("/fit", body), &ctx).status, 202, "{body}");
+        }
+        // Degenerate knobs are rejected at the HTTP layer.
+        for body in [
+            r#"{"points": [[1,2]], "k": 1, "algo": "rejection", "oracle": "bogus"}"#,
+            r#"{"points": [[1,2]], "k": 1, "algo": "rejection", "c": 0.5}"#,
+            r#"{"points": [[1,2]], "k": 1, "algo": "rejection", "lsh_tables": 0}"#,
+            r#"{"points": [[1,2]], "k": 1, "algo": "rejection", "lsh_m": 0}"#,
+            r#"{"points": [[1,2]], "k": 1, "algo": "rejection", "lsh_probe_limit": 0}"#,
         ] {
             assert_eq!(route(&post("/fit", body), &ctx).status, 400, "{body}");
         }

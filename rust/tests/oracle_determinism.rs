@@ -1,0 +1,90 @@
+//! Cross-thread-count bitwise determinism of the oracle-backed rejection
+//! seeder — the ISSUE 5 acceptance leg that needs to own the environment.
+//!
+//! Discipline (same as `kernel_parity.rs` / `weighted_parity.rs`): this
+//! target holds exactly ONE `#[test]`, because it mutates the
+//! process-global `FKMPP_THREADS` and `FKMPP_KERNEL` variables and Cargo
+//! runs `#[test]`s of one binary concurrently. Integration-test targets
+//! are separate processes, so the mutation cannot leak into
+//! `seeding_quality`/`oracle_semantics`.
+//!
+//! What makes the assertion hold (the contracts under test):
+//!
+//! * the acceptance loop draws from per-round proposal/acceptance RNG
+//!   streams forked from the run seed — never from thread-dependent
+//!   state;
+//! * everything parallel on the init path (JL projection, tree builds,
+//!   norm cache, MAXDIST reduction) is elementwise or fixed-block, hence
+//!   thread-count-invariant by the kernel-engine contract;
+//! * LSH hashing fans out over `parallel_map`, which is order-preserving
+//!   and pure.
+//!
+//! `FKMPP_KERNEL=naive` is pinned so the kernel autotuner's timing
+//! probes cannot flip dispatch between runs (the PR 3 cross-process
+//! contract); the shapes here mostly sit below the probe floor anyway.
+
+use fastkmeanspp::data::synth::{gaussian_mixture, SynthSpec};
+use fastkmeanspp::rng::Pcg64;
+use fastkmeanspp::seeding::rejection::{rejection_sampling, OracleKind, RejectionConfig};
+use fastkmeanspp::seeding::Seeding;
+
+#[test]
+fn rejection_fixed_seed_bitwise_identical_across_thread_counts() {
+    std::env::set_var("FKMPP_KERNEL", "naive");
+    // d = 32 > the auto JL target, so the projection path (a parallel
+    // kernel pass) is exercised; k = 150 > PREFIX_CAP (128), so LSH
+    // queries leave the exact prefix and hit the bucket structures.
+    let ps = gaussian_mixture(
+        &SynthSpec {
+            n: 4_000,
+            d: 32,
+            k_true: 12,
+            center_spread: 15.0,
+            ..Default::default()
+        },
+        31,
+    );
+    let k = 150;
+    for oracle in OracleKind::all() {
+        let cfg = RejectionConfig {
+            oracle,
+            ..Default::default()
+        };
+        let run = || -> Seeding {
+            let mut rng = Pcg64::seed_from(33);
+            rejection_sampling(&ps, k, &cfg, &mut rng)
+        };
+        let mut per_thread_count: Vec<Seeding> = Vec::new();
+        for threads in ["1", "4"] {
+            std::env::set_var("FKMPP_THREADS", threads);
+            let a = run();
+            let b = run();
+            assert_eq!(a.k(), k, "{oracle:?} t={threads}");
+            assert_eq!(
+                a.indices, b.indices,
+                "{oracle:?} t={threads}: same-seed repeat diverged"
+            );
+            assert_eq!(a.stats.proposals, b.stats.proposals, "{oracle:?} t={threads}");
+            per_thread_count.push(a);
+        }
+        std::env::remove_var("FKMPP_THREADS");
+        let (one, four) = (&per_thread_count[0], &per_thread_count[1]);
+        assert_eq!(
+            one.indices, four.indices,
+            "{oracle:?}: thread count changed the chosen centers"
+        );
+        assert_eq!(
+            one.centers, four.centers,
+            "{oracle:?}: thread count changed the center bits"
+        );
+        assert_eq!(
+            one.stats.proposals, four.stats.proposals,
+            "{oracle:?}: thread count changed the proposal trace"
+        );
+        assert_eq!(
+            one.stats.rejections, four.stats.rejections,
+            "{oracle:?}: thread count changed the rejection trace"
+        );
+    }
+    std::env::remove_var("FKMPP_KERNEL");
+}

@@ -1,12 +1,25 @@
-//! Oracle-semantics integration tests: the early-exit indicator
-//! (`dist_below`) must agree with the full minimum (`query`) on the same
-//! candidate set — this equivalence is what makes the rejection
-//! sampler's indicator-form acceptance test *exactly* the Algorithm-4
-//! probability — plus prefix-exactness and cross-oracle agreement.
+//! Oracle-semantics integration tests, two tiers:
+//!
+//! 1. the early-exit indicator (`dist_below`) must agree with the full
+//!    minimum (`query`) on the same candidate set — this equivalence is
+//!    what makes the rejection sampler's indicator-form acceptance test
+//!    *exactly* the Algorithm-4 probability — plus prefix-exactness and
+//!    cross-oracle agreement;
+//! 2. the **adversarial oracle suite**: `MonotoneLsh` (Practical and
+//!    Rigorous modes) against `ExactNn` on pathological inputs —
+//!    duplicate points, coincident centers, zero vectors, d ∈ {1, 8,
+//!    127} — asserting the monotone contract (the reported distance
+//!    never increases as centers open) and soundness (the oracle never
+//!    reports a distance below the true NN distance: every candidate is
+//!    a real inserted point, so any mode's answer upper-bounds the
+//!    truth; within the exact insertion prefix it *equals* it).
 
 use fastkmeanspp::data::matrix::PointSet;
 use fastkmeanspp::data::synth::{gaussian_mixture, SynthSpec};
-use fastkmeanspp::lsh::multiscale::{auto_bucket_width_for_k, LshParams, MonotoneLsh, PREFIX_CAP};
+use fastkmeanspp::kernels::norms::squared_norms;
+use fastkmeanspp::lsh::multiscale::{
+    auto_bucket_width_for_k, LshMode, LshParams, MonotoneLsh, PREFIX_CAP,
+};
 use fastkmeanspp::lsh::{ExactNn, NnOracle};
 use fastkmeanspp::rng::Pcg64;
 
@@ -133,6 +146,175 @@ fn rejection_same_seed_same_centers_across_oracle_cost() {
     let sb = rejection_sampling(&ps, 40, &cfg, &mut b);
     assert_eq!(sa.indices, sb.indices);
     assert_eq!(sa.stats.proposals, sb.stats.proposals);
+}
+
+// ---------------------------------------------------------------------
+// Adversarial oracle suite (LSH-wiring PR): MonotoneLsh (both modes) vs
+// ExactNn on duplicate points, coincident centers, zero vectors, and
+// d ∈ {1, 8, 127}.
+// ---------------------------------------------------------------------
+
+/// Pathological point sets for one dimensionality.
+fn adversarial_sets(d: usize) -> Vec<(&'static str, PointSet)> {
+    let mut sets = Vec::new();
+    // Every point identical: all true NN distances are exactly 0.
+    let dup_rows = vec![vec![3.5f32; d]; 40];
+    sets.push(("duplicates", PointSet::from_rows(&dup_rows)));
+    // Zero vectors mixed with a far duplicate block.
+    let mut rows = vec![vec![0.0f32; d]; 12];
+    rows.extend(vec![vec![7.25f32; d]; 12]);
+    sets.push(("zeros_plus_block", PointSet::from_rows(&rows)));
+    // Two coincident tight clusters + one isolated outlier: centers that
+    // open on top of each other must keep distance-0 answers.
+    let mut rows = Vec::new();
+    for i in 0..30 {
+        let mut r = vec![0.0f32; d];
+        r[0] = if i % 2 == 0 { 10.0 } else { -10.0 };
+        rows.push(r);
+    }
+    rows.push(vec![-50.0f32; d]);
+    sets.push(("coincident_clusters", PointSet::from_rows(&rows)));
+    sets
+}
+
+/// The three oracles under test, freshly built for `ps`.
+fn adversarial_oracles(ps: &PointSet, seed: u64) -> Vec<(&'static str, Box<dyn NnOracle>)> {
+    let d = ps.dim();
+    let mut rng = Pcg64::seed_from(seed);
+    let params = LshParams {
+        bucket_width: auto_bucket_width_for_k(ps, 8, 15, &mut rng),
+        ..Default::default()
+    };
+    let practical = MonotoneLsh::new(d, &params, &LshMode::Practical, &mut rng);
+    let rigorous = MonotoneLsh::new(
+        d,
+        &params,
+        &LshMode::Rigorous {
+            // All-duplicate sets have max_dist 0; the floor keeps the
+            // rigorous scale layout non-degenerate.
+            max_dist: ps.max_dist_upper_bound().max(1.0),
+            delta: (ps.len() * d) as f32,
+        },
+        &mut rng,
+    );
+    vec![
+        ("exact", Box::new(ExactNn::default()) as Box<dyn NnOracle>),
+        ("lsh-practical", Box::new(practical)),
+        ("lsh-rigorous", Box::new(rigorous)),
+    ]
+}
+
+/// Brute-force true NN distance from `q` to the inserted set.
+fn true_nn(ps: &PointSet, inserted: &[u32], q: usize) -> f32 {
+    inserted
+        .iter()
+        .map(|&i| ps.d2_rows(q, i as usize).sqrt())
+        .fold(f32::INFINITY, f32::min)
+}
+
+#[test]
+fn adversarial_soundness_and_prefix_exactness() {
+    // On every pathological set, every oracle must (a) never report a
+    // distance below the true NN distance (candidates are real inserted
+    // points), and (b) be EXACT while at most PREFIX_CAP centers are
+    // open — these sets all fit under the cap, so the approximation
+    // bound degenerates to equality for the LSH modes too.
+    for d in [1usize, 8, 127] {
+        for (set_name, ps) in adversarial_sets(d) {
+            let n = ps.len();
+            let half: Vec<u32> = (0..(n as u32) / 2).collect();
+            assert!(half.len() <= PREFIX_CAP);
+            let norms = squared_norms(&ps);
+            for (oracle_name, mut oracle) in adversarial_oracles(&ps, 7 + d as u64) {
+                assert!(oracle.query(&ps, ps.row(0)).is_none());
+                for &i in &half {
+                    oracle.insert(&ps, i);
+                }
+                assert_eq!(oracle.len(), half.len());
+                for q in 0..n {
+                    let (_, got) = oracle.query(&ps, ps.row(q)).unwrap();
+                    let want = true_nn(&ps, &half, q);
+                    let ctx = format!("{set_name}/{oracle_name} d={d} q={q}");
+                    assert!(got + 1e-4 >= want, "{ctx}: reported {got} below true {want}");
+                    assert!(
+                        (got - want).abs() <= 1e-4 * want.max(1.0),
+                        "{ctx}: not exact under the prefix cap ({got} vs {want})"
+                    );
+                    // Witness-scan agreement with the true NN distance at
+                    // thresholds off the f32 knife edge (under the cap the
+                    // prefix scan makes every oracle's indicator exact),
+                    // for both the reference and the norm-cached paths.
+                    for t in [want * 0.5, want + 1.0, 0.25, 100.0] {
+                        if !(t > 0.0) {
+                            continue;
+                        }
+                        let reference = oracle.dist_below(&ps, ps.row(q), t);
+                        assert_eq!(reference, want < t, "{ctx}: dist_below at t={t}");
+                        let cached = oracle.dist_below_cached(&ps, ps.row(q), norms[q], t);
+                        assert_eq!(cached, reference, "{ctx}: cached vs reference at t={t}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn adversarial_monotone_contract() {
+    // The monotone contract — DIST(q, Query(q)) never increases as more
+    // centers open — must survive duplicate inserts, coincident centers
+    // and zero vectors in every mode, and self-queries must end at 0.
+    for d in [1usize, 8, 127] {
+        for (set_name, ps) in adversarial_sets(d) {
+            let n = ps.len();
+            for (oracle_name, mut oracle) in adversarial_oracles(&ps, 100 + d as u64) {
+                let probes = [n - 1, n / 2, 0];
+                let mut last = [f32::INFINITY; 3];
+                for i in 0..n as u32 {
+                    oracle.insert(&ps, i);
+                    for (slot, &q) in probes.iter().enumerate() {
+                        let (_, dd) = oracle.query(&ps, ps.row(q)).unwrap();
+                        assert!(
+                            dd <= last[slot] + 1e-5,
+                            "{set_name}/{oracle_name} d={d} q={q}: {dd} > {} after insert {i}",
+                            last[slot]
+                        );
+                        last[slot] = dd;
+                    }
+                }
+                for q in [0, n - 1] {
+                    let (_, dd) = oracle.query(&ps, ps.row(q)).unwrap();
+                    assert!(dd <= 1e-4, "{set_name}/{oracle_name} d={d}: self-query {dd}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn rejection_on_adversarial_sets_returns_k_distinct_all_oracles() {
+    // End-to-end: the seeder must deliver k distinct centers on the
+    // pathological sets with every oracle (duplicates exhaust the
+    // multi-tree weights, exercising the deterministic top-up path).
+    use fastkmeanspp::seeding::rejection::{rejection_sampling, OracleKind, RejectionConfig};
+    for d in [1usize, 8] {
+        for (set_name, ps) in adversarial_sets(d) {
+            for oracle in OracleKind::all() {
+                let cfg = RejectionConfig {
+                    oracle,
+                    ..Default::default()
+                };
+                let mut rng = Pcg64::seed_from(5);
+                let k = ps.len().min(10);
+                let s = rejection_sampling(&ps, k, &cfg, &mut rng);
+                assert_eq!(s.k(), k, "{set_name} d={d} {oracle:?}");
+                let mut idx = s.indices.clone();
+                idx.sort_unstable();
+                idx.dedup();
+                assert_eq!(idx.len(), k, "{set_name} d={d} {oracle:?} returned duplicates");
+            }
+        }
+    }
 }
 
 #[test]

@@ -4,9 +4,10 @@
 //!    the paper's Tables 4–6 report must hold on the synthetic
 //!    stand-ins), and
 //! 2. the **statistical acceptance suite**: over 21 fixed RNG seeds on
-//!    two synthetic dataset families, the *median* FASTK-MEANS++ and
-//!    REJECTIONSAMPLING seeding costs must sit within 1.15× of the
-//!    median exact k-means++ cost (the paper's "equivalent quality"
+//!    two synthetic dataset families, the *median* FASTK-MEANS++,
+//!    REJECTIONSAMPLING (practical-LSH oracle) and REJECTION-RIGOROUS
+//!    (multi-scale LSH oracle) seeding costs must sit within 1.15× of
+//!    the median exact k-means++ cost (the paper's "equivalent quality"
 //!    claim, Tables 4–6), while median uniform seeding must be
 //!    measurably worse.
 //!
@@ -196,7 +197,12 @@ fn statistical_tree_seeders_match_exact_within_1_15x() {
         assert!(exact > 0.0, "{}: degenerate exact cost", fam.name);
         for algo in [
             SeedingAlgorithm::FastKMeansPP,
+            // LSH-wiring PR: both oracle-backed rejection modes sit the
+            // same 1.15x bar as the exact-oracle paper pipeline —
+            // `rejection` runs the practical single-scale LSH oracle by
+            // default, `rejection-rigorous` the multi-scale stack.
             SeedingAlgorithm::Rejection,
+            SeedingAlgorithm::RejectionLshRigorous,
             // Sharded-seeding PR: k-means‖ + weighted recluster joins the
             // acceptance suite with the same 1.15x bar (oversampling
             // covers every cluster on these families, so the weighted
@@ -244,6 +250,75 @@ fn statistical_kmeanspar_deterministic_and_shard_invariant() {
                 fam.name
             );
             assert_eq!(s1.centers, s4.centers, "{}", fam.name);
+        }
+    }
+}
+
+#[test]
+fn statistical_lsh_quality_holds_past_prefix_cap() {
+    // The 1.15x gate above runs at k < PREFIX_CAP (128), where the LSH
+    // prefix scan is exact — it cannot catch a broken bucket-probe
+    // approximation. This gate reruns both LSH modes at k = 150 > cap on
+    // the separated family, so centers 129..150 are accepted against
+    // real bucket probes: an oracle whose post-cap answers degrade badly
+    // (broken bucket width, radius filter, probe limit) shifts the
+    // acceptance distribution toward near-duplicate centers and fails
+    // the same 1.15x bar against exact k-means++ at the same k.
+    use fastkmeanspp::seeding::rejection::{rejection_sampling, OracleKind, RejectionConfig};
+    let fam = family_separated();
+    let k = 150;
+    let costs = |oracle: Option<OracleKind>| -> Vec<f64> {
+        (0..STAT_SEEDS)
+            .map(|r| {
+                let mut rng = Pcg64::seed_from(11_000 + 131 * r);
+                let centers = match oracle {
+                    None => SeedingAlgorithm::KMeansPP.run(&fam.ps, k, &mut rng).centers,
+                    Some(oracle) => {
+                        let cfg = RejectionConfig {
+                            oracle,
+                            ..Default::default()
+                        };
+                        rejection_sampling(&fam.ps, k, &cfg, &mut rng).centers
+                    }
+                };
+                cost_native(&fam.ps, &centers)
+            })
+            .collect()
+    };
+    let exact = median(costs(None));
+    assert!(exact > 0.0);
+    for oracle in [OracleKind::LshPractical, OracleKind::LshRigorous] {
+        let m = median(costs(Some(oracle)));
+        assert!(
+            m <= 1.15 * exact,
+            "{oracle:?} at k=150 (> PREFIX_CAP): median {m:.4e} exceeds 1.15x exact {exact:.4e}"
+        );
+    }
+}
+
+#[test]
+fn statistical_rejection_all_oracles_bitwise_deterministic() {
+    // ISSUE 5 acceptance: for a fixed seed, rejection seeding is bitwise
+    // deterministic for every ANN oracle (per-round proposal/acceptance
+    // RNG stream split). In-process check on both families; the
+    // cross-thread-count leg lives in `rust/tests/oracle_determinism.rs`
+    // (its own process — it owns FKMPP_THREADS/FKMPP_KERNEL).
+    use fastkmeanspp::seeding::rejection::{rejection_sampling, OracleKind, RejectionConfig};
+    for fam in [family_separated(), family_skewed()] {
+        for oracle in OracleKind::all() {
+            let cfg = RejectionConfig {
+                oracle,
+                ..Default::default()
+            };
+            let run = |seed: u64| {
+                let mut rng = Pcg64::seed_from(seed);
+                rejection_sampling(&fam.ps, fam.k, &cfg, &mut rng)
+            };
+            let (a, b) = (run(4242), run(4242));
+            assert_eq!(a.indices, b.indices, "{} {oracle:?}", fam.name);
+            assert_eq!(a.centers, b.centers, "{} {oracle:?}", fam.name);
+            assert_eq!(a.stats.proposals, b.stats.proposals, "{} {oracle:?}", fam.name);
+            assert_eq!(a.stats.rejections, b.stats.rejections, "{} {oracle:?}", fam.name);
         }
     }
 }

@@ -270,6 +270,72 @@ fn serve_fit_job_assign_roundtrip() {
         "{shard_metrics:?}"
     );
 
+    // LSH-oracle satellite: a rejection fit with the oracle selected per
+    // request runs end-to-end, and the oracle counters surface at
+    // /metrics (the acceptance-loop flush to the process-wide sink).
+    let lsh_fit_body = Json::obj(vec![
+        ("points", json::points_to_json(&train)),
+        ("algo", Json::str("rejection")),
+        ("oracle", Json::str("lsh")),
+        ("k", Json::num(5.0)),
+        ("seed", Json::num(17.0)),
+    ])
+    .emit();
+    let (status, lsh_fit) = http(&addr, "POST", "/fit", Some(&lsh_fit_body));
+    assert_eq!(status, 202, "{lsh_fit:?}");
+    let lsh_job = lsh_fit
+        .get("job_id")
+        .and_then(Json::as_str)
+        .expect("job_id")
+        .to_string();
+    let lsh_deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let (status, job) = http(&addr, "GET", &format!("/jobs/{lsh_job}"), None);
+        assert_eq!(status, 200, "{job:?}");
+        match job.get("state").and_then(Json::as_str) {
+            Some("done") => break,
+            Some("failed") => panic!("lsh-oracle fit failed: {job:?}"),
+            _ => {
+                assert!(Instant::now() < lsh_deadline, "lsh-oracle fit did not finish");
+                std::thread::sleep(Duration::from_millis(25));
+            }
+        }
+    }
+    let (status, oracle_metrics) = http(&addr, "GET", "/metrics", None);
+    assert_eq!(status, 200);
+    let counters = oracle_metrics.get("counters").expect("counters");
+    for name in ["oracle.probes", "oracle.accepts", "oracle.rejects", "oracle.proposals"] {
+        assert!(
+            counters.get(name).and_then(Json::as_f64).is_some(),
+            "{name} missing from {oracle_metrics:?}"
+        );
+    }
+    // Two rejection fits ran (5 centers each): accepts reached at least 10.
+    assert!(
+        counters
+            .get("oracle.accepts")
+            .and_then(Json::as_usize)
+            .unwrap_or(0)
+            >= 10,
+        "{oracle_metrics:?}"
+    );
+    assert!(
+        oracle_metrics
+            .get("timings")
+            .and_then(|t| t.get("oracle.probe_secs"))
+            .and_then(|s| s.get("mean"))
+            .is_some(),
+        "{oracle_metrics:?}"
+    );
+    // An unknown oracle name is a client error, not a queued-then-failed job.
+    let (status, bad_oracle) = http(
+        &addr,
+        "POST",
+        "/fit",
+        Some(r#"{"points": [[1,2],[3,4]], "k": 1, "algo": "rejection", "oracle": "bogus"}"#),
+    );
+    assert_eq!(status, 400, "{bad_oracle:?}");
+
     // Error paths stay clean under load.
     let (status, _) = http(&addr, "GET", "/jobs/job-999", None);
     assert_eq!(status, 404);
@@ -278,10 +344,11 @@ fn serve_fit_job_assign_roundtrip() {
     let (status, _) = http(&addr, "POST", "/fit", Some("not json"));
     assert_eq!(status, 400);
 
-    // Metrics saw the traffic (two models now: rejection + kmeans_par).
+    // Metrics saw the traffic (three models now: rejection + kmeans_par
+    // + the lsh-oracle rejection fit).
     let (status, metrics) = http(&addr, "GET", "/metrics", None);
     assert_eq!(status, 200);
-    assert_eq!(metrics.get("models").and_then(Json::as_usize), Some(2));
+    assert_eq!(metrics.get("models").and_then(Json::as_usize), Some(3));
     assert!(
         metrics
             .get("counters")
