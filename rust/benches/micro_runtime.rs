@@ -20,6 +20,7 @@
 //! cargo bench --bench micro_runtime -- --kernels-only --short --reps 2  # CI smoke
 //! cargo bench --bench micro_runtime -- --shard-only                     # k-means‖ table
 //! cargo bench --bench micro_runtime -- --rejection-only                 # oracle sweep
+//! cargo bench --bench micro_runtime -- --dist-only                      # transport seam
 //! ```
 //!
 //! `--kernels-only` flags: `--short` (headline shape only, skip the
@@ -38,6 +39,15 @@
 //! probes), written as `BENCH_rejection.json` via
 //! `coordinator/tables.rs::rejection_json`. Same flags.
 //!
+//! `--dist-only`: k-means‖ through the in-process `RoundExecutor`
+//! (workers = 0) vs 2 real `fkmpp worker` subprocesses over localhost,
+//! at n=100k, d=64, k=32 (`--short`: n=20k, d=32, k=16), written as
+//! `BENCH_dist.json` via `coordinator/tables.rs::dist_json`. Every rep
+//! asserts the two transports pick byte-identical centers, so the bench
+//! doubles as a cross-process parity smoke. Same flags. Pins
+//! `FKMPP_KERNEL=blocked` (inherited by the workers) — a precondition
+//! for cross-process bit-parity.
+//!
 //! The PJRT section skips (with a note) when `artifacts/` is missing or
 //! the `pjrt` feature is off. The useful output is points/second per
 //! entry point; on this CPU-only image the native path typically wins
@@ -49,7 +59,8 @@ use std::time::Instant;
 
 use fastkmeanspp::cli::Args;
 use fastkmeanspp::coordinator::tables::{
-    kernels_json, rejection_json, shard_json, KernelCell, RejectionCell, ShardCell,
+    dist_json, kernels_json, rejection_json, shard_json, DistCell, KernelCell, RejectionCell,
+    ShardCell,
 };
 use fastkmeanspp::data::matrix::PointSet;
 use fastkmeanspp::data::synth::{gaussian_mixture, SynthSpec};
@@ -321,6 +332,159 @@ fn rejection_compare(reps: usize, short: bool, seed: u64) -> Vec<RejectionCell> 
     cells
 }
 
+/// One `fkmpp worker --port 0` subprocess for `--dist-only`; killed on
+/// drop so a panicking parity assert can't leak processes.
+struct WorkerProc {
+    child: std::process::Child,
+    addr: String,
+}
+
+impl Drop for WorkerProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// Spawn a worker on an ephemeral port and parse its ready line
+/// (`[worker] listening on http://ADDR`).
+fn spawn_worker() -> fastkmeanspp::error::Result<WorkerProc> {
+    use std::io::BufRead;
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_fkmpp"))
+        .args(["worker", "--port", "0"])
+        .stdout(std::process::Stdio::piped())
+        .spawn()
+        .context("spawn fkmpp worker")?;
+    let stdout = child.stdout.take().context("worker stdout")?;
+    let mut reader = std::io::BufReader::new(stdout);
+    let mut line = String::new();
+    reader.read_line(&mut line).context("worker ready line")?;
+    let addr = line
+        .rsplit("http://")
+        .next()
+        .context("worker ready line")?
+        .trim()
+        .to_string();
+    // Keep draining stdout so the worker never blocks on a full pipe.
+    std::thread::spawn(move || {
+        let mut sink = String::new();
+        while matches!(reader.read_line(&mut sink), Ok(b) if b > 0) {
+            sink.clear();
+        }
+    });
+    Ok(WorkerProc { child, addr })
+}
+
+/// Distributed-fit transport seam (`--dist-only`): the identical
+/// k-means‖ configuration timed through the in-process executor and
+/// through 2 worker subprocesses. Beyond the timings, every rep asserts
+/// byte-identical center indices across the seam — the cheap standing
+/// guard that `BENCH_dist.json` numbers always compare like with like.
+fn dist_compare(reps: usize, short: bool, seed: u64) -> fastkmeanspp::error::Result<Vec<DistCell>> {
+    use fastkmeanspp::dist::{kmeans_par_dist, DistConfig};
+    // Worker subprocesses inherit the environment; pinning the kernel on
+    // both sides of the seam is a precondition for bit-parity (the
+    // autotuner may otherwise probe to different kernels per process).
+    std::env::set_var("FKMPP_KERNEL", "blocked");
+    let (n, d, k) = if short {
+        (20_000, 32, 16)
+    } else {
+        (100_000, 64, 32)
+    };
+    let rounds = 3;
+    let oversample = 2.0;
+    let ps = gaussian_mixture(
+        &SynthSpec {
+            n,
+            d,
+            k_true: k,
+            ..Default::default()
+        },
+        seed,
+    );
+    let dataset = format!("synth_n{n}_d{d}");
+    let mut cells: Vec<DistCell> = Vec::new();
+    println!(
+        "\n== distributed fit: in-process executor vs 2 worker processes \
+         (n={n}, d={d}, k={k}, threads={}) ==\n",
+        fastkmeanspp::parallel::num_threads()
+    );
+    println!("| algorithm | workers | mean s | min s | mean cost |");
+    println!("|---|---|---|---|---|");
+
+    // In-process row (workers = 0): LocalShardExecutor behind the same
+    // RoundExecutor driver the coordinator uses.
+    let lcfg = KMeansParConfig {
+        shards: 2,
+        rounds,
+        oversample,
+    };
+    let mut local_secs = Stats::new();
+    let mut local_cost = Stats::new();
+    let mut local_indices: Vec<Vec<usize>> = Vec::new();
+    for rep in 0..reps.max(1) {
+        let mut rng = Pcg64::seed_from(seed.wrapping_add(rep as u64));
+        let t0 = Instant::now();
+        let s = kmeans_par(&ps, k, &lcfg, &mut rng);
+        local_secs.push(t0.elapsed().as_secs_f64());
+        local_cost.push(kernels::reduce::cost(&ps, &s.centers));
+        local_indices.push(s.indices);
+    }
+    println!(
+        "| kmeans-par | 0 | {:.4} | {:.4} | {:.4e} |",
+        local_secs.mean(),
+        local_secs.min(),
+        local_cost.mean()
+    );
+    cells.push(DistCell {
+        dataset: dataset.clone(),
+        algorithm: "kmeans-par".to_string(),
+        k,
+        workers: 0,
+        seconds: local_secs,
+        cost: local_cost,
+    });
+
+    // 2-process row: real `fkmpp worker` subprocesses over localhost.
+    let workers = [spawn_worker()?, spawn_worker()?];
+    let dcfg = DistConfig {
+        workers: workers.iter().map(|w| w.addr.clone()).collect(),
+        rounds,
+        oversample,
+        ..DistConfig::default()
+    };
+    let mut secs = Stats::new();
+    let mut cost = Stats::new();
+    for rep in 0..reps.max(1) {
+        let mut rng = Pcg64::seed_from(seed.wrapping_add(rep as u64));
+        let t0 = Instant::now();
+        let s = kmeans_par_dist(&ps, k, &dcfg, &mut rng)?;
+        secs.push(t0.elapsed().as_secs_f64());
+        cost.push(kernels::reduce::cost(&ps, &s.centers));
+        assert_eq!(
+            s.indices, local_indices[rep],
+            "distributed rep {rep} diverged from the in-process run"
+        );
+    }
+    println!(
+        "| kmeans-par_w2 | 2 | {:.4} | {:.4} | {:.4e} |",
+        secs.mean(),
+        secs.min(),
+        cost.mean()
+    );
+    cells.push(DistCell {
+        dataset,
+        algorithm: "kmeans-par_w2".to_string(),
+        k,
+        workers: 2,
+        seconds: secs,
+        cost,
+    });
+    drop(workers);
+    std::env::remove_var("FKMPP_KERNEL");
+    Ok(cells)
+}
+
 /// Kernel thread-scaling: the acceptance shape for the kernel engine is
 /// >1.5x at 4 threads on n=100k, d=128; the table prints the measured
 /// speedup per (kernel, d, threads) cell so regressions are visible in
@@ -397,6 +561,17 @@ fn main() -> fastkmeanspp::error::Result<()> {
         let cells = shard_compare(reps, short, seed);
         let path = args.get("json").unwrap_or("BENCH_shard.json");
         let doc = shard_json(&cells, reps, seed, fastkmeanspp::parallel::num_threads());
+        std::fs::write(path, doc.emit() + "\n").with_context(|| format!("write {path}"))?;
+        println!("\nwrote {path}");
+        return Ok(());
+    }
+
+    if args.get("dist-only").is_some() {
+        let short = args.get("short").is_some();
+        let seed = args.get_u64("seed", 7)?;
+        let cells = dist_compare(reps, short, seed)?;
+        let path = args.get("json").unwrap_or("BENCH_dist.json");
+        let doc = dist_json(&cells, reps, seed, fastkmeanspp::parallel::num_threads());
         std::fs::write(path, doc.emit() + "\n").with_context(|| format!("write {path}"))?;
         println!("\nwrote {path}");
         return Ok(());

@@ -6,6 +6,7 @@
 //! fkmpp table     --which 1..8|all [--profile scaled] [--reps 5]
 //! fkmpp datasets  gen [--profile scaled]
 //! fkmpp serve     --port 8080 [--data-dir data] [--fit-workers 1]
+//! fkmpp worker    --port 9090 [--fail-after N]
 //! fkmpp info
 //! ```
 
@@ -161,6 +162,7 @@ pub fn run(argv: &[String]) -> Result<String> {
         "table" => cmd_table(&args),
         "datasets" => cmd_datasets(&args),
         "serve" => cmd_serve(&args),
+        "worker" => cmd_worker(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => Ok(USAGE.to_string()),
         other => bail!("unknown command {other:?}\n{USAGE}"),
@@ -177,12 +179,14 @@ USAGE:
                  [--lsh-tables L] [--lsh-m M] [--lsh-probe-limit P]
                  [--lsh-bucket-width W] [--max-proposals N]
                  [--shards S] [--rounds R] [--oversample L]   (kmeans-par)
+                 [--workers host:port,...]                    (distributed kmeans-par)
   fkmpp grid     --datasets a,b --algos x,y --ks 100,500 --reps 5
                  [--json results.json]
   fkmpp table    --which 1|2|...|8|all [--profile scaled] [--reps 5]
   fkmpp datasets gen [--profile scaled] [--data-dir data]
   fkmpp serve    [--port 8080] [--host 127.0.0.1] [--data-dir data]
                  [--http-workers 4] [--fit-workers 1] [--no-persist]
+  fkmpp worker   [--port 0] [--host 127.0.0.1] [--fail-after N]
   fkmpp info
 
 Algorithms: kmeanspp fastkmeanspp rejection rejection-exact rejection-rigorous
@@ -203,7 +207,31 @@ fn cmd_seed(args: &Args) -> Result<String> {
     };
     let mut rng = Pcg64::seed_from(cfg.seed);
     let t0 = std::time::Instant::now();
-    let seeding = crate::coordinator::runner::run_seeding(&cfg, algo, &seed_space, k, &mut rng);
+    // `--workers host:port,...` swaps the in-process k-means|| round
+    // executor for remote worker processes; everything else (quantize,
+    // RNG seeding, cost evaluation) is identical, so a distributed run
+    // is bitwise comparable to the local one.
+    let seeding = if let Some(w) = args.get("workers") {
+        if algo != SeedingAlgorithm::KMeansPar {
+            bail!(
+                "--workers only applies to --algo kmeans-par (got {})",
+                algo.name()
+            );
+        }
+        let dcfg = crate::dist::DistConfig {
+            workers: w
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect(),
+            rounds: cfg.kmeanspar.rounds,
+            oversample: cfg.kmeanspar.oversample,
+            ..crate::dist::DistConfig::default()
+        };
+        crate::dist::kmeans_par_dist(&seed_space, k, &dcfg, &mut rng)?
+    } else {
+        crate::coordinator::runner::run_seeding(&cfg, algo, &seed_space, k, &mut rng)
+    };
     let secs = t0.elapsed().as_secs_f64();
     let backend = Backend::auto(&cfg.artifacts_dir);
     let centers = ps.gather(&seeding.indices);
@@ -378,6 +406,30 @@ fn cmd_serve(args: &Args) -> Result<String> {
     Ok("server stopped\n".to_string())
 }
 
+/// `fkmpp worker`: boot a distributed-fit worker ([`crate::dist::worker`])
+/// and serve `/rpc` until `POST /shutdown` (or the process is killed).
+fn cmd_worker(args: &Args) -> Result<String> {
+    let defaults = crate::dist::worker::WorkerConfig::default();
+    let port = args.get_usize("port", defaults.port as usize)?;
+    if port > u16::MAX as usize {
+        bail!("--port {port} out of range (max 65535)");
+    }
+    let fail_after = match args.get("fail-after") {
+        Some(v) => Some(v.parse().with_context(|| format!("--fail-after {v:?}"))?),
+        None => None,
+    };
+    let wcfg = crate::dist::worker::WorkerConfig {
+        host: args
+            .get("host")
+            .map(str::to_string)
+            .unwrap_or(defaults.host),
+        port: port as u16,
+        fail_after,
+    };
+    crate::dist::worker::run_worker(&wcfg)?;
+    Ok("worker stopped\n".to_string())
+}
+
 fn cmd_info(args: &Args) -> Result<String> {
     let cfg = config_from_args(args)?;
     let backend = Backend::auto(&cfg.artifacts_dir);
@@ -439,6 +491,28 @@ mod tests {
     fn serve_rejects_out_of_range_port() {
         // Fails validation before any socket is bound.
         assert!(run(&argv("serve --port 99999")).is_err());
+    }
+
+    #[test]
+    fn worker_rejects_out_of_range_port() {
+        // Fails validation before any socket is bound.
+        assert!(run(&argv("worker --port 99999")).is_err());
+        let err = format!("{:#}", run(&argv("worker --fail-after nope")).unwrap_err());
+        assert!(err.contains("fail-after"), "{err}");
+    }
+
+    #[test]
+    fn workers_flag_requires_kmeans_par() {
+        let err = format!(
+            "{:#}",
+            run(&argv(
+                "seed --dataset kdd_sim --algo uniform -k 10 --profile smoke \
+                 --data-dir /tmp/fkmpp_cli_test --artifacts-dir /nonexistent \
+                 --workers 127.0.0.1:1",
+            ))
+            .unwrap_err()
+        );
+        assert!(err.contains("kmeans-par"), "{err}");
     }
 
     #[test]

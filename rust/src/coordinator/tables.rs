@@ -296,6 +296,48 @@ pub fn shard_json(cells: &[ShardCell], reps: usize, seed: u64, threads: usize) -
     bench_json("shard_bench", cell_docs, reps, seed, threads)
 }
 
+/// One cell of the distributed-fit bench sweep
+/// (`benches/micro_runtime.rs --dist-only`): the k-means|| seeder timed
+/// against one transport (in-process executor or worker processes).
+pub struct DistCell {
+    /// Synthetic instance label, e.g. `synth_n100000_d64`.
+    pub dataset: String,
+    /// Seeder + transport, e.g. `kmeans-par_w2` (`kmeans-par` for the
+    /// in-process row — workers don't apply).
+    pub algorithm: String,
+    pub k: usize,
+    /// Worker-process count the cell ran with (0 for the in-process
+    /// [`crate::shard::kmeanspar::LocalShardExecutor`] baseline).
+    pub workers: usize,
+    /// Per-rep seeding wall-clock seconds.
+    pub seconds: Stats,
+    /// Per-rep seeding cost (k-means objective of the chosen centers).
+    pub cost: Stats,
+}
+
+/// `BENCH_dist.json` — the distributed-fit bench artifact. Same
+/// top-level shape and per-cell field names as [`grid_json`] /
+/// [`shard_json`] (one consumer reads every `BENCH_*.json`); dist cells
+/// add `workers` and carry real cost statistics.
+pub fn dist_json(cells: &[DistCell], reps: usize, seed: u64, threads: usize) -> Json {
+    let cell_docs: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            Json::obj(vec![
+                ("dataset", Json::str(c.dataset.clone())),
+                ("algorithm", Json::str(c.algorithm.clone())),
+                ("k", Json::num(c.k as f64)),
+                ("workers", Json::num(c.workers as f64)),
+                ("seconds", stats_json(&c.seconds)),
+                ("cost", stats_json(&c.cost)),
+                ("lloyd_cost", Json::Null),
+                ("proposals_per_center", Json::Null),
+            ])
+        })
+        .collect();
+    bench_json("dist_bench", cell_docs, reps, seed, threads)
+}
+
 /// One cell of the rejection-oracle bench sweep
 /// (`benches/micro_runtime.rs --rejection-only`): Algorithm 4 timed with
 /// one ANN oracle backing the acceptance test.
@@ -539,6 +581,34 @@ mod tests {
         let cell = &arr[0];
         assert_eq!(cell.get("algorithm").and_then(Json::as_str), Some("kmeans-par_s4"));
         assert_eq!(cell.get("shards").and_then(Json::as_usize), Some(4));
+        assert!(cell.get("seconds").unwrap().get("mean").is_some());
+        assert!(cell.get("cost").unwrap().get("mean").is_some());
+        assert!(cell.get("lloyd_cost").map(Json::is_null).unwrap());
+    }
+
+    #[test]
+    fn dist_json_round_trips_with_grid_shape() {
+        let mut s = Stats::new();
+        s.push(0.6);
+        let mut c = Stats::new();
+        c.push(2.2e7);
+        let cells = vec![DistCell {
+            dataset: "synth_n100000_d64".to_string(),
+            algorithm: "kmeans-par_w2".to_string(),
+            k: 32,
+            workers: 2,
+            seconds: s,
+            cost: c,
+        }];
+        let doc = dist_json(&cells, 2, 7, 4);
+        let back = crate::server::json::parse(&doc.emit()).unwrap();
+        assert_eq!(back.get("profile").and_then(Json::as_str), Some("dist_bench"));
+        assert_eq!(back.get("reps").and_then(Json::as_usize), Some(2));
+        let arr = back.get("cells").and_then(Json::as_array).unwrap();
+        assert_eq!(arr.len(), 1);
+        let cell = &arr[0];
+        assert_eq!(cell.get("algorithm").and_then(Json::as_str), Some("kmeans-par_w2"));
+        assert_eq!(cell.get("workers").and_then(Json::as_usize), Some(2));
         assert!(cell.get("seconds").unwrap().get("mean").is_some());
         assert!(cell.get("cost").unwrap().get("mean").is_some());
         assert!(cell.get("lloyd_cost").map(Json::is_null).unwrap());

@@ -1,0 +1,558 @@
+//! The coordinator side of the distributed fit: a [`RoundExecutor`]
+//! that fans each phase out to `fkmpp worker` processes.
+//!
+//! Workers are assigned contiguous, summation-block-aligned global row
+//! ranges ([`crate::shard::aligned_ranges`]) in endpoint order. Every
+//! phase is a serial fan-out in that order — RPC latency is not the
+//! regime this subsystem optimizes yet; bitwise-correct merges are:
+//! `Update` partials concatenate in range order (= global block order),
+//! `Sample` candidates concatenate in range order (= ascending global
+//! index), `Weigh` counts sum element-wise in `u64`.
+//!
+//! ## Retry / deadline contract
+//!
+//! Every failed RPC — connect/read/write error, timeout, or a worker
+//! `Error` frame (a restarted worker answers `"no shard loaded"`) —
+//! marks the worker unprovisioned, counts a `dist.retries`, sleeps a
+//! short backoff, and retries: re-provision (`ShardLoad` + one combined
+//! `Update` replaying the full broadcast history, which reconstructs
+//! the worker's `D²` bits exactly — min-folds are idempotent and
+//! order-free) and then re-send the failed frame. Each executor phase
+//! is bounded by [`DistConfig::round_deadline`]; when it expires the
+//! run fails with a typed error naming the unreachable endpoint. The
+//! history is appended **before** a batch is first broadcast, so a
+//! worker that dies mid-broadcast replays the batch it never saw.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+use crate::bail;
+use crate::data::matrix::PointSet;
+use crate::dist::wire::Frame;
+use crate::dist::{run_rounds, RoundExecutor};
+use crate::error::{Context, Error, Result};
+use crate::kernels::reduce;
+use crate::metrics;
+use crate::rng::Pcg64;
+use crate::seeding::{Seeding, SeedingStats};
+use crate::shard::aligned_ranges;
+
+/// Distributed-fit knobs (`fkmpp seed --algo kmeans-par --workers
+/// host:port,...`).
+#[derive(Clone, Debug)]
+pub struct DistConfig {
+    /// Worker endpoints (`host:port`), in partition order. With more
+    /// endpoints than aligned ranges (tiny datasets), trailing workers
+    /// idle — determinism over utilization.
+    pub workers: Vec<String>,
+    /// Oversampling rounds (same meaning as
+    /// [`crate::shard::kmeanspar::KMeansParConfig::rounds`]).
+    pub rounds: usize,
+    /// Oversampling factor `ℓ = oversample · k`.
+    pub oversample: f64,
+    /// Per-RPC connect/read/write timeout.
+    pub rpc_timeout: Duration,
+    /// Retry budget per executor phase (provision, update, sample,
+    /// weigh): failed workers are re-provisioned and retried until this
+    /// much time has elapsed, then the run fails with a typed
+    /// "unreachable" error.
+    pub round_deadline: Duration,
+}
+
+impl Default for DistConfig {
+    fn default() -> Self {
+        DistConfig {
+            workers: Vec::new(),
+            rounds: 5,
+            oversample: 2.0,
+            rpc_timeout: Duration::from_secs(10),
+            round_deadline: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Pause between retry attempts against a failing worker.
+const RETRY_BACKOFF: Duration = Duration::from_millis(150);
+
+struct WorkerSlot {
+    endpoint: String,
+    /// Owned global row range `[lo, hi)`, aligned to
+    /// [`crate::kernels::reduce::SUM_BLOCK`].
+    lo: usize,
+    hi: usize,
+    /// Whether the worker currently holds its slice + fold state (goes
+    /// false on any RPC failure, triggering replay re-provisioning).
+    provisioned: bool,
+}
+
+/// The remote [`RoundExecutor`]: owns the worker fleet for one run.
+pub struct DistCoordinator<'a> {
+    ps: &'a PointSet,
+    cfg: DistConfig,
+    workers: Vec<WorkerSlot>,
+    /// Every candidate batch ever broadcast (global indices + rows,
+    /// flat), appended before first send — the replay log.
+    history_indices: Vec<u64>,
+    history_rows: Vec<f32>,
+}
+
+impl<'a> DistCoordinator<'a> {
+    /// Partition `ps` over `cfg.workers` (aligned, balanced, in
+    /// endpoint order). No RPCs yet — workers are provisioned lazily or
+    /// via [`DistCoordinator::provision_all`].
+    pub fn new(ps: &'a PointSet, cfg: &DistConfig) -> Result<DistCoordinator<'a>> {
+        if cfg.workers.is_empty() {
+            bail!("distributed fit needs at least one worker endpoint");
+        }
+        if ps.is_empty() {
+            bail!("distributed fit over an empty dataset");
+        }
+        let ranges = aligned_ranges(ps.len(), cfg.workers.len(), reduce::SUM_BLOCK);
+        let workers = ranges
+            .iter()
+            .zip(&cfg.workers)
+            .map(|(&(lo, hi), ep)| WorkerSlot {
+                endpoint: ep.clone(),
+                lo,
+                hi,
+                provisioned: false,
+            })
+            .collect();
+        Ok(DistCoordinator {
+            ps,
+            cfg: cfg.clone(),
+            workers,
+            history_indices: Vec::new(),
+            history_rows: Vec::new(),
+        })
+    }
+
+    /// Number of workers actually holding rows (≤ endpoint count).
+    pub fn active_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Eagerly provision the whole fleet (with the usual retry/deadline
+    /// discipline) so provisioning time lands in `init_secs`, not the
+    /// first round.
+    pub fn provision_all(&mut self) -> Result<()> {
+        let deadline = Instant::now() + self.cfg.round_deadline;
+        for w in 0..self.workers.len() {
+            self.call_with_recovery(w, None, deadline)?;
+        }
+        Ok(())
+    }
+
+    /// One raw RPC: connect, POST the frame, decode the response frame.
+    /// A worker `Error` frame becomes an `Err` here so the retry loop
+    /// treats it like any other failure.
+    fn rpc_raw(&self, endpoint: &str, frame: &Frame) -> Result<Frame> {
+        let m = metrics::global();
+        m.incr("dist.rpcs", 1);
+        let timer = m.timer("dist.rpc_secs");
+        let addr: SocketAddr = endpoint
+            .to_socket_addrs()
+            .with_context(|| format!("resolve worker {endpoint:?}"))?
+            .next()
+            .with_context(|| format!("worker {endpoint:?} resolved to no address"))?;
+        let mut stream = TcpStream::connect_timeout(&addr, self.cfg.rpc_timeout)
+            .with_context(|| format!("connect worker {endpoint}"))?;
+        stream.set_read_timeout(Some(self.cfg.rpc_timeout)).ok();
+        stream.set_write_timeout(Some(self.cfg.rpc_timeout)).ok();
+        let body = frame.encode();
+        let head = format!(
+            "POST /rpc HTTP/1.1\r\nHost: {endpoint}\r\nContent-Type: application/octet-stream\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+            body.len()
+        );
+        stream
+            .write_all(head.as_bytes())
+            .and_then(|()| stream.write_all(&body))
+            .with_context(|| format!("send rpc to worker {endpoint}"))?;
+        let (status, resp_body) = read_response(&mut stream)
+            .with_context(|| format!("read rpc response from worker {endpoint}"))?;
+        timer.stop();
+        let resp = Frame::decode(&resp_body)
+            .with_context(|| format!("decode rpc response from worker {endpoint} (HTTP {status})"))?;
+        if let Frame::Error { message } = resp {
+            bail!("worker {endpoint}: {message}");
+        }
+        Ok(resp)
+    }
+
+    /// (Re-)install a worker's slice and replay the broadcast history.
+    fn ensure_provisioned(&mut self, w: usize) -> Result<()> {
+        if self.workers[w].provisioned {
+            return Ok(());
+        }
+        metrics::global().incr("dist.provisions", 1);
+        let (lo, hi) = (self.workers[w].lo, self.workers[w].hi);
+        let ep = self.workers[w].endpoint.clone();
+        let dim = self.ps.dim();
+        let slice = PointSet::from_flat(hi - lo, dim, self.ps.flat()[lo * dim..hi * dim].to_vec());
+        let resp = self.rpc_raw(
+            &ep,
+            &Frame::ShardLoad {
+                n_global: self.ps.len() as u64,
+                offset: lo as u64,
+                points: slice,
+            },
+        )?;
+        match resp {
+            Frame::Ack { len } if len as usize == hi - lo => {}
+            other => bail!("worker {ep}: unexpected ShardLoad response {other:?}"),
+        }
+        if !self.history_indices.is_empty() {
+            // One combined replay fold; min-folds are idempotent and
+            // order-free, so this lands on the identical D² bits the
+            // worker would hold had it seen every broadcast live.
+            let rows =
+                PointSet::from_flat(self.history_indices.len(), dim, self.history_rows.clone());
+            let resp = self.rpc_raw(
+                &ep,
+                &Frame::Update {
+                    indices: self.history_indices.clone(),
+                    rows,
+                },
+            )?;
+            if !matches!(resp, Frame::Partials { .. }) {
+                bail!("worker {ep}: unexpected replay response {resp:?}");
+            }
+        }
+        self.workers[w].provisioned = true;
+        Ok(())
+    }
+
+    /// Provision-then-send with the retry/deadline discipline. `frame:
+    /// None` provisions only (the response is a synthetic `Ack`).
+    fn call_with_recovery(
+        &mut self,
+        w: usize,
+        frame: Option<&Frame>,
+        deadline: Instant,
+    ) -> Result<Frame> {
+        let m = metrics::global();
+        loop {
+            let result = match self.ensure_provisioned(w) {
+                Ok(()) => match frame {
+                    Some(f) => {
+                        let ep = self.workers[w].endpoint.clone();
+                        self.rpc_raw(&ep, f)
+                    }
+                    None => {
+                        let len = (self.workers[w].hi - self.workers[w].lo) as u64;
+                        Ok(Frame::Ack { len })
+                    }
+                },
+                Err(e) => Err(e),
+            };
+            match result {
+                Ok(resp) => return Ok(resp),
+                Err(e) => {
+                    self.workers[w].provisioned = false;
+                    m.incr("dist.retries", 1);
+                    if Instant::now() >= deadline {
+                        return Err(self.unreachable(w, e));
+                    }
+                    std::thread::sleep(RETRY_BACKOFF);
+                }
+            }
+        }
+    }
+
+    /// The typed give-up error: names the endpoint and the deadline.
+    /// "unreachable" is load-bearing — `dist_parity.rs` asserts on it.
+    fn unreachable(&self, w: usize, cause: Error) -> Error {
+        cause.wrap(format!(
+            "worker {} unreachable: no successful rpc within the {:?} retry deadline",
+            self.workers[w].endpoint, self.cfg.round_deadline
+        ))
+    }
+}
+
+impl RoundExecutor for DistCoordinator<'_> {
+    fn update(&mut self, indices: &[usize], rows: &PointSet) -> Result<Vec<f64>> {
+        // Log before broadcasting: a worker that dies mid-fan-out gets
+        // this batch replayed at re-provision time.
+        self.history_indices.extend(indices.iter().map(|&i| i as u64));
+        self.history_rows.extend_from_slice(rows.flat());
+        let frame = Frame::Update {
+            indices: indices.iter().map(|&i| i as u64).collect(),
+            rows: rows.clone(),
+        };
+        let deadline = Instant::now() + self.cfg.round_deadline;
+        let mut partials = Vec::new();
+        for w in 0..self.workers.len() {
+            match self.call_with_recovery(w, Some(&frame), deadline)? {
+                // Range order = global block order: concatenation IS the
+                // global block_sums vector.
+                Frame::Partials { sums } => partials.extend(sums),
+                other => bail!(
+                    "worker {}: unexpected update response {other:?}",
+                    self.workers[w].endpoint
+                ),
+            }
+        }
+        Ok(partials)
+    }
+
+    fn sample(&mut self, round_tag: u64, cost: f64, ell: f64) -> Result<Vec<usize>> {
+        let frame = Frame::Sample {
+            round_tag,
+            cost,
+            ell,
+        };
+        let deadline = Instant::now() + self.cfg.round_deadline;
+        let mut accepted = Vec::new();
+        for w in 0..self.workers.len() {
+            match self.call_with_recovery(w, Some(&frame), deadline)? {
+                Frame::Candidates { indices } => {
+                    for i in indices {
+                        let i = i as usize;
+                        if i < self.workers[w].lo || i >= self.workers[w].hi {
+                            bail!(
+                                "worker {} returned out-of-range candidate {i}",
+                                self.workers[w].endpoint
+                            );
+                        }
+                        // Range order = ascending global order.
+                        accepted.push(i);
+                    }
+                }
+                other => bail!(
+                    "worker {}: unexpected sample response {other:?}",
+                    self.workers[w].endpoint
+                ),
+            }
+        }
+        Ok(accepted)
+    }
+
+    fn weigh(&mut self, candidates: &PointSet) -> Result<Vec<u64>> {
+        let frame = Frame::Weigh {
+            rows: candidates.clone(),
+        };
+        let deadline = Instant::now() + self.cfg.round_deadline;
+        let mut totals = vec![0u64; candidates.len()];
+        for w in 0..self.workers.len() {
+            match self.call_with_recovery(w, Some(&frame), deadline)? {
+                Frame::Counts { counts } => {
+                    if counts.len() != totals.len() {
+                        bail!(
+                            "worker {}: {} counts for {} candidates",
+                            self.workers[w].endpoint,
+                            counts.len(),
+                            totals.len()
+                        );
+                    }
+                    for (t, c) in totals.iter_mut().zip(counts) {
+                        *t += c;
+                    }
+                }
+                other => bail!(
+                    "worker {}: unexpected weigh response {other:?}",
+                    self.workers[w].endpoint
+                ),
+            }
+        }
+        Ok(totals)
+    }
+}
+
+/// Distributed k-means‖: the shared round driver
+/// ([`crate::dist::run_rounds`]) over a worker fleet. For a fixed seed
+/// (and `FKMPP_KERNEL` pinned across processes) the result is bitwise
+/// identical to the in-process [`crate::shard::kmeanspar::kmeans_par`]
+/// at any worker count — `rust/tests/dist_parity.rs` is the gate.
+pub fn kmeans_par_dist(
+    ps: &PointSet,
+    k: usize,
+    cfg: &DistConfig,
+    rng: &mut Pcg64,
+) -> Result<Seeding> {
+    let m = metrics::global();
+    m.incr("dist.runs", 1);
+    if k.min(ps.len()) == 0 {
+        m.incr("shard.runs", 1);
+        return Ok(Seeding::from_indices(
+            ps,
+            Vec::new(),
+            SeedingStats::default(),
+        ));
+    }
+    let t0 = Instant::now();
+    let mut coord = DistCoordinator::new(ps, cfg)?;
+    coord.provision_all()?;
+    let init_secs = t0.elapsed().as_secs_f64();
+    run_rounds(ps, k, cfg.rounds, cfg.oversample, &mut coord, init_secs, rng)
+}
+
+/// Minimal HTTP/1.1 response reader for the coordinator's RPC client
+/// (the request side lives in [`crate::server::http`]): status line,
+/// headers, then a body framed by `Content-Length` (or read-to-EOF —
+/// workers always answer `Connection: close`).
+fn read_response<S: Read>(stream: &mut S) -> Result<(u16, Vec<u8>)> {
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).context("read status line")?;
+    let mut parts = line.split_whitespace();
+    let version = parts.next().context("empty response")?;
+    if !version.starts_with("HTTP/1.") {
+        bail!("bad response version {version:?}");
+    }
+    let status: u16 = parts
+        .next()
+        .context("response missing status code")?
+        .parse()
+        .context("malformed status code")?;
+    let mut content_length: Option<usize> = None;
+    loop {
+        let mut h = String::new();
+        if reader.read_line(&mut h).context("read response header")? == 0 {
+            bail!("connection closed mid-headers");
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = h.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length = Some(
+                    value
+                        .trim()
+                        .parse()
+                        .with_context(|| format!("bad Content-Length {value:?}"))?,
+                );
+            }
+        }
+    }
+    let body = match content_length {
+        Some(len) => {
+            if len > crate::server::http::MAX_BODY_BYTES {
+                bail!("response body of {len} bytes exceeds limit");
+            }
+            let mut body = vec![0u8; len];
+            reader.read_exact(&mut body).context("read response body")?;
+            body
+        }
+        None => {
+            let mut body = Vec::new();
+            reader
+                .read_to_end(&mut body)
+                .context("read response body")?;
+            body
+        }
+    };
+    Ok((status, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gaussian_mixture, SynthSpec};
+    use crate::dist::worker::{serve, WorkerConfig};
+    use crate::shard::kmeanspar::{kmeans_par, KMeansParConfig};
+
+    /// Spawn an in-process worker thread on an ephemeral port. Same
+    /// process ⇒ same kernel dispatch on both sides, so no env pinning
+    /// is needed here (the cross-process case is `dist_parity.rs`).
+    fn spawn_worker_thread() -> String {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        std::thread::spawn(move || {
+            let _ = serve(listener, &WorkerConfig::default());
+        });
+        addr
+    }
+
+    fn shutdown(addr: &str) {
+        if let Ok(mut s) = TcpStream::connect(addr) {
+            let _ = s.write_all(b"POST /shutdown HTTP/1.1\r\nHost: x\r\nContent-Length: 0\r\n\r\n");
+            let mut sink = Vec::new();
+            let _ = std::io::Read::read_to_end(&mut s, &mut sink);
+        }
+    }
+
+    #[test]
+    fn two_thread_workers_match_in_process_bitwise() {
+        let ps = gaussian_mixture(
+            &SynthSpec {
+                n: 9_000,
+                d: 5,
+                k_true: 6,
+                ..Default::default()
+            },
+            17,
+        );
+        let pcfg = KMeansParConfig {
+            shards: 3,
+            rounds: 3,
+            oversample: 2.0,
+        };
+        let mut rng = Pcg64::seed_from(21);
+        let base = kmeans_par(&ps, 8, &pcfg, &mut rng);
+        let base_next = rng.next_u64();
+
+        let addrs = vec![spawn_worker_thread(), spawn_worker_thread()];
+        let dcfg = DistConfig {
+            workers: addrs.clone(),
+            rounds: pcfg.rounds,
+            oversample: pcfg.oversample,
+            ..DistConfig::default()
+        };
+        let mut rng = Pcg64::seed_from(21);
+        let got = kmeans_par_dist(&ps, 8, &dcfg, &mut rng).expect("distributed run");
+        let got_next = rng.next_u64();
+        assert_eq!(got.indices, base.indices);
+        assert_eq!(got.centers, base.centers);
+        assert_eq!(got_next, base_next, "run RNG stream diverged");
+        assert_eq!(got.stats.proposals, base.stats.proposals);
+        for a in &addrs {
+            shutdown(a);
+        }
+    }
+
+    #[test]
+    fn empty_fleet_and_empty_k_are_clean() {
+        let ps = gaussian_mixture(
+            &SynthSpec {
+                n: 100,
+                d: 3,
+                k_true: 2,
+                ..Default::default()
+            },
+            1,
+        );
+        let mut rng = Pcg64::seed_from(1);
+        let err = kmeans_par_dist(&ps, 5, &DistConfig::default(), &mut rng).unwrap_err();
+        assert!(format!("{err:#}").contains("worker"), "{err:#}");
+        // k = 0 never touches the network.
+        let dcfg = DistConfig {
+            workers: vec!["127.0.0.1:1".to_string()],
+            ..DistConfig::default()
+        };
+        let s = kmeans_par_dist(&ps, 0, &dcfg, &mut rng).unwrap();
+        assert_eq!(s.k(), 0);
+    }
+
+    #[test]
+    fn aligned_partition_engages_at_most_range_count_workers() {
+        // 9000 rows = 3 summation blocks: a 5-endpoint fleet keeps only
+        // 3 active slots.
+        let ps = gaussian_mixture(
+            &SynthSpec {
+                n: 9_000,
+                d: 4,
+                k_true: 2,
+                ..Default::default()
+            },
+            2,
+        );
+        let dcfg = DistConfig {
+            workers: (0..5).map(|i| format!("127.0.0.1:{}", 40_000 + i)).collect(),
+            ..DistConfig::default()
+        };
+        let coord = DistCoordinator::new(&ps, &dcfg).unwrap();
+        assert_eq!(coord.active_workers(), 3);
+    }
+}

@@ -1,0 +1,204 @@
+//! The distributed fit — k-means‖ across **processes**, not just
+//! threads (ROADMAP item 4, the horizontal-scale layer).
+//!
+//! This module joins the two halves built by earlier PRs: the
+//! coordinator/shard split of [`crate::shard`] and the zero-dependency
+//! HTTP layer of [`crate::server`]. The round lifecycle of
+//! [`crate::shard::kmeanspar::kmeans_par`] is extracted into one
+//! transport-generic driver, [`run_rounds`], parameterized over a
+//! [`RoundExecutor`]:
+//!
+//! * [`crate::shard::kmeanspar::LocalShardExecutor`] — the in-process
+//!   implementation over [`crate::shard::ShardedDataset`]; the classic
+//!   `kmeans_par` entry point now delegates to it, so every existing
+//!   caller (and the 21-seed statistical suite) exercises the same
+//!   driver as the distributed path.
+//! * [`coordinator::DistCoordinator`] — the remote implementation:
+//!   `fkmpp worker --port N` processes ([`worker`]) each own a
+//!   contiguous, summation-block-aligned slice
+//!   ([`crate::shard::aligned_ranges`]) and answer the two per-round
+//!   RPCs (`D²` slice update returning fixed-block partial cost sums,
+//!   and Poisson candidate sampling on the shared per-(round, global
+//!   point index) counter streams) plus the final weigh. Frames travel
+//!   as the binary codec of [`wire`] over `POST /rpc` — no JSON float
+//!   round-tripping for bulk rows.
+//!
+//! ## Bitwise parity across processes
+//!
+//! A multi-process run must reproduce the single-process result
+//! bit-for-bit (`rust/tests/dist_parity.rs` is the acceptance gate).
+//! The contract stands on four legs:
+//!
+//! 1. `D²` maintenance is per-point exact and min-folds are order-free,
+//!    so slicing rows across processes changes no value — provided every
+//!    process runs the *same kernel implementation*. Workers resolve
+//!    kernels on the **global** shape shipped in `ShardLoad` (exactly as
+//!    the in-process driver resolves once on the global shape), and
+//!    cross-process runs must pin `FKMPP_KERNEL` (the PR 3 contract):
+//!    the autotuner's runtime probe may resolve differently in different
+//!    processes on probe-scale shapes.
+//! 2. The round cost is [`crate::kernels::reduce::sum_f32`] — f64 block
+//!    partials at fixed [`crate::kernels::reduce::SUM_BLOCK`] boundaries
+//!    summed left-to-right. Worker ranges are aligned to those
+//!    boundaries, each worker returns its blocks' partials, and the
+//!    coordinator concatenates them in range order and sums
+//!    left-to-right: the identical f64 additions in the identical
+//!    order. (Summing per-worker *totals* would round differently —
+//!    that is why the partials, not the totals, are the RPC payload.)
+//! 3. Membership coins are pure functions of `(seed, round, global
+//!    index)` ([`crate::shard::kmeanspar::point_uniform`]); merging
+//!    per-worker candidate lists in range order IS ascending global
+//!    order, the same merge the in-process engine does per shard.
+//! 4. Candidate weights are exact `u64` assignment counts, summed
+//!    order-free; the recluster runs coordinator-side on the run RNG.
+//!
+//! ## Fault tolerance
+//!
+//! Workers are stateful but their state is a pure fold of the broadcast
+//! history, so recovery is *replay*: the coordinator keeps every
+//! candidate batch it has broadcast and, when a worker RPC fails
+//! (connection refused/reset, timeout, or a worker restarted into the
+//! "no shard loaded" state), re-provisions the worker — `ShardLoad`
+//! plus one combined `Update` replaying the full history (min-folds are
+//! idempotent and order-free, so replay lands on the identical `D²`
+//! bits) — and retries the failed RPC. Retries are bounded by a
+//! per-phase deadline ([`coordinator::DistConfig::round_deadline`]);
+//! a permanently dead worker yields a typed error naming the endpoint
+//! (`"... unreachable ..."`), never a hang. `dist.*` counters and
+//! timers land in [`crate::metrics::global`].
+
+pub mod coordinator;
+pub mod wire;
+pub mod worker;
+
+pub use coordinator::{kmeans_par_dist, DistConfig, DistCoordinator};
+
+use std::time::Instant;
+
+use crate::data::matrix::PointSet;
+use crate::error::Result;
+use crate::metrics;
+use crate::rng::{splitmix64, Pcg64};
+use crate::seeding::{Seeding, SeedingStats};
+use crate::shard::weighted::{weighted_kmeanspp, WeightedPointSet};
+
+/// The per-round operations of k-means‖, abstracted over *where the
+/// rows live*. One implementation holds shards in-process
+/// ([`crate::shard::kmeanspar::LocalShardExecutor`]); the other fans
+/// out to worker processes ([`DistCoordinator`]). [`run_rounds`] is
+/// written against this trait only, so the two transports cannot drift.
+///
+/// Implementations own the `D²` array and the candidate marks for their
+/// rows; the driver owns the run RNG, the candidate list, and the
+/// recluster.
+pub trait RoundExecutor {
+    /// Broadcast newly accepted candidates (global `indices`, with their
+    /// `rows` gathered by the driver) and min-fold them into the `D²`
+    /// state. Returns the **global fixed-block partial cost sums**: the
+    /// f64 per-[`crate::kernels::reduce::SUM_BLOCK`] partials of the
+    /// full `D²` array, in global block order, so
+    /// `partials.iter().sum()` equals
+    /// [`crate::kernels::reduce::sum_f32`] bitwise.
+    fn update(&mut self, indices: &[usize], rows: &PointSet) -> Result<Vec<f64>>;
+
+    /// Flip the per-(round, global index) membership coins over every
+    /// non-candidate row: accept `i` when
+    /// `point_uniform(round_tag, i) * cost < ell * D²(i)`. Returns
+    /// accepted global indices in ascending order.
+    fn sample(&mut self, round_tag: u64, cost: f64, ell: f64) -> Result<Vec<usize>>;
+
+    /// Assign every row to its nearest candidate and return exact
+    /// per-candidate `u64` assignment counts (the recluster weights).
+    fn weigh(&mut self, candidates: &PointSet) -> Result<Vec<u64>>;
+}
+
+/// The transport-generic k-means‖ driver: oversampling rounds over any
+/// [`RoundExecutor`], then the coordinator-side weighted k-means++
+/// recluster. This is the round lifecycle formerly inlined in
+/// [`crate::shard::kmeanspar::kmeans_par`], verbatim — same RNG
+/// discipline (exactly two run-RNG draws before the recluster), same
+/// `shard.*` metrics, same degenerate top-up — so both transports are
+/// bitwise interchangeable. Callers must have handled `k == 0`
+/// (`k.min(ps.len()) > 0` is a precondition) and pass the time they
+/// spent provisioning the executor as `init_secs`.
+pub fn run_rounds(
+    ps: &PointSet,
+    k: usize,
+    rounds: usize,
+    oversample: f64,
+    exec: &mut dyn RoundExecutor,
+    init_secs: f64,
+    rng: &mut Pcg64,
+) -> Result<Seeding> {
+    let m = metrics::global();
+    m.incr("shard.runs", 1);
+    let k = k.min(ps.len());
+    assert!(k > 0, "run_rounds precondition: k.min(n) > 0");
+    let n = ps.len();
+    let mut stats = SeedingStats {
+        init_secs,
+        ..SeedingStats::default()
+    };
+
+    let t1 = Instant::now();
+    // RNG discipline: exactly two run-RNG draws before the recluster.
+    let stream_root = rng.next_u64();
+    let first = rng.index(n);
+    let mut candidates = vec![first];
+    stats.proposals += 1;
+    // The executor returns the global fixed-block cost partials after
+    // every fold; summing them left-to-right IS sum_f32 on the global
+    // D² array, so the driver never needs the array itself.
+    let mut partials = exec.update(&[first], &ps.gather(&[first]))?;
+
+    let ell = oversample * k as f64;
+    for round in 0..rounds.max(1) {
+        let timer = m.timer("shard.round_secs");
+        // Global cost at fixed block boundaries: layout-invariant.
+        let cost: f64 = partials.iter().sum();
+        if !(cost > 0.0) || !cost.is_finite() {
+            // Candidates already cover every point exactly.
+            timer.stop();
+            break;
+        }
+        let round_tag = splitmix64(stream_root ^ splitmix64(round as u64 ^ 0x9E37_79B9_7F4A_7C15));
+        let new = exec.sample(round_tag, cost, ell)?;
+        m.incr("shard.rounds", 1);
+        m.incr("shard.candidates", new.len() as u64);
+        stats.proposals += new.len() as u64;
+        if !new.is_empty() {
+            partials = exec.update(&new, &ps.gather(&new))?;
+            candidates.extend_from_slice(&new);
+        }
+        timer.stop();
+    }
+
+    // Candidate weights = per-candidate assignment counts, exact u64.
+    let weights_timer = m.timer("shard.weights_secs");
+    let cand_ps = ps.gather(&candidates);
+    let counts = exec.weigh(&cand_ps)?;
+    let weights: Vec<f32> = counts.into_iter().map(|w| w as f32).collect();
+    weights_timer.stop();
+
+    // Weighted recluster of the small candidate set down to k, resuming
+    // the run RNG.
+    let recluster_timer = m.timer("shard.recluster_secs");
+    let wps = WeightedPointSet::new(cand_ps, weights);
+    let sub = weighted_kmeanspp(&wps, k, rng);
+    let mut indices: Vec<usize> = sub.indices.iter().map(|&ci| candidates[ci]).collect();
+    // Degenerate top-up (fewer candidates than k on tiny inputs): honor
+    // the k-distinct contract with arbitrary unchosen indices.
+    if indices.len() < k {
+        for i in 0..n {
+            if indices.len() >= k {
+                break;
+            }
+            if !indices.contains(&i) {
+                indices.push(i);
+            }
+        }
+    }
+    recluster_timer.stop();
+    stats.select_secs = t1.elapsed().as_secs_f64();
+    Ok(Seeding::from_indices(ps, indices, stats))
+}

@@ -1,0 +1,435 @@
+//! Binary wire codec for the distributed-fit RPC frames.
+//!
+//! Bulk rows are f32 matrices and cost partials are f64s that must
+//! survive transport **bit-exactly** — JSON float round-tripping is both
+//! overhead and a parity hazard — so frames are a little-endian binary
+//! format: a `u32` magic, a `u8` frame tag, then tag-specific fields.
+//! Variable-length fields carry explicit lengths (`u32` for row counts
+//! and strings, matching `data/io.rs`'s `.fbin` header; `u64` for index
+//! and partial vectors). Floats travel as `to_le_bytes` words, so NaNs
+//! and signed zeros round-trip bit-for-bit.
+//!
+//! Decoding follows the same strictness discipline as
+//! [`crate::server::json`]: a frame must consume the buffer *exactly* —
+//! truncation, trailing garbage, a bad magic, an unknown tag, a `d = 0`
+//! matrix, or a length field pointing past the buffer are all hard
+//! errors, never best-effort parses.
+
+use crate::bail;
+use crate::data::matrix::PointSet;
+use crate::error::{Context, Result};
+
+/// Frame magic (`"FKM1"` little-endian) — a version bump is a new magic.
+pub const MAGIC: u32 = 0x464B_4D31;
+
+/// One RPC frame. Requests (coordinator → worker): [`Frame::ShardLoad`],
+/// [`Frame::Update`], [`Frame::Sample`], [`Frame::Weigh`]. Responses
+/// (worker → coordinator): [`Frame::Ack`], [`Frame::Partials`],
+/// [`Frame::Candidates`], [`Frame::Counts`], [`Frame::Error`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Provision a worker: adopt `points` as the contiguous global row
+    /// slice `[offset, offset + points.len())` of an `n_global`-row
+    /// dataset. Resets all worker state; kernels are resolved on the
+    /// *global* shape (the shard-engine invariance contract).
+    ShardLoad {
+        n_global: u64,
+        offset: u64,
+        points: PointSet,
+    },
+    /// Candidate broadcast: min-fold `rows` into the worker's `D²`
+    /// slice and mark the in-range `indices` (global) as candidates.
+    /// Response: [`Frame::Partials`].
+    Update { indices: Vec<u64>, rows: PointSet },
+    /// Poisson round: flip the per-(round, global index) coins.
+    /// Response: [`Frame::Candidates`].
+    Sample { round_tag: u64, cost: f64, ell: f64 },
+    /// Final weigh: assign each local row to its nearest candidate row.
+    /// Response: [`Frame::Counts`].
+    Weigh { rows: PointSet },
+    /// `ShardLoad` acknowledgement, echoing the adopted slice length.
+    Ack { len: u64 },
+    /// Fixed-[`crate::kernels::reduce::SUM_BLOCK`] f64 partial cost
+    /// sums of the worker's `D²` slice, in ascending block order.
+    Partials { sums: Vec<f64> },
+    /// Accepted global indices, ascending.
+    Candidates { indices: Vec<u64> },
+    /// Per-candidate `u64` assignment counts over the worker's rows.
+    Counts { counts: Vec<u64> },
+    /// Typed failure (bad request, no shard loaded, ...): the message
+    /// joins the coordinator's error chain.
+    Error { message: String },
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64s(out: &mut Vec<u8>, vs: &[u64]) {
+    put_u64(out, vs.len() as u64);
+    for &v in vs {
+        put_u64(out, v);
+    }
+}
+
+fn put_f64s(out: &mut Vec<u8>, vs: &[f64]) {
+    put_u64(out, vs.len() as u64);
+    for &v in vs {
+        put_f64(out, v);
+    }
+}
+
+/// `.fbin`-shaped matrix payload: `u32 n`, `u32 d`, then `n·d` f32 LE.
+fn put_points(out: &mut Vec<u8>, ps: &PointSet) {
+    put_u32(out, ps.len() as u32);
+    put_u32(out, ps.dim() as u32);
+    for &x in ps.flat() {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Strict cursor over an encoded frame: every read is bounds-checked,
+/// every length field is validated against the bytes actually present
+/// (a corrupt length can never trigger a huge allocation), and
+/// [`Reader::finish`] rejects trailing garbage.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!(
+                "frame truncated: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.remaining()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn u64s(&mut self) -> Result<Vec<u64>> {
+        let len = self.u64()? as usize;
+        if len > self.remaining() / 8 {
+            bail!("vector length {len} exceeds frame");
+        }
+        (0..len).map(|_| self.u64()).collect()
+    }
+
+    fn f64s(&mut self) -> Result<Vec<f64>> {
+        let len = self.u64()? as usize;
+        if len > self.remaining() / 8 {
+            bail!("vector length {len} exceeds frame");
+        }
+        (0..len).map(|_| self.f64()).collect()
+    }
+
+    fn points(&mut self) -> Result<PointSet> {
+        let n = self.u32()? as usize;
+        let d = self.u32()? as usize;
+        if d == 0 {
+            bail!("matrix payload with d = 0");
+        }
+        let total = n.checked_mul(d).context("matrix payload size overflow")?;
+        if total > self.remaining() / 4 {
+            bail!("matrix payload {n}x{d} exceeds frame");
+        }
+        let mut data = Vec::with_capacity(total);
+        for _ in 0..total {
+            data.push(self.f32()?);
+        }
+        Ok(PointSet::from_flat(n, d, data))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).context("frame string is not UTF-8")
+    }
+
+    fn finish(self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!("{} trailing bytes after frame", self.buf.len() - self.pos);
+        }
+        Ok(())
+    }
+}
+
+const TAG_SHARD_LOAD: u8 = 0;
+const TAG_UPDATE: u8 = 1;
+const TAG_SAMPLE: u8 = 2;
+const TAG_WEIGH: u8 = 3;
+const TAG_ACK: u8 = 4;
+const TAG_PARTIALS: u8 = 5;
+const TAG_CANDIDATES: u8 = 6;
+const TAG_COUNTS: u8 = 7;
+const TAG_ERROR: u8 = 8;
+
+impl Frame {
+    /// Serialize to the binary wire form.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        put_u32(&mut out, MAGIC);
+        match self {
+            Frame::ShardLoad {
+                n_global,
+                offset,
+                points,
+            } => {
+                out.push(TAG_SHARD_LOAD);
+                put_u64(&mut out, *n_global);
+                put_u64(&mut out, *offset);
+                put_points(&mut out, points);
+            }
+            Frame::Update { indices, rows } => {
+                out.push(TAG_UPDATE);
+                put_u64s(&mut out, indices);
+                put_points(&mut out, rows);
+            }
+            Frame::Sample {
+                round_tag,
+                cost,
+                ell,
+            } => {
+                out.push(TAG_SAMPLE);
+                put_u64(&mut out, *round_tag);
+                put_f64(&mut out, *cost);
+                put_f64(&mut out, *ell);
+            }
+            Frame::Weigh { rows } => {
+                out.push(TAG_WEIGH);
+                put_points(&mut out, rows);
+            }
+            Frame::Ack { len } => {
+                out.push(TAG_ACK);
+                put_u64(&mut out, *len);
+            }
+            Frame::Partials { sums } => {
+                out.push(TAG_PARTIALS);
+                put_f64s(&mut out, sums);
+            }
+            Frame::Candidates { indices } => {
+                out.push(TAG_CANDIDATES);
+                put_u64s(&mut out, indices);
+            }
+            Frame::Counts { counts } => {
+                out.push(TAG_COUNTS);
+                put_u64s(&mut out, counts);
+            }
+            Frame::Error { message } => {
+                out.push(TAG_ERROR);
+                put_str(&mut out, message);
+            }
+        }
+        out
+    }
+
+    /// Strict decode: the buffer must hold exactly one frame.
+    pub fn decode(buf: &[u8]) -> Result<Frame> {
+        let mut r = Reader { buf, pos: 0 };
+        let magic = r.u32()?;
+        if magic != MAGIC {
+            bail!("bad frame magic {magic:#010x} (want {MAGIC:#010x})");
+        }
+        let tag = r.u8()?;
+        let frame = match tag {
+            TAG_SHARD_LOAD => Frame::ShardLoad {
+                n_global: r.u64()?,
+                offset: r.u64()?,
+                points: r.points()?,
+            },
+            TAG_UPDATE => Frame::Update {
+                indices: r.u64s()?,
+                rows: r.points()?,
+            },
+            TAG_SAMPLE => Frame::Sample {
+                round_tag: r.u64()?,
+                cost: r.f64()?,
+                ell: r.f64()?,
+            },
+            TAG_WEIGH => Frame::Weigh { rows: r.points()? },
+            TAG_ACK => Frame::Ack { len: r.u64()? },
+            TAG_PARTIALS => Frame::Partials { sums: r.f64s()? },
+            TAG_CANDIDATES => Frame::Candidates { indices: r.u64s()? },
+            TAG_COUNTS => Frame::Counts { counts: r.u64s()? },
+            TAG_ERROR => Frame::Error {
+                message: r.string()?,
+            },
+            other => bail!("unknown frame tag {other}"),
+        };
+        r.finish()?;
+        Ok(frame)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ps(n: usize, d: usize) -> PointSet {
+        // Deterministic, sign-varied values including exact zeros.
+        let data: Vec<f32> = (0..n * d)
+            .map(|i| (i as f32 - 3.5) * if i % 2 == 0 { 1.25 } else { -0.75 })
+            .collect();
+        PointSet::from_flat(n, d, data)
+    }
+
+    /// Every frame variant over empty / 1-point / odd-d payloads.
+    fn corpus() -> Vec<Frame> {
+        let mut frames = Vec::new();
+        for &(n, d) in &[(0usize, 3usize), (1, 1), (1, 7), (5, 3), (4, 7)] {
+            frames.push(Frame::ShardLoad {
+                n_global: 1_000_000,
+                offset: 4096,
+                points: ps(n, d),
+            });
+            frames.push(Frame::Update {
+                indices: (0..n as u64).map(|i| i * 17 + 3).collect(),
+                rows: ps(n, d),
+            });
+            frames.push(Frame::Weigh { rows: ps(n, d) });
+        }
+        frames.push(Frame::Sample {
+            round_tag: 0xDEAD_BEEF_CAFE_F00D,
+            cost: 1.234e12,
+            ell: 24.0,
+        });
+        // Bit-exactness stressors: negative zero, subnormal, NaN-free
+        // extremes (NaN breaks PartialEq round-trip assertions; its
+        // byte-level fidelity is covered separately below).
+        frames.push(Frame::Partials {
+            sums: vec![-0.0, f64::MIN_POSITIVE / 2.0, 1e300, -1e-300],
+        });
+        frames.push(Frame::Partials { sums: Vec::new() });
+        frames.push(Frame::Candidates {
+            indices: vec![0, 1, u64::MAX],
+        });
+        frames.push(Frame::Candidates { indices: Vec::new() });
+        frames.push(Frame::Counts {
+            counts: vec![3, 0, u64::MAX, 7],
+        });
+        frames.push(Frame::Ack { len: 8192 });
+        frames.push(Frame::Error {
+            message: "no shard loaded".into(),
+        });
+        frames.push(Frame::Error {
+            message: String::new(),
+        });
+        frames
+    }
+
+    #[test]
+    fn round_trips_bit_exactly() {
+        for frame in corpus() {
+            let buf = frame.encode();
+            let back = Frame::decode(&buf).unwrap_or_else(|e| panic!("{frame:?}: {e:#}"));
+            assert_eq!(back, frame);
+            // Encoding is canonical: re-encoding reproduces the bytes.
+            assert_eq!(back.encode(), buf, "{frame:?}");
+        }
+    }
+
+    #[test]
+    fn nan_partials_round_trip_by_bits() {
+        let sums = vec![f64::NAN, -f64::NAN, f64::INFINITY];
+        let buf = Frame::Partials { sums: sums.clone() }.encode();
+        match Frame::decode(&buf).unwrap() {
+            Frame::Partials { sums: back } => {
+                for (a, b) in back.iter().zip(&sums) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+    }
+
+    #[test]
+    fn every_strict_prefix_is_rejected() {
+        // Lengths are explicit, so no prefix of a valid frame can itself
+        // decode (the json.rs truncation discipline).
+        for frame in corpus() {
+            let buf = frame.encode();
+            for cut in 0..buf.len() {
+                assert!(
+                    Frame::decode(&buf[..cut]).is_err(),
+                    "{frame:?}: prefix of {cut}/{} bytes decoded",
+                    buf.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_is_rejected() {
+        for frame in corpus() {
+            let mut buf = frame.encode();
+            buf.push(0);
+            let e = Frame::decode(&buf).unwrap_err();
+            assert!(
+                format!("{e:#}").contains("trailing"),
+                "{frame:?}: wrong error {e:#}"
+            );
+        }
+    }
+
+    #[test]
+    fn bad_magic_tag_and_corrupt_lengths_are_rejected() {
+        assert!(Frame::decode(&[]).is_err());
+        assert!(Frame::decode(&[0x31, 0x4D, 0x4B, 0x46]).is_err()); // magic only
+        let mut wrong_magic = Frame::Ack { len: 1 }.encode();
+        wrong_magic[0] ^= 0xFF;
+        assert!(format!("{:#}", Frame::decode(&wrong_magic).unwrap_err()).contains("magic"));
+        let mut bad_tag = Frame::Ack { len: 1 }.encode();
+        bad_tag[4] = 200;
+        assert!(format!("{:#}", Frame::decode(&bad_tag).unwrap_err()).contains("tag"));
+        // A length field pointing far past the buffer must error cleanly
+        // (no attempted giant allocation).
+        let mut huge_len = Frame::Candidates { indices: vec![1] }.encode();
+        huge_len[5..13].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(Frame::decode(&huge_len).is_err());
+        // d = 0 matrices are invalid on the wire as everywhere else.
+        let mut zero_d = Frame::Weigh { rows: ps(0, 3) }.encode();
+        zero_d[9..13].copy_from_slice(&0u32.to_le_bytes());
+        assert!(format!("{:#}", Frame::decode(&zero_d).unwrap_err()).contains("d = 0"));
+    }
+}

@@ -1,0 +1,486 @@
+//! `fkmpp worker` — one distributed-fit shard node.
+//!
+//! A worker is provisioned with a contiguous global row slice
+//! ([`crate::dist::wire::Frame::ShardLoad`]) and then answers the
+//! per-round RPCs over the PR 2 HTTP layer (one `POST /rpc` per frame,
+//! `Connection: close`, binary bodies — see [`crate::dist::wire`]):
+//!
+//! * `Update` → `Partials`: min-fold the broadcast candidate rows into
+//!   the local `D²` slice and return its fixed-block f64 partial sums.
+//!   Because slices are aligned to
+//!   [`crate::kernels::reduce::SUM_BLOCK`], the local blocks ARE global
+//!   summation blocks.
+//! * `Sample` → `Candidates`: flip the per-(round, global index)
+//!   membership coins ([`crate::shard::kmeanspar::point_uniform`]) over
+//!   the local rows.
+//! * `Weigh` → `Counts`: nearest-candidate assignment counts.
+//!
+//! Kernels are resolved on the **global** shape shipped in `ShardLoad`
+//! — never the slice shape — mirroring the in-process engine, so every
+//! worker computes identical bits (with `FKMPP_KERNEL` pinned across
+//! processes, the PR 3 contract). Worker state is a pure fold of the
+//! broadcast history: a restarted worker answers `Error("no shard
+//! loaded")` until the coordinator re-provisions it, and replaying the
+//! history reconstructs the identical `D²` bits (min-folds are
+//! idempotent and order-free) — that is the whole recovery story.
+//!
+//! `GET /healthz` answers liveness probes; `POST /shutdown` stops the
+//! accept loop. `--fail-after N` is the fault-injection hook for the
+//! parity harness: after fully serving `N` `/rpc` requests the worker
+//! exits *mid-request* on the next one — after reading the request,
+//! before writing any response byte — the worst crash point a
+//! coordinator can observe.
+
+use std::io::Write as _;
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+use crate::bail;
+use crate::data::matrix::PointSet;
+use crate::dist::wire::Frame;
+use crate::error::{Context, Result};
+use crate::kernels::{assign, blocked, d2 as d2_kernel, norms, reduce, tune};
+use crate::metrics;
+use crate::server::http::{read_request, write_response, Request, Response};
+use crate::shard::kmeanspar::point_uniform;
+
+/// Worker knobs (`fkmpp worker --port N [--host H] [--fail-after N]`).
+#[derive(Clone, Debug)]
+pub struct WorkerConfig {
+    /// Bind host.
+    pub host: String,
+    /// Bind port (`0` = ephemeral; the chosen port is printed on the
+    /// ready line).
+    pub port: u16,
+    /// Fault injection: serve this many `/rpc` requests, then exit the
+    /// process (status 3) mid-request on the next one.
+    pub fail_after: Option<u64>,
+}
+
+impl Default for WorkerConfig {
+    fn default() -> Self {
+        WorkerConfig {
+            host: "127.0.0.1".to_string(),
+            port: 0,
+            fail_after: None,
+        }
+    }
+}
+
+/// The provisioned slice: rows, caches, and the fold state. Installed
+/// (and reset) by `ShardLoad`.
+struct ShardState {
+    n_global: usize,
+    offset: usize,
+    points: PointSet,
+    /// Per-row `‖x‖²` cache (v2 kernel discipline), slice lifetime.
+    norms: Vec<f32>,
+    /// This worker's slice of the global `D²` array.
+    cur_d2: Vec<f32>,
+    /// Local candidate marks (indexed by local row).
+    is_candidate: Vec<bool>,
+    /// Update kernel, resolved once on the global shape at load time.
+    upd_kernel: tune::Kernel,
+}
+
+/// Dispatch one request frame against the worker state. Failures come
+/// back as [`Frame::Error`] so the transport layer stays infallible.
+fn handle_frame(state: &mut Option<ShardState>, frame: Frame) -> Frame {
+    match run_frame(state, frame) {
+        Ok(resp) => resp,
+        Err(e) => Frame::Error {
+            message: format!("{e:#}"),
+        },
+    }
+}
+
+fn run_frame(state: &mut Option<ShardState>, frame: Frame) -> Result<Frame> {
+    match frame {
+        Frame::ShardLoad {
+            n_global,
+            offset,
+            points,
+        } => {
+            let n_global = n_global as usize;
+            let offset = offset as usize;
+            if points.is_empty() {
+                bail!("refusing to load an empty shard slice");
+            }
+            if offset + points.len() > n_global {
+                bail!(
+                    "slice [{offset}, {}) exceeds n_global {n_global}",
+                    offset + points.len()
+                );
+            }
+            let norms = norms::squared_norms(&points);
+            // GLOBAL shape, not the slice shape: per-worker dispatch on
+            // slice sizes would break cross-layout bit-invariance.
+            let upd_kernel = tune::kernel_for(tune::Op::Update, n_global, points.dim(), 1);
+            let len = points.len();
+            *state = Some(ShardState {
+                n_global,
+                offset,
+                norms,
+                cur_d2: vec![f32::INFINITY; len],
+                is_candidate: vec![false; len],
+                upd_kernel,
+                points,
+            });
+            Ok(Frame::Ack { len: len as u64 })
+        }
+        Frame::Update { indices, rows } => {
+            let st = state.as_mut().context("no shard loaded")?;
+            if rows.dim() != st.points.dim() {
+                bail!(
+                    "update dimension {} != shard dimension {}",
+                    rows.dim(),
+                    st.points.dim()
+                );
+            }
+            if indices.len() != rows.len() {
+                bail!("{} indices for {} rows", indices.len(), rows.len());
+            }
+            for &i in &indices {
+                let i = i as usize;
+                if i >= st.offset && i < st.offset + st.points.len() {
+                    st.is_candidate[i - st.offset] = true;
+                }
+            }
+            for c in 0..rows.len() {
+                let row = rows.row(c);
+                match st.upd_kernel {
+                    tune::Kernel::Naive => d2_kernel::d2_update_min(&st.points, row, &mut st.cur_d2),
+                    tune::Kernel::Blocked => {
+                        blocked::d2_update_min_blocked(&st.points, row, &st.norms, &mut st.cur_d2)
+                    }
+                }
+            }
+            // Aligned slices make local blocks global blocks, so these
+            // partials concatenate into the global sum_f32 bit-for-bit.
+            Ok(Frame::Partials {
+                sums: reduce::block_sums(&st.cur_d2, reduce::SUM_BLOCK),
+            })
+        }
+        Frame::Sample {
+            round_tag,
+            cost,
+            ell,
+        } => {
+            let st = state.as_ref().context("no shard loaded")?;
+            let mut accepted = Vec::new();
+            for r in 0..st.points.len() {
+                if st.is_candidate[r] {
+                    continue;
+                }
+                let di = st.cur_d2[r] as f64;
+                if di <= 0.0 {
+                    continue;
+                }
+                let i = (st.offset + r) as u64;
+                if point_uniform(round_tag, i) * cost < ell * di {
+                    accepted.push(i);
+                }
+            }
+            Ok(Frame::Candidates { indices: accepted })
+        }
+        Frame::Weigh { rows } => {
+            let st = state.as_ref().context("no shard loaded")?;
+            if rows.is_empty() {
+                bail!("weigh with no candidate rows");
+            }
+            if rows.dim() != st.points.dim() {
+                bail!(
+                    "weigh dimension {} != shard dimension {}",
+                    rows.dim(),
+                    st.points.dim()
+                );
+            }
+            // Global shape again — the same resolution the in-process
+            // engine performs once per weigh.
+            let asg_kernel =
+                tune::kernel_for(tune::Op::Assign, st.n_global, st.points.dim(), rows.len());
+            let (labels, _) = match asg_kernel {
+                tune::Kernel::Naive => assign::assign_argmin_naive(&st.points, &rows),
+                tune::Kernel::Blocked => {
+                    let cand_norms = norms::squared_norms(&rows);
+                    blocked::assign_argmin_blocked(&st.points, &st.norms, &rows, &cand_norms)
+                }
+            };
+            let mut counts = vec![0u64; rows.len()];
+            for &l in &labels {
+                counts[l as usize] += 1;
+            }
+            Ok(Frame::Counts { counts })
+        }
+        other => bail!("unexpected request frame {other:?}"),
+    }
+}
+
+fn binary_response(status: u16, body: Vec<u8>) -> Response {
+    Response {
+        status,
+        content_type: "application/octet-stream",
+        body,
+    }
+}
+
+fn route(
+    state: &mut Option<ShardState>,
+    served: &mut u64,
+    cfg: &WorkerConfig,
+    req: &Request,
+) -> (Response, bool) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => (Response::text(200, "ok\n"), false),
+        ("POST", "/shutdown") => (Response::text(200, "bye\n"), true),
+        ("POST", "/rpc") => {
+            if let Some(limit) = cfg.fail_after {
+                if *served >= limit {
+                    // Fault injection: the request is fully read but no
+                    // response byte is ever written — the coordinator
+                    // sees a connection reset mid-RPC.
+                    std::process::exit(3);
+                }
+            }
+            *served += 1;
+            metrics::global().incr("dist.worker.rpcs", 1);
+            let resp = match Frame::decode(&req.body) {
+                Ok(frame) => handle_frame(state, frame),
+                Err(e) => Frame::Error {
+                    message: format!("{e:#}"),
+                },
+            };
+            let status = if matches!(resp, Frame::Error { .. }) {
+                400
+            } else {
+                200
+            };
+            (binary_response(status, resp.encode()), false)
+        }
+        _ => (Response::text(404, "not found\n"), false),
+    }
+}
+
+/// Accept loop over an already-bound listener — the test-friendly entry
+/// point (bind port 0 yourself, keep the address). Serves one request
+/// per connection (the coordinator's RPCs are strictly sequential) and
+/// returns after `POST /shutdown`.
+pub fn serve(listener: TcpListener, cfg: &WorkerConfig) -> Result<()> {
+    let m = metrics::global();
+    let mut state: Option<ShardState> = None;
+    let mut served: u64 = 0;
+    for conn in listener.incoming() {
+        let mut stream: TcpStream = match conn {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        stream.set_read_timeout(Some(Duration::from_secs(30))).ok();
+        stream.set_write_timeout(Some(Duration::from_secs(30))).ok();
+        let req = match read_request(&mut stream) {
+            Ok(r) => r,
+            Err(_) => {
+                m.incr("dist.worker.bad_requests", 1);
+                continue;
+            }
+        };
+        let (resp, shutdown) = route(&mut state, &mut served, cfg, &req);
+        let _ = write_response(&mut stream, &resp);
+        if shutdown {
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// Bind, announce, block: the `fkmpp worker` entry point. The ready
+/// line (`[worker] listening on http://HOST:PORT`) goes to stdout and is
+/// flushed *before* the accept loop, so a spawner can parse the
+/// ephemeral port without racing the bind.
+pub fn run_worker(cfg: &WorkerConfig) -> Result<()> {
+    let listener = TcpListener::bind((cfg.host.as_str(), cfg.port))
+        .with_context(|| format!("bind worker on {}:{}", cfg.host, cfg.port))?;
+    let addr = listener.local_addr().context("worker local addr")?;
+    println!("[worker] listening on http://{addr}");
+    std::io::stdout().flush().ok();
+    serve(listener, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gaussian_mixture, SynthSpec};
+    use crate::kernels::d2 as d2k;
+
+    fn ps(n: usize, d: usize, seed: u64) -> PointSet {
+        gaussian_mixture(
+            &SynthSpec {
+                n,
+                d,
+                k_true: 4,
+                ..Default::default()
+            },
+            seed,
+        )
+    }
+
+    fn load(state: &mut Option<ShardState>, full: &PointSet, lo: usize, hi: usize) {
+        let d = full.dim();
+        let slice = PointSet::from_flat(hi - lo, d, full.flat()[lo * d..hi * d].to_vec());
+        let resp = handle_frame(
+            state,
+            Frame::ShardLoad {
+                n_global: full.len() as u64,
+                offset: lo as u64,
+                points: slice,
+            },
+        );
+        assert_eq!(resp, Frame::Ack { len: (hi - lo) as u64 });
+    }
+
+    #[test]
+    fn rpc_before_load_is_a_typed_error() {
+        let mut state = None;
+        for frame in [
+            Frame::Sample {
+                round_tag: 1,
+                cost: 1.0,
+                ell: 2.0,
+            },
+            Frame::Weigh {
+                rows: ps(2, 3, 0),
+            },
+            Frame::Update {
+                indices: vec![0],
+                rows: ps(1, 3, 0),
+            },
+        ] {
+            match handle_frame(&mut state, frame) {
+                Frame::Error { message } => {
+                    assert!(message.contains("no shard loaded"), "{message}")
+                }
+                other => panic!("expected Error, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn update_partials_match_direct_fold() {
+        // The worker's D² fold and block partials must equal a direct
+        // in-process fold over the same slice.
+        let full = ps(600, 5, 1);
+        let (lo, hi) = (100, 420);
+        let mut state = None;
+        load(&mut state, &full, lo, hi);
+        let cands = [7usize, 250, 599];
+        let rows = full.gather(&cands);
+        let resp = handle_frame(
+            &mut state,
+            Frame::Update {
+                indices: cands.iter().map(|&i| i as u64).collect(),
+                rows: rows.clone(),
+            },
+        );
+        let mut want = vec![f32::INFINITY; hi - lo];
+        let slice = PointSet::from_flat(
+            hi - lo,
+            full.dim(),
+            full.flat()[lo * full.dim()..hi * full.dim()].to_vec(),
+        );
+        for c in 0..rows.len() {
+            d2k::d2_update_min(&slice, rows.row(c), &mut want);
+        }
+        match resp {
+            Frame::Partials { sums } => {
+                let expect = reduce::block_sums(&want, reduce::SUM_BLOCK);
+                assert_eq!(sums.len(), expect.len());
+                for (a, b) in sums.iter().zip(&expect) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("expected Partials, got {other:?}"),
+        }
+        // In-range broadcast indices are excluded from sampling; the
+        // candidate at 250 sits in [100, 420) and must never come back.
+        match handle_frame(
+            &mut state,
+            Frame::Sample {
+                round_tag: 99,
+                cost: 1e-12, // accept essentially everything
+                ell: 1e12,
+            },
+        ) {
+            Frame::Candidates { indices } => {
+                assert!(!indices.is_empty());
+                assert!(!indices.contains(&250));
+                assert!(indices.iter().all(|&i| i >= lo as u64 && i < hi as u64));
+                assert!(indices.windows(2).all(|w| w[0] < w[1]), "not ascending");
+            }
+            other => panic!("expected Candidates, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_weigh_counts_cover_slice() {
+        let full = ps(500, 4, 2);
+        let mut state = None;
+        load(&mut state, &full, 0, 500);
+        let rows = full.gather(&[3, 77]);
+        handle_frame(
+            &mut state,
+            Frame::Update {
+                indices: vec![3, 77],
+                rows,
+            },
+        );
+        let sample = Frame::Sample {
+            round_tag: 0xABCD,
+            cost: 5_000.0,
+            ell: 10.0,
+        };
+        let a = handle_frame(&mut state, sample.clone());
+        let b = handle_frame(&mut state, sample);
+        assert_eq!(a, b, "sampling must be a pure function of the state");
+        match handle_frame(
+            &mut state,
+            Frame::Weigh {
+                rows: full.gather(&[3, 77, 401]),
+            },
+        ) {
+            Frame::Counts { counts } => {
+                assert_eq!(counts.len(), 3);
+                assert_eq!(counts.iter().sum::<u64>(), 500);
+            }
+            other => panic!("expected Counts, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn load_validation() {
+        let full = ps(50, 3, 3);
+        let mut state = None;
+        // Slice exceeding n_global is rejected.
+        match handle_frame(
+            &mut state,
+            Frame::ShardLoad {
+                n_global: 10,
+                offset: 8,
+                points: full.gather(&[0, 1, 2]),
+            },
+        ) {
+            Frame::Error { message } => assert!(message.contains("exceeds"), "{message}"),
+            other => panic!("expected Error, got {other:?}"),
+        }
+        // A dimension-mismatched update is rejected after a good load.
+        load(&mut state, &full, 0, 50);
+        match handle_frame(
+            &mut state,
+            Frame::Update {
+                indices: vec![0],
+                rows: ps(1, 7, 0),
+            },
+        ) {
+            Frame::Error { message } => assert!(message.contains("dimension"), "{message}"),
+            other => panic!("expected Error, got {other:?}"),
+        }
+    }
+}

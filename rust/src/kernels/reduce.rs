@@ -17,8 +17,12 @@ use crate::kernels::assign::min_d2_block;
 use crate::kernels::{blocked, norms, tune};
 use crate::parallel::{parallel_chunks_mut, parallel_reduce};
 
-/// Leaf block size of the two-level tree sum.
-const SUM_BLOCK: usize = 4096;
+/// Leaf block size of the two-level tree sum. Public because it is a
+/// *wire contract* of the distributed fit ([`crate::dist`]): workers
+/// return per-`SUM_BLOCK` f64 partial cost sums over ranges aligned to
+/// this boundary, and the coordinator reproduces [`sum_f32`] bitwise by
+/// concatenating them in range order and summing left-to-right.
+pub const SUM_BLOCK: usize = 4096;
 
 /// Points per worker below which reductions run inline.
 const MIN_POINTS_PER_THREAD: usize = 2048;

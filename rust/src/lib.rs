@@ -37,7 +37,12 @@
 //!   k-means‖ oversampling rounds over data shards plus weighted
 //!   k-means++ reclustering of the candidate set — the first explicit
 //!   coordinator/shard split, with bitwise shard-count and thread-count
-//!   invariance.
+//!   invariance;
+//! * a **distributed fit** ([`dist`], `fkmpp worker` + `fkmpp seed
+//!   --workers host:port,...`): the same k-means‖ rounds over worker
+//!   *processes* behind one `RoundExecutor` trait, with a binary RPC
+//!   codec, replay-based fault recovery, and bitwise parity with the
+//!   in-process run.
 //!
 //! Python/JAX appears only at build time (`make artifacts`); the request
 //! path is pure rust. The crate has **zero external dependencies**: error
@@ -64,6 +69,7 @@
 pub mod cli;
 pub mod coordinator;
 pub mod data;
+pub mod dist;
 pub mod embed;
 pub mod error;
 pub mod kernels;
@@ -93,6 +99,7 @@ pub mod prelude {
         rejection::{OracleKind, RejectionConfig},
         Seeding, SeedingAlgorithm,
     };
+    pub use crate::dist::DistConfig;
     pub use crate::shard::kmeanspar::KMeansParConfig;
     pub use crate::shard::weighted::WeightedPointSet;
     pub use crate::shard::ShardedDataset;

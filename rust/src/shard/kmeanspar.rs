@@ -1,6 +1,14 @@
 //! k-means‖ over data shards: oversampling rounds + weighted k-means++
 //! recluster — the `kmeans-par` seeding algorithm.
 //!
+//! The round lifecycle itself lives in the transport-generic driver
+//! [`crate::dist::run_rounds`]; this module provides the in-process
+//! [`crate::dist::RoundExecutor`] ([`LocalShardExecutor`]) that runs it
+//! over a [`ShardedDataset`], and [`kmeans_par`], the classic entry
+//! point gluing the two. The multi-process transport
+//! ([`crate::dist::coordinator`]) runs the *same* driver over remote
+//! workers.
+//!
 //! ## Round lifecycle
 //!
 //! 1. **Partition** (coordinator): [`ShardedDataset::partition`] splits
@@ -57,12 +65,13 @@
 use std::time::Instant;
 
 use crate::data::matrix::PointSet;
+use crate::dist::{run_rounds, RoundExecutor};
+use crate::error::Result;
 use crate::kernels::{assign, blocked, d2 as d2_kernel, norms, reduce, tune};
 use crate::metrics;
 use crate::parallel::{parallel_map, parallel_slices_mut};
 use crate::rng::{splitmix64, Pcg64};
 use crate::seeding::{Seeding, SeedingStats};
-use crate::shard::weighted::{weighted_kmeanspp, WeightedPointSet};
 use crate::shard::ShardedDataset;
 
 /// k-means‖ knobs (`fkmpp seed --algo kmeans-par --shards S --rounds R
@@ -90,9 +99,13 @@ impl Default for KMeansParConfig {
 
 /// One membership coin: uniform in `[0, 1)`, a pure function of
 /// `(round_tag, global point index)` — the counter-based stream split
-/// that makes sampling independent of the shard/thread layout.
+/// that makes sampling independent of the shard/thread layout. Public
+/// because it is a *wire contract* of the distributed fit: remote
+/// workers ([`crate::dist::worker`]) flip the identical coins for their
+/// global row range, which is what makes the multi-process run bitwise
+/// reproduce the in-process one.
 #[inline]
-fn point_uniform(round_tag: u64, i: u64) -> f64 {
+pub fn point_uniform(round_tag: u64, i: u64) -> f64 {
     let x = splitmix64(round_tag.wrapping_add(splitmix64(i.wrapping_add(0x6A09_E667_F3BC_C909))));
     (x >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
 }
@@ -108,14 +121,13 @@ fn update_shards(
     sd: &ShardedDataset,
     kernel: tune::Kernel,
     ends: &[usize],
-    ps: &PointSet,
-    new: &[usize],
+    rows: &PointSet,
     cur_d2: &mut [f32],
 ) {
     let apply = |s: usize, slice: &mut [f32]| {
         let sh = &sd.shards()[s];
-        for &c in new {
-            let row = ps.row(c);
+        for c in 0..rows.len() {
+            let row = rows.row(c);
             match kernel {
                 tune::Kernel::Naive => d2_kernel::d2_update_min(&sh.points, row, slice),
                 tune::Kernel::Blocked => {
@@ -135,52 +147,69 @@ fn update_shards(
     }
 }
 
-/// k-means‖ seeding: `R` oversampling rounds over `S` data shards, then
-/// a weighted k-means++ recluster of the candidates down to `k`. See the
-/// module docs for the lifecycle and the invariance contract. Round
-/// counters and timings land in the process-wide metrics sink
-/// ([`crate::metrics::global`], `shard.*` — surfaced by `fkmpp serve`
-/// `/metrics`).
-pub fn kmeans_par(ps: &PointSet, k: usize, cfg: &KMeansParConfig, rng: &mut Pcg64) -> Seeding {
-    let m = metrics::global();
-    m.incr("shard.runs", 1);
-    let k = k.min(ps.len());
-    let mut stats = SeedingStats::default();
-    if k == 0 {
-        return Seeding::from_indices(ps, Vec::new(), stats);
-    }
-    let n = ps.len();
-    let t0 = Instant::now();
-    let sharded = ShardedDataset::partition(ps, cfg.shards);
-    let ends = sharded.boundaries();
-    // Resolve both kernel implementations once, on the GLOBAL shape:
-    // per-shard dispatch would couple the implementation (and its f32
-    // rounding) to the shard size, breaking shard-count invariance.
-    let upd_kernel = tune::kernel_for(tune::Op::Update, n, ps.dim(), 1);
-    stats.init_secs = t0.elapsed().as_secs_f64();
+/// The in-process [`RoundExecutor`]: k-means‖ rounds over a
+/// [`ShardedDataset`], exactly the engine `kmeans_par` has always run —
+/// now behind the same trait as the multi-process coordinator
+/// ([`crate::dist::coordinator::DistCoordinator`]), so the two
+/// transports share one round driver ([`crate::dist::run_rounds`]) and
+/// cannot drift. Infallible in practice; the `Result`s exist for the
+/// transport that can fail.
+pub struct LocalShardExecutor {
+    sharded: ShardedDataset,
+    ends: Vec<usize>,
+    /// Update kernel, resolved once on the global shape (the invariance
+    /// contract — see the module docs).
+    upd_kernel: tune::Kernel,
+    n: usize,
+    dim: usize,
+    cur_d2: Vec<f32>,
+    is_candidate: Vec<bool>,
+}
 
-    let t1 = Instant::now();
-    // RNG discipline: exactly two run-RNG draws before the recluster.
-    let stream_root = rng.next_u64();
-    let first = rng.index(n);
-    let mut cur_d2 = vec![f32::INFINITY; n];
-    let mut candidates = vec![first];
-    let mut is_candidate = vec![false; n];
-    is_candidate[first] = true;
-    stats.proposals += 1;
-    update_shards(&sharded, upd_kernel, &ends, ps, &[first], &mut cur_d2);
-
-    let ell = cfg.oversample * k as f64;
-    for round in 0..cfg.rounds.max(1) {
-        let timer = m.timer("shard.round_secs");
-        // Global cost at fixed block boundaries: shard-count-invariant.
-        let cost = reduce::sum_f32(&cur_d2);
-        if !(cost > 0.0) || !cost.is_finite() {
-            // Candidates already cover every point exactly.
-            timer.stop();
-            break;
+impl LocalShardExecutor {
+    /// Partition `ps` into (at most) `shards` contiguous shards and
+    /// resolve the update kernel on the global shape.
+    pub fn new(ps: &PointSet, shards: usize) -> LocalShardExecutor {
+        let n = ps.len();
+        let sharded = ShardedDataset::partition(ps, shards);
+        let ends = sharded.boundaries();
+        // Resolve both kernel implementations once, on the GLOBAL shape:
+        // per-shard dispatch would couple the implementation (and its f32
+        // rounding) to the shard size, breaking shard-count invariance.
+        let upd_kernel = tune::kernel_for(tune::Op::Update, n, ps.dim(), 1);
+        LocalShardExecutor {
+            sharded,
+            ends,
+            upd_kernel,
+            n,
+            dim: ps.dim(),
+            cur_d2: vec![f32::INFINITY; n],
+            is_candidate: vec![false; n],
         }
-        let round_tag = splitmix64(stream_root ^ splitmix64(round as u64 ^ 0x9E37_79B9_7F4A_7C15));
+    }
+}
+
+impl RoundExecutor for LocalShardExecutor {
+    fn update(&mut self, indices: &[usize], rows: &PointSet) -> Result<Vec<f64>> {
+        for &i in indices {
+            self.is_candidate[i] = true;
+        }
+        update_shards(
+            &self.sharded,
+            self.upd_kernel,
+            &self.ends,
+            rows,
+            &mut self.cur_d2,
+        );
+        // Global cost partials at fixed block boundaries — summing them
+        // left-to-right is sum_f32 on the global D² array.
+        Ok(reduce::block_sums(&self.cur_d2, reduce::SUM_BLOCK))
+    }
+
+    fn sample(&mut self, round_tag: u64, cost: f64, ell: f64) -> Result<Vec<usize>> {
+        let sharded = &self.sharded;
+        let cur_d2 = &self.cur_d2;
+        let is_candidate = &self.is_candidate;
         // Every shard thins its own slice; merging per-shard candidate
         // lists in shard order IS ascending global-index order.
         let per_shard: Vec<Vec<usize>> = parallel_map(sharded.num_shards(), |s| {
@@ -201,78 +230,61 @@ pub fn kmeans_par(ps: &PointSet, k: usize, cfg: &KMeansParConfig, rng: &mut Pcg6
             }
             local
         });
-        let new: Vec<usize> = per_shard.into_iter().flatten().collect();
-        m.incr("shard.rounds", 1);
-        m.incr("shard.candidates", new.len() as u64);
-        stats.proposals += new.len() as u64;
-        if !new.is_empty() {
-            update_shards(&sharded, upd_kernel, &ends, ps, &new, &mut cur_d2);
-            for &i in &new {
-                is_candidate[i] = true;
-            }
-            candidates.extend_from_slice(&new);
-        }
-        timer.stop();
+        Ok(per_shard.into_iter().flatten().collect())
     }
 
-    // Candidate weights = per-candidate assignment counts, summed
-    // exactly in u64 across shards.
-    let weights_timer = m.timer("shard.weights_secs");
-    let cand_ps = ps.gather(&candidates);
-    let asg_kernel = tune::kernel_for(tune::Op::Assign, n, ps.dim(), cand_ps.len());
-    let cand_norms = norms::squared_norms(&cand_ps);
-    let shard_counts = |s: usize| {
-        let sh = &sharded.shards()[s];
-        let (labels, _) = match asg_kernel {
-            tune::Kernel::Naive => assign::assign_argmin_naive(&sh.points, &cand_ps),
-            tune::Kernel::Blocked => {
-                blocked::assign_argmin_blocked(&sh.points, &sh.norms, &cand_ps, &cand_norms)
+    fn weigh(&mut self, candidates: &PointSet) -> Result<Vec<u64>> {
+        let sharded = &self.sharded;
+        let asg_kernel = tune::kernel_for(tune::Op::Assign, self.n, self.dim, candidates.len());
+        let cand_norms = norms::squared_norms(candidates);
+        let shard_counts = |s: usize| {
+            let sh = &sharded.shards()[s];
+            let (labels, _) = match asg_kernel {
+                tune::Kernel::Naive => assign::assign_argmin_naive(&sh.points, candidates),
+                tune::Kernel::Blocked => {
+                    blocked::assign_argmin_blocked(&sh.points, &sh.norms, candidates, &cand_norms)
+                }
+            };
+            let mut counts = vec![0u64; candidates.len()];
+            for &l in &labels {
+                counts[l as usize] += 1;
             }
+            counts
         };
-        let mut counts = vec![0u64; cand_ps.len()];
-        for &l in &labels {
-            counts[l as usize] += 1;
+        // Same single-parallel-layer policy as update_shards: the assign
+        // kernel parallelizes internally on big shards.
+        let per_shard_counts: Vec<Vec<u64>> =
+            if sharded.shard_size() > crate::shard::OUTER_PARALLEL_MAX_SHARD {
+                (0..sharded.num_shards()).map(shard_counts).collect()
+            } else {
+                parallel_map(sharded.num_shards(), shard_counts)
+            };
+        let mut weights = vec![0u64; candidates.len()];
+        for counts in per_shard_counts {
+            for (w, c) in weights.iter_mut().zip(counts) {
+                *w += c;
+            }
         }
-        counts
-    };
-    // Same single-parallel-layer policy as update_shards: the assign
-    // kernel parallelizes internally on big shards.
-    let per_shard_counts: Vec<Vec<u64>> =
-        if sharded.shard_size() > crate::shard::OUTER_PARALLEL_MAX_SHARD {
-            (0..sharded.num_shards()).map(shard_counts).collect()
-        } else {
-            parallel_map(sharded.num_shards(), shard_counts)
-        };
-    let mut weights = vec![0u64; cand_ps.len()];
-    for counts in per_shard_counts {
-        for (w, c) in weights.iter_mut().zip(counts) {
-            *w += c;
-        }
+        Ok(weights)
     }
-    let weights: Vec<f32> = weights.into_iter().map(|w| w as f32).collect();
-    weights_timer.stop();
+}
 
-    // Weighted recluster of the small candidate set down to k, resuming
-    // the run RNG.
-    let recluster_timer = m.timer("shard.recluster_secs");
-    let wps = WeightedPointSet::new(cand_ps, weights);
-    let sub = weighted_kmeanspp(&wps, k, rng);
-    let mut indices: Vec<usize> = sub.indices.iter().map(|&ci| candidates[ci]).collect();
-    // Degenerate top-up (fewer candidates than k on tiny inputs): honor
-    // the k-distinct contract with arbitrary unchosen indices.
-    if indices.len() < k {
-        for i in 0..n {
-            if indices.len() >= k {
-                break;
-            }
-            if !indices.contains(&i) {
-                indices.push(i);
-            }
-        }
+/// k-means‖ seeding: `R` oversampling rounds over `S` data shards, then
+/// a weighted k-means++ recluster of the candidates down to `k`. See the
+/// module docs for the lifecycle and the invariance contract. Round
+/// counters and timings land in the process-wide metrics sink
+/// ([`crate::metrics::global`], `shard.*` — surfaced by `fkmpp serve`
+/// `/metrics`).
+pub fn kmeans_par(ps: &PointSet, k: usize, cfg: &KMeansParConfig, rng: &mut Pcg64) -> Seeding {
+    if k.min(ps.len()) == 0 {
+        metrics::global().incr("shard.runs", 1);
+        return Seeding::from_indices(ps, Vec::new(), SeedingStats::default());
     }
-    recluster_timer.stop();
-    stats.select_secs = t1.elapsed().as_secs_f64();
-    Seeding::from_indices(ps, indices, stats)
+    let t0 = Instant::now();
+    let mut exec = LocalShardExecutor::new(ps, cfg.shards);
+    let init_secs = t0.elapsed().as_secs_f64();
+    run_rounds(ps, k, cfg.rounds, cfg.oversample, &mut exec, init_secs, rng)
+        .expect("the in-process round executor is infallible")
 }
 
 #[cfg(test)]

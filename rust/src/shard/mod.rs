@@ -21,6 +21,9 @@
 //!   `D²`-seeding/cost on top of the shared exact-`D²` core
 //!   ([`crate::seeding::kmeanspp::kmeanspp_core`]) and the weighted
 //!   reductions ([`crate::kernels::reduce::cost_weighted_cached`]).
+//! * [`aligned_ranges`] — the summation-block-aligned contiguous
+//!   partition the multi-process fit ([`crate::dist`]) hands to its
+//!   workers.
 //!
 //! **Invariance contract.** For a fixed seed, the selected centers are
 //! bitwise invariant to the shard count *and* the thread count: shard
@@ -48,6 +51,41 @@ use crate::parallel::parallel_map;
 /// kernel work is layout-independent. Matches the largest kernel inline
 /// cutoff (`MIN_POINTS_PER_THREAD` of the update/norm kernels).
 pub(crate) const OUTER_PARALLEL_MAX_SHARD: usize = 4096;
+
+/// Split `[0, n)` into at most `parts` contiguous non-empty ranges whose
+/// interior boundaries all fall on multiples of `align` — the
+/// distributed-fit partition ([`crate::dist`]).
+///
+/// Aligning to [`crate::kernels::reduce::SUM_BLOCK`] keeps every fixed
+/// summation block of [`crate::kernels::reduce::sum_f32`] wholly inside
+/// one range, so concatenating per-range block partials in range order
+/// and summing left-to-right reproduces the global fixed-boundary tree
+/// sum bit-for-bit. Whole blocks are spread as evenly as possible
+/// (earlier ranges get the remainder); when `n` spans fewer than `parts`
+/// blocks the extra trailing ranges are dropped rather than returned
+/// empty. Pure function of `(n, parts, align)` — no RNG — so both sides
+/// of a distributed run derive the same partition independently.
+pub fn aligned_ranges(n: usize, parts: usize, align: usize) -> Vec<(usize, usize)> {
+    let align = align.max(1);
+    let parts = parts.max(1);
+    if n == 0 {
+        return Vec::new();
+    }
+    let nblocks = n.div_ceil(align);
+    let parts = parts.min(nblocks);
+    let base = nblocks / parts;
+    let extra = nblocks % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut block = 0usize;
+    for p in 0..parts {
+        let take = base + usize::from(p < extra);
+        let lo = block * align;
+        block += take;
+        let hi = (block * align).min(n);
+        out.push((lo, hi));
+    }
+    out
+}
 
 /// One data shard: a contiguous row slice of the parent dataset, owned
 /// (as a node would own its partition), plus the shard-lifetime
@@ -228,5 +266,47 @@ mod tests {
         let sd = ShardedDataset::partition(&ps, 8);
         assert_eq!(sd.num_shards(), 1);
         assert_eq!(sd.shards()[0].len(), 1);
+    }
+
+    #[test]
+    fn aligned_ranges_cover_align_and_balance() {
+        let align = 4096;
+        for &(n, parts) in &[
+            (20_000usize, 4usize),
+            (20_000, 2),
+            (20_000, 1),
+            (20_000, 64),
+            (10_000, 4),
+            (100, 4),
+            (4096, 2),
+            (8192, 2),
+            (1, 3),
+        ] {
+            let ranges = aligned_ranges(n, parts, align);
+            assert!(!ranges.is_empty(), "n={n} parts={parts}");
+            assert!(ranges.len() <= parts, "n={n} parts={parts}");
+            // Contiguous cover of [0, n), every range non-empty, every
+            // interior boundary on an align multiple.
+            let mut next = 0usize;
+            for (i, &(lo, hi)) in ranges.iter().enumerate() {
+                assert_eq!(lo, next, "n={n} parts={parts} range {i}");
+                assert!(hi > lo, "n={n} parts={parts}: empty range {i}");
+                if hi != n {
+                    assert_eq!(hi % align, 0, "n={n} parts={parts}: boundary off-block");
+                }
+                next = hi;
+            }
+            assert_eq!(next, n, "n={n} parts={parts}: rows lost");
+            // Balance: block counts differ by at most one.
+            let blocks: Vec<usize> = ranges.iter().map(|&(lo, hi)| (hi - lo).div_ceil(align)).collect();
+            let (mn, mx) = (blocks.iter().min().unwrap(), blocks.iter().max().unwrap());
+            assert!(mx - mn <= 1, "n={n} parts={parts}: unbalanced blocks {blocks:?}");
+        }
+        // The dist_parity shape: 5 blocks over 4 workers -> all 4 engaged.
+        assert_eq!(
+            aligned_ranges(20_000, 4, align),
+            vec![(0, 8192), (8192, 12_288), (12_288, 16_384), (16_384, 20_000)]
+        );
+        assert!(aligned_ranges(0, 3, align).is_empty());
     }
 }

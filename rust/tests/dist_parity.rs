@@ -1,0 +1,270 @@
+//! Cross-process distributed-fit parity + fault injection — the ISSUE 6
+//! acceptance gate for `rust/src/dist/`.
+//!
+//! One `#[test]` drives four legs against real `fkmpp worker`
+//! subprocesses on ephemeral localhost ports:
+//!
+//! 1. **Worker-count parity**: 1-, 2- and 4-worker distributed runs
+//!    reproduce the in-process `kmeans_par` result bit-for-bit — center
+//!    indices, center coordinates, proposal counts, and the next draw of
+//!    the run RNG (the full RNG-visible state).
+//! 2. **Executor seam**: `LocalShardExecutor` and `DistCoordinator` are
+//!    driven through one identical scripted round; per-block cost
+//!    partials compare by `f64::to_bits`, candidate sets and `u64`
+//!    weights compare exactly.
+//! 3. **Fault injection**: one worker is told to die mid-run
+//!    (`--fail-after`), a respawner brings a replacement up on the same
+//!    port, and the coordinator's replay recovery must land on the
+//!    baseline bits anyway.
+//! 4. **Permanent death**: a fleet whose only endpoint never listens
+//!    fails within the retry deadline with a typed "unreachable" error —
+//!    never a hang.
+//!
+//! Env-owning discipline (the `kernel_parity.rs` pattern): this file
+//! pins `FKMPP_KERNEL=blocked` for its whole run — worker subprocesses
+//! inherit it, which is the cross-process bit-parity precondition — so
+//! it contains exactly ONE `#[test]` and restores the variable at the
+//! end.
+
+use std::io::BufRead;
+use std::net::TcpListener;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use fastkmeanspp::data::synth::{gaussian_mixture, SynthSpec};
+use fastkmeanspp::dist::{kmeans_par_dist, DistConfig, DistCoordinator, RoundExecutor};
+use fastkmeanspp::rng::Pcg64;
+use fastkmeanspp::shard::kmeanspar::{kmeans_par, KMeansParConfig, LocalShardExecutor};
+
+const BIN: &str = env!("CARGO_BIN_EXE_fkmpp");
+
+/// One `fkmpp worker` subprocess; killed on drop so a failing assert
+/// can't leak processes.
+struct Worker {
+    child: Child,
+    addr: String,
+    port: u16,
+}
+
+impl Drop for Worker {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// Spawn a worker (`port` 0 = ephemeral) and wait for its ready line
+/// (`[worker] listening on http://ADDR`). With `fail_after = Some(n)`
+/// the worker serves `n` RPCs and then exits without replying to the
+/// next one — the mid-round crash for the fault-injection leg.
+fn try_spawn_worker(port: u16, fail_after: Option<u64>) -> Result<Worker, String> {
+    let mut cmd = Command::new(BIN);
+    cmd.args(["worker", "--port", &port.to_string()]);
+    if let Some(n) = fail_after {
+        cmd.args(["--fail-after", &n.to_string()]);
+    }
+    let mut child = cmd
+        .stdout(Stdio::piped())
+        .spawn()
+        .map_err(|e| format!("spawn {BIN}: {e}"))?;
+    let stdout = child.stdout.take().ok_or("worker stdout not captured")?;
+    let mut reader = std::io::BufReader::new(stdout);
+    let mut line = String::new();
+    let _ = reader.read_line(&mut line);
+    if !line.contains("http://") {
+        let _ = child.kill();
+        let _ = child.wait();
+        return Err(format!("bad worker ready line {line:?}"));
+    }
+    let addr = line.rsplit("http://").next().unwrap().trim().to_string();
+    let port = addr
+        .rsplit(':')
+        .next()
+        .unwrap()
+        .parse()
+        .map_err(|e| format!("bad worker addr {addr:?}: {e}"))?;
+    // Keep draining stdout so the worker never blocks on a full pipe.
+    std::thread::spawn(move || {
+        let mut sink = String::new();
+        while matches!(reader.read_line(&mut sink), Ok(b) if b > 0) {
+            sink.clear();
+        }
+    });
+    Ok(Worker { child, addr, port })
+}
+
+fn spawn_worker(port: u16, fail_after: Option<u64>) -> Worker {
+    try_spawn_worker(port, fail_after).expect("spawn fkmpp worker")
+}
+
+#[test]
+fn distributed_fit_matches_in_process_bitwise() {
+    // Pinned for the whole test: subprocesses inherit it, and identical
+    // kernel dispatch on both sides of the wire is a precondition for
+    // bit-parity (the weigh phase is above the autotuner's probe
+    // threshold at this shape).
+    std::env::set_var("FKMPP_KERNEL", "blocked");
+
+    // 20_000 rows = 5 summation blocks, so 4 workers split [2,1,1,1]
+    // blocks and every fleet size in the sweep is fully active.
+    let ps = gaussian_mixture(
+        &SynthSpec {
+            n: 20_000,
+            d: 12,
+            k_true: 12,
+            ..Default::default()
+        },
+        7,
+    );
+    let k = 12;
+    let pcfg = KMeansParConfig {
+        shards: 3,
+        rounds: 3,
+        oversample: 2.0,
+    };
+
+    // In-process baseline, plus one extra RNG draw: the distributed runs
+    // must leave the run RNG in the identical state.
+    let mut rng = Pcg64::seed_from(7);
+    let base = kmeans_par(&ps, k, &pcfg, &mut rng);
+    let base_next = rng.next_u64();
+
+    // Leg 1: worker-count parity sweep.
+    for &nw in &[1usize, 2, 4] {
+        let workers: Vec<Worker> = (0..nw).map(|_| spawn_worker(0, None)).collect();
+        let dcfg = DistConfig {
+            workers: workers.iter().map(|w| w.addr.clone()).collect(),
+            rounds: pcfg.rounds,
+            oversample: pcfg.oversample,
+            ..DistConfig::default()
+        };
+        let mut rng = Pcg64::seed_from(7);
+        let got = kmeans_par_dist(&ps, k, &dcfg, &mut rng)
+            .unwrap_or_else(|e| panic!("{nw}-worker run failed: {e:#}"));
+        let got_next = rng.next_u64();
+        assert_eq!(got.indices, base.indices, "{nw}-worker indices diverged");
+        assert_eq!(
+            got.centers.flat(),
+            base.centers.flat(),
+            "{nw}-worker centers diverged"
+        );
+        assert_eq!(
+            got.stats.proposals, base.stats.proposals,
+            "{nw}-worker proposal count diverged"
+        );
+        assert_eq!(got_next, base_next, "{nw}-worker run RNG stream diverged");
+    }
+
+    // Leg 2: the executor seam itself — both RoundExecutor
+    // implementations through one identical scripted round.
+    {
+        let w1 = spawn_worker(0, None);
+        let w2 = spawn_worker(0, None);
+        let dcfg = DistConfig {
+            workers: vec![w1.addr.clone(), w2.addr.clone()],
+            ..DistConfig::default()
+        };
+        let mut local = LocalShardExecutor::new(&ps, 4);
+        let mut remote = DistCoordinator::new(&ps, &dcfg).expect("coordinator");
+
+        let seed_rows = ps.gather(&[123]);
+        let lp = local.update(&[123], &seed_rows).expect("local update");
+        let rp = remote.update(&[123], &seed_rows).expect("remote update");
+        assert_eq!(lp.len(), rp.len(), "partial block counts differ");
+        for (i, (x, y)) in lp.iter().zip(&rp).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "cost partial block {i} differs");
+        }
+
+        let cost: f64 = lp.iter().sum();
+        let lc = local.sample(0xDEAD_BEEF, cost, 24.0).expect("local sample");
+        let rc = remote.sample(0xDEAD_BEEF, cost, 24.0).expect("remote sample");
+        assert_eq!(lc, rc, "accepted candidate sets differ");
+
+        // Weigh over the seed candidate plus everything accepted (the
+        // driver's candidate list always contains the first center, so
+        // this never weighs an empty set).
+        let mut sel = vec![123usize];
+        sel.extend(&lc);
+        let cands = ps.gather(&sel);
+        let lw = local.weigh(&cands).expect("local weigh");
+        let rw = remote.weigh(&cands).expect("remote weigh");
+        assert_eq!(lw, rw, "u64 assignment counts differ");
+        assert_eq!(lw.iter().sum::<u64>(), ps.len() as u64);
+    }
+
+    // Leg 3: kill worker A mid-run, respawn it on the same port, and
+    // require the replay recovery to land on the baseline bits. A serves
+    // its ShardLoad, the seed update, the round-0 sample (+ update) and
+    // then dies on its next RPC — squarely mid-round.
+    {
+        let a = spawn_worker(0, Some(4));
+        let b = spawn_worker(0, None);
+        let endpoints = vec![a.addr.clone(), b.addr.clone()];
+        let a_port = a.port;
+        let respawner = std::thread::spawn(move || {
+            let mut a = a;
+            let _ = a.child.wait();
+            let deadline = Instant::now() + Duration::from_secs(20);
+            loop {
+                match try_spawn_worker(a_port, None) {
+                    Ok(w) => return w,
+                    Err(e) => {
+                        assert!(
+                            Instant::now() < deadline,
+                            "could not respawn worker on port {a_port}: {e}"
+                        );
+                        std::thread::sleep(Duration::from_millis(100));
+                    }
+                }
+            }
+        });
+        let dcfg = DistConfig {
+            workers: endpoints,
+            rounds: pcfg.rounds,
+            oversample: pcfg.oversample,
+            ..DistConfig::default()
+        };
+        let mut rng = Pcg64::seed_from(7);
+        let got = kmeans_par_dist(&ps, k, &dcfg, &mut rng)
+            .unwrap_or_else(|e| panic!("run did not survive the worker crash: {e:#}"));
+        assert_eq!(got.indices, base.indices, "post-recovery indices diverged");
+        assert_eq!(
+            got.centers.flat(),
+            base.centers.flat(),
+            "post-recovery centers diverged"
+        );
+        assert_eq!(rng.next_u64(), base_next, "post-recovery RNG diverged");
+        let _respawned = respawner.join().expect("respawner thread");
+        drop(b);
+    }
+
+    // Leg 4: a permanently dead endpoint is a typed error within the
+    // deadline, not a hang.
+    {
+        let port = {
+            let l = TcpListener::bind("127.0.0.1:0").expect("reserve a port");
+            l.local_addr().unwrap().port()
+            // Listener dropped: nobody will ever accept here.
+        };
+        let dcfg = DistConfig {
+            workers: vec![format!("127.0.0.1:{port}")],
+            rounds: 2,
+            oversample: 2.0,
+            rpc_timeout: Duration::from_millis(500),
+            round_deadline: Duration::from_millis(1200),
+        };
+        let t0 = Instant::now();
+        let mut rng = Pcg64::seed_from(7);
+        let err = kmeans_par_dist(&ps, k, &dcfg, &mut rng)
+            .expect_err("a dead fleet must fail, not hang");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unreachable"), "untyped failure: {msg}");
+        assert!(
+            t0.elapsed() < Duration::from_secs(20),
+            "dead worker stalled the run for {:?}",
+            t0.elapsed()
+        );
+    }
+
+    std::env::remove_var("FKMPP_KERNEL");
+}

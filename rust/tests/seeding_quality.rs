@@ -352,6 +352,83 @@ fn statistical_medians_are_deterministic() {
 }
 
 #[test]
+fn statistical_dist_transport_matches_in_process() {
+    // Distributed-fit PR: the multi-process transport joins the suite.
+    // Over the 21 fixed seeds, `kmeans_par_dist` against 2 real
+    // `fkmpp worker` subprocesses must reproduce the in-process
+    // `kmeans_par` bit-for-bit. No env pinning here (the file
+    // discipline above): every dispatch shape at n=9000, d=4 stays
+    // below the autotuner probe threshold, so both processes
+    // deterministically resolve the same kernels without `FKMPP_KERNEL`.
+    use std::io::BufRead;
+
+    use fastkmeanspp::dist::{kmeans_par_dist, DistConfig};
+    use fastkmeanspp::shard::kmeanspar::{kmeans_par, KMeansParConfig};
+
+    struct Worker(std::process::Child);
+    impl Drop for Worker {
+        fn drop(&mut self) {
+            let _ = self.0.kill();
+            let _ = self.0.wait();
+        }
+    }
+    let spawn = || {
+        let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_fkmpp"))
+            .args(["worker", "--port", "0"])
+            .stdout(std::process::Stdio::piped())
+            .spawn()
+            .expect("spawn fkmpp worker");
+        let stdout = child.stdout.take().expect("worker stdout");
+        let mut reader = std::io::BufReader::new(stdout);
+        let mut line = String::new();
+        reader.read_line(&mut line).expect("worker ready line");
+        assert!(line.contains("http://"), "bad worker ready line {line:?}");
+        let addr = line.rsplit("http://").next().unwrap().trim().to_string();
+        // Keep draining stdout so the worker never blocks on a full pipe.
+        std::thread::spawn(move || {
+            let mut sink = String::new();
+            while matches!(reader.read_line(&mut sink), Ok(b) if b > 0) {
+                sink.clear();
+            }
+        });
+        (Worker(child), addr)
+    };
+
+    let ps = gaussian_mixture(
+        &SynthSpec {
+            n: 9_000,
+            d: 4,
+            k_true: 6,
+            ..Default::default()
+        },
+        43,
+    );
+    let k = 6;
+    let pcfg = KMeansParConfig {
+        shards: 2,
+        rounds: 3,
+        oversample: 2.0,
+    };
+    let (_w1, a1) = spawn();
+    let (_w2, a2) = spawn();
+    let dcfg = DistConfig {
+        workers: vec![a1, a2],
+        rounds: pcfg.rounds,
+        oversample: pcfg.oversample,
+        ..DistConfig::default()
+    };
+    for r in 0..STAT_SEEDS {
+        let mut rng = Pcg64::seed_from(7_000 + 97 * r);
+        let base = kmeans_par(&ps, k, &pcfg, &mut rng);
+        let mut rng = Pcg64::seed_from(7_000 + 97 * r);
+        let got = kmeans_par_dist(&ps, k, &dcfg, &mut rng)
+            .unwrap_or_else(|e| panic!("distributed run (seed offset {r}): {e:#}"));
+        assert_eq!(got.indices, base.indices, "seed offset {r}: indices diverged");
+        assert_eq!(got.centers, base.centers, "seed offset {r}: centers diverged");
+    }
+}
+
+#[test]
 fn quantization_does_not_change_costs_materially() {
     // Appendix F: seeding on quantized coordinates, evaluated on the
     // originals, costs within ~1% of seeding on raw coordinates.
