@@ -7,6 +7,7 @@
 //! fkmpp datasets  gen [--profile scaled]
 //! fkmpp serve     --port 8080 [--data-dir data] [--fit-workers 1]
 //! fkmpp worker    --port 9090 [--fail-after N]
+//! fkmpp report    --trace trace.json
 //! fkmpp info
 //! ```
 
@@ -156,17 +157,51 @@ pub fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
 /// Entry point used by `main.rs` (and by CLI tests).
 pub fn run(argv: &[String]) -> Result<String> {
     let args = Args::parse(argv)?;
-    match args.command.as_str() {
+    // `--trace PATH` (or `FKMPP_TRACE=PATH`) arms the run-trace recorder
+    // for the workload commands; on success the Chrome-trace JSON lands
+    // at PATH (load it in Perfetto / chrome://tracing, or summarize with
+    // `fkmpp report --trace PATH`). Spans sit only at coarse phase
+    // boundaries, so traced runs stay bitwise-identical to untraced ones
+    // (`rust/tests/trace_parity.rs`).
+    let trace_path = match args.command.as_str() {
+        "seed" | "grid" | "serve" => args
+            .get("trace")
+            .map(str::to_string)
+            .or_else(|| std::env::var("FKMPP_TRACE").ok().filter(|s| !s.is_empty())),
+        _ => None,
+    };
+    if trace_path.is_some() {
+        crate::trace::set_enabled(true);
+    }
+    let result = match args.command.as_str() {
         "seed" => cmd_seed(&args),
         "grid" => cmd_grid(&args),
         "table" => cmd_table(&args),
         "datasets" => cmd_datasets(&args),
         "serve" => cmd_serve(&args),
         "worker" => cmd_worker(&args),
+        "report" => cmd_report(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => Ok(USAGE.to_string()),
         other => bail!("unknown command {other:?}\n{USAGE}"),
+    };
+    if let Some(path) = trace_path {
+        let mut out = result?;
+        let spans = crate::trace::write_file(&path)?;
+        out.push_str(&format!("wrote trace {path} ({spans} spans)\n"));
+        return Ok(out);
     }
+    result
+}
+
+/// `fkmpp report --trace PATH`: per-phase wall-time breakdown of a
+/// recorded trace, in the style of the paper's runtime tables.
+fn cmd_report(args: &Args) -> Result<String> {
+    let path = args.get("trace").context("report needs --trace <path>")?;
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading trace file {path}"))?;
+    let doc = crate::server::json::parse(&text).with_context(|| format!("parsing {path}"))?;
+    crate::trace::render_report(&doc)
 }
 
 const USAGE: &str = "fastkmeanspp (NeurIPS 2020 reproduction)
@@ -180,14 +215,21 @@ USAGE:
                  [--lsh-bucket-width W] [--max-proposals N]
                  [--shards S] [--rounds R] [--oversample L]   (kmeans-par)
                  [--workers host:port,...]                    (distributed kmeans-par)
+                 [--trace trace.json]
   fkmpp grid     --datasets a,b --algos x,y --ks 100,500 --reps 5
-                 [--json results.json]
+                 [--json results.json] [--trace trace.json]
   fkmpp table    --which 1|2|...|8|all [--profile scaled] [--reps 5]
   fkmpp datasets gen [--profile scaled] [--data-dir data]
   fkmpp serve    [--port 8080] [--host 127.0.0.1] [--data-dir data]
                  [--http-workers 4] [--fit-workers 1] [--no-persist]
+                 [--trace trace.json]
   fkmpp worker   [--port 0] [--host 127.0.0.1] [--fail-after N]
+  fkmpp report   --trace trace.json
   fkmpp info
+
+`--trace PATH` (or env FKMPP_TRACE=PATH) records a Chrome-trace-event
+JSON of the run's phase spans (Perfetto / chrome://tracing loadable);
+`fkmpp report --trace PATH` prints its per-phase breakdown table.
 
 Algorithms: kmeanspp fastkmeanspp rejection rejection-exact rejection-rigorous
             afkmc2 uniform greedy
@@ -588,6 +630,43 @@ mod tests {
         ))
         .unwrap();
         assert!(out.contains("seeding cost"), "{out}");
+    }
+
+    #[test]
+    fn seed_trace_writes_chrome_trace_and_report_reads_it() {
+        // `--trace` (not FKMPP_TRACE: lib tests share the process env)
+        // arms the recorder; the run appends the "wrote trace" line and
+        // the file is strict-parseable Chrome trace JSON. Other unit
+        // tests may be emitting spans concurrently (the sink is
+        // process-global), so assert only on this run's own span names.
+        let path = std::env::temp_dir().join("fkmpp_cli_trace_test.json");
+        let _ = std::fs::remove_file(&path);
+        let out = run(&argv(&format!(
+            "seed --dataset kdd_sim --algo kmeanspp -k 10 --profile smoke \
+             --data-dir /tmp/fkmpp_cli_test --artifacts-dir /nonexistent --seed 3 \
+             --trace {}",
+            path.display()
+        )))
+        .unwrap();
+        assert!(out.contains("wrote trace"), "{out}");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = crate::server::json::parse(&text).unwrap();
+        let events = doc.get("traceEvents").and_then(|e| e.as_array()).unwrap();
+        assert!(
+            events.iter().any(|e| {
+                e.get("name").and_then(|n| n.as_str()) == Some("seed.kmeanspp.select")
+            }),
+            "missing seed.kmeanspp.select span"
+        );
+        let report = run(&argv(&format!("report --trace {}", path.display()))).unwrap();
+        assert!(report.contains("seed.kmeanspp.select"), "{report}");
+        assert!(report.contains("share%"), "{report}");
+        // Missing --trace and an unparseable file both fail with typed
+        // errors, not panics.
+        assert!(run(&argv("report")).is_err());
+        let bogus = std::env::temp_dir().join("fkmpp_cli_trace_bogus.json");
+        std::fs::write(&bogus, "{\"not\": \"a trace\"}").unwrap();
+        assert!(run(&argv(&format!("report --trace {}", bogus.display()))).is_err());
     }
 
     #[test]

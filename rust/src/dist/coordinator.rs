@@ -37,6 +37,7 @@ use crate::metrics;
 use crate::rng::Pcg64;
 use crate::seeding::{Seeding, SeedingStats};
 use crate::shard::aligned_ranges;
+use crate::trace;
 
 /// Distributed-fit knobs (`fkmpp seed --algo kmeans-par --workers
 /// host:port,...`).
@@ -95,6 +96,10 @@ pub struct DistCoordinator<'a> {
     /// flat), appended before first send — the replay log.
     history_indices: Vec<u64>,
     history_rows: Vec<f32>,
+    /// Current driver round, for trace span tags only (set via
+    /// [`RoundExecutor::on_round`]; `Cell` because [`Self::rpc_raw`]
+    /// reads it through `&self`). Never feeds computation.
+    round: std::cell::Cell<u64>,
 }
 
 impl<'a> DistCoordinator<'a> {
@@ -125,6 +130,7 @@ impl<'a> DistCoordinator<'a> {
             workers,
             history_indices: Vec::new(),
             history_rows: Vec::new(),
+            round: std::cell::Cell::new(0),
         })
     }
 
@@ -150,7 +156,18 @@ impl<'a> DistCoordinator<'a> {
     fn rpc_raw(&self, endpoint: &str, frame: &Frame) -> Result<Frame> {
         let m = metrics::global();
         m.incr("dist.rpcs", 1);
-        let timer = m.timer("dist.rpc_secs");
+        // Round-trip latency goes to the log₂ histogram (p50/p99 at
+        // `/metrics`); the span tags round/endpoint/kind/bytes. Both
+        // record on the error path too (the guard drops record).
+        let mut span = trace::Span::enter_with(
+            "dist.rpc",
+            vec![
+                ("endpoint", endpoint.into()),
+                ("kind", frame.kind().into()),
+                ("round", self.round.get().into()),
+            ],
+        );
+        let timer = m.latency_timer("dist.rpc_secs");
         let addr: SocketAddr = endpoint
             .to_socket_addrs()
             .with_context(|| format!("resolve worker {endpoint:?}"))?
@@ -161,6 +178,7 @@ impl<'a> DistCoordinator<'a> {
         stream.set_read_timeout(Some(self.cfg.rpc_timeout)).ok();
         stream.set_write_timeout(Some(self.cfg.rpc_timeout)).ok();
         let body = frame.encode();
+        span.arg("bytes_out", body.len());
         let head = format!(
             "POST /rpc HTTP/1.1\r\nHost: {endpoint}\r\nContent-Type: application/octet-stream\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
             body.len()
@@ -172,6 +190,7 @@ impl<'a> DistCoordinator<'a> {
         let (status, resp_body) = read_response(&mut stream)
             .with_context(|| format!("read rpc response from worker {endpoint}"))?;
         timer.stop();
+        span.arg("bytes_in", resp_body.len());
         let resp = Frame::decode(&resp_body)
             .with_context(|| format!("decode rpc response from worker {endpoint} (HTTP {status})"))?;
         if let Frame::Error { message } = resp {
@@ -232,6 +251,14 @@ impl<'a> DistCoordinator<'a> {
         deadline: Instant,
     ) -> Result<Frame> {
         let m = metrics::global();
+        let mut span = trace::Span::enter_with(
+            "dist.call",
+            vec![
+                ("endpoint", self.workers[w].endpoint.as_str().into()),
+                ("round", self.round.get().into()),
+            ],
+        );
+        let mut retries = 0u64;
         loop {
             let result = match self.ensure_provisioned(w) {
                 Ok(()) => match frame {
@@ -247,11 +274,16 @@ impl<'a> DistCoordinator<'a> {
                 Err(e) => Err(e),
             };
             match result {
-                Ok(resp) => return Ok(resp),
+                Ok(resp) => {
+                    span.arg("retries", retries);
+                    return Ok(resp);
+                }
                 Err(e) => {
                     self.workers[w].provisioned = false;
                     m.incr("dist.retries", 1);
+                    retries += 1;
                     if Instant::now() >= deadline {
+                        span.arg("retries", retries);
                         return Err(self.unreachable(w, e));
                     }
                     std::thread::sleep(RETRY_BACKOFF);
@@ -271,6 +303,10 @@ impl<'a> DistCoordinator<'a> {
 }
 
 impl RoundExecutor for DistCoordinator<'_> {
+    fn on_round(&mut self, round: usize) {
+        self.round.set(round as u64);
+    }
+
     fn update(&mut self, indices: &[usize], rows: &PointSet) -> Result<Vec<f64>> {
         // Log before broadcasting: a worker that dies mid-fan-out gets
         // this batch replayed at re-provision time.

@@ -81,6 +81,7 @@ use crate::metrics;
 use crate::rng::{splitmix64, Pcg64};
 use crate::seeding::{Seeding, SeedingStats};
 use crate::shard::weighted::{weighted_kmeanspp, WeightedPointSet};
+use crate::trace;
 
 /// The per-round operations of k-means‖, abstracted over *where the
 /// rows live*. One implementation holds shards in-process
@@ -110,6 +111,12 @@ pub trait RoundExecutor {
     /// Assign every row to its nearest candidate and return exact
     /// per-candidate `u64` assignment counts (the recluster weights).
     fn weigh(&mut self, candidates: &PointSet) -> Result<Vec<u64>>;
+
+    /// Observability hook: the driver announces each oversampling round
+    /// before issuing its RPCs, so a transport can tag its trace spans
+    /// with the round number. Must not affect computation — the default
+    /// is a no-op and [`run_rounds`] calls it outside all RNG use.
+    fn on_round(&mut self, _round: usize) {}
 }
 
 /// The transport-generic k-means‖ driver: oversampling rounds over any
@@ -149,10 +156,17 @@ pub fn run_rounds(
     // The executor returns the global fixed-block cost partials after
     // every fold; summing them left-to-right IS sum_f32 on the global
     // D² array, so the driver never needs the array itself.
-    let mut partials = exec.update(&[first], &ps.gather(&[first]))?;
+    // Trace spans below sit at the same coarse boundaries as the
+    // timers — they read only the clock, never the RNG.
+    let mut partials = {
+        let _s = trace::Span::enter("shard.update");
+        exec.update(&[first], &ps.gather(&[first]))?
+    };
 
     let ell = oversample * k as f64;
     for round in 0..rounds.max(1) {
+        exec.on_round(round);
+        let mut round_span = trace::Span::enter_with("shard.round", vec![("round", round.into())]);
         let timer = m.timer("shard.round_secs");
         // Global cost at fixed block boundaries: layout-invariant.
         let cost: f64 = partials.iter().sum();
@@ -162,11 +176,16 @@ pub fn run_rounds(
             break;
         }
         let round_tag = splitmix64(stream_root ^ splitmix64(round as u64 ^ 0x9E37_79B9_7F4A_7C15));
-        let new = exec.sample(round_tag, cost, ell)?;
+        let new = {
+            let _s = trace::Span::enter_with("shard.sample", vec![("round", round.into())]);
+            exec.sample(round_tag, cost, ell)?
+        };
         m.incr("shard.rounds", 1);
         m.incr("shard.candidates", new.len() as u64);
         stats.proposals += new.len() as u64;
+        round_span.arg("candidates", new.len());
         if !new.is_empty() {
+            let _s = trace::Span::enter_with("shard.update", vec![("round", round.into())]);
             partials = exec.update(&new, &ps.gather(&new))?;
             candidates.extend_from_slice(&new);
         }
@@ -174,14 +193,18 @@ pub fn run_rounds(
     }
 
     // Candidate weights = per-candidate assignment counts, exact u64.
+    let weigh_span =
+        trace::Span::enter_with("shard.weigh", vec![("candidates", candidates.len().into())]);
     let weights_timer = m.timer("shard.weights_secs");
     let cand_ps = ps.gather(&candidates);
     let counts = exec.weigh(&cand_ps)?;
     let weights: Vec<f32> = counts.into_iter().map(|w| w as f32).collect();
     weights_timer.stop();
+    drop(weigh_span);
 
     // Weighted recluster of the small candidate set down to k, resuming
     // the run RNG.
+    let _recluster_span = trace::Span::enter("shard.recluster");
     let recluster_timer = m.timer("shard.recluster_secs");
     let wps = WeightedPointSet::new(cand_ps, weights);
     let sub = weighted_kmeanspp(&wps, k, rng);

@@ -61,6 +61,23 @@ pub enum Frame {
     Error { message: String },
 }
 
+impl Frame {
+    /// Variant name for logs, metrics, and trace span tags.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Frame::ShardLoad { .. } => "shard_load",
+            Frame::Update { .. } => "update",
+            Frame::Sample { .. } => "sample",
+            Frame::Weigh { .. } => "weigh",
+            Frame::Ack { .. } => "ack",
+            Frame::Partials { .. } => "partials",
+            Frame::Candidates { .. } => "candidates",
+            Frame::Counts { .. } => "counts",
+            Frame::Error { .. } => "error",
+        }
+    }
+}
+
 fn put_u32(out: &mut Vec<u8>, v: u32) {
     out.extend_from_slice(&v.to_le_bytes());
 }

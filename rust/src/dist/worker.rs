@@ -244,8 +244,15 @@ fn route(
             }
             *served += 1;
             metrics::global().incr("dist.worker.rpcs", 1);
+            let mut span = crate::trace::Span::enter_with(
+                "worker.rpc",
+                vec![("bytes_in", req.body.len().into())],
+            );
             let resp = match Frame::decode(&req.body) {
-                Ok(frame) => handle_frame(state, frame),
+                Ok(frame) => {
+                    span.arg("kind", frame.kind());
+                    handle_frame(state, frame)
+                }
                 Err(e) => Frame::Error {
                     message: format!("{e:#}"),
                 },
@@ -255,7 +262,10 @@ fn route(
             } else {
                 200
             };
-            (binary_response(status, resp.encode()), false)
+            span.arg("status", status as u64);
+            let body = resp.encode();
+            span.arg("bytes_out", body.len());
+            (binary_response(status, body), false)
         }
         _ => (Response::text(404, "not found\n"), false),
     }

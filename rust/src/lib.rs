@@ -83,6 +83,7 @@ pub mod sampletree;
 pub mod seeding;
 pub mod server;
 pub mod shard;
+pub mod trace;
 
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
@@ -91,7 +92,7 @@ pub mod prelude {
     pub use crate::embed::multitree::{MultiTree, MultiTreeConfig};
     pub use crate::lloyd::LloydConfig;
     pub use crate::lsh::multiscale::MonotoneLsh;
-    pub use crate::metrics::Metrics;
+    pub use crate::metrics::{Histogram, Metrics};
     pub use crate::rng::Pcg64;
     pub use crate::sampletree::SampleTree;
     pub use crate::seeding::{

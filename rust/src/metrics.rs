@@ -11,13 +11,22 @@ use std::time::{Duration, Instant};
 
 /// Online mean/variance (Welford). Used for the repeated-run statistics in
 /// Tables 4–8 and for bench reporting.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct Stats {
     n: u64,
     mean: f64,
     m2: f64,
     min: f64,
     max: f64,
+}
+
+/// Must match `new()`: a derived `Default` would seed `min`/`max` at
+/// 0.0, and `record_duration`'s `.or_default()` entry would then clamp
+/// every reported timing minimum to 0.0.
+impl Default for Stats {
+    fn default() -> Self {
+        Stats::new()
+    }
 }
 
 impl Stats {
@@ -105,11 +114,196 @@ impl Drop for ScopedTimer<'_> {
     }
 }
 
-/// Thread-safe metrics sink: named counters and duration statistics.
+/// Number of finite log₂ buckets in a [`Histogram`]; one overflow slot
+/// follows them.
+pub const HIST_BUCKETS: usize = 32;
+/// Exponent of the first finite upper edge: bucket `i` covers
+/// `(2^(HIST_MIN_EXP+i-1), 2^(HIST_MIN_EXP+i)]` seconds, so the edges
+/// run `2^-20 s` (≈0.95 µs) through `2^11 s` (2048 s).
+pub const HIST_MIN_EXP: i32 = -20;
+
+/// Log₂-bucketed latency histogram with p50/p90/p99 estimation.
+///
+/// Bucket edges are **fixed powers of two**, identical for every
+/// instance, so merging histograms from different threads, shards, or
+/// processes is exact: counts add, no re-bucketing, no drift. This is
+/// what lets `/metrics` expose Prometheus `_bucket` series whose sums
+/// across scrapes stay consistent. Used where latency *distributions*
+/// matter (server request handling, dist RPC round-trips, oracle probe
+/// timing); [`Stats`] remains the tool for mean/variance over runs.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// `counts[i]` for the finite buckets, `counts[HIST_BUCKETS]` for
+    /// the overflow (`+Inf`) bucket. Non-cumulative.
+    counts: [u64; HIST_BUCKETS + 1],
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            counts: [0; HIST_BUCKETS + 1],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Upper edge of finite bucket `i`, in seconds.
+    pub fn edge(i: usize) -> f64 {
+        (2.0f64).powi(HIST_MIN_EXP + i as i32)
+    }
+
+    fn bucket_index(x: f64) -> usize {
+        if x <= 0.0 || !x.is_finite() {
+            return if x.is_finite() { 0 } else { HIST_BUCKETS };
+        }
+        // Smallest i with x <= 2^(HIST_MIN_EXP + i). log2 of an exact
+        // power of two is exact in f64, so edge values land in their
+        // own (le-inclusive) bucket.
+        let i = (x.log2().ceil() as i64) - HIST_MIN_EXP as i64;
+        if i < 0 {
+            0
+        } else if i as usize >= HIST_BUCKETS {
+            HIST_BUCKETS
+        } else {
+            i as usize
+        }
+    }
+
+    pub fn observe(&mut self, x: f64) {
+        self.counts[Self::bucket_index(x)] += 1;
+        self.count += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn observe_duration(&mut self, d: Duration) {
+        self.observe(d.as_secs_f64());
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Per-bucket (non-cumulative) counts; the last slot is overflow.
+    pub fn bucket_counts(&self) -> &[u64; HIST_BUCKETS + 1] {
+        &self.counts
+    }
+
+    /// Quantile estimate (`q` in `[0, 1]`): locate the bucket holding
+    /// the target rank, then interpolate geometrically inside it (the
+    /// buckets are log-spaced). Clamped to the observed `[min, max]`,
+    /// so p50/p99 can never fall outside real data. 0.0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = q.clamp(0.0, 1.0) * self.count as f64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let before = cum;
+            cum += c;
+            if (cum as f64) < target {
+                continue;
+            }
+            let lo = if i == 0 { 0.0 } else { Self::edge(i - 1) };
+            let hi = if i >= HIST_BUCKETS {
+                self.max.max(Self::edge(HIST_BUCKETS - 1))
+            } else {
+                Self::edge(i)
+            };
+            let frac = ((target - before as f64) / c as f64).clamp(0.0, 1.0);
+            let est = if lo > 0.0 && hi > lo {
+                lo * (hi / lo).powf(frac)
+            } else {
+                lo + frac * (hi - lo)
+            };
+            return est.clamp(self.min, self.max);
+        }
+        self.max
+    }
+
+    /// Exact merge — bucket edges are shared constants, so counts add
+    /// with zero re-bucketing error.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// A scoped latency timer: like [`ScopedTimer`] but records into a
+/// named [`Histogram`] on the sink instead of a [`Stats`] entry.
+pub struct ScopedLatencyTimer<'a> {
+    metrics: &'a Metrics,
+    name: &'static str,
+    start: Instant,
+    stopped: bool,
+}
+
+impl<'a> ScopedLatencyTimer<'a> {
+    pub fn stop(mut self) -> Duration {
+        self.stopped = true;
+        let elapsed = self.start.elapsed();
+        self.metrics.record_latency(self.name, elapsed);
+        elapsed
+    }
+}
+
+impl Drop for ScopedLatencyTimer<'_> {
+    fn drop(&mut self) {
+        if !self.stopped {
+            self.metrics.record_latency(self.name, self.start.elapsed());
+        }
+    }
+}
+
+/// Thread-safe metrics sink: named counters, duration statistics, and
+/// latency histograms.
 #[derive(Debug, Default)]
 pub struct Metrics {
     counters: Mutex<BTreeMap<&'static str, u64>>,
     timings: Mutex<BTreeMap<&'static str, Stats>>,
+    histograms: Mutex<BTreeMap<&'static str, Histogram>>,
 }
 
 impl Metrics {
@@ -146,6 +340,45 @@ impl Metrics {
 
     pub fn duration_stats(&self, name: &'static str) -> Option<Stats> {
         self.timings.lock().unwrap().get(name).cloned()
+    }
+
+    /// Record one observation (seconds) into the named histogram.
+    pub fn observe(&self, name: &'static str, x: f64) {
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(name)
+            .or_default()
+            .observe(x);
+    }
+
+    /// Record a latency sample into the named histogram.
+    pub fn record_latency(&self, name: &'static str, d: Duration) {
+        self.observe(name, d.as_secs_f64());
+    }
+
+    /// Scoped timer that records into the named histogram on drop.
+    pub fn latency_timer(&self, name: &'static str) -> ScopedLatencyTimer<'_> {
+        ScopedLatencyTimer {
+            metrics: self,
+            name,
+            start: Instant::now(),
+            stopped: false,
+        }
+    }
+
+    pub fn histogram(&self, name: &'static str) -> Option<Histogram> {
+        self.histograms.lock().unwrap().get(name).cloned()
+    }
+
+    /// Snapshot of every histogram, name-ordered.
+    pub fn histograms_snapshot(&self) -> Vec<(&'static str, Histogram)> {
+        self.histograms
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(&k, h)| (k, h.clone()))
+            .collect()
     }
 
     /// Snapshot of every counter, name-ordered (the `/metrics` endpoint
@@ -192,8 +425,132 @@ impl Metrics {
                 ));
             }
         }
+        let histograms = self.histograms.lock().unwrap();
+        if !histograms.is_empty() {
+            out.push_str("latency histograms (seconds):\n");
+            for (k, h) in histograms.iter() {
+                out.push_str(&format!(
+                    "  {k:<40} n={:<4} mean={:.6} p50={:.6} p90={:.6} p99={:.6} max={:.6}\n",
+                    h.count(),
+                    h.mean(),
+                    h.quantile(0.50),
+                    h.quantile(0.90),
+                    h.quantile(0.99),
+                    h.max()
+                ));
+            }
+        }
         out
     }
+}
+
+/// Point-in-time counter snapshot for delta assertions against a shared
+/// sink. [`global()`] counters only accumulate — other tests, spans, or
+/// histogram traffic running in the same process can bump them at any
+/// time — so tests must assert `snapshot.delta(...) >= expected`, never
+/// absolute values.
+#[derive(Clone, Debug, Default)]
+pub struct CounterSnapshot {
+    at: BTreeMap<&'static str, u64>,
+}
+
+impl CounterSnapshot {
+    pub fn of(metrics: &Metrics) -> Self {
+        CounterSnapshot {
+            at: metrics.counters_snapshot().into_iter().collect(),
+        }
+    }
+
+    /// How much `name` has grown on `metrics` since this snapshot.
+    pub fn delta(&self, metrics: &Metrics, name: &'static str) -> u64 {
+        metrics
+            .counter(name)
+            .saturating_sub(self.at.get(name).copied().unwrap_or(0))
+    }
+}
+
+/// A metric name valid for Prometheus exposition: `[a-zA-Z_:]` first,
+/// `[a-zA-Z0-9_:]` after. Dotted internal names (`shard.rounds`) map to
+/// underscores, and everything gets the `fkmpp_` namespace prefix.
+pub fn prometheus_name(name: &str) -> String {
+    let mut out = String::with_capacity(name.len() + 6);
+    out.push_str("fkmpp_");
+    for c in name.chars() {
+        if c.is_ascii_alphanumeric() || c == '_' || c == ':' {
+            out.push(c);
+        } else {
+            out.push('_');
+        }
+    }
+    out
+}
+
+fn prometheus_f64(x: f64) -> String {
+    if x.is_nan() {
+        "NaN".to_string()
+    } else if x == f64::INFINITY {
+        "+Inf".to_string()
+    } else if x == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else if x != 0.0 && x.abs() < 1e-3 {
+        // Sub-millisecond bucket edges: exponent form keeps the labels
+        // readable (9.5367431640625e-7, not 22 digits of decimals).
+        format!("{x:e}")
+    } else {
+        format!("{x}")
+    }
+}
+
+/// Render merged metric snapshots in the Prometheus text exposition
+/// format (v0.0.4): gauges, `_total` counters, [`Stats`] as summaries
+/// (`_sum`/`_count`), and [`Histogram`]s as cumulative `_bucket{le=…}`
+/// series ending in `le="+Inf"` plus `_sum`/`_count`.
+pub fn render_prometheus(
+    gauges: &[(String, f64)],
+    counters: &[(&'static str, u64)],
+    timings: &[(&'static str, Stats)],
+    histograms: &[(&'static str, Histogram)],
+) -> String {
+    let mut out = String::new();
+    for (name, value) in gauges {
+        let n = prometheus_name(name);
+        out.push_str(&format!("# TYPE {n} gauge\n{n} {}\n", prometheus_f64(*value)));
+    }
+    for (name, value) in counters {
+        let n = format!("{}_total", prometheus_name(name));
+        out.push_str(&format!("# TYPE {n} counter\n{n} {value}\n"));
+    }
+    for (name, s) in timings {
+        if s.count() == 0 {
+            continue;
+        }
+        let n = prometheus_name(name);
+        out.push_str(&format!(
+            "# TYPE {n} summary\n{n}_sum {}\n{n}_count {}\n",
+            prometheus_f64(s.mean() * s.count() as f64),
+            s.count()
+        ));
+    }
+    for (name, h) in histograms {
+        let n = prometheus_name(name);
+        out.push_str(&format!("# TYPE {n} histogram\n"));
+        let mut cum = 0u64;
+        for (i, &c) in h.bucket_counts().iter().enumerate() {
+            cum += c;
+            let le = if i >= HIST_BUCKETS {
+                "+Inf".to_string()
+            } else {
+                prometheus_f64(Histogram::edge(i))
+            };
+            out.push_str(&format!("{n}_bucket{{le=\"{le}\"}} {cum}\n"));
+        }
+        out.push_str(&format!(
+            "{n}_sum {}\n{n}_count {}\n",
+            prometheus_f64(h.sum()),
+            h.count()
+        ));
+    }
+    out
 }
 
 /// Process-wide metrics sink for components that run without a context
@@ -208,13 +565,15 @@ pub fn global() -> &'static Metrics {
     GLOBAL.get_or_init(Metrics::new)
 }
 
-/// Format a duration as human-readable seconds/millis.
+/// Format a duration as human-readable seconds/millis/micros.
 pub fn fmt_duration(d: Duration) -> String {
     let s = d.as_secs_f64();
     if s >= 1.0 {
         format!("{s:.3}s")
-    } else {
+    } else if s >= 1e-3 {
         format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.3}us", s * 1e6)
     }
 }
 
@@ -286,7 +645,165 @@ mod tests {
         let m = Metrics::new();
         m.incr("x", 1);
         m.record_duration("y", Duration::from_millis(5));
+        m.record_latency("z", Duration::from_millis(2));
         let out = m.render();
         assert!(out.contains('x') && out.contains('y'));
+        assert!(out.contains("p99="), "histogram line missing: {out}");
+    }
+
+    /// Regression: the derived `Default` seeded min/max at 0.0, so the
+    /// first `record_duration` (which goes through `.or_default()`)
+    /// clamped every reported minimum to 0.0.
+    #[test]
+    fn default_stats_match_new_so_minima_are_real() {
+        let d = Stats::default();
+        assert_eq!(d.min(), f64::INFINITY);
+        assert_eq!(d.max(), f64::NEG_INFINITY);
+        let m = Metrics::new();
+        m.record_duration("t", Duration::from_millis(8));
+        let s = m.duration_stats("t").unwrap();
+        assert!(s.min() > 0.007, "min clamped to {}", s.min());
+        assert!(s.max() > 0.007, "max clamped to {}", s.max());
+    }
+
+    #[test]
+    fn fmt_duration_tiers() {
+        assert_eq!(fmt_duration(Duration::from_secs_f64(1.5)), "1.500s");
+        assert_eq!(fmt_duration(Duration::from_secs_f64(1.0)), "1.000s");
+        assert_eq!(fmt_duration(Duration::from_secs_f64(0.5)), "500.000ms");
+        assert_eq!(fmt_duration(Duration::from_secs_f64(1e-3)), "1.000ms");
+        assert_eq!(fmt_duration(Duration::from_secs_f64(12e-6)), "12.000us");
+        assert_eq!(fmt_duration(Duration::from_secs_f64(999e-6)), "999.000us");
+        assert_eq!(fmt_duration(Duration::ZERO), "0.000us");
+    }
+
+    #[test]
+    fn histogram_buckets_are_le_inclusive_powers_of_two() {
+        let mut h = Histogram::new();
+        // An exact edge value must land in the bucket it bounds.
+        h.observe(Histogram::edge(5));
+        assert_eq!(h.bucket_counts()[5], 1);
+        // Just above an edge spills into the next bucket.
+        let mut h2 = Histogram::new();
+        h2.observe(Histogram::edge(5) * 1.0001);
+        assert_eq!(h2.bucket_counts()[6], 1);
+        // Below the smallest edge, at/below zero, and past the largest
+        // edge all land somewhere (no panics, no lost samples).
+        let mut h3 = Histogram::new();
+        h3.observe(0.0);
+        h3.observe(1e-12);
+        h3.observe(1e9);
+        assert_eq!(h3.count(), 3);
+        assert_eq!(h3.bucket_counts()[0], 2);
+        assert_eq!(h3.bucket_counts()[HIST_BUCKETS], 1);
+    }
+
+    #[test]
+    fn histogram_quantiles_bracket_the_data() {
+        let mut h = Histogram::new();
+        for i in 1..=1000u64 {
+            h.observe(i as f64 * 1e-3); // 1ms .. 1s
+        }
+        let (p50, p90, p99) = (h.quantile(0.50), h.quantile(0.90), h.quantile(0.99));
+        assert!(p50 >= h.min() && p50 <= h.max());
+        assert!(p50 <= p90 && p90 <= p99, "p50={p50} p90={p90} p99={p99}");
+        // Log buckets: estimates are within one bucket (2x) of truth.
+        assert!(p50 > 0.25 && p50 < 1.0, "p50={p50}");
+        assert!(p99 > 0.5 && p99 <= 1.0, "p99={p99}");
+        assert_eq!(h.quantile(1.0), h.max());
+        assert_eq!(Histogram::new().quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn histogram_merge_is_exact() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut whole = Histogram::new();
+        for i in 0..200u64 {
+            let x = (i as f64 + 1.0) * 3.7e-5;
+            if i % 2 == 0 { &mut a } else { &mut b }.observe(x);
+            whole.observe(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.bucket_counts(), whole.bucket_counts());
+        assert_eq!(a.count(), whole.count());
+        // Bucket merges are exact; the f64 sum is only order-sensitive.
+        assert!((a.sum() - whole.sum()).abs() < 1e-12);
+        assert_eq!(a.min(), whole.min());
+        assert_eq!(a.max(), whole.max());
+    }
+
+    #[test]
+    fn latency_timer_records_into_histogram() {
+        let m = Metrics::new();
+        {
+            let _t = m.latency_timer("rpc");
+        }
+        let t = m.latency_timer("rpc");
+        t.stop();
+        let h = m.histogram("rpc").unwrap();
+        assert_eq!(h.count(), 2);
+        assert!(m.histograms_snapshot().iter().any(|(k, _)| *k == "rpc"));
+    }
+
+    #[test]
+    fn prometheus_rendering_is_well_formed() {
+        let mut h = Histogram::new();
+        for x in [1e-4, 2e-4, 5e-2, 1.5] {
+            h.observe(x);
+        }
+        let mut s = Stats::new();
+        s.push(0.25);
+        s.push(0.75);
+        let out = render_prometheus(
+            &[("uptime_seconds".to_string(), 12.5)],
+            &[("shard.rounds", 7)],
+            &[("shard.round_secs", s)],
+            &[("http.latency_secs", h)],
+        );
+        assert!(out.contains("# TYPE fkmpp_uptime_seconds gauge\n"));
+        assert!(out.contains("fkmpp_uptime_seconds 12.5\n"));
+        assert!(out.contains("# TYPE fkmpp_shard_rounds_total counter\n"));
+        assert!(out.contains("fkmpp_shard_rounds_total 7\n"));
+        assert!(out.contains("fkmpp_shard_round_secs_sum 1\n"));
+        assert!(out.contains("fkmpp_shard_round_secs_count 2\n"));
+        assert!(out.contains("# TYPE fkmpp_http_latency_secs histogram\n"));
+        assert!(out.contains("fkmpp_http_latency_secs_bucket{le=\"+Inf\"} 4\n"));
+        assert!(out.contains("fkmpp_http_latency_secs_count 4\n"));
+        // Every emitted name matches the Prometheus grammar and every
+        // _bucket series is cumulative-monotone.
+        let name_ok = |n: &str| {
+            let mut cs = n.chars();
+            let first = cs.next().unwrap();
+            (first.is_ascii_alphabetic() || first == '_' || first == ':')
+                && cs.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+        };
+        let mut last_bucket = 0u64;
+        for line in out.lines() {
+            if line.starts_with("# ") {
+                continue;
+            }
+            let name = line.split(['{', ' ']).next().unwrap();
+            assert!(name_ok(name), "bad metric name in {line:?}");
+            if line.contains("_bucket{") {
+                let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+                assert!(v >= last_bucket, "non-monotone bucket: {line}");
+                last_bucket = v;
+            }
+        }
+        assert_eq!(prometheus_name("dist.worker.rpc_secs"), "fkmpp_dist_worker_rpc_secs");
+    }
+
+    #[test]
+    fn counter_snapshot_deltas_ignore_prior_traffic() {
+        let m = Metrics::new();
+        m.incr("a", 5);
+        let snap = CounterSnapshot::of(&m);
+        assert_eq!(snap.delta(&m, "a"), 0);
+        assert_eq!(snap.delta(&m, "never_seen"), 0);
+        m.incr("a", 3);
+        m.incr("b", 2);
+        assert_eq!(snap.delta(&m, "a"), 3);
+        assert_eq!(snap.delta(&m, "b"), 2);
     }
 }

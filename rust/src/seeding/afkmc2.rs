@@ -42,6 +42,12 @@ pub fn afkmc2(ps: &PointSet, k: usize, cfg: &Afkmc2Config, rng: &mut Pcg64) -> S
     let n = ps.len();
     let mut stats = SeedingStats::default();
 
+    // Trace spans at the coarse init/select boundaries only (clock
+    // reads, no RNG) — traced runs stay bitwise-identical to untraced.
+    let init_span = crate::trace::Span::enter_with(
+        "seed.afkmc2.init",
+        vec![("n", n.into()), ("k", k.into())],
+    );
     let t0 = Instant::now();
     // First center uniform; build the proposal q and its prefix sums.
     // The O(nd) distance pass runs on the parallel kernel engine.
@@ -74,7 +80,12 @@ pub fn afkmc2(ps: &PointSet, k: usize, cfg: &Afkmc2Config, rng: &mut Pcg64) -> S
     }
     let norm = prefix[n];
     stats.init_secs = t0.elapsed().as_secs_f64();
+    drop(init_span);
 
+    let select_span = crate::trace::Span::enter_with(
+        "seed.afkmc2.select",
+        vec![("k", k.into()), ("chain", cfg.chain_length.into())],
+    );
     let t1 = Instant::now();
     let mut indices = vec![c1];
 
@@ -144,6 +155,7 @@ pub fn afkmc2(ps: &PointSet, k: usize, cfg: &Afkmc2Config, rng: &mut Pcg64) -> S
         }
     }
     stats.select_secs = t1.elapsed().as_secs_f64();
+    drop(select_span);
     Seeding::from_indices(ps, indices, stats)
 }
 

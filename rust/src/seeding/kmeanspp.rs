@@ -59,9 +59,19 @@ pub fn kmeanspp_core(
     }
     // Kernels-v2 norm cache: one O(nd) pass here, reused by all k update
     // rounds (the points never change).
-    let point_norms = norms::squared_norms(ps);
+    let point_norms = {
+        let _s = crate::trace::Span::enter_with(
+            "seed.kmeanspp.init",
+            vec![("n", n.into()), ("k", k.into())],
+        );
+        norms::squared_norms(ps)
+    };
     stats.init_secs = t0.elapsed().as_secs_f64();
 
+    // Trace spans sit only at these coarse phase boundaries (init /
+    // select), mirroring the timers: they read the clock, never the RNG,
+    // so traced and untraced runs draw identical streams.
+    let select_span = crate::trace::Span::enter_with("seed.kmeanspp.select", vec![("k", k.into())]);
     let t1 = Instant::now();
     // First center ∝ weight (uniform when unweighted), via the same
     // blocked prefix scan as the round draws. A degenerate all-zero
@@ -111,6 +121,7 @@ pub fn kmeanspp_core(
         update_round(ps, next, &point_norms, &mut cur_d2);
     }
     stats.select_secs = t1.elapsed().as_secs_f64();
+    drop(select_span);
     Seeding::from_indices(ps, indices, stats)
 }
 
@@ -178,6 +189,10 @@ pub fn kmeanspp_greedy(ps: &PointSet, k: usize, trials: usize, rng: &mut Pcg64) 
     let trials = trials.max(1);
     let n = ps.len();
     let mut stats = SeedingStats::default();
+    let _select_span = crate::trace::Span::enter_with(
+        "seed.greedy.select",
+        vec![("k", k.into()), ("trials", trials.into())],
+    );
     let t1 = Instant::now();
 
     let mut cur_d2 = vec![f32::INFINITY; n];

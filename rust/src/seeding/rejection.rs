@@ -164,6 +164,14 @@ pub fn rejection_sampling(
     let k = k.min(ps.len());
     let mut stats = SeedingStats::default();
 
+    // Trace spans cover only the two coarse phases (init / select), the
+    // same boundaries as `init_secs`/`select_secs` — never the per-
+    // proposal loop. They read the clock only, so traced and untraced
+    // runs draw identical RNG streams.
+    let init_span = crate::trace::Span::enter_with(
+        "seed.rejection.init",
+        vec![("n", ps.len().into()), ("k", k.into())],
+    );
     let t0 = Instant::now();
     // §5 remark: build the proxy machinery (trees + LSH + acceptance test)
     // in a JL projection to O(log n) dims; the projected metric preserves
@@ -211,7 +219,10 @@ pub fn rejection_sampling(
         }
     };
     stats.init_secs = t0.elapsed().as_secs_f64();
+    drop(init_span);
 
+    let select_span =
+        crate::trace::Span::enter_with("seed.rejection.select", vec![("k", k.into())]);
     let t1 = Instant::now();
     let c2 = (cfg.c as f64) * (cfg.c as f64);
     let budget = if cfg.max_proposals > 0 {
@@ -313,6 +324,7 @@ pub fn rejection_sampling(
         }
     }
     stats.select_secs = t1.elapsed().as_secs_f64();
+    drop(select_span);
 
     // Oracle observability: flush loop + probe counters to the
     // process-wide sink (same pattern as `shard.*` — fits run deep in
@@ -325,7 +337,9 @@ pub fn rejection_sampling(
     let probe = oracle.probe_stats();
     m.incr("oracle.probes", probe.probes);
     for d in probe_samples {
-        m.record_duration("oracle.probe_secs", d);
+        // Log-bucketed histogram, not plain Stats: probe latencies are
+        // heavy-tailed and `/metrics` reports their p50/p99.
+        m.record_latency("oracle.probe_secs", d);
     }
     if probe.prefix_hits > 0 {
         m.incr("oracle.prefix_hits", probe.prefix_hits);
@@ -577,18 +591,17 @@ mod tests {
         // (counters accumulate process-wide: assert deltas only).
         let ps = data(400, 6, 21);
         let m = crate::metrics::global();
-        let before = (
-            m.counter("oracle.proposals"),
-            m.counter("oracle.accepts"),
-            m.counter("oracle.probes"),
-        );
+        let before = crate::metrics::CounterSnapshot::of(m);
         let mut rng = Pcg64::seed_from(22);
         let s = rejection_sampling(&ps, 20, &RejectionConfig::default(), &mut rng);
         assert_eq!(s.k(), 20);
-        assert!(m.counter("oracle.proposals") >= before.0 + s.stats.proposals);
-        assert!(m.counter("oracle.accepts") >= before.1 + 20);
-        assert!(m.counter("oracle.probes") > before.2);
-        assert!(m.duration_stats("oracle.probe_secs").is_some());
+        assert!(before.delta(m, "oracle.proposals") >= s.stats.proposals);
+        assert!(before.delta(m, "oracle.accepts") >= 20);
+        assert!(before.delta(m, "oracle.probes") > 0);
+        // Probe latencies land in the log-bucketed histogram sink.
+        let hist = m.histogram("oracle.probe_secs").expect("probe histogram");
+        assert!(hist.count() > 0);
+        assert!(hist.quantile(0.99) >= hist.quantile(0.50));
     }
 
     #[test]

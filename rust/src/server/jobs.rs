@@ -243,6 +243,13 @@ pub fn spawn_workers(
             std::thread::spawn(move || {
                 while let Some((job_id, spec)) = queue.next_job() {
                     let t0 = Instant::now();
+                    let mut span = crate::trace::Span::enter_with(
+                        "fit.job",
+                        vec![
+                            ("algo", crate::trace::TraceArg::from(spec.algorithm.name())),
+                            ("k", crate::trace::TraceArg::from(spec.k)),
+                        ],
+                    );
                     // A panicking fit must fail the job, not kill the
                     // worker — with fit_workers=1 a dead worker would
                     // leave every later job queued forever.
@@ -257,6 +264,9 @@ pub fn spawn_workers(
                             .unwrap_or_else(|| "non-string panic payload".to_string());
                         Err(crate::anyhow!("fit panicked: {msg}"))
                     });
+                    span.arg("ok", u64::from(result.is_ok()));
+                    drop(span);
+                    crate::metrics::global().record_latency("fit.latency_secs", t0.elapsed());
                     queue.finish(&job_id, t0.elapsed().as_secs_f64(), result);
                 }
             })
@@ -409,7 +419,7 @@ mod tests {
             rounds: 3,
             oversample: 2.0,
         };
-        let rounds_before = crate::metrics::global().counter("shard.rounds");
+        let before = crate::metrics::CounterSnapshot::of(crate::metrics::global());
         let id = queue.submit(spec);
         let info = wait_terminal(&queue, &id);
         let JobState::Done { model_id } = &info.state else {
@@ -418,8 +428,9 @@ mod tests {
         let model = registry.get(model_id).expect("model registered");
         assert_eq!(model.meta.k, 8);
         assert_eq!(model.meta.algorithm, "kmeans-par");
-        // The fit drove the sharded engine: round counters advanced.
-        assert!(crate::metrics::global().counter("shard.rounds") > rounds_before);
+        // The fit drove the sharded engine: round counters advanced
+        // (delta via snapshot — counters accumulate process-wide).
+        assert!(before.delta(crate::metrics::global(), "shard.rounds") > 0);
         queue.stop();
         for h in handles {
             h.join().unwrap();
@@ -445,8 +456,7 @@ mod tests {
             oracle: OracleKind::LshPractical,
             ..Default::default()
         };
-        let probes_before = crate::metrics::global().counter("oracle.probes");
-        let accepts_before = crate::metrics::global().counter("oracle.accepts");
+        let before = crate::metrics::CounterSnapshot::of(crate::metrics::global());
         let id = queue.submit(spec);
         let info = wait_terminal(&queue, &id);
         let JobState::Done { model_id } = &info.state else {
@@ -455,9 +465,11 @@ mod tests {
         let model = registry.get(model_id).expect("model registered");
         assert_eq!(model.meta.k, 8);
         assert_eq!(model.meta.algorithm, "rejection");
-        // The fit drove the oracle-backed acceptance loop: counters advanced.
-        assert!(crate::metrics::global().counter("oracle.probes") > probes_before);
-        assert!(crate::metrics::global().counter("oracle.accepts") >= accepts_before + 8);
+        // The fit drove the oracle-backed acceptance loop: counters
+        // advanced (delta via snapshot — they accumulate process-wide).
+        let m = crate::metrics::global();
+        assert!(before.delta(m, "oracle.probes") > 0);
+        assert!(before.delta(m, "oracle.accepts") >= 8);
         queue.stop();
         for h in handles {
             h.join().unwrap();

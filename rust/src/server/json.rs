@@ -509,6 +509,25 @@ pub fn stats_json(s: &Stats) -> Json {
     ])
 }
 
+/// [`Histogram`] → JSON (`null` when empty). Keeps the `count`/`mean`/
+/// `min`/`max` keys of [`stats_json`] so readers of `/metrics` survive
+/// a timing series migrating from `Stats` to a histogram, and adds the
+/// latency quantiles the histogram exists to answer.
+pub fn histogram_json(h: &crate::metrics::Histogram) -> Json {
+    if h.count() == 0 {
+        return Json::Null;
+    }
+    Json::obj(vec![
+        ("count", Json::num(h.count() as f64)),
+        ("mean", Json::num(h.mean())),
+        ("min", Json::num(h.min())),
+        ("max", Json::num(h.max())),
+        ("p50", Json::num(h.quantile(0.50))),
+        ("p90", Json::num(h.quantile(0.90))),
+        ("p99", Json::num(h.quantile(0.99))),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -691,5 +710,27 @@ mod tests {
         assert_eq!(v.get("mean").and_then(Json::as_f64), Some(2.0));
         assert_eq!(v.get("min").and_then(Json::as_f64), Some(1.0));
         assert_eq!(v.get("max").and_then(Json::as_f64), Some(3.0));
+    }
+
+    #[test]
+    fn histogram_json_shape() {
+        let mut h = crate::metrics::Histogram::new();
+        assert!(histogram_json(&h).is_null());
+        for i in 1..=100u64 {
+            h.observe(i as f64 * 1e-3);
+        }
+        let v = histogram_json(&h);
+        assert_eq!(v.get("count").and_then(Json::as_usize), Some(100));
+        // The Stats-compatible keys survive the migration…
+        assert!(v.get("mean").and_then(Json::as_f64).is_some());
+        assert!(v.get("min").and_then(Json::as_f64).is_some());
+        assert!(v.get("max").and_then(Json::as_f64).is_some());
+        // …and the quantiles are ordered and inside the data range.
+        let p50 = v.get("p50").and_then(Json::as_f64).unwrap();
+        let p90 = v.get("p90").and_then(Json::as_f64).unwrap();
+        let p99 = v.get("p99").and_then(Json::as_f64).unwrap();
+        assert!(p50 <= p90 && p90 <= p99);
+        assert!(p50 >= 1e-3 && p99 <= 0.1);
+        roundtrip(&v);
     }
 }

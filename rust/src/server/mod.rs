@@ -13,7 +13,8 @@
 //! | `GET /models/{id}` | one model, centers included |
 //! | `POST /models/{id}/assign` | batched nearest-center assignment for `points` |
 //! | `GET /healthz` | liveness + model/job counts |
-//! | `GET /metrics` | request counters, latency stats, job/model gauges |
+//! | `GET /metrics` | request counters, latency histograms (p50/p90/p99), job/model gauges |
+//! | `GET /metrics?format=prometheus` | the same, as Prometheus text exposition |
 //! | `POST /shutdown` | graceful stop (drains fit workers) |
 //!
 //! ## Contracts
@@ -201,15 +202,22 @@ fn handle_connection(mut stream: TcpStream, ctx: &ServerCtx, addr: SocketAddr) {
     // Count every accepted connection — including unparseable ones — so
     // `http.errors <= http.requests` always holds in `/metrics`.
     ctx.metrics.incr("http.requests", 1);
+    let mut span = crate::trace::Span::enter("http.request");
     let resp = match http::read_request(&mut stream) {
-        Ok(req) => route(&req, ctx),
+        Ok(req) => {
+            span.arg("method", req.method.clone());
+            span.arg("path", req.path.clone());
+            route(&req, ctx)
+        }
         Err(e) => Response::json(400, &error_json(&format!("{e:#}"))),
     };
+    span.arg("status", resp.status as u64);
     if resp.status >= 400 {
         ctx.metrics.incr("http.errors", 1);
     }
     let _ = http::write_response(&mut stream, &resp);
-    ctx.metrics.record_duration("http.latency_secs", t0.elapsed());
+    drop(span);
+    ctx.metrics.record_latency("http.latency_secs", t0.elapsed());
     // The shutdown route sets the flag (single source of truth); nudge
     // the blocking accept loop so it observes it. Target loopback — the
     // listener may be bound to a wildcard address connect() can't reach
@@ -243,7 +251,7 @@ fn route(req: &Request, ctx: &ServerCtx) -> Response {
     let segments: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
     let result: RouteResult = match (req.method.as_str(), segments.as_slice()) {
         ("GET", ["healthz"]) => Ok(handle_healthz(ctx)),
-        ("GET", ["metrics"]) => Ok(handle_metrics(ctx)),
+        ("GET", ["metrics"]) => Ok(handle_metrics(req, ctx)),
         ("POST", ["fit"]) => handle_fit(req, ctx),
         ("GET", ["jobs", id]) => handle_job(id, ctx),
         ("GET", ["models"]) => Ok(handle_models(ctx)),
@@ -286,13 +294,21 @@ fn handle_healthz(ctx: &ServerCtx) -> Response {
     )
 }
 
-fn handle_metrics(ctx: &ServerCtx) -> Response {
+fn handle_metrics(req: &Request, ctx: &ServerCtx) -> Response {
+    // `?format=prometheus` selects the text exposition; anything else
+    // (including no query) keeps the original JSON document.
+    if req.query.split('&').any(|kv| kv == "format=prometheus") {
+        return prometheus_metrics(ctx);
+    }
     let (queued, running, done, failed) = ctx.jobs.counts();
     // Request-scoped counters live on the server context; engine-level
     // counters (the shard seeding rounds, `shard.*`) accumulate in the
     // process-wide sink because fits run deep inside workers with no
     // context handle. `/metrics` surfaces both, merged name-ordered (the
     // namespaces are disjoint: `http.`/`fit.`/`assign.` vs `shard.`).
+    // Latency histograms join the `timings` object under their own
+    // names — `histogram_json` keeps the `count`/`mean`/`min`/`max`
+    // keys of `stats_json` and adds p50/p90/p99.
     let global = crate::metrics::global();
     let counters: std::collections::BTreeMap<String, Json> = ctx
         .metrics
@@ -308,6 +324,13 @@ fn handle_metrics(ctx: &ServerCtx) -> Response {
         .into_iter()
         .chain(global.timings_snapshot())
         .map(|(name, stats)| (name.to_string(), json::stats_json(&stats)))
+        .chain(
+            ctx.metrics
+                .histograms_snapshot()
+                .into_iter()
+                .chain(global.histograms_snapshot())
+                .map(|(name, h)| (name.to_string(), json::histogram_json(&h))),
+        )
         .collect();
     let timings = Json::Obj(timings.into_iter().collect());
     Response::json(
@@ -328,6 +351,48 @@ fn handle_metrics(ctx: &ServerCtx) -> Response {
             ("timings", timings),
         ]),
     )
+}
+
+/// The Prometheus text-exposition (v0.0.4) rendering of the same
+/// merged context + process-global metric state as the JSON document.
+fn prometheus_metrics(ctx: &ServerCtx) -> Response {
+    let (queued, running, done, failed) = ctx.jobs.counts();
+    let gauges = vec![
+        (
+            "uptime_seconds".to_string(),
+            ctx.started.elapsed().as_secs_f64(),
+        ),
+        ("models".to_string(), ctx.registry.len() as f64),
+        ("jobs_queued".to_string(), queued as f64),
+        ("jobs_running".to_string(), running as f64),
+        ("jobs_done".to_string(), done as f64),
+        ("jobs_failed".to_string(), failed as f64),
+    ];
+    let global = crate::metrics::global();
+    let counters: Vec<_> = ctx
+        .metrics
+        .counters_snapshot()
+        .into_iter()
+        .chain(global.counters_snapshot())
+        .collect();
+    let timings: Vec<_> = ctx
+        .metrics
+        .timings_snapshot()
+        .into_iter()
+        .chain(global.timings_snapshot())
+        .collect();
+    let histograms: Vec<_> = ctx
+        .metrics
+        .histograms_snapshot()
+        .into_iter()
+        .chain(global.histograms_snapshot())
+        .collect();
+    let body = crate::metrics::render_prometheus(&gauges, &counters, &timings, &histograms);
+    Response {
+        status: 200,
+        content_type: "text/plain; version=0.0.4; charset=utf-8",
+        body: body.into_bytes(),
+    }
 }
 
 /// `POST /fit` body:
@@ -485,7 +550,7 @@ fn handle_assign(id: &str, req: &Request, ctx: &ServerCtx) -> RouteResult {
         .get("points")
         .ok_or_else(|| (400, "missing \"points\"".to_string()))?;
     let points = json::points_from_json(pts).map_err(bad)?;
-    let timer = ctx.metrics.timer("assign.latency_secs");
+    let timer = ctx.metrics.latency_timer("assign.latency_secs");
     let (labels, d2s) = registry::assign(&model, &points).map_err(bad)?;
     timer.stop();
     ctx.metrics.incr("assign.requests", 1);
@@ -675,7 +740,10 @@ mod tests {
     fn metrics_include_global_shard_counters() {
         let ctx = test_ctx();
         // Drive the sharded engine directly; its counters land in the
-        // process-wide sink and must surface through /metrics.
+        // process-wide sink and must surface through /metrics. The sink
+        // is shared with every other test in this process, so assert on
+        // the delta across this run, never on absolute values.
+        let before = crate::metrics::CounterSnapshot::of(crate::metrics::global());
         let ps = gaussian_mixture(
             &SynthSpec {
                 n: 200,
@@ -687,6 +755,10 @@ mod tests {
         );
         let mut rng = crate::rng::Pcg64::seed_from(1);
         crate::shard::kmeanspar::kmeans_par(&ps, 5, &Default::default(), &mut rng);
+        assert!(
+            before.delta(crate::metrics::global(), "shard.rounds") >= 1,
+            "kmeans_par did not bump shard.rounds"
+        );
         let resp = route(&get("/metrics"), &ctx);
         assert_eq!(resp.status, 200);
         let v = body_json(&resp);
@@ -700,6 +772,48 @@ mod tests {
             v.get("timings").and_then(|t| t.get("shard.round_secs")).is_some(),
             "{v:?}"
         );
+    }
+
+    #[test]
+    fn metrics_prometheus_format() {
+        let ctx = test_ctx();
+        ctx.metrics.incr("http.requests", 2);
+        ctx.metrics
+            .record_latency("http.latency_secs", Duration::from_millis(3));
+        ctx.metrics
+            .record_latency("http.latency_secs", Duration::from_millis(9));
+        let req = Request {
+            method: "GET".to_string(),
+            path: "/metrics".to_string(),
+            query: "format=prometheus".to_string(),
+            body: Vec::new(),
+        };
+        let resp = route(&req, &ctx);
+        assert_eq!(resp.status, 200);
+        assert!(resp.content_type.starts_with("text/plain"));
+        let body = std::str::from_utf8(&resp.body).unwrap();
+        assert!(body.contains("# TYPE fkmpp_uptime_seconds gauge\n"), "{body}");
+        assert!(body.contains("fkmpp_http_requests_total"), "{body}");
+        assert!(
+            body.contains("# TYPE fkmpp_http_latency_secs histogram\n"),
+            "{body}"
+        );
+        assert!(
+            body.contains("fkmpp_http_latency_secs_bucket{le=\"+Inf\"}"),
+            "{body}"
+        );
+        assert!(body.contains("fkmpp_http_latency_secs_count"), "{body}");
+        // The JSON document still answers when the query asks for
+        // anything else, and it carries the histogram quantiles.
+        let resp = route(&get("/metrics"), &ctx);
+        assert_eq!(resp.content_type, "application/json");
+        let v = body_json(&resp);
+        let lat = v.get("timings").and_then(|t| t.get("http.latency_secs"));
+        let lat = lat.expect("http.latency_secs in timings");
+        assert_eq!(lat.get("count").and_then(Json::as_usize), Some(2));
+        assert!(lat.get("p50").and_then(Json::as_f64).is_some(), "{v:?}");
+        assert!(lat.get("p99").and_then(Json::as_f64).is_some(), "{v:?}");
+        assert!(lat.get("mean").and_then(Json::as_f64).is_some(), "{v:?}");
     }
 
     #[test]

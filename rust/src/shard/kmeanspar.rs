@@ -281,7 +281,13 @@ pub fn kmeans_par(ps: &PointSet, k: usize, cfg: &KMeansParConfig, rng: &mut Pcg6
         return Seeding::from_indices(ps, Vec::new(), SeedingStats::default());
     }
     let t0 = Instant::now();
-    let mut exec = LocalShardExecutor::new(ps, cfg.shards);
+    let mut exec = {
+        let _s = crate::trace::Span::enter_with(
+            "shard.init",
+            vec![("n", ps.len().into()), ("shards", cfg.shards.into())],
+        );
+        LocalShardExecutor::new(ps, cfg.shards)
+    };
     let init_secs = t0.elapsed().as_secs_f64();
     run_rounds(ps, k, cfg.rounds, cfg.oversample, &mut exec, init_secs, rng)
         .expect("the in-process round executor is infallible")
@@ -423,7 +429,9 @@ mod tests {
 
     #[test]
     fn records_round_metrics() {
-        let before = metrics::global().counter("shard.rounds");
+        // Counters accumulate process-wide; assert deltas via snapshot so
+        // concurrent unit tests can't make this flaky.
+        let before = crate::metrics::CounterSnapshot::of(metrics::global());
         let ps = mixture(800, 7);
         let mut rng = Pcg64::seed_from(9);
         let cfg = KMeansParConfig {
@@ -431,8 +439,8 @@ mod tests {
             ..Default::default()
         };
         kmeans_par(&ps, 10, &cfg, &mut rng);
-        let after = metrics::global().counter("shard.rounds");
-        assert!(after >= before + 1, "no shard rounds recorded");
-        assert!(metrics::global().counter("shard.runs") >= 1);
+        let m = metrics::global();
+        assert!(before.delta(m, "shard.rounds") >= 1, "no shard rounds recorded");
+        assert!(before.delta(m, "shard.runs") >= 1);
     }
 }

@@ -51,6 +51,36 @@ fn http(addr: &str, method: &str, path: &str, body: Option<&str>) -> (u16, Json)
     (status, parsed)
 }
 
+/// Same raw client, but returns headers + body text unparsed (the
+/// Prometheus exposition is not JSON).
+fn http_text(addr: &str, path: &str) -> (u16, String, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let request = format!(
+        "GET {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: 0\r\nConnection: close\r\n\r\n"
+    );
+    stream.write_all(request.as_bytes()).expect("write request");
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).expect("read response");
+    let status: u16 = raw
+        .split_whitespace()
+        .nth(1)
+        .unwrap_or_else(|| panic!("no status line in {raw:?}"))
+        .parse()
+        .expect("status code");
+    let split = raw.find("\r\n\r\n").expect("header/body split");
+    (status, raw[..split].to_string(), raw[split + 4..].to_string())
+}
+
+/// Prometheus metric-name grammar: `[a-zA-Z_:][a-zA-Z0-9_:]*`.
+fn valid_prometheus_name(name: &str) -> bool {
+    let mut chars = name.chars();
+    matches!(chars.next(), Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':')
+        && chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
 #[test]
 fn serve_fit_job_assign_roundtrip() {
     let dir = std::env::temp_dir().join("fkmpp_serve_e2e");
@@ -367,6 +397,89 @@ fn serve_fit_job_assign_roundtrip() {
             == Some(480),
         "{metrics:?}"
     );
+    // Observability satellite: request latency is a log-bucketed
+    // histogram now — /metrics reports its p50/p99 (JSON side).
+    let http_latency = metrics
+        .get("timings")
+        .and_then(|t| t.get("http.latency_secs"))
+        .unwrap_or_else(|| panic!("no http.latency_secs in {metrics:?}"));
+    for q in ["p50", "p99", "count", "mean"] {
+        assert!(
+            http_latency.get(q).and_then(Json::as_f64).is_some(),
+            "{q} missing from http.latency_secs: {metrics:?}"
+        );
+    }
+
+    // Prometheus exposition satellite: the same metrics as text/plain
+    // v0.0.4, parsed line-by-line — every metric name obeys the grammar,
+    // every histogram's cumulative buckets are monotone and agree with
+    // its `_count` series.
+    let (status, headers, prom) = http_text(&addr, "/metrics?format=prometheus");
+    assert_eq!(status, 200, "{prom}");
+    assert!(
+        headers.to_ascii_lowercase().contains("text/plain; version=0.0.4"),
+        "missing exposition content type in {headers:?}"
+    );
+    for needle in [
+        "# TYPE fkmpp_http_latency_secs histogram",
+        "fkmpp_http_latency_secs_bucket{le=\"+Inf\"}",
+        "fkmpp_shard_rounds_total",
+        "fkmpp_oracle_probe_secs_bucket",
+    ] {
+        assert!(prom.contains(needle), "{needle:?} missing from:\n{prom}");
+    }
+    let mut buckets: Vec<(String, String, u64)> = Vec::new(); // (metric, le, cum)
+    let mut scalars: Vec<(String, f64)> = Vec::new();
+    for line in prom.lines().filter(|l| !l.is_empty() && !l.starts_with('#')) {
+        let (series, value) = line
+            .rsplit_once(' ')
+            .unwrap_or_else(|| panic!("bad exposition line {line:?}"));
+        if let Some((metric, rest)) = series.split_once("_bucket{le=\"") {
+            let le = rest
+                .strip_suffix("\"}")
+                .unwrap_or_else(|| panic!("bad bucket label in {line:?}"));
+            assert!(valid_prometheus_name(metric), "bad name in {line:?}");
+            let cum: u64 = value.parse().unwrap_or_else(|_| panic!("bad count {line:?}"));
+            buckets.push((metric.to_string(), le.to_string(), cum));
+        } else {
+            assert!(valid_prometheus_name(series), "bad name in {line:?}");
+            let v: f64 = value.parse().unwrap_or_else(|_| panic!("bad value {line:?}"));
+            scalars.push((series.to_string(), v));
+        }
+    }
+    assert!(!buckets.is_empty(), "no histogram series in:\n{prom}");
+    // Per-histogram: cumulative counts nondecreasing, le edges strictly
+    // increasing, and the +Inf bucket equals the `_count` scalar.
+    let metric_names: Vec<String> = {
+        let mut v: Vec<String> = buckets.iter().map(|(m, _, _)| m.clone()).collect();
+        v.dedup();
+        v
+    };
+    for metric in &metric_names {
+        let series: Vec<&(String, String, u64)> =
+            buckets.iter().filter(|(m, _, _)| m == metric).collect();
+        let mut last_cum = 0u64;
+        let mut last_le = f64::NEG_INFINITY;
+        let mut inf_cum = None;
+        for (_, le, cum) in &series {
+            assert!(*cum >= last_cum, "{metric}: non-monotone buckets:\n{prom}");
+            last_cum = *cum;
+            if le == "+Inf" {
+                inf_cum = Some(*cum);
+            } else {
+                let edge: f64 = le.parse().unwrap_or_else(|_| panic!("bad le {le:?}"));
+                assert!(edge > last_le, "{metric}: le edges not increasing");
+                last_le = edge;
+            }
+        }
+        let inf_cum = inf_cum.unwrap_or_else(|| panic!("{metric}: no +Inf bucket"));
+        let count = scalars
+            .iter()
+            .find(|(n, _)| n == &format!("{metric}_count"))
+            .unwrap_or_else(|| panic!("{metric}: no _count series"))
+            .1;
+        assert_eq!(inf_cum as f64, count, "{metric}: +Inf bucket != _count");
+    }
 
     // Graceful shutdown drains the pools and run() returns Ok.
     let (status, _) = http(&addr, "POST", "/shutdown", None);

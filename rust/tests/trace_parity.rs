@@ -1,0 +1,267 @@
+//! Tracing must be free of observable effect: with the run-trace layer
+//! armed, every seeder's fixed-seed output is bitwise identical to the
+//! untraced run — the ISSUE 7 acceptance gate for `rust/src/trace.rs`.
+//!
+//! Spans sit only at coarse phase boundaries and read only the clock,
+//! so arming them may not perturb any RNG stream. One `#[test]` drives
+//! five legs:
+//!
+//! 1. **kmeanspp**: untraced baseline vs traced rerun — indices, center
+//!    bits, proposal counts, and the next run-RNG draw all equal.
+//! 2. **rejection**, for every [`OracleKind`]: same comparison.
+//! 3. **afkmc2** and in-process **kmeans-par**: same comparison.
+//! 4. **2-worker distributed kmeans-par**, traced, vs the *untraced*
+//!    in-process baseline — and the `dist.rpc_secs` latency histogram
+//!    has observations with ordered quantiles (the `/metrics` p50/p99
+//!    source for RPC round-trips).
+//! 5. **FKMPP_TRACE through the CLI**: a traced `fkmpp seed` reports the
+//!    same seeding cost as the untraced run and writes a strict-parse
+//!    valid Chrome trace that `trace::render_report` can summarize.
+//!
+//! Env-owning discipline (the `kernel_parity.rs` pattern): this file
+//! pins `FKMPP_KERNEL=naive` (worker subprocesses inherit it — the
+//! cross-process bit-parity precondition) and toggles `FKMPP_TRACE`,
+//! so it contains exactly ONE `#[test]` and restores both at the end.
+
+use std::io::BufRead;
+use std::process::{Child, Command, Stdio};
+
+use fastkmeanspp::data::synth::{gaussian_mixture, SynthSpec};
+use fastkmeanspp::dist::{kmeans_par_dist, DistConfig};
+use fastkmeanspp::rng::Pcg64;
+use fastkmeanspp::seeding::afkmc2::{afkmc2, Afkmc2Config};
+use fastkmeanspp::seeding::kmeanspp::kmeanspp;
+use fastkmeanspp::seeding::rejection::{rejection_sampling, OracleKind, RejectionConfig};
+use fastkmeanspp::seeding::Seeding;
+use fastkmeanspp::shard::kmeanspar::{kmeans_par, KMeansParConfig};
+use fastkmeanspp::{metrics, trace};
+
+const BIN: &str = env!("CARGO_BIN_EXE_fkmpp");
+
+/// One `fkmpp worker` subprocess; killed on drop so a failing assert
+/// can't leak processes.
+struct Worker {
+    child: Child,
+    addr: String,
+}
+
+impl Drop for Worker {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// Spawn an ephemeral-port worker and wait for its ready line.
+fn spawn_worker() -> Worker {
+    let mut child = Command::new(BIN)
+        .args(["worker", "--port", "0"])
+        .stdout(Stdio::piped())
+        .spawn()
+        .expect("spawn fkmpp worker");
+    let stdout = child.stdout.take().expect("worker stdout not captured");
+    let mut reader = std::io::BufReader::new(stdout);
+    let mut line = String::new();
+    let _ = reader.read_line(&mut line);
+    assert!(line.contains("http://"), "bad worker ready line {line:?}");
+    let addr = line.rsplit("http://").next().unwrap().trim().to_string();
+    // Keep draining stdout so the worker never blocks on a full pipe.
+    std::thread::spawn(move || {
+        let mut sink = String::new();
+        while matches!(reader.read_line(&mut sink), Ok(b) if b > 0) {
+            sink.clear();
+        }
+    });
+    Worker { child, addr }
+}
+
+/// The full RNG-visible fingerprint of one seeding run: indices, center
+/// bits, proposal count, and the next draw of the run RNG.
+struct Fingerprint {
+    indices: Vec<usize>,
+    center_bits: Vec<u32>,
+    proposals: u64,
+    next_draw: u64,
+}
+
+fn fingerprint(seed: u64, f: impl FnOnce(&mut Pcg64) -> Seeding) -> Fingerprint {
+    let mut rng = Pcg64::seed_from(seed);
+    let s = f(&mut rng);
+    Fingerprint {
+        indices: s.indices.clone(),
+        center_bits: s.centers.flat().iter().map(|x| x.to_bits()).collect(),
+        proposals: s.stats.proposals,
+        next_draw: rng.next_u64(),
+    }
+}
+
+fn assert_same(what: &str, a: &Fingerprint, b: &Fingerprint) {
+    assert_eq!(a.indices, b.indices, "{what}: indices diverged under tracing");
+    assert_eq!(
+        a.center_bits, b.center_bits,
+        "{what}: center bits diverged under tracing"
+    );
+    assert_eq!(
+        a.proposals, b.proposals,
+        "{what}: proposal count diverged under tracing"
+    );
+    assert_eq!(
+        a.next_draw, b.next_draw,
+        "{what}: run RNG stream diverged under tracing"
+    );
+}
+
+#[test]
+fn traced_runs_are_bitwise_identical_to_untraced() {
+    // Pinned for the whole test; worker subprocesses inherit it.
+    std::env::set_var("FKMPP_KERNEL", "naive");
+    std::env::remove_var("FKMPP_TRACE");
+
+    // 6_000 rows = 2 summation blocks, so both distributed workers own
+    // aligned, non-empty ranges.
+    let ps = gaussian_mixture(
+        &SynthSpec {
+            n: 6_000,
+            d: 8,
+            k_true: 10,
+            ..Default::default()
+        },
+        11,
+    );
+    let k = 15;
+    let pcfg = KMeansParConfig {
+        shards: 3,
+        rounds: 3,
+        oversample: 2.0,
+    };
+
+    // Untraced baselines first (the recorder is off), then the identical
+    // runs with the recorder armed.
+    trace::set_enabled(false);
+    trace::clear();
+    let base_pp = fingerprint(11, |rng| kmeanspp(&ps, k, rng));
+    let base_rej: Vec<(OracleKind, Fingerprint)> = OracleKind::all()
+        .into_iter()
+        .map(|oracle| {
+            let cfg = RejectionConfig {
+                oracle,
+                ..Default::default()
+            };
+            (oracle, fingerprint(13, |rng| rejection_sampling(&ps, k, &cfg, rng)))
+        })
+        .collect();
+    let base_afk = fingerprint(17, |rng| afkmc2(&ps, k, &Afkmc2Config::default(), rng));
+    let base_par = fingerprint(19, |rng| kmeans_par(&ps, k, &pcfg, rng));
+
+    trace::set_enabled(true);
+
+    // Legs 1-3: every in-process seeder, traced, lands on the baseline.
+    assert_same("kmeanspp", &base_pp, &fingerprint(11, |rng| kmeanspp(&ps, k, rng)));
+    for (oracle, base) in &base_rej {
+        let cfg = RejectionConfig {
+            oracle: *oracle,
+            ..Default::default()
+        };
+        let traced = fingerprint(13, |rng| rejection_sampling(&ps, k, &cfg, rng));
+        assert_same(&format!("rejection/{}", oracle.name()), base, &traced);
+    }
+    assert_same(
+        "afkmc2",
+        &base_afk,
+        &fingerprint(17, |rng| afkmc2(&ps, k, &Afkmc2Config::default(), rng)),
+    );
+    assert_same(
+        "kmeans-par",
+        &base_par,
+        &fingerprint(19, |rng| kmeans_par(&ps, k, &pcfg, rng)),
+    );
+
+    // Leg 4: the traced 2-worker distributed run reproduces the untraced
+    // in-process baseline, and RPC round-trip latencies land in the
+    // log-bucketed histogram behind `/metrics` p50/p99.
+    {
+        let before = metrics::CounterSnapshot::of(metrics::global());
+        let rpc_count_before = metrics::global()
+            .histogram("dist.rpc_secs")
+            .map_or(0, |h| h.count());
+        let w1 = spawn_worker();
+        let w2 = spawn_worker();
+        let dcfg = DistConfig {
+            workers: vec![w1.addr.clone(), w2.addr.clone()],
+            rounds: pcfg.rounds,
+            oversample: pcfg.oversample,
+            ..DistConfig::default()
+        };
+        let traced = fingerprint(19, |rng| {
+            kmeans_par_dist(&ps, k, &dcfg, rng)
+                .unwrap_or_else(|e| panic!("traced 2-worker run failed: {e:#}"))
+        });
+        assert_same("dist-2worker", &base_par, &traced);
+        assert!(before.delta(metrics::global(), "dist.rpcs") > 0);
+        let hist = metrics::global()
+            .histogram("dist.rpc_secs")
+            .expect("dist.rpc_secs histogram populated");
+        assert!(hist.count() > rpc_count_before, "no RPC latencies recorded");
+        let (p50, p99) = (hist.quantile(0.50), hist.quantile(0.99));
+        assert!(p50 > 0.0 && p99 >= p50, "bad RPC quantiles p50={p50} p99={p99}");
+    }
+
+    // The recorded trace round-trips through the strict parser and the
+    // report renderer, with the coarse driver phases present.
+    let doc = trace::export_json();
+    let reparsed = fastkmeanspp::server::json::parse(&doc.emit()).expect("trace JSON reparses");
+    let events = reparsed
+        .get("traceEvents")
+        .and_then(|e| e.as_array())
+        .expect("traceEvents array");
+    assert!(!events.is_empty(), "trace recorded no spans");
+    for name in ["seed.kmeanspp.select", "seed.rejection.init", "shard.round", "dist.rpc"] {
+        assert!(
+            events
+                .iter()
+                .any(|e| e.get("name").and_then(|n| n.as_str()) == Some(name)),
+            "span {name:?} missing from trace"
+        );
+    }
+    let report = trace::render_report(&reparsed).expect("report renders");
+    assert!(report.contains("shard.round"), "{report}");
+
+    // Leg 5: FKMPP_TRACE through the CLI — same seeding cost as the
+    // untraced CLI run, plus a strict-parse valid trace file on disk.
+    {
+        let dir = std::env::temp_dir().join("fkmpp_trace_parity_data");
+        let path = std::env::temp_dir().join("fkmpp_trace_parity.json");
+        let _ = std::fs::remove_file(&path);
+        let args = |extra: &str| -> Vec<String> {
+            format!(
+                "seed --dataset kdd_sim --algo rejection -k 10 --profile smoke \
+                 --data-dir {} --artifacts-dir /nonexistent --seed 5{extra}",
+                dir.display()
+            )
+            .split_whitespace()
+            .map(str::to_string)
+            .collect()
+        };
+        std::env::set_var("FKMPP_TRACE", &path);
+        let traced_out = fastkmeanspp::cli::run(&args("")).expect("traced CLI seed run");
+        std::env::remove_var("FKMPP_TRACE");
+        let plain_out = fastkmeanspp::cli::run(&args("")).expect("untraced CLI seed run");
+        let cost_line = |out: &str| -> String {
+            out.lines()
+                .find(|l| l.starts_with("seeding cost"))
+                .unwrap_or_else(|| panic!("no cost line in {out:?}"))
+                .to_string()
+        };
+        assert_eq!(
+            cost_line(&traced_out),
+            cost_line(&plain_out),
+            "FKMPP_TRACE changed the seeding result"
+        );
+        assert!(traced_out.contains("wrote trace"), "{traced_out}");
+        let text = std::fs::read_to_string(&path).expect("trace file written");
+        let doc = fastkmeanspp::server::json::parse(&text).expect("trace file strict-parses");
+        trace::render_report(&doc).expect("trace file reportable");
+    }
+
+    std::env::remove_var("FKMPP_KERNEL");
+}
