@@ -6,6 +6,7 @@
 //! fkmpp table     --which 1..8|all [--profile scaled] [--reps 5]
 //! fkmpp datasets  gen [--profile scaled]
 //! fkmpp serve     --port 8080 [--data-dir data] [--fit-workers 1]
+//! fkmpp loadgen   [--short] [--conns 1,2,8] [--json BENCH_serve.json]
 //! fkmpp worker    --port 9090 [--fail-after N]
 //! fkmpp report    --trace trace.json
 //! fkmpp info
@@ -164,7 +165,7 @@ pub fn run(argv: &[String]) -> Result<String> {
     // boundaries, so traced runs stay bitwise-identical to untraced ones
     // (`rust/tests/trace_parity.rs`).
     let trace_path = match args.command.as_str() {
-        "seed" | "grid" | "serve" => args
+        "seed" | "grid" | "serve" | "loadgen" => args
             .get("trace")
             .map(str::to_string)
             .or_else(|| std::env::var("FKMPP_TRACE").ok().filter(|s| !s.is_empty())),
@@ -179,6 +180,7 @@ pub fn run(argv: &[String]) -> Result<String> {
         "table" => cmd_table(&args),
         "datasets" => cmd_datasets(&args),
         "serve" => cmd_serve(&args),
+        "loadgen" => cmd_loadgen(&args),
         "worker" => cmd_worker(&args),
         "report" => cmd_report(&args),
         "info" => cmd_info(&args),
@@ -222,7 +224,12 @@ USAGE:
   fkmpp datasets gen [--profile scaled] [--data-dir data]
   fkmpp serve    [--port 8080] [--host 127.0.0.1] [--data-dir data]
                  [--http-workers 4] [--fit-workers 1] [--no-persist]
+                 [--queue-depth 128] [--fit-queue-depth 64]
+                 [--idle-timeout-secs 15] [--max-requests-per-conn 1000]
                  [--trace trace.json]
+  fkmpp loadgen  [--short] [--conns 1,2,8] [--points 256] [--dim 16]
+                 [-k 64] [--requests 100] [--reps 2] [--seed 42]
+                 [--json BENCH_serve.json] [--trace trace.json]
   fkmpp worker   [--port 0] [--host 127.0.0.1] [--fail-after N]
   fkmpp report   --trace trace.json
   fkmpp info
@@ -441,11 +448,48 @@ fn cmd_serve(args: &Args) -> Result<String> {
         http_workers: args.get_usize("http-workers", defaults.http_workers)?,
         fit_workers: args.get_usize("fit-workers", defaults.fit_workers)?,
         persist: args.get("no-persist").is_none(),
+        queue_depth: args.get_usize("queue-depth", defaults.queue_depth)?,
+        fit_queue_depth: args.get_usize("fit-queue-depth", defaults.fit_queue_depth)?,
+        keepalive_idle: {
+            let secs =
+                args.get_f64("idle-timeout-secs", defaults.keepalive_idle.as_secs_f64())?;
+            if !(secs > 0.0 && secs.is_finite()) {
+                bail!("--idle-timeout-secs must be a positive number");
+            }
+            std::time::Duration::from_secs_f64(secs)
+        },
+        keepalive_max_requests: args
+            .get_usize("max-requests-per-conn", defaults.keepalive_max_requests)?,
     };
     let server = crate::server::Server::bind(&scfg)?;
     eprintln!("[serve] listening on http://{}", server.local_addr()?);
     server.run()?;
     Ok("server stopped\n".to_string())
+}
+
+/// `fkmpp loadgen`: drive a self-booted server through the
+/// route × connection-mode × connections sweep and (optionally) write
+/// the `BENCH_serve.json` artifact.
+fn cmd_loadgen(args: &Args) -> Result<String> {
+    let mut cfg = if args.get("short").is_some() {
+        crate::server::loadgen::LoadgenConfig::short()
+    } else {
+        crate::server::loadgen::LoadgenConfig::default()
+    };
+    if let Some(list) = args.get("conns") {
+        cfg.conns = list
+            .split(',')
+            .map(|s| s.trim().parse::<usize>().context("--conns"))
+            .collect::<Result<Vec<_>>>()?;
+    }
+    cfg.points = args.get_usize("points", cfg.points)?;
+    cfg.dim = args.get_usize("dim", cfg.dim)?;
+    cfg.k = args.get_usize("k", cfg.k)?;
+    cfg.requests = args.get_usize("requests", cfg.requests)?;
+    cfg.reps = args.get_usize("reps", cfg.reps)?;
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    cfg.json_path = args.get("json").map(str::to_string);
+    crate::server::loadgen::run(&cfg)
 }
 
 /// `fkmpp worker`: boot a distributed-fit worker ([`crate::dist::worker`])

@@ -381,6 +381,60 @@ pub fn rejection_json(cells: &[RejectionCell], reps: usize, seed: u64, threads: 
     bench_json("rejection_bench", cell_docs, reps, seed, threads)
 }
 
+/// One cell of the serving-path load sweep (`fkmpp loadgen`): one
+/// (route, connection mode, connection count) combination driven against
+/// a live `fkmpp serve` instance.
+pub struct ServeCell {
+    /// Payload label, e.g. `payload_n256_d16` (points × dims per request).
+    pub dataset: String,
+    /// Route + connection mode, e.g. `assign_binary_keepalive`.
+    pub algorithm: String,
+    /// Request body encoding: `json` or `binary` (.fbin / FKA1 frame).
+    pub route: String,
+    /// Connection discipline: `keepalive` (reused) or `close` (per request).
+    pub mode: String,
+    /// Concurrent client connections.
+    pub connections: usize,
+    /// Centers in the served model.
+    pub k: usize,
+    /// Per-rep wall-clock seconds for the whole request batch.
+    pub seconds: Stats,
+    /// Exact per-request latency percentiles over all reps, milliseconds.
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    /// Completed requests per second of wall clock, summed over reps.
+    pub throughput_rps: f64,
+}
+
+/// `BENCH_serve.json` — the serving-path load artifact. Same top-level
+/// shape and per-cell field names as [`grid_json`] / [`kernels_json`]
+/// (one consumer reads every `BENCH_*.json`); serve cells carry no cost
+/// statistics (null, like unpopulated grid stats) and add the
+/// route/mode/connections axes plus latency percentiles and throughput.
+pub fn serve_json(cells: &[ServeCell], reps: usize, seed: u64, threads: usize) -> Json {
+    let cell_docs: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            Json::obj(vec![
+                ("dataset", Json::str(c.dataset.clone())),
+                ("algorithm", Json::str(c.algorithm.clone())),
+                ("route", Json::str(c.route.clone())),
+                ("mode", Json::str(c.mode.clone())),
+                ("connections", Json::num(c.connections as f64)),
+                ("k", Json::num(c.k as f64)),
+                ("seconds", stats_json(&c.seconds)),
+                ("cost", Json::Null),
+                ("lloyd_cost", Json::Null),
+                ("proposals_per_center", Json::Null),
+                ("p50_ms", Json::num(c.p50_ms)),
+                ("p99_ms", Json::num(c.p99_ms)),
+                ("throughput_rps", Json::num(c.throughput_rps)),
+            ])
+        })
+        .collect();
+    bench_json("serve_bench", cell_docs, reps, seed, threads)
+}
+
 /// Lemma 5.3 diagnostic: proposals per accepted center for the rejection
 /// sampler (expected `O(c^2 d^2)`, far smaller in practice).
 pub fn rejection_diagnostics(res: &GridResults, dataset: DatasetId, ks: &[usize]) -> String {
@@ -648,6 +702,46 @@ mod tests {
         assert!(cell.get("cost").unwrap().get("mean").is_some());
         assert!(cell.get("proposals_per_center").unwrap().get("mean").is_some());
         assert!(cell.get("lloyd_cost").map(Json::is_null).unwrap());
+    }
+
+    #[test]
+    fn serve_json_round_trips_with_grid_shape() {
+        let mut s = Stats::new();
+        s.push(0.2);
+        s.push(0.25);
+        let cells = vec![ServeCell {
+            dataset: "payload_n256_d16".to_string(),
+            algorithm: "assign_binary_keepalive".to_string(),
+            route: "binary".to_string(),
+            mode: "keepalive".to_string(),
+            connections: 8,
+            k: 64,
+            seconds: s,
+            p50_ms: 0.8,
+            p99_ms: 2.5,
+            throughput_rps: 1234.5,
+        }];
+        let doc = serve_json(&cells, 2, 7, 4);
+        let back = crate::server::json::parse(&doc.emit()).unwrap();
+        assert_eq!(back.get("profile").and_then(Json::as_str), Some("serve_bench"));
+        assert_eq!(back.get("reps").and_then(Json::as_usize), Some(2));
+        assert_eq!(back.get("threads").and_then(Json::as_usize), Some(4));
+        let arr = back.get("cells").and_then(Json::as_array).unwrap();
+        assert_eq!(arr.len(), 1);
+        let cell = &arr[0];
+        assert_eq!(
+            cell.get("algorithm").and_then(Json::as_str),
+            Some("assign_binary_keepalive")
+        );
+        assert_eq!(cell.get("route").and_then(Json::as_str), Some("binary"));
+        assert_eq!(cell.get("mode").and_then(Json::as_str), Some("keepalive"));
+        assert_eq!(cell.get("connections").and_then(Json::as_usize), Some(8));
+        assert!(cell.get("seconds").unwrap().get("mean").is_some());
+        assert!(cell.get("cost").map(Json::is_null).unwrap());
+        let rps = cell.get("throughput_rps").and_then(Json::as_f64).unwrap();
+        assert!((rps - 1234.5).abs() < 1e-9);
+        assert!(cell.get("p50_ms").and_then(Json::as_f64).is_some());
+        assert!(cell.get("p99_ms").and_then(Json::as_f64).is_some());
     }
 
     #[test]

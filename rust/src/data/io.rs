@@ -55,6 +55,47 @@ pub fn read_fbin(path: &Path) -> Result<PointSet> {
     Ok(PointSet::from_flat(n, d, data))
 }
 
+/// Encode a point set as in-memory `.fbin` bytes — the same layout as
+/// [`write_fbin`], used as the request body of the binary assign route.
+pub fn encode_fbin(ps: &PointSet) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + ps.flat().len() * 4);
+    out.extend_from_slice(&(ps.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(ps.dim() as u32).to_le_bytes());
+    for v in ps.flat() {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Decode in-memory `.fbin` bytes. Stricter than [`read_fbin`]: trailing
+/// bytes after the declared `n*d` floats are rejected — an HTTP body is
+/// a complete message, so extra bytes mean a framing bug, not padding.
+pub fn decode_fbin(bytes: &[u8]) -> Result<PointSet> {
+    if bytes.len() < 8 {
+        bail!("fbin body too short for header ({} bytes)", bytes.len());
+    }
+    let n = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
+    let d = u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
+    let want = n
+        .checked_mul(d)
+        .and_then(|e| e.checked_mul(4))
+        .and_then(|b| b.checked_add(8));
+    let Some(want) = want.filter(|_| d > 0) else {
+        bail!("corrupt fbin header n={n} d={d}");
+    };
+    if bytes.len() != want {
+        bail!(
+            "fbin body is {} bytes, header n={n} d={d} implies {want}",
+            bytes.len()
+        );
+    }
+    let data = bytes[8..]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok(PointSet::from_flat(n, d, data))
+}
+
 /// Read a headerless numeric CSV (comma or whitespace separated), the
 /// format the UCI dumps use after stripping ids/labels.
 pub fn read_csv(path: &Path) -> Result<PointSet> {
@@ -124,6 +165,40 @@ mod tests {
         let p = tmp("trunc.fbin");
         std::fs::write(&p, [5u8, 0, 0, 0, 2, 0, 0, 0, 1, 2, 3]).unwrap();
         assert!(read_fbin(&p).is_err());
+    }
+
+    #[test]
+    fn fbin_memory_roundtrip_matches_disk_bytes() {
+        let ps = gaussian_mixture(
+            &SynthSpec {
+                n: 33,
+                d: 5,
+                k_true: 2,
+                ..Default::default()
+            },
+            4,
+        );
+        let bytes = encode_fbin(&ps);
+        assert_eq!(decode_fbin(&bytes).unwrap(), ps);
+        // The in-memory encoding is byte-identical to the on-disk one.
+        let p = tmp("mem.fbin");
+        write_fbin(&ps, &p).unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), bytes);
+    }
+
+    #[test]
+    fn decode_fbin_rejects_bad_framing() {
+        // Too short for a header.
+        assert!(decode_fbin(&[1, 0, 0]).is_err());
+        // Truncated body.
+        assert!(decode_fbin(&[5, 0, 0, 0, 2, 0, 0, 0, 1, 2, 3]).is_err());
+        // Zero dimension.
+        assert!(decode_fbin(&[1, 0, 0, 0, 0, 0, 0, 0]).is_err());
+        // Trailing garbage after the declared floats.
+        let ps = PointSet::from_flat(1, 2, vec![1.0, 2.0]);
+        let mut bytes = encode_fbin(&ps);
+        bytes.push(0xFF);
+        assert!(decode_fbin(&bytes).is_err());
     }
 
     #[test]

@@ -217,11 +217,7 @@ fn run_frame(state: &mut Option<ShardState>, frame: Frame) -> Result<Frame> {
 }
 
 fn binary_response(status: u16, body: Vec<u8>) -> Response {
-    Response {
-        status,
-        content_type: "application/octet-stream",
-        body,
-    }
+    Response::binary(status, body)
 }
 
 fn route(
@@ -286,15 +282,29 @@ pub fn serve(listener: TcpListener, cfg: &WorkerConfig) -> Result<()> {
         };
         stream.set_read_timeout(Some(Duration::from_secs(30))).ok();
         stream.set_write_timeout(Some(Duration::from_secs(30))).ok();
-        let req = match read_request(&mut stream) {
-            Ok(r) => r,
+        // One request per connection by design (the coordinator's RPCs
+        // are strictly sequential and open a fresh connection each), so
+        // the per-connection reader lives only for this iteration and
+        // every response announces `Connection: close`.
+        let mut reader = match stream.try_clone() {
+            Ok(clone) => std::io::BufReader::new(clone),
+            Err(_) => continue,
+        };
+        let req = match read_request(&mut reader, &mut stream) {
+            Ok(crate::server::http::ReadOutcome::Request(r)) => r,
+            Ok(crate::server::http::ReadOutcome::Closed) => continue,
+            Ok(crate::server::http::ReadOutcome::Malformed { status, reason }) => {
+                m.incr("dist.worker.bad_requests", 1);
+                let _ = write_response(&mut stream, &Response::text(status, reason), false);
+                continue;
+            }
             Err(_) => {
                 m.incr("dist.worker.bad_requests", 1);
                 continue;
             }
         };
         let (resp, shutdown) = route(&mut state, &mut served, cfg, &req);
-        let _ = write_response(&mut stream, &resp);
+        let _ = write_response(&mut stream, &resp, false);
         if shutdown {
             break;
         }

@@ -2,16 +2,33 @@
 //! parsing and response writing over plain `std::io` streams, zero
 //! dependencies.
 //!
-//! Scope is deliberately small: one request per connection
-//! (`Connection: close`), bodies framed by `Content-Length` only (no
+//! Scope is deliberately small: sequential (pipelined) requests on a
+//! kept-alive connection, bodies framed by `Content-Length` only (no
 //! chunked transfer), no TLS. That covers `curl`, load-balancer health
-//! checks and the integration harness; anything fancier belongs in a
-//! fronting proxy. Parsing is generic over [`Read`]/[`Write`] so unit
-//! tests drive it with byte slices instead of sockets.
+//! checks, the `fkmpp loadgen` driver and the integration harness;
+//! anything fancier belongs in a fronting proxy. Parsing is generic over
+//! [`BufRead`]/[`Write`] so unit tests drive it with byte slices instead
+//! of sockets — and so the caller owns the buffered reader, which MUST
+//! survive across requests on one connection (bytes of the next
+//! pipelined request may already sit in its buffer).
+//!
+//! Protocol notes (the keep-alive bugfix set):
+//!
+//! * Leading bare CRLFs before the request line are skipped (RFC 7230
+//!   §3.5) up to [`MAX_LEADING_BLANKS`] — keep-alive clients emit stray
+//!   CRLFs between pipelined requests.
+//! * Clean EOF between requests is [`ReadOutcome::Closed`], not an
+//!   error: under keep-alive the peer hanging up is the normal end of a
+//!   connection's life.
+//! * Duplicate `Content-Length` headers with conflicting values are a
+//!   request-smuggling hazard on reused connections and are rejected
+//!   with 400 (identical duplicates are tolerated); `Transfer-Encoding`
+//!   is not supported and likewise rejected rather than ignored.
+//! * `Expect: 100-continue` gets the interim `100 Continue` before the
+//!   body is read — without it `curl` stalls ~1s on any body > 1 KiB.
 
-use std::io::{BufRead, BufReader, Read, Write};
+use std::io::{BufRead, Read, Write};
 
-use crate::bail;
 use crate::error::{Context, Result};
 
 /// Maximum accepted request body. Inline datasets can be sizeable, but
@@ -20,11 +37,17 @@ use crate::error::{Context, Result};
 /// `dataset` fit path (disk-cached `.fbin`) instead of inline points.
 pub const MAX_BODY_BYTES: usize = 64 << 20;
 
-/// Maximum total header bytes before we drop the connection.
+/// Maximum total header bytes before we reject the request.
 const MAX_HEADER_BYTES: usize = 64 << 10;
 
-/// A parsed HTTP request. Headers other than `Content-Length` are
-/// skipped — the routes are path + body shaped.
+/// How many bare CRLF/LF lines may precede the request line (RFC 7230
+/// §3.5 says to ignore "at least one"; a bounded few keeps a blank-line
+/// flood from spinning the parser).
+const MAX_LEADING_BLANKS: usize = 4;
+
+/// A parsed HTTP request. Headers other than the framing/connection set
+/// (`Content-Length`, `Content-Type`, `Connection`, `Expect`,
+/// `Transfer-Encoding`) are skipped — the routes are path + body shaped.
 #[derive(Debug)]
 pub struct Request {
     pub method: String,
@@ -32,6 +55,13 @@ pub struct Request {
     pub path: String,
     /// Raw query string (without the `?`), empty if none.
     pub query: String,
+    /// Lowercased `Content-Type` value, empty if absent. Routes that
+    /// accept both JSON and binary bodies dispatch on it.
+    pub content_type: String,
+    /// Whether the client allows the connection to be reused after this
+    /// request (HTTP/1.1 defaults to yes unless `Connection: close`;
+    /// HTTP/1.0 defaults to no unless `Connection: keep-alive`).
+    pub keep_alive: bool,
     pub body: Vec<u8>,
 }
 
@@ -42,84 +72,222 @@ impl Request {
     }
 }
 
+/// What [`read_request`] saw on the stream. `Err` is reserved for
+/// transport-level failures (idle timeout, reset) where no response can
+/// usefully be written.
+#[derive(Debug)]
+pub enum ReadOutcome {
+    /// A complete, well-formed request.
+    Request(Request),
+    /// Clean EOF before any request bytes — the peer closed the
+    /// connection between requests. Not an error under keep-alive.
+    Closed,
+    /// A malformed request: the caller should write a response with
+    /// `status`/`reason` and close the connection (framing can no longer
+    /// be trusted).
+    Malformed { status: u16, reason: String },
+}
+
+/// One `\n`-terminated line, classified. `Err` carries only I/O errors.
+enum Line {
+    /// EOF before any byte of this line.
+    Eof,
+    /// A line (newline included; EOF-truncated lines come back as-is).
+    Text(String),
+    /// The line exceeded the byte cap before its newline.
+    TooLong,
+    /// The line bytes were not UTF-8.
+    NotUtf8,
+}
+
 /// Read one `\n`-terminated line with a hard byte cap, so a client that
 /// streams an endless request/header line is cut off instead of growing
 /// the buffer without bound (`BufRead::read_line` has no such cap).
-fn read_line_capped<R: BufRead>(reader: &mut R, cap: usize) -> Result<String> {
+fn read_line_capped<R: BufRead>(reader: &mut R, cap: usize) -> std::io::Result<Line> {
     let mut buf = Vec::new();
     let mut byte = [0u8; 1];
     loop {
-        if reader.read(&mut byte).context("read header byte")? == 0 {
-            break; // EOF
+        if reader.read(&mut byte)? == 0 {
+            if buf.is_empty() {
+                return Ok(Line::Eof);
+            }
+            break;
         }
         buf.push(byte[0]);
         if byte[0] == b'\n' {
             break;
         }
         if buf.len() > cap {
-            bail!("header line exceeds {cap} bytes");
+            return Ok(Line::TooLong);
         }
     }
-    String::from_utf8(buf).context("header is not UTF-8")
+    match String::from_utf8(buf) {
+        Ok(s) => Ok(Line::Text(s)),
+        Err(_) => Ok(Line::NotUtf8),
+    }
 }
 
-/// Read and parse one request from `stream`.
-pub fn read_request<S: Read>(stream: &mut S) -> Result<Request> {
-    let mut reader = BufReader::new(stream);
-    let line = read_line_capped(&mut reader, MAX_HEADER_BYTES).context("read request line")?;
-    if line.trim_end().is_empty() {
-        bail!("empty request");
-    }
+fn malformed(status: u16, reason: impl Into<String>) -> Result<ReadOutcome> {
+    Ok(ReadOutcome::Malformed {
+        status,
+        reason: reason.into(),
+    })
+}
+
+/// Read and parse one request from `reader`. The caller owns the
+/// [`BufRead`] and must reuse it for every request on the connection —
+/// pipelined bytes buffered past the current request live in it.
+/// `interim` is the write half of the same connection, used only to emit
+/// the `100 Continue` interim response when the client sent
+/// `Expect: 100-continue` (pass a `Vec<u8>` in tests).
+pub fn read_request<R: BufRead, W: Write>(
+    reader: &mut R,
+    interim: &mut W,
+) -> Result<ReadOutcome> {
+    // RFC 7230 §3.5: skip a bounded run of bare CRLFs before the request
+    // line. EOF here — including EOF after stray blanks — is the peer
+    // closing between requests: clean, not malformed.
+    let mut blanks = 0usize;
+    let line = loop {
+        let line = match read_line_capped(reader, MAX_HEADER_BYTES).context("read request line")? {
+            Line::Eof => return Ok(ReadOutcome::Closed),
+            Line::TooLong => {
+                return malformed(400, format!("request line exceeds {MAX_HEADER_BYTES} bytes"))
+            }
+            Line::NotUtf8 => return malformed(400, "request line is not UTF-8"),
+            Line::Text(s) => s,
+        };
+        if !line.trim_end().is_empty() {
+            break line;
+        }
+        blanks += 1;
+        if blanks > MAX_LEADING_BLANKS {
+            return malformed(400, "too many empty lines before request line");
+        }
+    };
     let mut parts = line.split_whitespace();
-    let method = parts
-        .next()
-        .context("missing method")?
-        .to_ascii_uppercase();
-    let target = parts.next().context("missing request target")?.to_string();
+    let Some(method) = parts.next() else {
+        return malformed(400, "missing method");
+    };
+    let method = method.to_ascii_uppercase();
+    let Some(target) = parts.next() else {
+        return malformed(400, "missing request target");
+    };
+    let target = target.to_string();
     let version = parts.next().unwrap_or("HTTP/1.0");
     if !version.starts_with("HTTP/1.") {
-        bail!("unsupported version {version:?}");
+        return malformed(400, format!("unsupported version {version:?}"));
     }
+    let http10 = version == "HTTP/1.0";
     let (path, query) = match target.split_once('?') {
         Some((p, q)) => (p.to_string(), q.to_string()),
         None => (target, String::new()),
     };
-    let mut content_length = 0usize;
+    let mut content_length: Option<usize> = None;
+    let mut content_type = String::new();
+    let mut conn_close = false;
+    let mut conn_keep = false;
+    let mut expect_continue = false;
     let mut header_bytes = line.len();
     loop {
         let budget = MAX_HEADER_BYTES.saturating_sub(header_bytes);
-        let header = read_line_capped(&mut reader, budget).context("read header")?;
-        if header.is_empty() {
-            bail!("connection closed mid-headers");
-        }
+        let header = match read_line_capped(reader, budget).context("read header")? {
+            Line::Eof => return malformed(400, "connection closed mid-headers"),
+            Line::TooLong => {
+                return malformed(400, format!("headers exceed {MAX_HEADER_BYTES} bytes"))
+            }
+            Line::NotUtf8 => return malformed(400, "header is not UTF-8"),
+            Line::Text(s) => s,
+        };
         header_bytes += header.len();
         if header_bytes > MAX_HEADER_BYTES {
-            bail!("headers exceed {MAX_HEADER_BYTES} bytes");
+            return malformed(400, format!("headers exceed {MAX_HEADER_BYTES} bytes"));
         }
         let header = header.trim_end();
         if header.is_empty() {
             break;
         }
-        if let Some((name, value)) = header.split_once(':') {
-            if name.trim().eq_ignore_ascii_case("content-length") {
-                content_length = value
-                    .trim()
-                    .parse()
-                    .with_context(|| format!("Content-Length {value:?}"))?;
+        let Some((name, value)) = header.split_once(':') else {
+            continue;
+        };
+        let name = name.trim();
+        let value = value.trim();
+        if name.eq_ignore_ascii_case("content-length") {
+            let Ok(parsed) = value.parse::<usize>() else {
+                return malformed(400, format!("unparseable Content-Length {value:?}"));
+            };
+            // Conflicting duplicates are the request-smuggling classic:
+            // two framings of the same stream. Reject; tolerate exact
+            // repeats (some proxies emit them).
+            match content_length {
+                Some(prev) if prev != parsed => {
+                    return malformed(
+                        400,
+                        format!("conflicting Content-Length headers ({prev} vs {parsed})"),
+                    )
+                }
+                _ => content_length = Some(parsed),
+            }
+        } else if name.eq_ignore_ascii_case("transfer-encoding") {
+            // Not supported — and silently ignoring it while framing by
+            // Content-Length is exactly the TE/CL smuggling vector.
+            return malformed(400, "Transfer-Encoding is not supported (use Content-Length)");
+        } else if name.eq_ignore_ascii_case("content-type") {
+            content_type = value.to_ascii_lowercase();
+        } else if name.eq_ignore_ascii_case("connection") {
+            for tok in value.split(',') {
+                let tok = tok.trim();
+                if tok.eq_ignore_ascii_case("close") {
+                    conn_close = true;
+                } else if tok.eq_ignore_ascii_case("keep-alive") {
+                    conn_keep = true;
+                }
+            }
+        } else if name.eq_ignore_ascii_case("expect") {
+            if value.eq_ignore_ascii_case("100-continue") {
+                expect_continue = true;
+            } else {
+                return malformed(417, format!("unsupported expectation {value:?}"));
             }
         }
     }
+    let content_length = content_length.unwrap_or(0);
     if content_length > MAX_BODY_BYTES {
-        bail!("body of {content_length} bytes exceeds limit {MAX_BODY_BYTES}");
+        return malformed(
+            413,
+            format!("body of {content_length} bytes exceeds limit {MAX_BODY_BYTES}"),
+        );
+    }
+    // `close` wins over `keep-alive` if a confused client sends both.
+    let keep_alive = if conn_close {
+        false
+    } else if conn_keep {
+        true
+    } else {
+        !http10
+    };
+    if expect_continue && content_length > 0 {
+        interim
+            .write_all(b"HTTP/1.1 100 Continue\r\n\r\n")
+            .context("write 100 Continue")?;
+        interim.flush().context("flush 100 Continue")?;
     }
     let mut body = vec![0u8; content_length];
-    reader.read_exact(&mut body).context("read body")?;
-    Ok(Request {
+    if let Err(e) = reader.read_exact(&mut body) {
+        return if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            malformed(400, "connection closed mid-body")
+        } else {
+            Err(crate::error::Error::from(e)).context("read body")
+        };
+    }
+    Ok(ReadOutcome::Request(Request {
         method,
         path,
         query,
+        content_type,
+        keep_alive,
         body,
-    })
+    }))
 }
 
 /// An HTTP response about to be written.
@@ -128,6 +296,9 @@ pub struct Response {
     pub status: u16,
     pub content_type: &'static str,
     pub body: Vec<u8>,
+    /// Extra response headers (e.g. `Retry-After` on a 429), written
+    /// verbatim between the framing headers and `Connection:`.
+    pub headers: Vec<(&'static str, String)>,
 }
 
 impl Response {
@@ -137,6 +308,7 @@ impl Response {
             status,
             content_type: "application/json",
             body: v.emit().into_bytes(),
+            headers: Vec::new(),
         }
     }
 
@@ -146,34 +318,69 @@ impl Response {
             status,
             content_type: "text/plain; charset=utf-8",
             body: body.into().into_bytes(),
+            headers: Vec::new(),
         }
+    }
+
+    /// An `application/octet-stream` response (binary frames).
+    pub fn binary(status: u16, body: Vec<u8>) -> Response {
+        Response {
+            status,
+            content_type: "application/octet-stream",
+            body,
+            headers: Vec::new(),
+        }
+    }
+
+    /// Attach an extra response header.
+    pub fn with_header(mut self, name: &'static str, value: impl Into<String>) -> Response {
+        self.headers.push((name, value.into()));
+        self
     }
 }
 
 /// Reason phrase for the status codes the server emits.
 pub fn status_reason(status: u16) -> &'static str {
     match status {
+        100 => "Continue",
         200 => "OK",
         202 => "Accepted",
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
         409 => "Conflict",
+        413 => "Payload Too Large",
+        417 => "Expectation Failed",
+        429 => "Too Many Requests",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
         _ => "Unknown",
     }
 }
 
-/// Write `resp` (status line + minimal headers + body) to `stream`.
-pub fn write_response<S: Write>(stream: &mut S, resp: &Response) -> Result<()> {
-    let head = format!(
-        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+/// Write `resp` (status line + minimal headers + body) to `stream`,
+/// announcing whether the server will keep the connection open —
+/// `keep_alive` is the *decision*, already folding in the client's
+/// `Connection:` preference and the server's per-connection caps.
+pub fn write_response<S: Write>(stream: &mut S, resp: &Response, keep_alive: bool) -> Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n",
         resp.status,
         status_reason(resp.status),
         resp.content_type,
         resp.body.len()
     );
+    for (name, value) in &resp.headers {
+        head.push_str(name);
+        head.push_str(": ");
+        head.push_str(value);
+        head.push_str("\r\n");
+    }
+    head.push_str(if keep_alive {
+        "Connection: keep-alive\r\n\r\n"
+    } else {
+        "Connection: close\r\n\r\n"
+    });
     stream.write_all(head.as_bytes())?;
     stream.write_all(&resp.body)?;
     stream.flush()?;
@@ -185,86 +392,236 @@ mod tests {
     use super::*;
     use crate::server::json::Json;
 
-    fn parse_bytes(raw: &str) -> Result<Request> {
+    /// Drive the parser with a byte slice, discarding interim writes.
+    fn parse_outcome(raw: &str) -> ReadOutcome {
         let mut cursor = raw.as_bytes();
-        read_request(&mut cursor)
+        let mut interim = Vec::new();
+        read_request(&mut cursor, &mut interim).expect("no transport error on slices")
+    }
+
+    fn parse_ok(raw: &str) -> Request {
+        match parse_outcome(raw) {
+            ReadOutcome::Request(r) => r,
+            other => panic!("expected a request, got {other:?}"),
+        }
+    }
+
+    /// Status code of the Malformed outcome (panics on anything else).
+    fn parse_bad(raw: &str) -> u16 {
+        match parse_outcome(raw) {
+            ReadOutcome::Malformed { status, .. } => status,
+            other => panic!("expected malformed, got {other:?}"),
+        }
     }
 
     #[test]
     fn parses_post_with_body() {
-        let req = parse_bytes(
-            "POST /fit?x=1 HTTP/1.1\r\nHost: localhost\r\nContent-Length: 11\r\n\r\nhello world",
-        )
-        .unwrap();
+        let req = parse_ok(
+            "POST /fit?x=1 HTTP/1.1\r\nHost: localhost\r\nContent-Type: Application/JSON\r\n\
+             Content-Length: 11\r\n\r\nhello world",
+        );
         assert_eq!(req.method, "POST");
         assert_eq!(req.path, "/fit");
         assert_eq!(req.query, "x=1");
+        assert_eq!(req.content_type, "application/json");
+        assert!(req.keep_alive, "HTTP/1.1 defaults to keep-alive");
         assert_eq!(req.body_str().unwrap(), "hello world");
     }
 
     #[test]
     fn parses_get_without_body() {
-        let req = parse_bytes("GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let req = parse_ok("GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n");
         assert_eq!(req.method, "GET");
         assert_eq!(req.path, "/healthz");
         assert_eq!(req.query, "");
+        assert_eq!(req.content_type, "");
         assert!(req.body.is_empty());
     }
 
     #[test]
     fn content_length_case_insensitive() {
-        let req =
-            parse_bytes("POST /x HTTP/1.1\r\ncontent-length: 3\r\n\r\nabc").unwrap();
+        let req = parse_ok("POST /x HTTP/1.1\r\ncontent-length: 3\r\n\r\nabc");
         assert_eq!(req.body, b"abc");
     }
 
     #[test]
+    fn leading_crlf_skipped_rfc7230() {
+        // One stray CRLF (the RFC 7230 §3.5 case) and a small run both
+        // parse; an unbounded flood does not.
+        let req = parse_ok("\r\nGET /healthz HTTP/1.1\r\n\r\n");
+        assert_eq!(req.path, "/healthz");
+        let req = parse_ok("\r\n\n\r\n\r\nGET /healthz HTTP/1.1\r\n\r\n");
+        assert_eq!(req.path, "/healthz");
+        assert_eq!(parse_bad("\r\n\r\n\r\n\r\n\r\nGET / HTTP/1.1\r\n\r\n"), 400);
+    }
+
+    #[test]
+    fn clean_eof_is_closed_not_error() {
+        // EOF before any bytes — and EOF after only stray blanks — is
+        // the peer hanging up between keep-alive requests.
+        assert!(matches!(parse_outcome(""), ReadOutcome::Closed));
+        assert!(matches!(parse_outcome("\r\n"), ReadOutcome::Closed));
+        assert!(matches!(parse_outcome("\r\n\r\n"), ReadOutcome::Closed));
+    }
+
+    #[test]
+    fn two_pipelined_requests_on_one_stream() {
+        // The caller-owned BufRead carries the second request's bytes
+        // across the first parse — the keep-alive contract.
+        let raw = "POST /a HTTP/1.1\r\nContent-Length: 3\r\n\r\nabc\
+                   GET /b HTTP/1.1\r\n\r\n";
+        let mut cursor = raw.as_bytes();
+        let mut interim = Vec::new();
+        let first = match read_request(&mut cursor, &mut interim).unwrap() {
+            ReadOutcome::Request(r) => r,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(first.path, "/a");
+        assert_eq!(first.body, b"abc");
+        let second = match read_request(&mut cursor, &mut interim).unwrap() {
+            ReadOutcome::Request(r) => r,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(second.path, "/b");
+        assert!(second.body.is_empty());
+        assert!(matches!(
+            read_request(&mut cursor, &mut interim).unwrap(),
+            ReadOutcome::Closed
+        ));
+    }
+
+    #[test]
+    fn connection_header_negotiation() {
+        // HTTP/1.1: keep-alive unless told otherwise.
+        assert!(parse_ok("GET / HTTP/1.1\r\n\r\n").keep_alive);
+        assert!(!parse_ok("GET / HTTP/1.1\r\nConnection: close\r\n\r\n").keep_alive);
+        assert!(!parse_ok("GET / HTTP/1.1\r\nConnection: Close\r\n\r\n").keep_alive);
+        // HTTP/1.0: close unless told otherwise.
+        assert!(!parse_ok("GET / HTTP/1.0\r\n\r\n").keep_alive);
+        assert!(parse_ok("GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n").keep_alive);
+        // Both tokens: close wins.
+        assert!(!parse_ok("GET / HTTP/1.1\r\nConnection: keep-alive, close\r\n\r\n").keep_alive);
+    }
+
+    #[test]
+    fn duplicate_content_length_policy() {
+        // Conflicting duplicates: the smuggling vector — rejected.
+        assert_eq!(
+            parse_bad("POST /x HTTP/1.1\r\nContent-Length: 5\r\nContent-Length: 6\r\n\r\nhello6"),
+            400
+        );
+        // Identical duplicates: tolerated (proxy echo).
+        let req = parse_ok("POST /x HTTP/1.1\r\nContent-Length: 3\r\nContent-Length: 3\r\n\r\nabc");
+        assert_eq!(req.body, b"abc");
+        // A list value never parses as one integer — rejected.
+        assert_eq!(parse_bad("POST /x HTTP/1.1\r\nContent-Length: 3, 3\r\n\r\nabc"), 400);
+    }
+
+    #[test]
+    fn transfer_encoding_rejected() {
+        assert_eq!(
+            parse_bad("POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n"),
+            400
+        );
+        // TE alongside CL is the classic TE/CL desync — also rejected.
+        assert_eq!(
+            parse_bad(
+                "POST /x HTTP/1.1\r\nContent-Length: 3\r\nTransfer-Encoding: chunked\r\n\r\nabc"
+            ),
+            400
+        );
+    }
+
+    #[test]
+    fn expect_100_continue_gets_interim_response() {
+        let raw = "POST /x HTTP/1.1\r\nExpect: 100-continue\r\nContent-Length: 3\r\n\r\nabc";
+        let mut cursor = raw.as_bytes();
+        let mut interim = Vec::new();
+        let req = match read_request(&mut cursor, &mut interim).unwrap() {
+            ReadOutcome::Request(r) => r,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(interim, b"HTTP/1.1 100 Continue\r\n\r\n");
+        assert_eq!(req.body, b"abc");
+        // No body → no interim (there is nothing to wait for).
+        let mut cursor = "GET /x HTTP/1.1\r\nExpect: 100-continue\r\n\r\n".as_bytes();
+        let mut interim = Vec::new();
+        read_request(&mut cursor, &mut interim).unwrap();
+        assert!(interim.is_empty());
+        // An expectation we cannot meet is 417, per RFC 7231.
+        assert_eq!(parse_bad("POST /x HTTP/1.1\r\nExpect: frobnicate\r\n\r\n"), 417);
+    }
+
+    #[test]
     fn rejects_bad_requests() {
-        assert!(parse_bytes("").is_err());
-        assert!(parse_bytes("\r\n").is_err());
-        assert!(parse_bytes("GET\r\n\r\n").is_err(), "missing target");
-        assert!(parse_bytes("GET / SPDY/3\r\n\r\n").is_err(), "bad version");
-        assert!(
-            parse_bytes("POST /x HTTP/1.1\r\nContent-Length: zap\r\n\r\n").is_err(),
+        assert_eq!(parse_bad("GET\r\n\r\n"), 400, "missing target");
+        assert_eq!(parse_bad("GET / SPDY/3\r\n\r\n"), 400, "bad version");
+        assert_eq!(
+            parse_bad("POST /x HTTP/1.1\r\nContent-Length: zap\r\n\r\n"),
+            400,
             "unparseable length"
         );
-        assert!(
-            parse_bytes("POST /x HTTP/1.1\r\nContent-Length: 10\r\n\r\nshort").is_err(),
+        assert_eq!(
+            parse_bad("POST /x HTTP/1.1\r\nContent-Length: 10\r\n\r\nshort"),
+            400,
             "truncated body"
         );
-        assert!(
-            parse_bytes(&format!(
+        assert_eq!(
+            parse_bad(&format!(
                 "POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
                 MAX_BODY_BYTES + 1
-            ))
-            .is_err(),
+            )),
+            413,
             "oversized body"
         );
         // A request line that never terminates must be cut off at the
         // cap, not buffered without bound.
         let endless = "GET /".to_string() + &"a".repeat(80 << 10);
-        assert!(parse_bytes(&endless).is_err(), "unterminated request line");
+        assert_eq!(parse_bad(&endless), 400, "unterminated request line");
+        // EOF mid-headers is malformed (a request started, then died).
+        assert_eq!(parse_bad("GET / HTTP/1.1\r\nHost: x\r\n"), 400);
     }
 
     #[test]
     fn response_wire_format() {
         let mut out = Vec::new();
         let resp = Response::json(200, &Json::obj(vec![("ok", Json::Bool(true))]));
-        write_response(&mut out, &resp).unwrap();
+        write_response(&mut out, &resp, false).unwrap();
         let text = String::from_utf8(out).unwrap();
         assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
         assert!(text.contains("Content-Type: application/json\r\n"));
         assert!(text.contains("Content-Length: 11\r\n"));
+        assert!(text.contains("Connection: close\r\n"));
         assert!(text.ends_with("\r\n\r\n{\"ok\":true}"));
+    }
+
+    #[test]
+    fn keep_alive_and_extra_headers_on_the_wire() {
+        let mut out = Vec::new();
+        write_response(&mut out, &Response::text(200, "hi"), true).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("Connection: keep-alive\r\n"), "{text}");
+        let mut out = Vec::new();
+        let resp = Response::json(429, &Json::obj(vec![("error", Json::str("busy"))]))
+            .with_header("Retry-After", "1");
+        write_response(&mut out, &resp, false).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{text}");
+        assert!(text.contains("Retry-After: 1\r\n"), "{text}");
+        assert!(text.contains("Connection: close\r\n"), "{text}");
     }
 
     #[test]
     fn text_response_and_reasons() {
         let mut out = Vec::new();
-        write_response(&mut out, &Response::text(404, "nope")).unwrap();
+        write_response(&mut out, &Response::text(404, "nope"), false).unwrap();
         let text = String::from_utf8(out).unwrap();
         assert!(text.starts_with("HTTP/1.1 404 Not Found\r\n"));
         assert!(text.ends_with("nope"));
+        assert_eq!(status_reason(100), "Continue");
+        assert_eq!(status_reason(413), "Payload Too Large");
+        assert_eq!(status_reason(417), "Expectation Failed");
+        assert_eq!(status_reason(429), "Too Many Requests");
         assert_eq!(status_reason(500), "Internal Server Error");
         assert_eq!(status_reason(999), "Unknown");
     }

@@ -113,6 +113,11 @@ pub struct JobQueue {
     cond: Condvar,
     next_id: AtomicU64,
     shutdown: AtomicBool,
+    /// Maximum jobs *pending* (queued, not yet running) before
+    /// [`submit`](JobQueue::submit) sheds — the work-queue half of the
+    /// serving layer's admission control. Running and finished jobs do
+    /// not count against it.
+    capacity: usize,
 }
 
 impl Default for JobQueue {
@@ -122,7 +127,13 @@ impl Default for JobQueue {
 }
 
 impl JobQueue {
+    /// An unbounded queue (library/test use).
     pub fn new() -> JobQueue {
+        Self::with_capacity(usize::MAX)
+    }
+
+    /// A queue that sheds once `capacity` jobs are pending.
+    pub fn with_capacity(capacity: usize) -> JobQueue {
         JobQueue {
             inner: Mutex::new(QueueInner {
                 pending: VecDeque::new(),
@@ -131,27 +142,34 @@ impl JobQueue {
             cond: Condvar::new(),
             next_id: AtomicU64::new(1),
             shutdown: AtomicBool::new(false),
+            capacity: capacity.max(1),
         }
     }
 
-    /// Enqueue a job; returns its id immediately.
-    pub fn submit(&self, spec: FitSpec) -> String {
-        let id = format!("job-{}", self.next_id.fetch_add(1, Ordering::Relaxed));
-        let info = JobInfo {
-            id: id.clone(),
-            state: JobState::Queued,
-            algorithm: spec.algorithm,
-            k: spec.k,
-            source: spec.source.describe(),
-            secs: None,
-        };
+    /// Enqueue a job; returns its id immediately, or `None` if the
+    /// pending backlog is at capacity (the caller turns that into a 429).
+    pub fn submit(&self, spec: FitSpec) -> Option<String> {
         {
+            // Check-and-insert under one lock acquisition so two racing
+            // submits cannot both slip past a capacity of 1.
             let mut inner = self.inner.lock().unwrap();
+            if inner.pending.len() >= self.capacity {
+                return None;
+            }
+            let id = format!("job-{}", self.next_id.fetch_add(1, Ordering::Relaxed));
+            let info = JobInfo {
+                id: id.clone(),
+                state: JobState::Queued,
+                algorithm: spec.algorithm,
+                k: spec.k,
+                source: spec.source.describe(),
+                secs: None,
+            };
             inner.jobs.insert(id.clone(), info);
             inner.pending.push_back((id.clone(), spec));
+            self.cond.notify_one();
+            Some(id)
         }
-        self.cond.notify_one();
-        id
     }
 
     pub fn get(&self, id: &str) -> Option<JobInfo> {
@@ -383,7 +401,7 @@ mod tests {
             PathBuf::from("/nonexistent"),
             1,
         );
-        let id = queue.submit(inline_spec(300, 6));
+        let id = queue.submit(inline_spec(300, 6)).expect("unbounded queue accepts");
         assert_eq!(id, "job-1");
         let info = wait_terminal(&queue, &id);
         let JobState::Done { model_id } = &info.state else {
@@ -420,7 +438,7 @@ mod tests {
             oversample: 2.0,
         };
         let before = crate::metrics::CounterSnapshot::of(crate::metrics::global());
-        let id = queue.submit(spec);
+        let id = queue.submit(spec).expect("unbounded queue accepts");
         let info = wait_terminal(&queue, &id);
         let JobState::Done { model_id } = &info.state else {
             panic!("expected done, got {:?}", info.state);
@@ -457,7 +475,7 @@ mod tests {
             ..Default::default()
         };
         let before = crate::metrics::CounterSnapshot::of(crate::metrics::global());
-        let id = queue.submit(spec);
+        let id = queue.submit(spec).expect("unbounded queue accepts");
         let info = wait_terminal(&queue, &id);
         let JobState::Done { model_id } = &info.state else {
             panic!("expected done, got {:?}", info.state);
@@ -487,7 +505,7 @@ mod tests {
             PathBuf::from("/nonexistent"),
             2,
         );
-        let id = queue.submit(inline_spec(50, 500));
+        let id = queue.submit(inline_spec(50, 500)).expect("unbounded queue accepts");
         let info = wait_terminal(&queue, &id);
         let JobState::Failed { error } = &info.state else {
             panic!("expected failure, got {:?}", info.state);
@@ -498,6 +516,20 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    fn bounded_queue_sheds_at_capacity() {
+        // No workers: pending never drains, so capacity 2 accepts two
+        // submissions and sheds the third without blocking.
+        let queue = JobQueue::with_capacity(2);
+        assert!(queue.submit(inline_spec(20, 2)).is_some());
+        assert!(queue.submit(inline_spec(20, 2)).is_some());
+        assert!(queue.submit(inline_spec(20, 2)).is_none(), "third submit must shed");
+        assert_eq!(queue.counts(), (2, 0, 0, 0));
+        // Draining (here: shutdown-failing) the backlog reopens admission.
+        queue.stop();
+        assert_eq!(queue.counts(), (0, 0, 0, 2));
     }
 
     #[test]
@@ -515,15 +547,17 @@ mod tests {
             },
             1,
         ));
-        queue.submit(FitSpec {
-            source: FitSource::Inline(ps),
-            algorithm: SeedingAlgorithm::Uniform,
-            k: 2,
-            seed: 1,
-            lloyd_iters: 0,
-            kmeanspar: KMeansParConfig::default(),
-            rejection: RejectionConfig::default(),
-        });
+        queue
+            .submit(FitSpec {
+                source: FitSource::Inline(ps),
+                algorithm: SeedingAlgorithm::Uniform,
+                k: 2,
+                seed: 1,
+                lloyd_iters: 0,
+                kmeanspar: KMeansParConfig::default(),
+                rejection: RejectionConfig::default(),
+            })
+            .expect("unbounded queue accepts");
         assert_eq!(queue.counts(), (1, 0, 0, 0));
         assert_eq!(queue.get("job-1").unwrap().state.name(), "queued");
         // stop() must give still-queued jobs a terminal state, not

@@ -1,0 +1,474 @@
+//! `fkmpp loadgen` — the serving-path load driver.
+//!
+//! Boots an ephemeral-port [`super::Server`] in-process, installs a
+//! synthetic model, then sweeps `route × connection-mode × connections`
+//! against the live socket with raw-`TcpStream` clients:
+//!
+//! * **route**: the JSON assign body vs the binary `.fbin`-in /
+//!   `FKA1`-out path ([`super::encode_assign_frame`]);
+//! * **mode**: `keepalive` (one connection, many requests) vs `close`
+//!   (one connection per request — the pre-keep-alive behavior);
+//! * **connections**: concurrent client threads.
+//!
+//! Before timing anything it runs a parity pass asserting the binary
+//! route's labels/d² are **bitwise identical** to the JSON route's, so a
+//! throughput number can never be quoted for a route that changed
+//! result bits. Results render as a text table and, with a JSON path,
+//! as the `BENCH_serve.json` artifact
+//! ([`crate::coordinator::tables::serve_json`]).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Instant;
+
+use crate::bail;
+use crate::coordinator::tables::{self, ServeCell};
+use crate::data::synth::{gaussian_mixture, SynthSpec};
+use crate::error::{Context, Result};
+use crate::metrics::Stats;
+use crate::server::json::{self, Json};
+
+use super::{decode_assign_frame, registry, ServeConfig, Server};
+
+/// `fkmpp loadgen` knobs.
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// Concurrent-connection counts to sweep.
+    pub conns: Vec<usize>,
+    /// Points per assign request (the payload size axis).
+    pub points: usize,
+    /// Dimensions per point.
+    pub dim: usize,
+    /// Centers in the served model.
+    pub k: usize,
+    /// Requests per rep, split across the connections.
+    pub requests: usize,
+    /// Repetitions per cell (per-rep walls feed the `seconds` stats).
+    pub reps: usize,
+    pub seed: u64,
+    /// Write `BENCH_serve.json` here when set.
+    pub json_path: Option<String>,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            conns: vec![1, 2, 8],
+            points: 256,
+            dim: 16,
+            k: 64,
+            requests: 100,
+            reps: 2,
+            seed: 42,
+            json_path: None,
+        }
+    }
+}
+
+impl LoadgenConfig {
+    /// The `--short` profile: small enough for CI smoke (seconds, not
+    /// minutes) while still covering 1-vs-8 connections.
+    pub fn short() -> Self {
+        LoadgenConfig {
+            conns: vec![1, 8],
+            points: 64,
+            dim: 8,
+            k: 16,
+            requests: 40,
+            reps: 1,
+            ..LoadgenConfig::default()
+        }
+    }
+}
+
+/// Run the sweep; returns the human-readable report.
+pub fn run(cfg: &LoadgenConfig) -> Result<String> {
+    if cfg.conns.is_empty() || cfg.conns.contains(&0) {
+        bail!("--conns needs at least one nonzero connection count");
+    }
+    if cfg.points == 0 || cfg.dim == 0 || cfg.k == 0 || cfg.requests == 0 || cfg.reps == 0 {
+        bail!("--points/--dim/-k/--requests/--reps must all be >= 1");
+    }
+    let max_conns = *cfg.conns.iter().max().unwrap();
+    // The driver measures the request path, not admission control: size
+    // the worker pool and queues so nothing sheds mid-sweep, and lift
+    // the per-connection cap above a rep's worth of requests.
+    let scfg = ServeConfig {
+        port: 0,
+        persist: false,
+        http_workers: max_conns.max(4),
+        fit_workers: 1,
+        queue_depth: max_conns * 4 + 32,
+        keepalive_max_requests: cfg.requests * 2 + 16,
+        ..ServeConfig::default()
+    };
+    let server = Server::bind(&scfg)?;
+    let addr = server.local_addr()?;
+    let reg = server.registry();
+    let centers = gaussian_mixture(
+        &SynthSpec {
+            n: cfg.k,
+            d: cfg.dim,
+            k_true: cfg.k.clamp(1, 8),
+            ..Default::default()
+        },
+        cfg.seed,
+    );
+    let meta = registry::ModelMeta {
+        id: reg.fresh_id(),
+        algorithm: "loadgen".to_string(),
+        k: cfg.k,
+        dim: cfg.dim,
+        source: "synthetic".to_string(),
+        seed: cfg.seed,
+        seeding_secs: 0.0,
+        lloyd_iters: 0,
+        cost: 0.0,
+    };
+    let model_id = meta.id.clone();
+    reg.insert(meta, centers)?;
+    let srv = std::thread::spawn(move || server.run());
+
+    let queries = gaussian_mixture(
+        &SynthSpec {
+            n: cfg.points,
+            d: cfg.dim,
+            k_true: cfg.k.clamp(1, 8),
+            ..Default::default()
+        },
+        cfg.seed ^ 0x10AD_9E37,
+    );
+    let bin_body = crate::data::io::encode_fbin(&queries);
+    let json_body = Json::obj(vec![("points", json::points_to_json(&queries))])
+        .emit()
+        .into_bytes();
+
+    // The sweep aborts on any error past this point; make sure the
+    // server is told to stop either way so the process can exit.
+    let result = sweep(cfg, addr, &model_id, &json_body, &bin_body);
+    let _ = one_shot(addr, &request_bytes("/shutdown", "", &[], true));
+    let _ = srv.join();
+    result
+}
+
+fn sweep(
+    cfg: &LoadgenConfig,
+    addr: SocketAddr,
+    model_id: &str,
+    json_body: &[u8],
+    bin_body: &[u8],
+) -> Result<String> {
+    let path = format!("/models/{model_id}/assign");
+    // Parity pass first: the binary route must answer bit-identically to
+    // the JSON route before either is worth timing.
+    let (status, body) = one_shot(
+        addr,
+        &request_bytes(&path, "application/octet-stream", bin_body, true),
+    )?;
+    if status != 200 {
+        bail!("parity pass: binary assign answered HTTP {status}");
+    }
+    let (bin_labels, bin_d2s) = decode_assign_frame(&body)?;
+    let (status, body) = one_shot(
+        addr,
+        &request_bytes(&path, "application/json", json_body, true),
+    )?;
+    if status != 200 {
+        bail!("parity pass: JSON assign answered HTTP {status}");
+    }
+    let v = json::parse(std::str::from_utf8(&body).context("JSON assign body")?)?;
+    let json_labels: Vec<u32> = v
+        .get("labels")
+        .and_then(Json::as_array)
+        .context("JSON assign: labels")?
+        .iter()
+        .map(|x| x.as_f64().unwrap_or(-1.0) as u32)
+        .collect();
+    let json_d2s: Vec<u32> = v
+        .get("d2")
+        .and_then(Json::as_array)
+        .context("JSON assign: d2")?
+        .iter()
+        .map(|x| (x.as_f64().unwrap_or(f64::NAN) as f32).to_bits())
+        .collect();
+    let bin_bits: Vec<u32> = bin_d2s.iter().map(|d| d.to_bits()).collect();
+    if bin_labels != json_labels || bin_bits != json_d2s {
+        bail!("binary and JSON assign routes disagree bitwise — refusing to benchmark");
+    }
+
+    let mut report = format!(
+        "loadgen: payload n={} d={} (json {} B, binary {} B), k={}, {} requests x {} reps\n\
+         binary/JSON parity: ok (bitwise)\n\n\
+         | route | mode | conns | req/s | p50 ms | p99 ms |\n|---|---|---|---|---|---|\n",
+        cfg.points,
+        cfg.dim,
+        json_body.len(),
+        bin_body.len(),
+        cfg.k,
+        cfg.requests,
+        cfg.reps
+    );
+    let mut cells = Vec::new();
+    for (route, body) in [("json", json_body), ("binary", bin_body)] {
+        let content_type = match route {
+            "binary" => "application/octet-stream",
+            _ => "application/json",
+        };
+        for mode in ["close", "keepalive"] {
+            for &conns in &cfg.conns {
+                let mut span = crate::trace::Span::enter("loadgen.cell");
+                span.arg("route", route.to_string());
+                span.arg("mode", mode.to_string());
+                span.arg("conns", conns as u64);
+                let mut secs = Stats::new();
+                let mut lats: Vec<f64> = Vec::new();
+                let mut wall_sum = 0.0f64;
+                for _ in 0..cfg.reps {
+                    let (wall, mut rep_lats) = run_rep(
+                        addr,
+                        &path,
+                        content_type,
+                        body,
+                        mode == "close",
+                        conns,
+                        cfg.requests,
+                    )?;
+                    secs.push(wall);
+                    wall_sum += wall;
+                    lats.append(&mut rep_lats);
+                }
+                drop(span);
+                lats.sort_by(f64::total_cmp);
+                let throughput_rps = lats.len() as f64 / wall_sum.max(f64::MIN_POSITIVE);
+                let p50_ms = percentile(&lats, 0.50);
+                let p99_ms = percentile(&lats, 0.99);
+                report.push_str(&format!(
+                    "| {route} | {mode} | {conns} | {throughput_rps:.0} | {p50_ms:.2} | {p99_ms:.2} |\n"
+                ));
+                cells.push(ServeCell {
+                    dataset: format!("payload_n{}_d{}", cfg.points, cfg.dim),
+                    algorithm: format!("assign_{route}_{mode}"),
+                    route: route.to_string(),
+                    mode: mode.to_string(),
+                    connections: conns,
+                    k: cfg.k,
+                    seconds: secs,
+                    p50_ms,
+                    p99_ms,
+                    throughput_rps,
+                });
+            }
+        }
+    }
+    if let Some(out_path) = &cfg.json_path {
+        let doc = tables::serve_json(&cells, cfg.reps, cfg.seed, crate::parallel::num_threads());
+        std::fs::write(out_path, doc.emit()).with_context(|| format!("write {out_path:?}"))?;
+        report.push_str(&format!("\nwrote {out_path}\n"));
+    }
+    Ok(report)
+}
+
+/// One rep of one cell: `conns` client threads splitting `requests`
+/// requests, each asserting HTTP 200. Returns (wall seconds, per-request
+/// latencies in ms).
+fn run_rep(
+    addr: SocketAddr,
+    path: &str,
+    content_type: &str,
+    body: &[u8],
+    close_per_request: bool,
+    conns: usize,
+    requests: usize,
+) -> Result<(f64, Vec<f64>)> {
+    let req = request_bytes(path, content_type, body, close_per_request);
+    let t0 = Instant::now();
+    let joined: Vec<std::thread::Result<Result<Vec<f64>>>> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for i in 0..conns {
+            let n = requests / conns + usize::from(i < requests % conns);
+            if n == 0 {
+                continue;
+            }
+            let req = &req;
+            handles.push(s.spawn(move || client_thread(addr, req, n, close_per_request)));
+        }
+        handles.into_iter().map(|h| h.join()).collect()
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let mut lats = Vec::with_capacity(requests);
+    for r in joined {
+        let thread_lats = r.map_err(|_| crate::anyhow!("loadgen client thread panicked"))??;
+        lats.extend(thread_lats);
+    }
+    Ok((wall, lats))
+}
+
+/// One client: either one kept-alive connection for all `n` requests, or
+/// a fresh connection per request (the `close` discipline under test).
+fn client_thread(
+    addr: SocketAddr,
+    req: &[u8],
+    n: usize,
+    close_per_request: bool,
+) -> Result<Vec<f64>> {
+    let mut lats = Vec::with_capacity(n);
+    if close_per_request {
+        for _ in 0..n {
+            let t = Instant::now();
+            let (status, _) = one_shot(addr, req)?;
+            if status != 200 {
+                bail!("loadgen request answered HTTP {status}");
+            }
+            lats.push(t.elapsed().as_secs_f64() * 1e3);
+        }
+    } else {
+        let stream = TcpStream::connect(addr).context("loadgen connect")?;
+        let mut writer = stream.try_clone().context("loadgen clone stream")?;
+        let mut reader = BufReader::new(stream);
+        for _ in 0..n {
+            let t = Instant::now();
+            writer.write_all(req).context("loadgen write")?;
+            let (status, _) = read_response(&mut reader)?;
+            if status != 200 {
+                bail!("loadgen request answered HTTP {status}");
+            }
+            lats.push(t.elapsed().as_secs_f64() * 1e3);
+        }
+    }
+    Ok(lats)
+}
+
+/// Serialize one request. An empty `content_type` omits the header
+/// (the shutdown poke).
+fn request_bytes(path: &str, content_type: &str, body: &[u8], close: bool) -> Vec<u8> {
+    let mut head = format!("POST {path} HTTP/1.1\r\nHost: loadgen\r\n");
+    if !content_type.is_empty() {
+        head.push_str(&format!("Content-Type: {content_type}\r\n"));
+    }
+    head.push_str(&format!("Content-Length: {}\r\n", body.len()));
+    if close {
+        head.push_str("Connection: close\r\n");
+    }
+    head.push_str("\r\n");
+    let mut out = head.into_bytes();
+    out.extend_from_slice(body);
+    out
+}
+
+/// Fresh connection, one request, full response.
+fn one_shot(addr: SocketAddr, req: &[u8]) -> Result<(u16, Vec<u8>)> {
+    let mut stream = TcpStream::connect(addr).context("loadgen connect")?;
+    stream.write_all(req).context("loadgen write")?;
+    let mut reader = BufReader::new(stream);
+    read_response(&mut reader)
+}
+
+/// Minimal HTTP/1.1 response reader: status line, headers for
+/// `Content-Length`, exact body. Enough for this server's responses
+/// (which always carry a Content-Length and never chunk).
+fn read_response<R: BufRead>(reader: &mut R) -> Result<(u16, Vec<u8>)> {
+    let mut line = String::new();
+    if reader.read_line(&mut line).context("loadgen read status")? == 0 {
+        bail!("connection closed before a response arrived");
+    }
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .with_context(|| format!("malformed status line {line:?}"))?
+        .parse()
+        .with_context(|| format!("malformed status line {line:?}"))?;
+    let mut content_length = 0usize;
+    loop {
+        let mut header = String::new();
+        if reader.read_line(&mut header).context("loadgen read header")? == 0 {
+            bail!("connection closed inside response headers");
+        }
+        let trimmed = header.trim_end();
+        if trimmed.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = trimmed.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length = value
+                    .trim()
+                    .parse()
+                    .with_context(|| format!("response Content-Length {value:?}"))?;
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).context("loadgen read body")?;
+    Ok((status, body))
+}
+
+/// Nearest-rank percentile over a sorted slice (exact, no interpolation).
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_is_exact_nearest_rank() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 0.5), 3.0);
+        assert_eq!(percentile(&v, 1.0), 4.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn request_bytes_wire_format() {
+        let req = request_bytes("/models/m-1/assign", "application/json", b"{}", true);
+        let text = String::from_utf8(req).unwrap();
+        assert!(text.starts_with("POST /models/m-1/assign HTTP/1.1\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 2\r\n"), "{text}");
+        assert!(text.contains("Connection: close\r\n"), "{text}");
+        assert!(text.ends_with("\r\n\r\n{}"), "{text}");
+        let keep = String::from_utf8(request_bytes("/x", "t", b"", false)).unwrap();
+        assert!(!keep.contains("Connection:"), "{keep}");
+    }
+
+    #[test]
+    fn loadgen_smoke_sweep_and_artifact() {
+        // A miniature sweep against a real in-process server: covers the
+        // parity pass, both routes, both connection modes, and the
+        // BENCH_serve.json emission.
+        let path = std::env::temp_dir().join("fkmpp_loadgen_test.json");
+        let _ = std::fs::remove_file(&path);
+        let cfg = LoadgenConfig {
+            conns: vec![1, 2],
+            points: 8,
+            dim: 3,
+            k: 4,
+            requests: 6,
+            reps: 1,
+            seed: 7,
+            json_path: Some(path.display().to_string()),
+        };
+        let out = run(&cfg).unwrap();
+        assert!(out.contains("parity: ok"), "{out}");
+        assert!(out.contains("| binary | keepalive | 2 |"), "{out}");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = json::parse(&text).unwrap();
+        assert_eq!(doc.get("profile").and_then(Json::as_str), Some("serve_bench"));
+        let cells = doc.get("cells").and_then(Json::as_array).unwrap();
+        // 2 routes x 2 modes x 2 connection counts.
+        assert_eq!(cells.len(), 8);
+        for cell in cells {
+            assert_eq!(
+                cell.get("dataset").and_then(Json::as_str),
+                Some("payload_n8_d3")
+            );
+            let rps = cell.get("throughput_rps").and_then(Json::as_f64).unwrap();
+            assert!(rps > 0.0, "{cell:?}");
+            assert!(cell.get("seconds").unwrap().get("mean").is_some());
+        }
+    }
+}

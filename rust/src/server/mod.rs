@@ -11,7 +11,7 @@
 //! | `GET /jobs/{id}` | job status; `model_id` once done |
 //! | `GET /models` | list fitted models (metadata) |
 //! | `GET /models/{id}` | one model, centers included |
-//! | `POST /models/{id}/assign` | batched nearest-center assignment for `points` |
+//! | `POST /models/{id}/assign` | batched nearest-center assignment for `points` (JSON or `.fbin` binary body) |
 //! | `GET /healthz` | liveness + model/job counts |
 //! | `GET /metrics` | request counters, latency histograms (p50/p90/p99), job/model gauges |
 //! | `GET /metrics?format=prometheus` | the same, as Prometheus text exposition |
@@ -20,21 +20,40 @@
 //! ## Contracts
 //!
 //! * The server owns **no distance loops**: assignment goes through
-//!   [`crate::kernels::assign::assign_argmin`] (via [`registry::assign`])
-//!   and fits through the seeders/[`crate::lloyd`], same as the CLI.
+//!   the kernel engine (via [`registry::assign`] /
+//!   [`registry::AssignCoalescer`]) and fits through the
+//!   seeders/[`crate::lloyd`], same as the CLI.
+//! * Assign responses are a pure function of `(model, query points)`:
+//!   the model pins its kernel at registration and concurrent-request
+//!   coalescing cannot change result bits (see [`registry`]'s docs), so
+//!   the JSON and binary routes answer bit-identically.
 //! * [`json`] is the crate's **single serialization point** — every JSON
-//!   byte in or out passes through it.
+//!   byte in or out passes through it. The binary assign route reuses
+//!   the [`crate::data::io`] `.fbin` codec for its request body and the
+//!   documented `FKA1` frame (see [`encode_assign_frame`]) for its
+//!   response.
 //! * State across requests lives in [`registry::ModelRegistry`]
 //!   (persisted under `{data_dir}/models/`) and [`jobs::JobQueue`].
 //!
-//! Threading mirrors [`crate::parallel`]'s bounded-pool discipline: a
-//! fixed set of HTTP workers drains an accept queue, and a fixed set of
-//! fit workers drains the job queue, so a burst of requests degrades to
-//! back-pressure instead of unbounded spawns.
+//! ## Connection lifecycle and admission control
+//!
+//! Connections are **kept alive**: each HTTP worker loops
+//! `read → route → write` on one connection, honoring `Connection:`
+//! headers, until the client closes, an idle deadline passes
+//! ([`ServeConfig::keepalive_idle`]), or a per-connection request cap is
+//! reached ([`ServeConfig::keepalive_max_requests`]). The accept queue
+//! is **bounded** ([`ServeConfig::queue_depth`]): when it is full, new
+//! connections are shed immediately with `429 Too Many Requests` +
+//! `Retry-After` instead of queueing without bound; `POST /fit` sheds
+//! the same way when the fit backlog is full. Threading mirrors
+//! [`crate::parallel`]'s bounded-pool discipline: a fixed set of HTTP
+//! workers drains the accept queue, a fixed set of fit workers drains
+//! the job queue.
 
 pub mod http;
 pub mod jobs;
 pub mod json;
+pub mod loadgen;
 pub mod registry;
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -68,6 +87,19 @@ pub struct ServeConfig {
     pub fit_workers: usize,
     /// Persist fitted models under `{data_dir}/models/`, reload on boot.
     pub persist: bool,
+    /// Bounded accept queue depth: connections beyond it are shed with
+    /// 429 + `Retry-After` instead of queueing without bound.
+    pub queue_depth: usize,
+    /// Bounded fit backlog: `POST /fit` sheds with 429 once this many
+    /// jobs are pending.
+    pub fit_queue_depth: usize,
+    /// Idle deadline on a kept-alive connection: close it if no new
+    /// request arrives within this window.
+    pub keepalive_idle: Duration,
+    /// Requests served on one connection before the server answers
+    /// `Connection: close` — bounds how long a worker can be owned by a
+    /// single client.
+    pub keepalive_max_requests: usize,
 }
 
 impl Default for ServeConfig {
@@ -80,6 +112,28 @@ impl Default for ServeConfig {
             http_workers: 4,
             fit_workers: 1,
             persist: true,
+            queue_depth: 128,
+            fit_queue_depth: 64,
+            keepalive_idle: Duration::from_secs(15),
+            keepalive_max_requests: 1000,
+        }
+    }
+}
+
+/// The per-connection knobs [`handle_connection`] enforces, copied out
+/// of [`ServeConfig`] at bind time.
+#[derive(Clone, Copy, Debug)]
+struct ConnLimits {
+    keepalive_idle: Duration,
+    keepalive_max_requests: usize,
+}
+
+impl Default for ConnLimits {
+    fn default() -> Self {
+        let cfg = ServeConfig::default();
+        ConnLimits {
+            keepalive_idle: cfg.keepalive_idle,
+            keepalive_max_requests: cfg.keepalive_max_requests,
         }
     }
 }
@@ -89,8 +143,11 @@ pub struct ServerCtx {
     pub registry: Arc<ModelRegistry>,
     pub jobs: Arc<JobQueue>,
     pub metrics: Metrics,
+    /// Per-model coalescing of concurrent assigns (see [`registry`]).
+    coalescer: registry::AssignCoalescer,
     started: Instant,
     shutdown: AtomicBool,
+    limits: ConnLimits,
 }
 
 impl ServerCtx {
@@ -99,8 +156,10 @@ impl ServerCtx {
             registry,
             jobs,
             metrics: Metrics::new(),
+            coalescer: registry::AssignCoalescer::default(),
             started: Instant::now(),
             shutdown: AtomicBool::new(false),
+            limits: ConnLimits::default(),
         }
     }
 }
@@ -125,10 +184,15 @@ impl Server {
         } else {
             None
         })?);
-        let jobs = Arc::new(JobQueue::new());
+        let jobs = Arc::new(JobQueue::with_capacity(cfg.fit_queue_depth));
+        let mut ctx = ServerCtx::new(registry, jobs);
+        ctx.limits = ConnLimits {
+            keepalive_idle: cfg.keepalive_idle,
+            keepalive_max_requests: cfg.keepalive_max_requests.max(1),
+        };
         Ok(Server {
             listener,
-            ctx: Arc::new(ServerCtx::new(registry, jobs)),
+            ctx: Arc::new(ctx),
             cfg: cfg.clone(),
         })
     }
@@ -136,6 +200,12 @@ impl Server {
     /// The bound address (useful with `port: 0`).
     pub fn local_addr(&self) -> Result<SocketAddr> {
         Ok(self.listener.local_addr()?)
+    }
+
+    /// The model registry behind this server — lets drivers (tests, the
+    /// loadgen) install a model without running a fit job.
+    pub fn registry(&self) -> Arc<ModelRegistry> {
+        Arc::clone(&self.ctx.registry)
     }
 
     /// Accept and serve until `POST /shutdown`. Blocks the calling
@@ -150,9 +220,11 @@ impl Server {
             self.cfg.fit_workers,
         );
         // Bounded HTTP pool: accept here, hand streams to workers over a
-        // channel (the Mutex<Receiver> is the queue — the lock is only
-        // held while blocked on recv, not while handling).
-        let (conn_tx, conn_rx) = mpsc::channel::<TcpStream>();
+        // *bounded* channel (the sync_channel buffer is the admission
+        // queue). `try_send` never blocks the accept loop: a full queue
+        // sheds the connection with a 429 instead of building an
+        // unbounded backlog of sockets that will all time out anyway.
+        let (conn_tx, conn_rx) = mpsc::sync_channel::<TcpStream>(self.cfg.queue_depth.max(1));
         let conn_rx = Arc::new(Mutex::new(conn_rx));
         let mut http_handles = Vec::new();
         for _ in 0..self.cfg.http_workers.max(1) {
@@ -171,9 +243,11 @@ impl Server {
                 break;
             }
             match conn {
-                Ok(stream) => {
-                    let _ = conn_tx.send(stream);
-                }
+                Ok(stream) => match conn_tx.try_send(stream) {
+                    Ok(()) => {}
+                    Err(mpsc::TrySendError::Full(stream)) => shed_connection(stream, &self.ctx),
+                    Err(mpsc::TrySendError::Disconnected(_)) => break,
+                },
                 Err(e) => eprintln!("[serve] accept error: {e}"),
             }
         }
@@ -189,35 +263,88 @@ impl Server {
     }
 }
 
-/// One connection = one request/response (Connection: close).
-///
-/// Timeouts are per-`read`/`write` syscall (the strongest guarantee
-/// `std::net` offers without a poll loop); a deliberately byte-trickling
-/// client can still hold a worker, which is an accepted limitation of
-/// this std-only layer — front with a real proxy for hostile networks.
-fn handle_connection(mut stream: TcpStream, ctx: &ServerCtx, addr: SocketAddr) {
-    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
-    let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
-    let t0 = Instant::now();
-    // Count every accepted connection — including unparseable ones — so
-    // `http.errors <= http.requests` always holds in `/metrics`.
+/// Shed a connection the accept queue has no room for: one short-fused
+/// 429 + `Retry-After`, then close. Runs on the accept thread, so the
+/// write timeout is tight — a peer that won't take the bytes loses them.
+fn shed_connection(mut stream: TcpStream, ctx: &ServerCtx) {
+    ctx.metrics.incr("http.conns", 1);
     ctx.metrics.incr("http.requests", 1);
-    let mut span = crate::trace::Span::enter("http.request");
-    let resp = match http::read_request(&mut stream) {
-        Ok(req) => {
-            span.arg("method", req.method.clone());
-            span.arg("path", req.path.clone());
-            route(&req, ctx)
-        }
-        Err(e) => Response::json(400, &error_json(&format!("{e:#}"))),
+    ctx.metrics.incr("http.errors", 1);
+    ctx.metrics.incr("http.shed", 1);
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(500)));
+    let resp = Response::json(429, &error_json("server at capacity, retry shortly"))
+        .with_header("Retry-After", "1");
+    let _ = http::write_response(&mut stream, &resp, false);
+}
+
+/// One connection, many requests: loop `read → route → write` until the
+/// client closes, asks for `Connection: close`, goes idle past the
+/// deadline, hits the per-connection request cap, or the server shuts
+/// down.
+///
+/// The buffered reader is created **once** per connection and fed to
+/// every [`http::read_request`] call — bytes of a pipelined next request
+/// that were slurped into its buffer survive to the next loop
+/// iteration. The idle deadline rides the socket read timeout, which is
+/// per-`read`-syscall (the strongest guarantee `std::net` offers
+/// without a poll loop); a deliberately byte-trickling client can still
+/// hold a worker for longer, which is an accepted limitation of this
+/// std-only layer — front with a real proxy for hostile networks.
+fn handle_connection(mut stream: TcpStream, ctx: &ServerCtx, addr: SocketAddr) {
+    ctx.metrics.incr("http.conns", 1);
+    let _ = stream.set_read_timeout(Some(ctx.limits.keepalive_idle));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
+    let mut reader = match stream.try_clone() {
+        Ok(clone) => std::io::BufReader::new(clone),
+        Err(_) => return,
     };
-    span.arg("status", resp.status as u64);
-    if resp.status >= 400 {
-        ctx.metrics.incr("http.errors", 1);
+    let mut served = 0usize;
+    loop {
+        // `read_request` writes at most an interim `100 Continue` to the
+        // raw stream; responses go there too, after routing.
+        let outcome = http::read_request(&mut reader, &mut stream);
+        let t0 = Instant::now();
+        let req = match outcome {
+            Ok(http::ReadOutcome::Request(req)) => req,
+            // Peer hung up between requests: the clean end of a
+            // kept-alive connection, nothing to count or answer.
+            Ok(http::ReadOutcome::Closed) => break,
+            Ok(http::ReadOutcome::Malformed { status, reason }) => {
+                // Framing can't be trusted past a malformed request:
+                // answer (so the client learns why) and close.
+                ctx.metrics.incr("http.requests", 1);
+                ctx.metrics.incr("http.errors", 1);
+                let resp = Response::json(status, &error_json(&reason));
+                let _ = http::write_response(&mut stream, &resp, false);
+                break;
+            }
+            // Transport error — most commonly the idle deadline firing
+            // between requests. Nobody is listening; close silently.
+            Err(_) => break,
+        };
+        served += 1;
+        ctx.metrics.incr("http.requests", 1);
+        let mut span = crate::trace::Span::enter("http.request");
+        span.arg("method", req.method.clone());
+        span.arg("path", req.path.clone());
+        let resp = route(&req, ctx);
+        span.arg("status", resp.status as u64);
+        if resp.status >= 400 {
+            ctx.metrics.incr("http.errors", 1);
+        }
+        // Keep the connection iff the client allows it, the cap has room
+        // and the server isn't shutting down — and tell the client which
+        // it is in the response's `Connection:` header.
+        let keep = req.keep_alive
+            && served < ctx.limits.keepalive_max_requests
+            && !ctx.shutdown.load(Ordering::SeqCst);
+        let write_ok = http::write_response(&mut stream, &resp, keep).is_ok();
+        drop(span);
+        ctx.metrics.record_latency("http.latency_secs", t0.elapsed());
+        if !keep || !write_ok {
+            break;
+        }
     }
-    let _ = http::write_response(&mut stream, &resp);
-    drop(span);
-    ctx.metrics.record_latency("http.latency_secs", t0.elapsed());
     // The shutdown route sets the flag (single source of truth); nudge
     // the blocking accept loop so it observes it. Target loopback — the
     // listener may be bound to a wildcard address connect() can't reach
@@ -392,6 +519,7 @@ fn prometheus_metrics(ctx: &ServerCtx) -> Response {
         status: 200,
         content_type: "text/plain; version=0.0.4; charset=utf-8",
         body: body.into_bytes(),
+        headers: Vec::new(),
     }
 }
 
@@ -466,8 +594,7 @@ fn handle_fit(req: &Request, ctx: &ServerCtx) -> RouteResult {
     } else {
         return Err((400, "body needs either \"points\" or \"dataset\"".to_string()));
     };
-    ctx.metrics.incr("fit.submitted", 1);
-    let job_id = ctx.jobs.submit(FitSpec {
+    let Some(job_id) = ctx.jobs.submit(FitSpec {
         source,
         algorithm,
         k,
@@ -475,7 +602,16 @@ fn handle_fit(req: &Request, ctx: &ServerCtx) -> RouteResult {
         lloyd_iters,
         kmeanspar,
         rejection,
-    });
+    }) else {
+        // Fit backlog full: shed with the same contract as the accept
+        // queue — 429 + Retry-After, never an unbounded queue.
+        ctx.metrics.incr("fit.shed", 1);
+        return Ok(
+            Response::json(429, &error_json("fit queue at capacity, retry shortly"))
+                .with_header("Retry-After", "1"),
+        );
+    };
+    ctx.metrics.incr("fit.submitted", 1);
     Ok(Response::json(
         202,
         &Json::obj(vec![
@@ -537,29 +673,99 @@ fn handle_model(id: &str, ctx: &ServerCtx) -> RouteResult {
     Ok(Response::json(200, &model.full_json()))
 }
 
-/// `POST /models/{id}/assign` body: `{"points": [[..], ..]}`. Labels and
-/// squared distances come straight from the kernel engine.
+/// Magic prefix of the binary assign response frame.
+pub const ASSIGN_FRAME_MAGIC: &[u8; 4] = b"FKA1";
+
+/// Encode the binary assign response frame:
+///
+/// | offset | bytes | field |
+/// |---|---|---|
+/// | 0 | 4 | magic `"FKA1"` |
+/// | 4 | 4 | `n` (u32 LE) |
+/// | 8 | 4·n | labels (u32 LE each) |
+/// | 8+4n | 4·n | squared distances (f32 LE each) |
+///
+/// The floats are the kernel's bits verbatim — the frame round-trips
+/// bit-exactly, like the JSON route's shortest-round-trip emission.
+pub fn encode_assign_frame(labels: &[u32], d2s: &[f32]) -> Vec<u8> {
+    assert_eq!(labels.len(), d2s.len());
+    let mut out = Vec::with_capacity(8 + labels.len() * 8);
+    out.extend_from_slice(ASSIGN_FRAME_MAGIC);
+    out.extend_from_slice(&(labels.len() as u32).to_le_bytes());
+    for &j in labels {
+        out.extend_from_slice(&j.to_le_bytes());
+    }
+    for &d in d2s {
+        out.extend_from_slice(&d.to_le_bytes());
+    }
+    out
+}
+
+/// Decode an [`encode_assign_frame`] body (clients: the loadgen, tests).
+/// Trailing bytes are rejected — a frame is a complete message.
+pub fn decode_assign_frame(bytes: &[u8]) -> Result<(Vec<u32>, Vec<f32>)> {
+    if bytes.len() < 8 || &bytes[0..4] != ASSIGN_FRAME_MAGIC {
+        crate::bail!("not an FKA1 assign frame");
+    }
+    let n = u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
+    let want = n
+        .checked_mul(8)
+        .and_then(|b| b.checked_add(8))
+        .context("assign frame length overflow")?;
+    if bytes.len() != want {
+        crate::bail!("assign frame is {} bytes, n={n} implies {want}", bytes.len());
+    }
+    let labels = bytes[8..8 + 4 * n]
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    let d2s = bytes[8 + 4 * n..]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok((labels, d2s))
+}
+
+/// `POST /models/{id}/assign`. Two bodies, one kernel path:
+///
+/// * JSON (default): `{"points": [[..], ..]}` → JSON `labels`/`d2`;
+/// * `Content-Type: application/octet-stream`: an `.fbin` body
+///   (`u32 n, u32 d, n·d f32`, little-endian — the [`crate::data::io`]
+///   layout) → the binary `FKA1` frame ([`encode_assign_frame`]).
+///
+/// Both routes run the same pinned-kernel sweep through the per-model
+/// coalescer, so their results are bitwise identical for the same query
+/// points.
 fn handle_assign(id: &str, req: &Request, ctx: &ServerCtx) -> RouteResult {
     let model = ctx
         .registry
         .get(id)
         .ok_or_else(|| (404, format!("unknown model {id:?}")))?;
-    let body = req.body_str().map_err(bad)?;
-    let v = json::parse(body).map_err(bad)?;
-    let pts = v
-        .get("points")
-        .ok_or_else(|| (400, "missing \"points\"".to_string()))?;
-    let points = json::points_from_json(pts).map_err(bad)?;
+    let binary = req.content_type.starts_with("application/octet-stream");
+    let points = if binary {
+        crate::data::io::decode_fbin(&req.body).map_err(bad)?
+    } else {
+        let body = req.body_str().map_err(bad)?;
+        let v = json::parse(body).map_err(bad)?;
+        let pts = v
+            .get("points")
+            .ok_or_else(|| (400, "missing \"points\"".to_string()))?;
+        json::points_from_json(pts).map_err(bad)?
+    };
+    let n = points.len();
     let timer = ctx.metrics.latency_timer("assign.latency_secs");
-    let (labels, d2s) = registry::assign(&model, &points).map_err(bad)?;
+    let (labels, d2s) = ctx.coalescer.assign(&model, points).map_err(bad)?;
     timer.stop();
     ctx.metrics.incr("assign.requests", 1);
-    ctx.metrics.incr("assign.points", points.len() as u64);
+    ctx.metrics.incr("assign.points", n as u64);
+    if binary {
+        return Ok(Response::binary(200, encode_assign_frame(&labels, &d2s)));
+    }
     Ok(Response::json(
         200,
         &Json::obj(vec![
             ("model_id", Json::str(model.meta.id.clone())),
-            ("n", Json::num(points.len() as f64)),
+            ("n", Json::num(n as f64)),
             (
                 "labels",
                 Json::Arr(labels.iter().map(|&j| Json::num(j as f64)).collect()),
@@ -575,6 +781,7 @@ fn handle_assign(id: &str, req: &Request, ctx: &ServerCtx) -> RouteResult {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::matrix::PointSet;
     use crate::data::synth::{gaussian_mixture, SynthSpec};
 
     fn test_ctx() -> ServerCtx {
@@ -589,6 +796,8 @@ mod tests {
             method: "GET".to_string(),
             path: path.to_string(),
             query: String::new(),
+            content_type: String::new(),
+            keep_alive: true,
             body: Vec::new(),
         }
     }
@@ -598,7 +807,20 @@ mod tests {
             method: "POST".to_string(),
             path: path.to_string(),
             query: String::new(),
+            content_type: "application/json".to_string(),
+            keep_alive: true,
             body: body.as_bytes().to_vec(),
+        }
+    }
+
+    fn post_binary(path: &str, body: Vec<u8>) -> Request {
+        Request {
+            method: "POST".to_string(),
+            path: path.to_string(),
+            query: String::new(),
+            content_type: "application/octet-stream".to_string(),
+            keep_alive: true,
+            body,
         }
     }
 
@@ -684,6 +906,25 @@ mod tests {
         assert_eq!(
             body_json(&resp).get("state").and_then(Json::as_str),
             Some("queued")
+        );
+    }
+
+    #[test]
+    fn fit_sheds_429_when_backlog_full() {
+        // A bounded fit queue with no workers: the first submit fills
+        // it, the second is shed with 429 + Retry-After.
+        let ctx = ServerCtx::new(
+            Arc::new(ModelRegistry::new(None).unwrap()),
+            Arc::new(JobQueue::with_capacity(1)),
+        );
+        let body = r#"{"points": [[1,2],[3,4],[5,6]], "k": 2, "algo": "uniform"}"#;
+        assert_eq!(route(&post("/fit", body), &ctx).status, 202);
+        let resp = route(&post("/fit", body), &ctx);
+        assert_eq!(resp.status, 429);
+        assert!(
+            resp.headers.iter().any(|(name, _)| *name == "Retry-After"),
+            "{:?}",
+            resp.headers
         );
     }
 
@@ -786,6 +1027,8 @@ mod tests {
             method: "GET".to_string(),
             path: "/metrics".to_string(),
             query: "format=prometheus".to_string(),
+            content_type: String::new(),
+            keep_alive: true,
             body: Vec::new(),
         };
         let resp = route(&req, &ctx);
@@ -865,6 +1108,105 @@ mod tests {
         // Dimension mismatch → 400.
         let bad = route(&post("/models/m-1/assign", r#"{"points": [[1,2]]}"#), &ctx);
         assert_eq!(bad.status, 400);
+    }
+
+    #[test]
+    fn binary_assign_route_matches_json_bitwise() {
+        let ctx = test_ctx();
+        let cs = gaussian_mixture(
+            &SynthSpec {
+                n: 4,
+                d: 3,
+                k_true: 2,
+                ..Default::default()
+            },
+            5,
+        );
+        let meta = registry::ModelMeta {
+            id: ctx.registry.fresh_id(),
+            algorithm: "uniform".to_string(),
+            k: 4,
+            dim: 3,
+            source: "test".to_string(),
+            seed: 0,
+            seeding_secs: 0.0,
+            lloyd_iters: 0,
+            cost: 0.0,
+        };
+        ctx.registry.insert(meta, cs.clone()).unwrap();
+        let queries = gaussian_mixture(
+            &SynthSpec {
+                n: 30,
+                d: 3,
+                k_true: 2,
+                ..Default::default()
+            },
+            6,
+        );
+        // Binary route: .fbin body in, FKA1 frame out.
+        let body = crate::data::io::encode_fbin(&queries);
+        let resp = route(&post_binary("/models/m-1/assign", body), &ctx);
+        assert_eq!(resp.status, 200, "{:?}", String::from_utf8_lossy(&resp.body));
+        assert_eq!(resp.content_type, "application/octet-stream");
+        let (bin_labels, bin_d2s) = decode_assign_frame(&resp.body).unwrap();
+        // JSON route on the same queries.
+        let body = Json::obj(vec![("points", json::points_to_json(&queries))]).emit();
+        let resp = route(&post("/models/m-1/assign", &body), &ctx);
+        assert_eq!(resp.status, 200);
+        let v = body_json(&resp);
+        let json_labels: Vec<u32> = v
+            .get("labels")
+            .and_then(Json::as_array)
+            .unwrap()
+            .iter()
+            .map(|x| x.as_f64().unwrap() as u32)
+            .collect();
+        let json_d2s: Vec<f32> = v
+            .get("d2")
+            .and_then(Json::as_array)
+            .unwrap()
+            .iter()
+            .map(|x| x.as_f64().unwrap() as f32)
+            .collect();
+        // Bitwise identity across routes, and against the kernel.
+        assert_eq!(bin_labels, json_labels);
+        let bin_bits: Vec<u32> = bin_d2s.iter().map(|d| d.to_bits()).collect();
+        let json_bits: Vec<u32> = json_d2s.iter().map(|d| d.to_bits()).collect();
+        assert_eq!(bin_bits, json_bits);
+        let (want_labels, want_d2s) = crate::kernels::assign::assign_argmin(&queries, &cs);
+        assert_eq!(bin_labels, want_labels);
+        assert_eq!(bin_bits, want_d2s.iter().map(|d| d.to_bits()).collect::<Vec<_>>());
+        // Garbage binary bodies are client errors, not panics.
+        assert_eq!(
+            route(&post_binary("/models/m-1/assign", vec![1, 2, 3]), &ctx).status,
+            400
+        );
+        // Dimension mismatch through the binary route → 400.
+        let wrong_d = PointSet::from_flat(2, 7, vec![0.0; 14]);
+        let resp = route(
+            &post_binary("/models/m-1/assign", crate::data::io::encode_fbin(&wrong_d)),
+            &ctx,
+        );
+        assert_eq!(resp.status, 400);
+    }
+
+    #[test]
+    fn assign_frame_roundtrip_and_rejects() {
+        let labels = vec![3u32, 0, 7];
+        let d2s = vec![0.5f32, f32::MIN_POSITIVE, 123.25];
+        let frame = encode_assign_frame(&labels, &d2s);
+        assert_eq!(&frame[0..4], ASSIGN_FRAME_MAGIC);
+        let (l, d) = decode_assign_frame(&frame).unwrap();
+        assert_eq!(l, labels);
+        assert_eq!(
+            d.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            d2s.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        assert!(decode_assign_frame(b"nope").is_err());
+        assert!(decode_assign_frame(b"FKA1\x02\x00\x00\x00short").is_err());
+        let mut trailing = frame.clone();
+        trailing.push(0);
+        assert!(decode_assign_frame(&trailing).is_err());
     }
 
     #[test]

@@ -10,17 +10,29 @@
 //! Assignment requests route through the kernel engine
 //! ([`crate::kernels::assign::assign_argmin`]); per the PR 1 contract,
 //! this module owns **no distance loops**.
+//!
+//! ## The batch-invariance contract
+//!
+//! The serving layer coalesces concurrent assigns against one model into
+//! a single kernel sweep ([`AssignCoalescer`]), which changes the batch
+//! size the kernel sees. The autotuner picks kernels partly **by** batch
+//! size, so dispatching per sweep would let an unrelated concurrent
+//! request flip a response's bits. Instead every model pins its assign
+//! kernel once at registration ([`Model::new`], evaluated at the
+//! canonical batch size [`ASSIGN_PIN_N`]): assign results are a pure
+//! function of `(model, query points)` — independent of batch
+//! composition, concurrency, and route (JSON vs binary).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 
 use crate::bail;
 use crate::data::io::{read_fbin, write_fbin};
 use crate::data::matrix::PointSet;
 use crate::error::{Context, Result};
-use crate::kernels::assign::assign_argmin_cached;
+use crate::kernels::tune;
 use crate::server::json::{self, Json};
 
 /// Everything about a fitted model except the centers themselves.
@@ -92,6 +104,14 @@ impl ModelMeta {
     }
 }
 
+/// Canonical batch size at which a model's assign kernel is pinned.
+/// Chosen as a "sustained traffic" shape: small-k/small-d models stay on
+/// the naive kernel (same choice a solo small request would get below
+/// the autotuner's small-work floor), large models go blocked. The exact
+/// value matters less than it being **fixed** — see the module docs on
+/// batch invariance.
+pub const ASSIGN_PIN_N: usize = 8192;
+
 /// A fitted model: metadata + the `k × d` center matrix + the squared
 /// center norms the v2 assignment kernel consumes.
 #[derive(Clone, Debug)]
@@ -104,16 +124,26 @@ pub struct Model {
     /// request. Not persisted: it is a pure function of `centers`, so a
     /// reload recomputes identical bits.
     pub center_norms: Vec<f32>,
+    /// Kernel implementation every assign against this model runs,
+    /// pinned at registration/load so coalesced batch size cannot flip
+    /// the choice mid-flight. Not persisted: a reload re-derives the
+    /// same pin from the same shape (and the same `FKMPP_KERNEL` env, if
+    /// set).
+    pub assign_kernel: tune::Kernel,
 }
 
 impl Model {
-    /// Build a model, deriving the center-norm cache.
+    /// Build a model, deriving the center-norm cache and pinning the
+    /// assign kernel.
     pub fn new(meta: ModelMeta, centers: PointSet) -> Model {
         let center_norms = crate::kernels::norms::squared_norms(&centers);
+        let assign_kernel =
+            tune::kernel_for(tune::Op::Assign, ASSIGN_PIN_N, centers.dim(), centers.len());
         Model {
             meta,
             centers,
             center_norms,
+            assign_kernel,
         }
     }
 
@@ -131,12 +161,18 @@ impl Model {
 
 /// Batched nearest-center assignment against a model — the serving
 /// layer's only path to distances, routed through the kernel engine
-/// with the model's cached center norms (query-point norms are derived
-/// per request when the autotuned v2 kernel runs; the labels and
-/// distances are bitwise identical to an uncached
-/// [`crate::kernels::assign::assign_argmin`] call on the same bits, so
-/// repeated identical requests serve byte-identical responses).
+/// with the model's cached center norms and its **pinned** kernel
+/// (query-point norms are derived per sweep when the v2 kernel runs; the
+/// labels and distances are bitwise identical to an uncached
+/// [`crate::kernels::assign::assign_argmin`] call resolving to the same
+/// kernel on the same bits, so repeated identical requests serve
+/// byte-identical responses regardless of what else is in flight).
 pub fn assign(model: &Model, points: &PointSet) -> Result<(Vec<u32>, Vec<f32>)> {
+    check_dim(model, points)?;
+    Ok(assign_pinned(model, points))
+}
+
+fn check_dim(model: &Model, points: &PointSet) -> Result<()> {
     if points.dim() != model.centers.dim() {
         bail!(
             "dimension mismatch: model {} has d={}, query has d={}",
@@ -145,7 +181,191 @@ pub fn assign(model: &Model, points: &PointSet) -> Result<(Vec<u32>, Vec<f32>)> 
             points.dim()
         );
     }
-    Ok(assign_argmin_cached(points, None, &model.centers, Some(&model.center_norms)))
+    Ok(())
+}
+
+/// The one kernel sweep everything funnels into: dispatch on the model's
+/// pinned kernel, never on the sweep's batch size. Per-row results are
+/// independent of batch composition (both kernels are row-parallel with
+/// no cross-row state), which is what makes scatter-after-coalesce
+/// legitimate.
+fn assign_pinned(model: &Model, points: &PointSet) -> (Vec<u32>, Vec<f32>) {
+    match model.assign_kernel {
+        tune::Kernel::Naive => crate::kernels::assign::assign_argmin_naive(points, &model.centers),
+        tune::Kernel::Blocked => {
+            let pn = crate::kernels::norms::squared_norms(points);
+            crate::kernels::blocked::assign_argmin_blocked(
+                points,
+                &pn,
+                &model.centers,
+                &model.center_norms,
+            )
+        }
+    }
+}
+
+/// Per-request slot a coalesced assign parks on: the leader takes the
+/// points, runs the batch, and deposits the result.
+struct WaitSlot {
+    state: Mutex<SlotState>,
+}
+
+enum SlotState {
+    Pending(PointSet),
+    Running,
+    Done(Vec<u32>, Vec<f32>),
+}
+
+impl WaitSlot {
+    fn new(points: PointSet) -> WaitSlot {
+        WaitSlot {
+            state: Mutex::new(SlotState::Pending(points)),
+        }
+    }
+
+    fn take_done(&self) -> Option<(Vec<u32>, Vec<f32>)> {
+        let mut state = self.state.lock().unwrap();
+        if matches!(*state, SlotState::Done(..)) {
+            match std::mem::replace(&mut *state, SlotState::Running) {
+                SlotState::Done(labels, d2s) => Some((labels, d2s)),
+                _ => unreachable!(),
+            }
+        } else {
+            None
+        }
+    }
+}
+
+#[derive(Default)]
+struct ModelLane {
+    /// A leader is currently sweeping this model; arrivals must park.
+    leader_active: bool,
+    /// Requests parked while the leader sweeps, drained by the next one.
+    waiting: Vec<Arc<WaitSlot>>,
+}
+
+/// Per-model request coalescing: concurrent assigns against the same
+/// model batch into **one** pinned-kernel sweep instead of competing
+/// sweeps.
+///
+/// Leader/follower protocol, no timers: the first request for an idle
+/// model becomes the leader and sweeps immediately (zero added latency
+/// for uncontended traffic). Requests arriving while a leader sweeps
+/// park on a [`Condvar`]; when the leader finishes it publishes results
+/// and wakes everyone — a woken waiter whose result is already deposited
+/// returns it, otherwise it promotes itself to leader and drains the
+/// parked queue (itself included) in one concatenated sweep. Every
+/// parked request is thus swept by the *next* batch at the latest:
+/// nothing can wait forever.
+#[derive(Default)]
+pub struct AssignCoalescer {
+    lanes: Mutex<HashMap<String, ModelLane>>,
+    cond: Condvar,
+}
+
+impl AssignCoalescer {
+    /// Assign `points` to `model`'s centers, batching with any concurrent
+    /// requests against the same model. Bitwise identical to a solo
+    /// [`assign`] call (see the module docs on batch invariance).
+    pub fn assign(&self, model: &Model, points: PointSet) -> Result<(Vec<u32>, Vec<f32>)> {
+        // Validate before parking: a bad request must fail alone, never
+        // poison a batch (past this check the sweep is infallible).
+        check_dim(model, &points)?;
+        let slot = Arc::new(WaitSlot::new(points));
+        let mut lanes = self.lanes.lock().unwrap();
+        let lane = lanes.entry(model.meta.id.clone()).or_default();
+        if !lane.leader_active {
+            // Idle lane: lead a batch of any already-parked requests plus
+            // our own, without waiting.
+            lane.leader_active = true;
+            let mut batch = std::mem::take(&mut lane.waiting);
+            batch.push(Arc::clone(&slot));
+            drop(lanes);
+            return Ok(self.lead(model, batch, &slot));
+        }
+        lane.waiting.push(Arc::clone(&slot));
+        loop {
+            lanes = self.cond.wait(lanes).unwrap();
+            if let Some(result) = slot.take_done() {
+                return Ok(result);
+            }
+            let lane = lanes.entry(model.meta.id.clone()).or_default();
+            if !lane.leader_active {
+                // The previous leader finished without us (we parked
+                // after its drain): take over and sweep the queue.
+                lane.leader_active = true;
+                let batch = std::mem::take(&mut lane.waiting);
+                drop(lanes);
+                return Ok(self.lead(model, batch, &slot));
+            }
+        }
+    }
+
+    /// Run one sweep over `batch` (which contains `own`), deposit every
+    /// result, release the lane and wake the parked requests.
+    fn lead(
+        &self,
+        model: &Model,
+        batch: Vec<Arc<WaitSlot>>,
+        own: &WaitSlot,
+    ) -> (Vec<u32>, Vec<f32>) {
+        let mut parts: Vec<PointSet> = Vec::with_capacity(batch.len());
+        for slot in &batch {
+            let mut state = slot.state.lock().unwrap();
+            match std::mem::replace(&mut *state, SlotState::Running) {
+                SlotState::Pending(points) => parts.push(points),
+                _ => unreachable!("a parked slot is always Pending when drained"),
+            }
+        }
+        let mut span = crate::trace::Span::enter("assign.batch");
+        span.arg("requests", batch.len() as u64);
+        let own_result = if parts.len() == 1 {
+            // The common uncontended case: no concatenation, no scatter
+            // copy — the batch is exactly the leader's own request.
+            span.arg("points", parts[0].len() as u64);
+            Some(assign_pinned(model, &parts[0]))
+        } else {
+            let dim = model.centers.dim();
+            let total: usize = parts.iter().map(PointSet::len).sum();
+            let mut flat = Vec::with_capacity(total * dim);
+            for part in &parts {
+                flat.extend_from_slice(part.flat());
+            }
+            span.arg("points", total as u64);
+            let merged = PointSet::from_flat(total, dim, flat);
+            crate::metrics::global().incr("assign.coalesced_batches", 1);
+            crate::metrics::global().incr("assign.coalesced_requests", batch.len() as u64);
+            let (labels, d2s) = assign_pinned(model, &merged);
+            // Scatter the per-request slices back onto their slots.
+            let mut own_result = None;
+            let mut offset = 0usize;
+            for (slot, part) in batch.iter().zip(&parts) {
+                let n = part.len();
+                let result = (
+                    labels[offset..offset + n].to_vec(),
+                    d2s[offset..offset + n].to_vec(),
+                );
+                offset += n;
+                if std::ptr::eq(slot.as_ref(), own) {
+                    own_result = Some(result);
+                } else {
+                    *slot.state.lock().unwrap() = SlotState::Done(result.0, result.1);
+                }
+            }
+            own_result
+        };
+        drop(span);
+        let mut lanes = self.lanes.lock().unwrap();
+        if let Some(lane) = lanes.get_mut(&model.meta.id) {
+            lane.leader_active = false;
+            if lane.waiting.is_empty() {
+                lanes.remove(&model.meta.id);
+            }
+        }
+        drop(lanes);
+        self.cond.notify_all();
+        own_result.expect("leader's own slot is in the batch")
+    }
 }
 
 /// Thread-safe id → model map with optional on-disk persistence.
@@ -377,6 +597,84 @@ mod tests {
         // Dimension mismatch is a client error, not a panic.
         let bad = centers(3, 7, 5);
         assert!(assign(&model, &bad).is_err());
+    }
+
+    #[test]
+    fn coalescer_matches_solo_assign_bitwise() {
+        // Results must be a pure function of (model, query points):
+        // the same queries through the coalescer — alone or raced by 7
+        // other threads hammering the same model — must reproduce a solo
+        // registry::assign call bit for bit.
+        let cs = centers(4, 3, 3);
+        let model = Arc::new(Model::new(meta("m-1", 4, 3), cs));
+        let coalescer = Arc::new(AssignCoalescer::default());
+        let queries: Vec<PointSet> = (0..8).map(|i| centers(40 + i, 3, 10 + i as u64)).collect();
+        let solo: Vec<_> = queries.iter().map(|q| assign(&model, q).unwrap()).collect();
+        let got = coalescer.assign(&model, queries[0].clone()).unwrap();
+        assert_eq!(got, solo[0], "uncontended coalescer path");
+        let handles: Vec<_> = queries
+            .iter()
+            .cloned()
+            .enumerate()
+            .map(|(i, q)| {
+                let model = Arc::clone(&model);
+                let coalescer = Arc::clone(&coalescer);
+                std::thread::spawn(move || (i, coalescer.assign(&model, q).unwrap()))
+            })
+            .collect();
+        for h in handles {
+            let (i, got) = h.join().unwrap();
+            assert_eq!(got, solo[i], "raced request {i}");
+        }
+        // A dimension mismatch fails alone, before parking.
+        assert!(coalescer.assign(&model, centers(3, 7, 5)).is_err());
+    }
+
+    #[test]
+    fn coalescer_batches_parked_requests() {
+        // Deterministic contention: park requests behind an active
+        // leader by holding the lane, then check they all complete and
+        // the coalesced-batch counters moved.
+        let cs = centers(4, 3, 3);
+        let model = Arc::new(Model::new(meta("m-1", 4, 3), cs));
+        let coalescer = Arc::new(AssignCoalescer::default());
+        let before = crate::metrics::CounterSnapshot::of(crate::metrics::global());
+        let rounds = 20;
+        let threads = 6;
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let model = Arc::clone(&model);
+                let coalescer = Arc::clone(&coalescer);
+                std::thread::spawn(move || {
+                    for r in 0..rounds {
+                        let q = centers(25, 3, (t * rounds + r) as u64);
+                        let want = assign(&model, &q).unwrap();
+                        let got = coalescer.assign(&model, q).unwrap();
+                        assert_eq!(got, want);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        // With 6 threads × 20 rounds racing one model, at least one
+        // multi-request batch must have formed (each sweep is orders of
+        // magnitude slower than an enqueue).
+        let batches = before.delta(crate::metrics::global(), "assign.coalesced_batches");
+        assert!(batches >= 1, "no coalesced batch formed in {rounds} rounds");
+    }
+
+    #[test]
+    fn assign_kernel_pinned_at_registration() {
+        // The pin is a pure function of model shape (+ env), evaluated at
+        // the canonical batch size — and a reload re-derives it.
+        let cs = centers(4, 3, 3);
+        let model = Model::new(meta("m-1", 4, 3), cs);
+        assert_eq!(
+            model.assign_kernel,
+            tune::kernel_for(tune::Op::Assign, ASSIGN_PIN_N, 3, 4)
+        );
     }
 
     #[test]

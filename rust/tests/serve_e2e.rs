@@ -9,15 +9,16 @@
 //! emitter makes `f32 → f64 → text → f64 → f32` bit-exact in both
 //! directions, so the server computes on the same bits we do.
 
-use std::io::{Read, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
 use std::time::{Duration, Instant};
 
+use fastkmeanspp::data::io::encode_fbin;
 use fastkmeanspp::data::synth::{gaussian_mixture, SynthSpec};
 use fastkmeanspp::kernels::assign::assign_argmin;
 use fastkmeanspp::server::json::{self, Json};
-use fastkmeanspp::server::registry::ModelRegistry;
-use fastkmeanspp::server::{ServeConfig, Server};
+use fastkmeanspp::server::registry::{ModelMeta, ModelRegistry};
+use fastkmeanspp::server::{decode_assign_frame, ServeConfig, Server};
 
 /// Minimal blocking HTTP client: one request, `Connection: close`, parse
 /// status + JSON body.
@@ -94,6 +95,7 @@ fn serve_fit_job_assign_roundtrip() {
         http_workers: 2,
         fit_workers: 1,
         persist: true,
+        ..ServeConfig::default()
     };
     let server = Server::bind(&cfg).expect("bind ephemeral port");
     let addr = server.local_addr().expect("local addr").to_string();
@@ -495,4 +497,335 @@ fn serve_fit_job_assign_roundtrip() {
     let model = reloaded.get(&model_id).expect("model persisted");
     assert_eq!(model.centers, centers);
     assert_eq!(model.meta.k, 5);
+}
+
+/// Serialize one raw request. Empty `content_type` omits the header;
+/// `close` adds `Connection: close` (otherwise HTTP/1.1 default applies).
+fn raw_request(method: &str, path: &str, content_type: &str, body: &[u8], close: bool) -> Vec<u8> {
+    let mut head = format!("{method} {path} HTTP/1.1\r\nHost: e2e\r\n");
+    if !content_type.is_empty() {
+        head.push_str(&format!("Content-Type: {content_type}\r\n"));
+    }
+    head.push_str(&format!("Content-Length: {}\r\n", body.len()));
+    if close {
+        head.push_str("Connection: close\r\n");
+    }
+    head.push_str("\r\n");
+    let mut out = head.into_bytes();
+    out.extend_from_slice(body);
+    out
+}
+
+/// Read exactly ONE response off a kept-alive connection (the
+/// `read_to_string` trick in [`http`] only works with
+/// `Connection: close`). Returns status, lowercased headers, and the
+/// Content-Length-sized body bytes.
+fn read_one_response<R: BufRead>(reader: &mut R) -> (u16, Vec<(String, String)>, Vec<u8>) {
+    let mut line = String::new();
+    let n = reader.read_line(&mut line).expect("read status line");
+    assert!(n > 0, "connection closed before a response arrived");
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .unwrap_or_else(|| panic!("no status in {line:?}"))
+        .parse()
+        .expect("status code");
+    let mut headers = Vec::new();
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        assert!(reader.read_line(&mut h).expect("read header") > 0, "EOF in headers");
+        let t = h.trim_end();
+        if t.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = t.split_once(':') {
+            let name = name.trim().to_ascii_lowercase();
+            let value = value.trim().to_string();
+            if name == "content-length" {
+                content_length = value.parse().expect("Content-Length");
+            }
+            headers.push((name, value));
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).expect("read body");
+    (status, headers, body)
+}
+
+fn header<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str> {
+    headers
+        .iter()
+        .find(|(n, _)| n == name)
+        .map(|(_, v)| v.as_str())
+}
+
+/// ISSUE 8 tentpole leg: one socket carries many requests (JSON then
+/// binary then a capped third), the binary route answers bit-identically
+/// to the JSON route, and the protocol bugfixes (leading-CRLF skip,
+/// conflicting duplicate Content-Length → written 400) hold on the wire.
+#[test]
+fn keep_alive_session_binary_parity_and_protocol_fixes() {
+    let cfg = ServeConfig {
+        host: "127.0.0.1".to_string(),
+        port: 0,
+        persist: false,
+        http_workers: 2,
+        fit_workers: 1,
+        queue_depth: 16,
+        keepalive_max_requests: 3,
+        ..ServeConfig::default()
+    };
+    let server = Server::bind(&cfg).expect("bind ephemeral port");
+    let addr = server.local_addr().expect("local addr");
+    // Install a model directly — this leg tests the wire, not the fit.
+    let reg = server.registry();
+    let centers = gaussian_mixture(
+        &SynthSpec {
+            n: 4,
+            d: 3,
+            k_true: 2,
+            ..Default::default()
+        },
+        5,
+    );
+    let meta = ModelMeta {
+        id: reg.fresh_id(),
+        algorithm: "uniform".to_string(),
+        k: 4,
+        dim: 3,
+        source: "test".to_string(),
+        seed: 0,
+        seeding_secs: 0.0,
+        lloyd_iters: 0,
+        cost: 0.0,
+    };
+    let model_id = meta.id.clone();
+    reg.insert(meta, centers.clone()).expect("insert model");
+    let server_thread = std::thread::spawn(move || server.run());
+
+    let queries = gaussian_mixture(
+        &SynthSpec {
+            n: 17,
+            d: 3,
+            k_true: 2,
+            ..Default::default()
+        },
+        6,
+    );
+    let assign_path = format!("/models/{model_id}/assign");
+
+    // Three requests on ONE socket.
+    let stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let mut writer = stream.try_clone().expect("clone stream");
+    let mut reader = BufReader::new(stream);
+
+    // 1: JSON assign — HTTP/1.1 defaults to keep-alive, the server says so.
+    let json_body = Json::obj(vec![("points", json::points_to_json(&queries))]).emit();
+    writer
+        .write_all(&raw_request(
+            "POST",
+            &assign_path,
+            "application/json",
+            json_body.as_bytes(),
+            false,
+        ))
+        .unwrap();
+    let (status, headers, body) = read_one_response(&mut reader);
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+    assert_eq!(header(&headers, "connection"), Some("keep-alive"), "{headers:?}");
+    let v = json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    let json_labels: Vec<u32> = v
+        .get("labels")
+        .and_then(Json::as_array)
+        .expect("labels")
+        .iter()
+        .map(|x| x.as_f64().expect("label") as u32)
+        .collect();
+    let json_d2_bits: Vec<u32> = v
+        .get("d2")
+        .and_then(Json::as_array)
+        .expect("d2")
+        .iter()
+        .map(|x| (x.as_f64().expect("d2") as f32).to_bits())
+        .collect();
+
+    // 2: binary assign pipelined on the same socket — .fbin in, FKA1 out.
+    writer
+        .write_all(&raw_request(
+            "POST",
+            &assign_path,
+            "application/octet-stream",
+            &encode_fbin(&queries),
+            false,
+        ))
+        .unwrap();
+    let (status, headers, frame) = read_one_response(&mut reader);
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&frame));
+    assert_eq!(header(&headers, "connection"), Some("keep-alive"), "{headers:?}");
+    assert_eq!(
+        header(&headers, "content-type"),
+        Some("application/octet-stream"),
+        "{headers:?}"
+    );
+    let (bin_labels, bin_d2s) = decode_assign_frame(&frame).expect("FKA1 frame");
+    // Byte-identical to the JSON route, and both match the kernel.
+    assert_eq!(bin_labels, json_labels);
+    let bin_d2_bits: Vec<u32> = bin_d2s.iter().map(|d| d.to_bits()).collect();
+    assert_eq!(bin_d2_bits, json_d2_bits);
+    let (want_labels, want_d2s) = assign_argmin(&queries, &centers);
+    assert_eq!(bin_labels, want_labels);
+    assert_eq!(
+        bin_d2_bits,
+        want_d2s.iter().map(|d| d.to_bits()).collect::<Vec<_>>()
+    );
+
+    // 3: the per-connection cap (3) closes the session, with notice.
+    writer
+        .write_all(&raw_request("GET", "/healthz", "", &[], false))
+        .unwrap();
+    let (status, headers, _) = read_one_response(&mut reader);
+    assert_eq!(status, 200);
+    assert_eq!(header(&headers, "connection"), Some("close"), "{headers:?}");
+    let mut rest = Vec::new();
+    reader.read_to_end(&mut rest).expect("EOF after close");
+    assert!(rest.is_empty(), "no bytes after Connection: close");
+
+    // RFC 7230 §3.5 satellite: leading bare CRLFs before the request
+    // line are skipped, on the real wire.
+    let mut s2 = TcpStream::connect(addr).unwrap();
+    s2.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    s2.write_all(b"\r\n\r\n").unwrap();
+    s2.write_all(&raw_request("GET", "/healthz", "", &[], true))
+        .unwrap();
+    let mut r2 = BufReader::new(s2);
+    let (status, _, _) = read_one_response(&mut r2);
+    assert_eq!(status, 200);
+
+    // Smuggling-hazard satellite: conflicting duplicate Content-Length
+    // gets a WRITTEN 400 (the old layer dropped the connection), and the
+    // server closes after it.
+    let mut s3 = TcpStream::connect(addr).unwrap();
+    s3.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    s3.write_all(
+        b"POST /healthz HTTP/1.1\r\nHost: e2e\r\nContent-Length: 3\r\nContent-Length: 5\r\n\r\nabc",
+    )
+    .unwrap();
+    let mut r3 = BufReader::new(s3);
+    let (status, headers, body) = read_one_response(&mut r3);
+    assert_eq!(status, 400, "{}", String::from_utf8_lossy(&body));
+    assert_eq!(header(&headers, "connection"), Some("close"), "{headers:?}");
+
+    let (status, _) = http(&addr.to_string(), "POST", "/shutdown", None);
+    assert_eq!(status, 200);
+    server_thread.join().expect("join").expect("run");
+}
+
+/// ISSUE 8 tentpole leg: saturating the bounded accept queue yields
+/// fast 429s with `Retry-After` — never a hang — and queued connections
+/// still serve once a worker frees up.
+#[test]
+fn bounded_accept_queue_sheds_429_and_never_hangs() {
+    let cfg = ServeConfig {
+        host: "127.0.0.1".to_string(),
+        port: 0,
+        persist: false,
+        http_workers: 1,
+        fit_workers: 1,
+        queue_depth: 1,
+        ..ServeConfig::default()
+    };
+    let server = Server::bind(&cfg).expect("bind ephemeral port");
+    let addr = server.local_addr().expect("local addr");
+    let server_thread = std::thread::spawn(move || server.run());
+
+    // c1 occupies the single worker: one served request, then the
+    // worker blocks reading the kept-alive socket for the next one.
+    let c1 = TcpStream::connect(addr).expect("connect c1");
+    c1.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut w1 = c1.try_clone().unwrap();
+    let mut r1 = BufReader::new(c1);
+    w1.write_all(&raw_request("GET", "/healthz", "", &[], false))
+        .unwrap();
+    let (status, _, _) = read_one_response(&mut r1);
+    assert_eq!(status, 200);
+
+    // c2 parks in the accept queue (depth 1).
+    let c2 = TcpStream::connect(addr).expect("connect c2");
+    c2.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+
+    // c3 finds the queue full: shed immediately with 429 + Retry-After.
+    // The client writes nothing — the shed happens at admission.
+    let t0 = Instant::now();
+    let c3 = TcpStream::connect(addr).expect("connect c3");
+    c3.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut r3 = BufReader::new(c3);
+    let (status, headers, body) = read_one_response(&mut r3);
+    assert_eq!(status, 429, "{}", String::from_utf8_lossy(&body));
+    assert_eq!(header(&headers, "retry-after"), Some("1"), "{headers:?}");
+    assert_eq!(header(&headers, "connection"), Some("close"), "{headers:?}");
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "shed must not wait for a worker"
+    );
+
+    // Freeing the worker (close c1) drains the queue: c2 now serves.
+    drop(w1);
+    drop(r1);
+    let mut w2 = c2.try_clone().unwrap();
+    let mut r2 = BufReader::new(c2);
+    w2.write_all(&raw_request("GET", "/healthz", "", &[], true))
+        .unwrap();
+    let (status, _, _) = read_one_response(&mut r2);
+    assert_eq!(status, 200);
+
+    let (status, _) = http(&addr.to_string(), "POST", "/shutdown", None);
+    assert_eq!(status, 200);
+    server_thread.join().expect("join").expect("run");
+}
+
+/// ISSUE 8 tentpole leg: a kept-alive connection that goes idle past the
+/// deadline is closed by the server (silently — nothing to answer).
+#[test]
+fn idle_keepalive_connection_closed_by_deadline() {
+    let cfg = ServeConfig {
+        host: "127.0.0.1".to_string(),
+        port: 0,
+        persist: false,
+        http_workers: 1,
+        fit_workers: 1,
+        keepalive_idle: Duration::from_millis(300),
+        ..ServeConfig::default()
+    };
+    let server = Server::bind(&cfg).expect("bind ephemeral port");
+    let addr = server.local_addr().expect("local addr");
+    let server_thread = std::thread::spawn(move || server.run());
+
+    let stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    writer
+        .write_all(&raw_request("GET", "/healthz", "", &[], false))
+        .unwrap();
+    let (status, headers, _) = read_one_response(&mut reader);
+    assert_eq!(status, 200);
+    assert_eq!(header(&headers, "connection"), Some("keep-alive"), "{headers:?}");
+
+    // Go idle: the server closes within the deadline (+ generous slack —
+    // the client read timeout would turn a hang into an Err here).
+    let mut rest = Vec::new();
+    reader
+        .read_to_end(&mut rest)
+        .expect("server must close the idle connection, not leave it hanging");
+    assert!(rest.is_empty(), "idle close sends no bytes");
+
+    let (status, _) = http(&addr.to_string(), "POST", "/shutdown", None);
+    assert_eq!(status, 200);
+    server_thread.join().expect("join").expect("run");
 }
