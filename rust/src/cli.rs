@@ -8,9 +8,12 @@
 //! fkmpp serve     --port 8080 [--data-dir data] [--fit-workers 1]
 //! fkmpp loadgen   [--short] [--conns 1,2,8] [--json BENCH_serve.json]
 //! fkmpp worker    --port 9090 [--fail-after N]
-//! fkmpp report    --trace trace.json
+//! fkmpp report    --trace trace.json [--baseline other.json]
 //! fkmpp info
 //! ```
+//!
+//! Every command also accepts `--log-level error|warn|info|debug|off`
+//! (structured-log stderr threshold, overrides `FKMPP_LOG`).
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -24,6 +27,7 @@ use crate::lloyd::{lloyd, LloydConfig};
 use crate::rng::Pcg64;
 use crate::runtime::Backend;
 use crate::seeding::SeedingAlgorithm;
+use crate::server::json::Json;
 
 /// Parsed command line: one subcommand, positional args, `--key value`
 /// flags (also `--flag` booleans and `-k 5` shorthands).
@@ -158,6 +162,14 @@ pub fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
 /// Entry point used by `main.rs` (and by CLI tests).
 pub fn run(argv: &[String]) -> Result<String> {
     let args = Args::parse(argv)?;
+    // `--log-level LEVEL` pins the structured-log stderr threshold for
+    // any command, overriding `FKMPP_LOG` (see `crate::log`).
+    if let Some(v) = args.get("log-level") {
+        match crate::log::Level::parse(v) {
+            Some(lvl) => crate::log::set_level(lvl),
+            None => bail!("--log-level {v:?} (expected error|warn|info|debug|off)"),
+        }
+    }
     // `--trace PATH` (or `FKMPP_TRACE=PATH`) arms the run-trace recorder
     // for the workload commands; on success the Chrome-trace JSON lands
     // at PATH (load it in Perfetto / chrome://tracing, or summarize with
@@ -196,14 +208,30 @@ pub fn run(argv: &[String]) -> Result<String> {
     result
 }
 
-/// `fkmpp report --trace PATH`: per-phase wall-time breakdown of a
-/// recorded trace, in the style of the paper's runtime tables.
+/// `fkmpp report --trace PATH [--baseline PATH]`: per-phase wall-time
+/// breakdown of a recorded trace, in the style of the paper's runtime
+/// tables; with `--baseline`, the per-phase diff between the two runs.
 fn cmd_report(args: &Args) -> Result<String> {
     let path = args.get("trace").context("report needs --trace <path>")?;
+    let doc = read_trace(path)?;
+    if let Some(base_path) = args.get("baseline") {
+        let base = read_trace(base_path)?;
+        return crate::trace::render_report_diff(&doc, &base);
+    }
+    crate::trace::render_report(&doc)
+}
+
+/// Read + parse one trace file for `cmd_report`. An empty (or
+/// whitespace-only) file — e.g. a run killed before the exporter
+/// flushed — reports as a trace with no spans rather than a parse
+/// error; anything non-empty must be valid trace JSON.
+fn read_trace(path: &str) -> Result<Json> {
     let text =
         std::fs::read_to_string(path).with_context(|| format!("reading trace file {path}"))?;
-    let doc = crate::server::json::parse(&text).with_context(|| format!("parsing {path}"))?;
-    crate::trace::render_report(&doc)
+    if text.trim().is_empty() {
+        return Ok(Json::obj(vec![("traceEvents", Json::Arr(Vec::new()))]));
+    }
+    crate::server::json::parse(&text).with_context(|| format!("parsing {path}"))
 }
 
 const USAGE: &str = "fastkmeanspp (NeurIPS 2020 reproduction)
@@ -231,12 +259,16 @@ USAGE:
                  [-k 64] [--requests 100] [--reps 2] [--seed 42]
                  [--json BENCH_serve.json] [--trace trace.json]
   fkmpp worker   [--port 0] [--host 127.0.0.1] [--fail-after N]
-  fkmpp report   --trace trace.json
+  fkmpp report   --trace trace.json [--baseline other.json]
   fkmpp info
 
 `--trace PATH` (or env FKMPP_TRACE=PATH) records a Chrome-trace-event
 JSON of the run's phase spans (Perfetto / chrome://tracing loadable);
-`fkmpp report --trace PATH` prints its per-phase breakdown table.
+`fkmpp report --trace PATH` prints its per-phase breakdown table, and
+`--baseline OTHER` the per-phase diff (Δtotal / Δmean / Δshare%)
+against a second trace. `--log-level error|warn|info|debug|off` (or
+env FKMPP_LOG; default info) sets the structured-log stderr threshold
+for any command.
 
 Algorithms: kmeanspp fastkmeanspp rejection rejection-exact rejection-rigorous
             afkmc2 uniform greedy
@@ -322,7 +354,9 @@ fn cmd_seed(args: &Args) -> Result<String> {
 
 fn cmd_grid(args: &Args) -> Result<String> {
     let cfg = config_from_args(args)?;
-    let res = run_grid(&cfg, |line| eprintln!("[grid] {line}"))?;
+    let res = run_grid(&cfg, |line| {
+        crate::log::info("grid.progress", &[("line", Json::str(line))])
+    })?;
     let mut out = String::new();
     // `--json path`: machine-readable artifact alongside the tables (the
     // BENCH_*.json perf trajectory), via the serving layer's emitter.
@@ -373,7 +407,9 @@ fn cmd_table(args: &Args) -> Result<String> {
             cfg.ks = vec![(min_n / 20).max(1)];
         }
     }
-    let res = run_grid(&cfg, |line| eprintln!("[table] {line}"))?;
+    let res = run_grid(&cfg, |line| {
+        crate::log::info("table.progress", &[("line", Json::str(line))])
+    })?;
     let mut out = format!(
         "profile={} reps={} backend={}\n\n",
         cfg.profile.name(),
@@ -462,7 +498,10 @@ fn cmd_serve(args: &Args) -> Result<String> {
             .get_usize("max-requests-per-conn", defaults.keepalive_max_requests)?,
     };
     let server = crate::server::Server::bind(&scfg)?;
-    eprintln!("[serve] listening on http://{}", server.local_addr()?);
+    crate::log::info(
+        "serve.listening",
+        &[("addr", Json::str(format!("http://{}", server.local_addr()?)))],
+    );
     server.run()?;
     Ok("server stopped\n".to_string())
 }
@@ -711,6 +750,48 @@ mod tests {
         let bogus = std::env::temp_dir().join("fkmpp_cli_trace_bogus.json");
         std::fs::write(&bogus, "{\"not\": \"a trace\"}").unwrap();
         assert!(run(&argv(&format!("report --trace {}", bogus.display()))).is_err());
+    }
+
+    #[test]
+    fn report_baseline_diff_and_empty_trace_file() {
+        // An empty (or whitespace-only) trace file — what a run killed
+        // before the exporter flushed leaves behind — reports as a
+        // span-free trace, not a parse error.
+        let empty = std::env::temp_dir().join("fkmpp_cli_report_empty.json");
+        std::fs::write(&empty, "  \n").unwrap();
+        let out = run(&argv(&format!("report --trace {}", empty.display()))).unwrap();
+        assert!(out.contains("(trace contains no spans)"), "{out}");
+        // `--baseline`: per-phase diff table, including phases present
+        // in only one of the two traces.
+        let cur = std::env::temp_dir().join("fkmpp_cli_report_cur.json");
+        let base = std::env::temp_dir().join("fkmpp_cli_report_base.json");
+        std::fs::write(
+            &cur,
+            r#"{"traceEvents":[{"name":"phase.x","ph":"X","pid":1,"tid":1,"ts":0,"dur":2000000}]}"#,
+        )
+        .unwrap();
+        std::fs::write(
+            &base,
+            r#"{"traceEvents":[
+                {"name":"phase.x","ph":"X","pid":1,"tid":1,"ts":0,"dur":500000},
+                {"name":"phase.y","ph":"X","pid":1,"tid":1,"ts":0,"dur":250000}]}"#,
+        )
+        .unwrap();
+        let out = run(&argv(&format!(
+            "report --trace {} --baseline {}",
+            cur.display(),
+            base.display()
+        )))
+        .unwrap();
+        assert!(out.contains("Δtotal"), "{out}");
+        assert!(out.contains("phase.x"), "{out}");
+        assert!(out.contains("phase.y"), "{out}");
+    }
+
+    #[test]
+    fn log_level_flag_validates() {
+        let err = format!("{:#}", run(&argv("info --log-level bogus")).unwrap_err());
+        assert!(err.contains("log-level"), "{err}");
     }
 
     #[test]

@@ -29,7 +29,7 @@ use std::time::{Duration, Instant};
 
 use crate::bail;
 use crate::data::matrix::PointSet;
-use crate::dist::wire::Frame;
+use crate::dist::wire::{Frame, TraceCtx};
 use crate::dist::{run_rounds, RoundExecutor};
 use crate::error::{Context, Error, Result};
 use crate::kernels::reduce;
@@ -177,7 +177,22 @@ impl<'a> DistCoordinator<'a> {
             .with_context(|| format!("connect worker {endpoint}"))?;
         stream.set_read_timeout(Some(self.cfg.rpc_timeout)).ok();
         stream.set_write_timeout(Some(self.cfg.rpc_timeout)).ok();
-        let body = frame.encode();
+        // Traced runs stamp every frame with the wire trace context:
+        // this process's trace id, this RPC's span id as the remote
+        // parent, and the driver round. Untraced runs send the all-zero
+        // context (bitwise identical to the pre-trace wire bytes aside
+        // from the fixed envelope).
+        let body = if trace::enabled() {
+            let span_id = trace::next_span_id();
+            span.arg("span_id", span_id);
+            frame.encode_with(&TraceCtx {
+                trace_id: trace::trace_id(),
+                parent_span: span_id,
+                round: self.round.get(),
+            })
+        } else {
+            frame.encode()
+        };
         span.arg("bytes_out", body.len());
         let head = format!(
             "POST /rpc HTTP/1.1\r\nHost: {endpoint}\r\nContent-Type: application/octet-stream\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
@@ -289,6 +304,50 @@ impl<'a> DistCoordinator<'a> {
                     std::thread::sleep(RETRY_BACKOFF);
                 }
             }
+        }
+    }
+
+    /// End-of-run trace merge: ask every worker to dump its buffered
+    /// spans and fold them in as foreign spans under per-worker pid
+    /// rows (`LOCAL_PID` + 1 + slot index, labelled `worker-{i+1}`),
+    /// with timestamps shifted onto this process's epoch via the
+    /// wall-clock anchors exchanged in `TraceEvents`. Failures are
+    /// swallowed — a lost trace dump must never fail a finished run.
+    fn collect_worker_traces(&self) {
+        let coord_epoch = trace::epoch_unix_us();
+        for (w, slot) in self.workers.iter().enumerate() {
+            let resp = match self.rpc_raw(&slot.endpoint, &Frame::TraceDump) {
+                Ok(r) => r,
+                Err(_) => continue,
+            };
+            let Frame::TraceEvents {
+                trace_id,
+                epoch_unix_us,
+                spans,
+            } = resp
+            else {
+                continue;
+            };
+            if spans.is_empty() {
+                // An in-process worker thread (shared sink) or a worker
+                // that never adopted the trace answers empty.
+                continue;
+            }
+            let shift = epoch_unix_us - coord_epoch;
+            let foreign = spans
+                .into_iter()
+                .map(|s| trace::ForeignSpan {
+                    pid: w as u32 + trace::LOCAL_PID + 1,
+                    process: format!("worker-{}", w + 1),
+                    trace_id,
+                    name: s.name,
+                    tid: s.tid,
+                    ts_us: s.ts_us + shift,
+                    dur_us: s.dur_us,
+                    args: s.args,
+                })
+                .collect();
+            trace::add_foreign(foreign);
         }
     }
 
@@ -420,7 +479,13 @@ pub fn kmeans_par_dist(
     let mut coord = DistCoordinator::new(ps, cfg)?;
     coord.provision_all()?;
     let init_secs = t0.elapsed().as_secs_f64();
-    run_rounds(ps, k, cfg.rounds, cfg.oversample, &mut coord, init_secs, rng)
+    let result = run_rounds(ps, k, cfg.rounds, cfg.oversample, &mut coord, init_secs, rng);
+    if trace::enabled() {
+        // Merge worker timelines even when the run failed — a partial
+        // trace of a failed run is exactly when you want one.
+        coord.collect_worker_traces();
+    }
+    result
 }
 
 /// Minimal HTTP/1.1 response reader for the coordinator's RPC client

@@ -3,11 +3,13 @@
 //! Bulk rows are f32 matrices and cost partials are f64s that must
 //! survive transport **bit-exactly** — JSON float round-tripping is both
 //! overhead and a parity hazard — so frames are a little-endian binary
-//! format: a `u32` magic, a `u8` frame tag, then tag-specific fields.
-//! Variable-length fields carry explicit lengths (`u32` for row counts
-//! and strings, matching `data/io.rs`'s `.fbin` header; `u64` for index
-//! and partial vectors). Floats travel as `to_le_bytes` words, so NaNs
-//! and signed zeros round-trip bit-for-bit.
+//! format: a `u32` magic, a fixed 24-byte [`TraceCtx`] envelope
+//! (`trace_id`, `parent_span`, `round` — all-zero when untraced), a
+//! `u8` frame tag, then tag-specific fields. Variable-length fields
+//! carry explicit lengths (`u32` for row counts and strings, matching
+//! `data/io.rs`'s `.fbin` header; `u64` for index and partial vectors).
+//! Floats travel as `to_le_bytes` words, so NaNs and signed zeros
+//! round-trip bit-for-bit.
 //!
 //! Decoding follows the same strictness discipline as
 //! [`crate::server::json`]: a frame must consume the buffer *exactly* —
@@ -18,9 +20,36 @@
 use crate::bail;
 use crate::data::matrix::PointSet;
 use crate::error::{Context, Result};
+use crate::trace::TraceArg;
 
 /// Frame magic (`"FKM1"` little-endian) — a version bump is a new magic.
 pub const MAGIC: u32 = 0x464B_4D31;
+
+/// Trace context carried in every frame envelope, right after the
+/// magic. All-zero means "untraced" — a worker receiving a nonzero
+/// `trace_id` adopts it and starts recording; `parent_span` names the
+/// coordinator-side `dist.rpc` span this RPC runs under and `round` the
+/// k-means‖ round, both re-exported as span args so the merged timeline
+/// links coordinator wire-time to worker compute-time.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceCtx {
+    pub trace_id: u64,
+    pub parent_span: u64,
+    pub round: u64,
+}
+
+/// One span crossing the wire in a [`Frame::TraceEvents`] response:
+/// the worker-side [`crate::trace::SpanEvent`] with owned names/keys.
+/// Timestamps are microseconds against the *worker's* trace epoch; the
+/// coordinator shifts them using `epoch_unix_us` before merging.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireSpan {
+    pub name: String,
+    pub tid: u64,
+    pub ts_us: f64,
+    pub dur_us: f64,
+    pub args: Vec<(String, TraceArg)>,
+}
 
 /// One RPC frame. Requests (coordinator → worker): [`Frame::ShardLoad`],
 /// [`Frame::Update`], [`Frame::Sample`], [`Frame::Weigh`]. Responses
@@ -59,6 +88,17 @@ pub enum Frame {
     /// Typed failure (bad request, no shard loaded, ...): the message
     /// joins the coordinator's error chain.
     Error { message: String },
+    /// End-of-run trace collection: ship back every span buffered since
+    /// adoption (and clear the buffer). Response: [`Frame::TraceEvents`].
+    TraceDump,
+    /// The worker's buffered spans, plus the trace id it recorded under
+    /// and its trace epoch as unix microseconds (the wall anchor the
+    /// coordinator uses to shift `ts_us` onto its own timeline).
+    TraceEvents {
+        trace_id: u64,
+        epoch_unix_us: f64,
+        spans: Vec<WireSpan>,
+    },
 }
 
 impl Frame {
@@ -74,6 +114,8 @@ impl Frame {
             Frame::Candidates { .. } => "candidates",
             Frame::Counts { .. } => "counts",
             Frame::Error { .. } => "error",
+            Frame::TraceDump => "trace_dump",
+            Frame::TraceEvents { .. } => "trace_events",
         }
     }
 }
@@ -116,6 +158,38 @@ fn put_points(out: &mut Vec<u8>, ps: &PointSet) {
 fn put_str(out: &mut Vec<u8>, s: &str) {
     put_u32(out, s.len() as u32);
     out.extend_from_slice(s.as_bytes());
+}
+
+const ARG_U64: u8 = 0;
+const ARG_F64: u8 = 1;
+const ARG_STR: u8 = 2;
+
+fn put_spans(out: &mut Vec<u8>, spans: &[WireSpan]) {
+    put_u64(out, spans.len() as u64);
+    for s in spans {
+        put_str(out, &s.name);
+        put_u64(out, s.tid);
+        put_f64(out, s.ts_us);
+        put_f64(out, s.dur_us);
+        put_u64(out, s.args.len() as u64);
+        for (k, v) in &s.args {
+            put_str(out, k);
+            match v {
+                TraceArg::U64(u) => {
+                    out.push(ARG_U64);
+                    put_u64(out, *u);
+                }
+                TraceArg::F64(f) => {
+                    out.push(ARG_F64);
+                    put_f64(out, *f);
+                }
+                TraceArg::Str(t) => {
+                    out.push(ARG_STR);
+                    put_str(out, t);
+                }
+            }
+        }
+    }
 }
 
 /// Strict cursor over an encoded frame: every read is bounds-checked,
@@ -204,6 +278,46 @@ impl<'a> Reader<'a> {
         String::from_utf8(bytes.to_vec()).context("frame string is not UTF-8")
     }
 
+    fn spans(&mut self) -> Result<Vec<WireSpan>> {
+        let len = self.u64()? as usize;
+        // A span is at least 36 bytes (empty name + tid + ts + dur +
+        // arg count) — reject corrupt lengths before allocating.
+        if len > self.remaining() / 36 {
+            bail!("span-vector length {len} exceeds frame");
+        }
+        let mut spans = Vec::with_capacity(len);
+        for _ in 0..len {
+            let name = self.string()?;
+            let tid = self.u64()?;
+            let ts_us = self.f64()?;
+            let dur_us = self.f64()?;
+            let n_args = self.u64()? as usize;
+            // An arg is at least 9 bytes (empty key + tag + payload).
+            if n_args > self.remaining() / 9 {
+                bail!("arg-vector length {n_args} exceeds frame");
+            }
+            let mut args = Vec::with_capacity(n_args);
+            for _ in 0..n_args {
+                let key = self.string()?;
+                let value = match self.u8()? {
+                    ARG_U64 => TraceArg::U64(self.u64()?),
+                    ARG_F64 => TraceArg::F64(self.f64()?),
+                    ARG_STR => TraceArg::Str(self.string()?),
+                    other => bail!("unknown span-arg tag {other}"),
+                };
+                args.push((key, value));
+            }
+            spans.push(WireSpan {
+                name,
+                tid,
+                ts_us,
+                dur_us,
+                args,
+            });
+        }
+        Ok(spans)
+    }
+
     fn finish(self) -> Result<()> {
         if self.pos != self.buf.len() {
             bail!("{} trailing bytes after frame", self.buf.len() - self.pos);
@@ -221,12 +335,22 @@ const TAG_PARTIALS: u8 = 5;
 const TAG_CANDIDATES: u8 = 6;
 const TAG_COUNTS: u8 = 7;
 const TAG_ERROR: u8 = 8;
+const TAG_TRACE_DUMP: u8 = 9;
+const TAG_TRACE_EVENTS: u8 = 10;
 
 impl Frame {
-    /// Serialize to the binary wire form.
+    /// Serialize with an all-zero (untraced) envelope.
     pub fn encode(&self) -> Vec<u8> {
+        self.encode_with(&TraceCtx::default())
+    }
+
+    /// Serialize to the binary wire form under `ctx`.
+    pub fn encode_with(&self, ctx: &TraceCtx) -> Vec<u8> {
         let mut out = Vec::new();
         put_u32(&mut out, MAGIC);
+        put_u64(&mut out, ctx.trace_id);
+        put_u64(&mut out, ctx.parent_span);
+        put_u64(&mut out, ctx.round);
         match self {
             Frame::ShardLoad {
                 n_global,
@@ -277,17 +401,41 @@ impl Frame {
                 out.push(TAG_ERROR);
                 put_str(&mut out, message);
             }
+            Frame::TraceDump => {
+                out.push(TAG_TRACE_DUMP);
+            }
+            Frame::TraceEvents {
+                trace_id,
+                epoch_unix_us,
+                spans,
+            } => {
+                out.push(TAG_TRACE_EVENTS);
+                put_u64(&mut out, *trace_id);
+                put_f64(&mut out, *epoch_unix_us);
+                put_spans(&mut out, spans);
+            }
         }
         out
     }
 
-    /// Strict decode: the buffer must hold exactly one frame.
+    /// Strict decode, discarding the trace envelope.
     pub fn decode(buf: &[u8]) -> Result<Frame> {
+        Frame::decode_with(buf).map(|(_, frame)| frame)
+    }
+
+    /// Strict decode: the buffer must hold exactly one frame; returns
+    /// the trace envelope alongside it.
+    pub fn decode_with(buf: &[u8]) -> Result<(TraceCtx, Frame)> {
         let mut r = Reader { buf, pos: 0 };
         let magic = r.u32()?;
         if magic != MAGIC {
             bail!("bad frame magic {magic:#010x} (want {MAGIC:#010x})");
         }
+        let ctx = TraceCtx {
+            trace_id: r.u64()?,
+            parent_span: r.u64()?,
+            round: r.u64()?,
+        };
         let tag = r.u8()?;
         let frame = match tag {
             TAG_SHARD_LOAD => Frame::ShardLoad {
@@ -312,10 +460,16 @@ impl Frame {
             TAG_ERROR => Frame::Error {
                 message: r.string()?,
             },
+            TAG_TRACE_DUMP => Frame::TraceDump,
+            TAG_TRACE_EVENTS => Frame::TraceEvents {
+                trace_id: r.u64()?,
+                epoch_unix_us: r.f64()?,
+                spans: r.spans()?,
+            },
             other => bail!("unknown frame tag {other}"),
         };
         r.finish()?;
-        Ok(frame)
+        Ok((ctx, frame))
     }
 }
 
@@ -372,6 +526,37 @@ mod tests {
         frames.push(Frame::Error {
             message: String::new(),
         });
+        frames.push(Frame::TraceDump);
+        frames.push(Frame::TraceEvents {
+            trace_id: 0,
+            epoch_unix_us: 0.0,
+            spans: Vec::new(),
+        });
+        frames.push(Frame::TraceEvents {
+            trace_id: 0x1234_5678_9ABC_DEF0,
+            epoch_unix_us: 1.7e15,
+            spans: vec![
+                WireSpan {
+                    name: "worker.rpc".into(),
+                    tid: 3,
+                    ts_us: 12.5,
+                    dur_us: 1000.0,
+                    args: vec![
+                        ("kind".into(), TraceArg::Str("update".into())),
+                        ("round".into(), TraceArg::U64(2)),
+                        ("secs".into(), TraceArg::F64(-0.0)),
+                        ("".into(), TraceArg::Str(String::new())),
+                    ],
+                },
+                WireSpan {
+                    name: String::new(),
+                    tid: 0,
+                    ts_us: 0.0,
+                    dur_us: 0.0,
+                    args: Vec::new(),
+                },
+            ],
+        });
         frames
     }
 
@@ -379,10 +564,32 @@ mod tests {
     fn round_trips_bit_exactly() {
         for frame in corpus() {
             let buf = frame.encode();
-            let back = Frame::decode(&buf).unwrap_or_else(|e| panic!("{frame:?}: {e:#}"));
+            let (ctx, back) =
+                Frame::decode_with(&buf).unwrap_or_else(|e| panic!("{frame:?}: {e:#}"));
             assert_eq!(back, frame);
+            assert_eq!(ctx, TraceCtx::default());
             // Encoding is canonical: re-encoding reproduces the bytes.
             assert_eq!(back.encode(), buf, "{frame:?}");
+        }
+    }
+
+    #[test]
+    fn trace_context_round_trips_canonically() {
+        let ctx = TraceCtx {
+            trace_id: 0xA1B2_C3D4_E5F6_0718,
+            parent_span: 42,
+            round: 7,
+        };
+        for frame in corpus() {
+            let buf = frame.encode_with(&ctx);
+            let (back_ctx, back) =
+                Frame::decode_with(&buf).unwrap_or_else(|e| panic!("{frame:?}: {e:#}"));
+            assert_eq!(back_ctx, ctx, "{frame:?}");
+            assert_eq!(back, frame);
+            assert_eq!(back.encode_with(&ctx), buf, "{frame:?}");
+            // The envelope never changes the payload length, only the
+            // fixed 24-byte header after the magic.
+            assert_eq!(buf.len(), frame.encode().len(), "{frame:?}");
         }
     }
 
@@ -436,17 +643,27 @@ mod tests {
         let mut wrong_magic = Frame::Ack { len: 1 }.encode();
         wrong_magic[0] ^= 0xFF;
         assert!(format!("{:#}", Frame::decode(&wrong_magic).unwrap_err()).contains("magic"));
+        // The tag sits after the 4-byte magic + 24-byte trace envelope.
         let mut bad_tag = Frame::Ack { len: 1 }.encode();
-        bad_tag[4] = 200;
+        bad_tag[28] = 200;
         assert!(format!("{:#}", Frame::decode(&bad_tag).unwrap_err()).contains("tag"));
         // A length field pointing far past the buffer must error cleanly
         // (no attempted giant allocation).
         let mut huge_len = Frame::Candidates { indices: vec![1] }.encode();
-        huge_len[5..13].copy_from_slice(&u64::MAX.to_le_bytes());
+        huge_len[29..37].copy_from_slice(&u64::MAX.to_le_bytes());
         assert!(Frame::decode(&huge_len).is_err());
+        let mut huge_spans = Frame::TraceEvents {
+            trace_id: 1,
+            epoch_unix_us: 0.0,
+            spans: Vec::new(),
+        }
+        .encode();
+        let spans_len_at = huge_spans.len() - 8;
+        huge_spans[spans_len_at..].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(Frame::decode(&huge_spans).is_err());
         // d = 0 matrices are invalid on the wire as everywhere else.
         let mut zero_d = Frame::Weigh { rows: ps(0, 3) }.encode();
-        zero_d[9..13].copy_from_slice(&0u32.to_le_bytes());
+        zero_d[33..37].copy_from_slice(&0u32.to_le_bytes());
         assert!(format!("{:#}", Frame::decode(&zero_d).unwrap_err()).contains("d = 0"));
     }
 }

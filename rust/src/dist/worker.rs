@@ -37,12 +37,13 @@ use std::time::Duration;
 
 use crate::bail;
 use crate::data::matrix::PointSet;
-use crate::dist::wire::Frame;
+use crate::dist::wire::{Frame, WireSpan};
 use crate::error::{Context, Result};
 use crate::kernels::{assign, blocked, d2 as d2_kernel, norms, reduce, tune};
 use crate::metrics;
 use crate::server::http::{read_request, write_response, Request, Response};
 use crate::shard::kmeanspar::point_uniform;
+use crate::trace;
 
 /// Worker knobs (`fkmpp worker --port N [--host H] [--fail-after N]`).
 #[derive(Clone, Debug)]
@@ -112,6 +113,8 @@ fn run_frame(state: &mut Option<ShardState>, frame: Frame) -> Result<Frame> {
                     offset + points.len()
                 );
             }
+            let _span =
+                trace::Span::enter_with("worker.load", vec![("rows", points.len().into())]);
             let norms = norms::squared_norms(&points);
             // GLOBAL shape, not the slice shape: per-worker dispatch on
             // slice sizes would break cross-layout bit-invariance.
@@ -140,6 +143,8 @@ fn run_frame(state: &mut Option<ShardState>, frame: Frame) -> Result<Frame> {
             if indices.len() != rows.len() {
                 bail!("{} indices for {} rows", indices.len(), rows.len());
             }
+            let _span =
+                trace::Span::enter_with("worker.update", vec![("candidates", rows.len().into())]);
             for &i in &indices {
                 let i = i as usize;
                 if i >= st.offset && i < st.offset + st.points.len() {
@@ -167,6 +172,7 @@ fn run_frame(state: &mut Option<ShardState>, frame: Frame) -> Result<Frame> {
             ell,
         } => {
             let st = state.as_ref().context("no shard loaded")?;
+            let mut span = trace::Span::enter("worker.sample");
             let mut accepted = Vec::new();
             for r in 0..st.points.len() {
                 if st.is_candidate[r] {
@@ -181,6 +187,7 @@ fn run_frame(state: &mut Option<ShardState>, frame: Frame) -> Result<Frame> {
                     accepted.push(i);
                 }
             }
+            span.arg("accepted", accepted.len());
             Ok(Frame::Candidates { indices: accepted })
         }
         Frame::Weigh { rows } => {
@@ -195,6 +202,8 @@ fn run_frame(state: &mut Option<ShardState>, frame: Frame) -> Result<Frame> {
                     st.points.dim()
                 );
             }
+            let _span =
+                trace::Span::enter_with("worker.weigh", vec![("candidates", rows.len().into())]);
             // Global shape again — the same resolution the in-process
             // engine performs once per weigh.
             let asg_kernel =
@@ -220,9 +229,45 @@ fn binary_response(status: u16, body: Vec<u8>) -> Response {
     Response::binary(status, body)
 }
 
+/// Answer a `TraceDump`: everything buffered since this worker adopted
+/// the coordinator's trace, then drop it so the next run starts clean.
+/// A worker that never adopted (tracing belongs to the host process —
+/// the in-process worker-thread tests) answers empty and leaves the
+/// shared sink alone.
+fn trace_dump_frame(trace_adopted: bool) -> Frame {
+    if !trace_adopted {
+        return Frame::TraceEvents {
+            trace_id: 0,
+            epoch_unix_us: 0.0,
+            spans: Vec::new(),
+        };
+    }
+    let spans = trace::snapshot_events()
+        .into_iter()
+        .map(|e| WireSpan {
+            name: e.name.to_string(),
+            tid: e.tid,
+            ts_us: e.ts_us,
+            dur_us: e.dur_us,
+            args: e
+                .args
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), v))
+                .collect(),
+        })
+        .collect();
+    trace::clear();
+    Frame::TraceEvents {
+        trace_id: trace::trace_id(),
+        epoch_unix_us: trace::epoch_unix_us(),
+        spans,
+    }
+}
+
 fn route(
     state: &mut Option<ShardState>,
     served: &mut u64,
+    trace_adopted: &mut bool,
     cfg: &WorkerConfig,
     req: &Request,
 ) -> (Response, bool) {
@@ -240,13 +285,36 @@ fn route(
             }
             *served += 1;
             metrics::global().incr("dist.worker.rpcs", 1);
+            let decoded = Frame::decode_with(&req.body);
+            if let Ok((ctx, _)) = &decoded {
+                // Adopt the coordinator's trace context exactly once —
+                // and never when tracing is already live in this process
+                // (worker threads in the parity tests share the host's
+                // sink; stealing it would wipe the host's spans on
+                // dump).
+                if ctx.trace_id != 0 && !*trace_adopted && !trace::enabled() {
+                    trace::set_trace_id(ctx.trace_id);
+                    trace::set_enabled(true);
+                    *trace_adopted = true;
+                }
+            }
             let mut span = crate::trace::Span::enter_with(
                 "worker.rpc",
                 vec![("bytes_in", req.body.len().into())],
             );
-            let resp = match Frame::decode(&req.body) {
-                Ok(frame) => {
+            let resp = match decoded {
+                Ok((_, Frame::TraceDump)) => {
+                    span.arg("kind", "trace_dump");
+                    trace_dump_frame(*trace_adopted)
+                }
+                Ok((ctx, frame)) => {
                     span.arg("kind", frame.kind());
+                    if ctx.parent_span != 0 {
+                        span.arg("parent_span", ctx.parent_span);
+                    }
+                    if ctx.trace_id != 0 {
+                        span.arg("round", ctx.round);
+                    }
                     handle_frame(state, frame)
                 }
                 Err(e) => Frame::Error {
@@ -275,6 +343,7 @@ pub fn serve(listener: TcpListener, cfg: &WorkerConfig) -> Result<()> {
     let m = metrics::global();
     let mut state: Option<ShardState> = None;
     let mut served: u64 = 0;
+    let mut trace_adopted = false;
     for conn in listener.incoming() {
         let mut stream: TcpStream = match conn {
             Ok(s) => s,
@@ -303,7 +372,7 @@ pub fn serve(listener: TcpListener, cfg: &WorkerConfig) -> Result<()> {
                 continue;
             }
         };
-        let (resp, shutdown) = route(&mut state, &mut served, cfg, &req);
+        let (resp, shutdown) = route(&mut state, &mut served, &mut trace_adopted, cfg, &req);
         let _ = write_response(&mut stream, &resp, false);
         if shutdown {
             break;

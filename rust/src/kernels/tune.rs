@@ -88,9 +88,12 @@ pub fn kernel_for(op: Op, n: usize, d: usize, k: usize) -> Kernel {
                 // the (timing-dependent) autotuner: say so, once.
                 static WARNED: std::sync::Once = std::sync::Once::new();
                 WARNED.call_once(|| {
-                    eprintln!(
-                        "[fkmpp] ignoring unknown FKMPP_KERNEL={other:?} \
-                         (expected naive|blocked); autotuning instead"
+                    crate::log::warn(
+                        "tune.unknown_kernel",
+                        &[
+                            ("value", crate::server::json::Json::str(other)),
+                            ("expected", crate::server::json::Json::str("naive|blocked")),
+                        ],
                     );
                 });
             }

@@ -74,6 +74,7 @@ pub mod embed;
 pub mod error;
 pub mod kernels;
 pub mod lloyd;
+pub mod log;
 pub mod lsh;
 pub mod metrics;
 pub mod parallel;

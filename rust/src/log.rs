@@ -1,0 +1,276 @@
+//! Structured logging + flight recorder.
+//!
+//! Every operational message in the crate goes through this module as a
+//! **leveled JSON-lines event**: one strict-JSON object per line on
+//! stderr, rendered through `server/json.rs` (the crate's single
+//! serialization point), with a fixed envelope —
+//!
+//! ```text
+//! {"ts_ms":<unix millis>,"level":"warn","event":"serve.accept_error",
+//!  "trace_id":"1f2e…",<caller fields…>}
+//! ```
+//!
+//! — so operational errors are machine-parseable instead of free-form
+//! `eprintln!` text. The stderr threshold comes from `FKMPP_LOG`
+//! (`error|warn|info|debug|off`) or the CLI `--log-level` flag and
+//! defaults to `info`.
+//!
+//! Underneath the threshold sits the **flight recorder**: a fixed-size
+//! ring buffer that records *every* event regardless of level, so the
+//! recent debug-grade history is available post-mortem. It is dumped to
+//! stderr on panic ([`install_panic_hook`]) and on fatal CLI errors
+//! (`main.rs`), and served live at `GET /debug/log` by `fkmpp serve`.
+//!
+//! Determinism contract (same as `trace.rs`): logging reads only the
+//! wall clock, never the RNG, and call sites live only at coarse
+//! operational boundaries — a logged run is bitwise identical to a
+//! silent one.
+
+use std::collections::VecDeque;
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::server::json::Json;
+
+/// Severity levels, most severe first. `Off` silences stderr entirely
+/// (the flight recorder still records).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Off = 4,
+}
+
+impl Level {
+    pub fn parse(s: &str) -> Option<Level> {
+        match s {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "off" | "none" => Some(Level::Off),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+            Level::Off => "off",
+        }
+    }
+
+    fn from_u8(v: u8) -> Level {
+        match v {
+            0 => Level::Error,
+            1 => Level::Warn,
+            2 => Level::Info,
+            3 => Level::Debug,
+            _ => Level::Off,
+        }
+    }
+}
+
+/// Stderr threshold. `u8::MAX` = "not yet initialized from the env".
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX);
+
+/// Events the flight recorder keeps. Small enough that a dump is
+/// readable, large enough to cover the lead-up to a crash.
+pub const RING_CAPACITY: usize = 256;
+
+fn ring() -> &'static Mutex<VecDeque<String>> {
+    static RING: OnceLock<Mutex<VecDeque<String>>> = OnceLock::new();
+    RING.get_or_init(|| Mutex::new(VecDeque::with_capacity(RING_CAPACITY)))
+}
+
+/// Set the stderr threshold explicitly (`--log-level`). Wins over the
+/// environment.
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Current stderr threshold, initializing from `FKMPP_LOG` on first
+/// use. An unset or unparseable variable means `info`.
+pub fn level() -> Level {
+    let v = LEVEL.load(Ordering::Relaxed);
+    if v != u8::MAX {
+        return Level::from_u8(v);
+    }
+    let from_env = std::env::var("FKMPP_LOG")
+        .ok()
+        .and_then(|s| Level::parse(s.trim()))
+        .unwrap_or(Level::Info);
+    // Racing first-callers agree on the env value, so last-write-wins
+    // is fine here.
+    LEVEL.store(from_env as u8, Ordering::Relaxed);
+    from_env
+}
+
+fn unix_ms() -> f64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs_f64() * 1e3)
+        .unwrap_or(0.0)
+}
+
+/// Render one event as its JSON line. The envelope keys come first so
+/// `grep '"event":"…"'` and jq pipelines see a stable prefix.
+fn render(level: Level, event: &str, fields: &[(&str, Json)]) -> String {
+    let mut obj: Vec<(String, Json)> = vec![
+        ("ts_ms".to_string(), Json::num(unix_ms())),
+        ("level".to_string(), Json::str(level.name())),
+        ("event".to_string(), Json::str(event)),
+    ];
+    let tid = crate::trace::trace_id();
+    if tid != 0 {
+        obj.push(("trace_id".to_string(), Json::str(format!("{tid:016x}"))));
+    }
+    for (k, v) in fields {
+        obj.push((k.to_string(), v.clone()));
+    }
+    Json::Obj(obj).emit()
+}
+
+/// Record an event: always into the flight recorder, and to stderr when
+/// `level` clears the threshold.
+pub fn log(level: Level, event: &str, fields: &[(&str, Json)]) {
+    if level == Level::Off {
+        return;
+    }
+    let line = render(level, event, fields);
+    {
+        let mut ring = ring().lock().unwrap();
+        if ring.len() >= RING_CAPACITY {
+            ring.pop_front();
+        }
+        ring.push_back(line.clone());
+    }
+    // `Off` sits above every severity numerically but means "print
+    // nothing", so it needs the explicit carve-out.
+    let threshold = self::level();
+    if threshold != Level::Off && level <= threshold {
+        let mut err = std::io::stderr().lock();
+        let _ = writeln!(err, "{line}");
+    }
+}
+
+pub fn error(event: &str, fields: &[(&str, Json)]) {
+    log(Level::Error, event, fields);
+}
+
+pub fn warn(event: &str, fields: &[(&str, Json)]) {
+    log(Level::Warn, event, fields);
+}
+
+pub fn info(event: &str, fields: &[(&str, Json)]) {
+    log(Level::Info, event, fields);
+}
+
+pub fn debug(event: &str, fields: &[(&str, Json)]) {
+    log(Level::Debug, event, fields);
+}
+
+/// Snapshot of the flight recorder, oldest first. Each entry is one
+/// rendered JSON line (`GET /debug/log` re-parses them into a JSON
+/// array).
+pub fn flight_recorder_snapshot() -> Vec<String> {
+    ring().lock().unwrap().iter().cloned().collect()
+}
+
+/// Dump the flight recorder to stderr (panic / fatal-error path). The
+/// dump bypasses the level threshold — it exists precisely for the
+/// events that were below it.
+pub fn dump_flight_recorder(reason: &str) {
+    let entries = flight_recorder_snapshot();
+    let mut err = std::io::stderr().lock();
+    let _ = writeln!(
+        err,
+        "--- flight recorder dump ({reason}; {} events, newest last) ---",
+        entries.len()
+    );
+    for line in &entries {
+        let _ = writeln!(err, "{line}");
+    }
+    let _ = writeln!(err, "--- end flight recorder dump ---");
+}
+
+/// Install a panic hook that records the panic as an `error` event and
+/// dumps the flight recorder before the default hook runs. Idempotent.
+pub fn install_panic_hook() {
+    static INSTALLED: std::sync::Once = std::sync::Once::new();
+    INSTALLED.call_once(|| {
+        let default_hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let msg = info
+                .payload()
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| info.payload().downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "panic".to_string());
+            let loc = info
+                .location()
+                .map(|l| format!("{}:{}", l.file(), l.line()))
+                .unwrap_or_default();
+            error(
+                "panic",
+                &[("message", Json::str(msg)), ("location", Json::str(loc))],
+            );
+            dump_flight_recorder("panic");
+            default_hook(info);
+        }));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::json::parse;
+
+    // The ring and level are process-global; like the trace tests, every
+    // assertion filters on this test's own `logtest.` event names.
+    #[test]
+    fn events_are_strict_json_lines_and_ring_snapshots() {
+        set_level(Level::Off); // keep test stderr clean; ring still records
+        info(
+            "logtest.hello",
+            &[("path", Json::str("/tmp/x")), ("n", Json::num(3.0))],
+        );
+        debug("logtest.detail", &[]);
+        let mine: Vec<String> = flight_recorder_snapshot()
+            .into_iter()
+            .filter(|l| l.contains("\"logtest."))
+            .collect();
+        assert!(mine.len() >= 2, "ring missing events: {mine:?}");
+        for line in &mine {
+            let doc = parse(line).expect("log line must be strict JSON");
+            assert!(doc.get("ts_ms").and_then(Json::as_f64).is_some());
+            assert!(doc.get("level").and_then(Json::as_str).is_some());
+            assert!(doc.get("event").and_then(Json::as_str).is_some());
+        }
+        let hello = mine
+            .iter()
+            .map(|l| parse(l).unwrap())
+            .find(|d| d.get("event").and_then(Json::as_str) == Some("logtest.hello"))
+            .expect("hello event recorded");
+        assert_eq!(hello.get("path").and_then(Json::as_str), Some("/tmp/x"));
+        assert_eq!(hello.get("n").and_then(Json::as_u64), Some(3));
+    }
+
+    #[test]
+    fn level_parse_round_trips_and_orders() {
+        for lvl in [Level::Error, Level::Warn, Level::Info, Level::Debug, Level::Off] {
+            assert_eq!(Level::parse(lvl.name()), Some(lvl));
+        }
+        assert_eq!(Level::parse("bogus"), None);
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+    }
+}

@@ -3,11 +3,19 @@
 //! stays testable.
 
 fn main() {
+    fastkmeanspp::log::install_panic_hook();
     let argv: Vec<String> = std::env::args().skip(1).collect();
     match fastkmeanspp::cli::run(&argv) {
         Ok(out) => print!("{out}"),
         Err(e) => {
-            eprintln!("error: {e:#}");
+            fastkmeanspp::log::error(
+                "fatal",
+                &[(
+                    "error",
+                    fastkmeanspp::server::json::Json::str(format!("{e:#}")),
+                )],
+            );
+            fastkmeanspp::log::dump_flight_recorder("fatal error");
             std::process::exit(1);
         }
     }

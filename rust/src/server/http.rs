@@ -62,6 +62,9 @@ pub struct Request {
     /// request (HTTP/1.1 defaults to yes unless `Connection: close`;
     /// HTTP/1.0 defaults to no unless `Connection: keep-alive`).
     pub keep_alive: bool,
+    /// Client-supplied `X-Request-Id`, trimmed, if any. The server
+    /// generates one when absent and echoes it on every response.
+    pub request_id: Option<String>,
     pub body: Vec<u8>,
 }
 
@@ -188,6 +191,7 @@ pub fn read_request<R: BufRead, W: Write>(
     let mut conn_close = false;
     let mut conn_keep = false;
     let mut expect_continue = false;
+    let mut request_id: Option<String> = None;
     let mut header_bytes = line.len();
     loop {
         let budget = MAX_HEADER_BYTES.saturating_sub(header_bytes);
@@ -249,6 +253,10 @@ pub fn read_request<R: BufRead, W: Write>(
             } else {
                 return malformed(417, format!("unsupported expectation {value:?}"));
             }
+        } else if name.eq_ignore_ascii_case("x-request-id") {
+            if !value.is_empty() {
+                request_id = Some(value.to_string());
+            }
         }
     }
     let content_length = content_length.unwrap_or(0);
@@ -286,6 +294,7 @@ pub fn read_request<R: BufRead, W: Write>(
         query,
         content_type,
         keep_alive,
+        request_id,
         body,
     }))
 }
@@ -442,6 +451,18 @@ mod tests {
     fn content_length_case_insensitive() {
         let req = parse_ok("POST /x HTTP/1.1\r\ncontent-length: 3\r\n\r\nabc");
         assert_eq!(req.body, b"abc");
+    }
+
+    #[test]
+    fn request_id_header_is_parsed() {
+        let req = parse_ok("GET / HTTP/1.1\r\nx-request-id:  abc-123 \r\n\r\n");
+        assert_eq!(req.request_id.as_deref(), Some("abc-123"));
+        // Absent or empty → None (the server will generate one).
+        assert_eq!(parse_ok("GET / HTTP/1.1\r\n\r\n").request_id, None);
+        assert_eq!(
+            parse_ok("GET / HTTP/1.1\r\nX-Request-Id:\r\n\r\n").request_id,
+            None
+        );
     }
 
     #[test]

@@ -68,6 +68,9 @@ pub struct FitSpec {
     /// `rejection-exact` / `rejection-rigorous` variants still pin their
     /// oracle over this config's choice.
     pub rejection: RejectionConfig,
+    /// The `X-Request-Id` of the `POST /fit` that enqueued this job, so
+    /// the fit span and job correlate with the originating request.
+    pub request_id: Option<String>,
 }
 
 /// Lifecycle of a job.
@@ -268,6 +271,9 @@ pub fn spawn_workers(
                             ("k", crate::trace::TraceArg::from(spec.k)),
                         ],
                     );
+                    if let Some(rid) = &spec.request_id {
+                        span.arg("request_id", rid.clone());
+                    }
                     // A panicking fit must fail the job, not kill the
                     // worker — with fit_workers=1 a dead worker would
                     // leave every later job queued forever.
@@ -373,6 +379,7 @@ mod tests {
             lloyd_iters: 1,
             kmeanspar: KMeansParConfig::default(),
             rejection: RejectionConfig::default(),
+            request_id: None,
         }
     }
 
@@ -556,6 +563,7 @@ mod tests {
                 lloyd_iters: 0,
                 kmeanspar: KMeansParConfig::default(),
                 rejection: RejectionConfig::default(),
+                request_id: None,
             })
             .expect("unbounded queue accepts");
         assert_eq!(queue.counts(), (1, 0, 0, 0));

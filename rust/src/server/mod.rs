@@ -58,7 +58,7 @@ pub mod registry;
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -248,7 +248,13 @@ impl Server {
                     Err(mpsc::TrySendError::Full(stream)) => shed_connection(stream, &self.ctx),
                     Err(mpsc::TrySendError::Disconnected(_)) => break,
                 },
-                Err(e) => eprintln!("[serve] accept error: {e}"),
+                Err(e) => crate::log::warn(
+                    "serve.accept_error",
+                    &[
+                        ("addr", Json::str(addr.to_string())),
+                        ("error", Json::str(format!("{e}"))),
+                    ],
+                ),
             }
         }
         drop(conn_tx);
@@ -304,17 +310,29 @@ fn handle_connection(mut stream: TcpStream, ctx: &ServerCtx, addr: SocketAddr) {
         // raw stream; responses go there too, after routing.
         let outcome = http::read_request(&mut reader, &mut stream);
         let t0 = Instant::now();
-        let req = match outcome {
+        let mut req = match outcome {
             Ok(http::ReadOutcome::Request(req)) => req,
             // Peer hung up between requests: the clean end of a
             // kept-alive connection, nothing to count or answer.
             Ok(http::ReadOutcome::Closed) => break,
             Ok(http::ReadOutcome::Malformed { status, reason }) => {
                 // Framing can't be trusted past a malformed request:
-                // answer (so the client learns why) and close.
+                // answer (so the client learns why) and close. Even a
+                // request too broken to parse gets a request id, so the
+                // flight recorder entry and the response correlate.
                 ctx.metrics.incr("http.requests", 1);
                 ctx.metrics.incr("http.errors", 1);
-                let resp = Response::json(status, &error_json(&reason));
+                let rid = next_request_id();
+                crate::log::warn(
+                    "http.malformed",
+                    &[
+                        ("status", Json::num(status as f64)),
+                        ("reason", Json::str(reason.clone())),
+                        ("request_id", Json::str(rid.clone())),
+                    ],
+                );
+                let resp = Response::json(status, &error_json(&reason))
+                    .with_header("X-Request-Id", rid);
                 let _ = http::write_response(&mut stream, &resp, false);
                 break;
             }
@@ -324,10 +342,22 @@ fn handle_connection(mut stream: TcpStream, ctx: &ServerCtx, addr: SocketAddr) {
         };
         served += 1;
         ctx.metrics.incr("http.requests", 1);
+        // The request-id contract: take the client's `X-Request-Id` or
+        // generate one, tag the span (and, via `FitSpec`, any fit job it
+        // enqueues) with it, and echo it on the response.
+        let rid = match &req.request_id {
+            Some(id) => id.clone(),
+            None => {
+                let id = next_request_id();
+                req.request_id = Some(id.clone());
+                id
+            }
+        };
         let mut span = crate::trace::Span::enter("http.request");
         span.arg("method", req.method.clone());
         span.arg("path", req.path.clone());
-        let resp = route(&req, ctx);
+        span.arg("request_id", rid.clone());
+        let resp = route(&req, ctx).with_header("X-Request-Id", rid);
         span.arg("status", resp.status as u64);
         if resp.status >= 400 {
             ctx.metrics.incr("http.errors", 1);
@@ -365,6 +395,14 @@ fn error_json(msg: &str) -> Json {
     Json::obj(vec![("error", Json::str(msg))])
 }
 
+/// Server-generated request ids: a process-unique counter, not a UUID.
+/// Ids only correlate logs, spans and jobs — they never feed
+/// computation, so a deterministic counter is exactly enough.
+fn next_request_id() -> String {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    format!("req-{}", NEXT.fetch_add(1, Ordering::Relaxed))
+}
+
 /// Handler outcome: a response, or `(status, message)` for the error path.
 type RouteResult = std::result::Result<Response, (u16, String)>;
 
@@ -384,9 +422,11 @@ fn route(req: &Request, ctx: &ServerCtx) -> Response {
         ("GET", ["models"]) => Ok(handle_models(ctx)),
         ("GET", ["models", id]) => handle_model(id, ctx),
         ("POST", ["models", id, "assign"]) => handle_assign(id, req, ctx),
+        ("GET", ["debug", "log"]) => Ok(handle_debug_log()),
         ("POST", ["shutdown"]) => Ok(handle_shutdown(ctx)),
         // Wrong method on a known path reads better as 405 than 404.
-        (_, ["healthz" | "metrics" | "models" | "fit" | "shutdown", ..]) | (_, ["jobs", ..]) => {
+        (_, ["healthz" | "metrics" | "models" | "fit" | "shutdown" | "debug", ..])
+        | (_, ["jobs", ..]) => {
             Err((405, format!("method {} not allowed on {}", req.method, req.path)))
         }
         _ => Err((404, format!("no route for {} {}", req.method, req.path))),
@@ -405,6 +445,25 @@ fn handle_shutdown(ctx: &ServerCtx) -> Response {
     Response::json(
         200,
         &Json::obj(vec![("status", Json::str("shutting down"))]),
+    )
+}
+
+/// `GET /debug/log`: the flight recorder, live. Entries are the ring's
+/// rendered JSON lines re-parsed into a JSON array (through [`json`],
+/// keeping the single-serialization-point contract); a line that fails
+/// to re-parse is dropped rather than corrupting the document.
+fn handle_debug_log() -> Response {
+    let entries: Vec<Json> = crate::log::flight_recorder_snapshot()
+        .iter()
+        .filter_map(|line| json::parse(line).ok())
+        .collect();
+    Response::json(
+        200,
+        &Json::obj(vec![
+            ("count", Json::num(entries.len() as f64)),
+            ("capacity", Json::num(crate::log::RING_CAPACITY as f64)),
+            ("entries", Json::Arr(entries)),
+        ]),
     )
 }
 
@@ -602,6 +661,7 @@ fn handle_fit(req: &Request, ctx: &ServerCtx) -> RouteResult {
         lloyd_iters,
         kmeanspar,
         rejection,
+        request_id: req.request_id.clone(),
     }) else {
         // Fit backlog full: shed with the same contract as the accept
         // queue — 429 + Retry-After, never an unbounded queue.
@@ -798,6 +858,7 @@ mod tests {
             query: String::new(),
             content_type: String::new(),
             keep_alive: true,
+            request_id: None,
             body: Vec::new(),
         }
     }
@@ -809,6 +870,7 @@ mod tests {
             query: String::new(),
             content_type: "application/json".to_string(),
             keep_alive: true,
+            request_id: None,
             body: body.as_bytes().to_vec(),
         }
     }
@@ -820,6 +882,7 @@ mod tests {
             query: String::new(),
             content_type: "application/octet-stream".to_string(),
             keep_alive: true,
+            request_id: None,
             body,
         }
     }
@@ -859,6 +922,26 @@ mod tests {
         assert_eq!(route(&post("/healthz", ""), &ctx).status, 405);
         assert_eq!(route(&get("/fit"), &ctx).status, 405);
         assert_eq!(route(&get("/shutdown"), &ctx).status, 405);
+        assert_eq!(route(&post("/debug/log", ""), &ctx).status, 405);
+    }
+
+    #[test]
+    fn debug_log_route_serves_flight_recorder() {
+        let ctx = test_ctx();
+        crate::log::set_level(crate::log::Level::Off); // ring still records
+        crate::log::warn("servetest.debug_log", &[("n", Json::num(1.0))]);
+        let resp = route(&get("/debug/log"), &ctx);
+        assert_eq!(resp.status, 200);
+        let v = body_json(&resp);
+        assert!(v.get("count").and_then(Json::as_usize).unwrap_or(0) >= 1);
+        let entries = v.get("entries").and_then(Json::as_array).unwrap();
+        // The ring is process-global: filter on this test's own event.
+        assert!(
+            entries
+                .iter()
+                .any(|e| e.get("event").and_then(Json::as_str) == Some("servetest.debug_log")),
+            "{v:?}"
+        );
     }
 
     #[test]
@@ -1029,6 +1112,7 @@ mod tests {
             query: "format=prometheus".to_string(),
             content_type: String::new(),
             keep_alive: true,
+            request_id: None,
             body: Vec::new(),
         };
         let resp = route(&req, &ctx);

@@ -424,7 +424,13 @@ impl ModelRegistry {
                         .insert(model.meta.id.clone(), Arc::new(model));
                 }
                 // A corrupt file must not take the whole server down.
-                Err(e) => eprintln!("[serve] skipping unreadable model {path:?}: {e:#}"),
+                Err(e) => crate::log::warn(
+                    "registry.skip_model",
+                    &[
+                        ("path", Json::str(path.display().to_string())),
+                        ("error", Json::str(format!("{e:#}"))),
+                    ],
+                ),
             }
         }
         Ok(())

@@ -28,6 +28,10 @@ use std::time::Instant;
 use crate::error::{Context, Result};
 use crate::server::json::Json;
 
+/// Logical Chrome-trace process id of the recording process itself.
+/// Merged foreign (worker) spans get distinct pids ≥ 2.
+pub const LOCAL_PID: u32 = 1;
+
 /// A span argument value (rendered into the Chrome event's `args`).
 #[derive(Clone, Debug, PartialEq)]
 pub enum TraceArg {
@@ -80,10 +84,31 @@ pub struct SpanEvent {
 
 static ENABLED: AtomicBool = AtomicBool::new(false);
 static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+static NEXT_SPAN_ID: AtomicU64 = AtomicU64::new(1);
+static TRACE_ID: AtomicU64 = AtomicU64::new(0);
+
+/// `(monotonic epoch, the same instant as unix micros)` — the wall
+/// anchor lets merged foreign timelines be shifted onto this process's
+/// `ts` axis without any cross-process clock protocol.
+fn epoch_pair() -> (Instant, f64) {
+    static EPOCH: OnceLock<(Instant, f64)> = OnceLock::new();
+    *EPOCH.get_or_init(|| {
+        let unix_us = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs_f64() * 1e6)
+            .unwrap_or(0.0);
+        (Instant::now(), unix_us)
+    })
+}
 
 fn epoch() -> Instant {
-    static EPOCH: OnceLock<Instant> = OnceLock::new();
-    *EPOCH.get_or_init(Instant::now)
+    epoch_pair().0
+}
+
+/// The trace epoch as unix microseconds (wall clock captured at the
+/// same moment the monotonic epoch was pinned).
+pub fn epoch_unix_us() -> f64 {
+    epoch_pair().1
 }
 
 fn sink() -> &'static Mutex<Vec<SpanEvent>> {
@@ -91,11 +116,27 @@ fn sink() -> &'static Mutex<Vec<SpanEvent>> {
     SINK.get_or_init(|| Mutex::new(Vec::new()))
 }
 
+fn foreign_sink() -> &'static Mutex<Vec<ForeignSpan>> {
+    static SINK: OnceLock<Mutex<Vec<ForeignSpan>>> = OnceLock::new();
+    SINK.get_or_init(|| Mutex::new(Vec::new()))
+}
+
 /// Turn recording on/off. The epoch is pinned at the first enable so
 /// timestamps are offsets into the traced run, not process lifetime.
+/// Enabling also assigns the run a trace id if none was adopted yet.
 pub fn set_enabled(on: bool) {
     if on {
         epoch();
+        if TRACE_ID.load(Ordering::Relaxed) == 0 {
+            // Not an RNG draw — the id only labels the trace, and the
+            // wall clock + pid keep concurrent runs distinct.
+            let nanos = std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_nanos() as u64)
+                .unwrap_or(0);
+            let id = (nanos ^ ((std::process::id() as u64) << 48)) | 1;
+            let _ = TRACE_ID.compare_exchange(0, id, Ordering::Relaxed, Ordering::Relaxed);
+        }
     }
     ENABLED.store(on, Ordering::Relaxed);
 }
@@ -103,6 +144,24 @@ pub fn set_enabled(on: bool) {
 #[inline]
 pub fn enabled() -> bool {
     ENABLED.load(Ordering::Relaxed)
+}
+
+/// The process trace id (0 = none assigned yet). Workers adopt the
+/// coordinator's id from the wire instead of generating their own.
+pub fn trace_id() -> u64 {
+    TRACE_ID.load(Ordering::Relaxed)
+}
+
+/// Adopt a propagated trace id (worker side of the wire contract).
+pub fn set_trace_id(id: u64) {
+    TRACE_ID.store(id, Ordering::Relaxed);
+}
+
+/// Allocate a span id for cross-process parent tagging. Ids are only
+/// labels in the exported `args` — span nesting itself stays implicit
+/// (Chrome complete events stack by overlap on one pid/tid track).
+pub fn next_span_id() -> u64 {
+    NEXT_SPAN_ID.fetch_add(1, Ordering::Relaxed)
 }
 
 /// Flush batch size for the per-thread buffer.
@@ -142,10 +201,47 @@ pub fn flush_current_thread() {
     LOCAL.with(|l| l.borrow_mut().flush());
 }
 
-/// Drop every recorded event (test isolation).
+/// Drop every recorded event, local and foreign (test isolation).
 pub fn clear() {
     flush_current_thread();
     sink().lock().unwrap().clear();
+    foreign_sink().lock().unwrap().clear();
+}
+
+/// A span merged in from another process (a worker's `TraceDump`
+/// answer): owned name/arg keys (they crossed the wire), an explicit
+/// pid row, and `ts_us` already shifted onto this process's epoch.
+#[derive(Clone, Debug)]
+pub struct ForeignSpan {
+    /// Chrome-trace process row (≥ 2; `LOCAL_PID` is this process).
+    pub pid: u32,
+    /// Human label for the pid row (Perfetto `process_name` metadata).
+    pub process: String,
+    /// Trace id the remote process recorded under.
+    pub trace_id: u64,
+    pub name: String,
+    pub tid: u64,
+    pub ts_us: f64,
+    pub dur_us: f64,
+    pub args: Vec<(String, TraceArg)>,
+}
+
+/// Merge foreign spans into the export sinks. The caller (the dist
+/// coordinator) owns pid assignment and timestamp shifting.
+pub fn add_foreign(spans: Vec<ForeignSpan>) {
+    foreign_sink().lock().unwrap().extend(spans);
+}
+
+/// Snapshot of merged foreign spans, time-ordered.
+pub fn snapshot_foreign() -> Vec<ForeignSpan> {
+    let mut evs = foreign_sink().lock().unwrap().clone();
+    evs.sort_by(|a, b| {
+        a.ts_us
+            .partial_cmp(&b.ts_us)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then((a.pid, a.tid).cmp(&(b.pid, b.tid)))
+    });
+    evs
 }
 
 /// Snapshot of all events recorded so far, time-ordered.
@@ -234,54 +330,120 @@ fn arg_json(a: &TraceArg) -> Json {
     }
 }
 
+/// One Chrome `"ph":"X"` complete event. `trace_id` rides in `args` so
+/// per-process provenance survives the merge into one file.
+fn complete_event(
+    name: &str,
+    pid: u32,
+    tid: u64,
+    ts_us: f64,
+    dur_us: f64,
+    trace_id: u64,
+    args: Vec<(String, Json)>,
+) -> Json {
+    let mut arg_obj: Vec<(String, Json)> = Vec::with_capacity(args.len() + 1);
+    if trace_id != 0 {
+        arg_obj.push(("trace_id".to_string(), Json::str(format!("{trace_id:016x}"))));
+    }
+    arg_obj.extend(args);
+    let mut fields = vec![
+        ("name", Json::str(name)),
+        ("cat", Json::str("fkmpp")),
+        ("ph", Json::str("X")),
+        ("pid", Json::num(pid as f64)),
+        ("tid", Json::num(tid as f64)),
+        ("ts", Json::num(ts_us)),
+        ("dur", Json::num(dur_us)),
+    ];
+    if !arg_obj.is_empty() {
+        fields.push(("args", Json::Obj(arg_obj)));
+    }
+    Json::obj(fields)
+}
+
+/// Perfetto `process_name` metadata event labelling a pid row.
+fn process_name_event(pid: u32, name: &str) -> Json {
+    Json::obj(vec![
+        ("name", Json::str("process_name")),
+        ("ph", Json::str("M")),
+        ("pid", Json::num(pid as f64)),
+        ("args", Json::obj(vec![("name", Json::str(name))])),
+    ])
+}
+
 /// Render events as a Chrome trace-event JSON document (the format
 /// Perfetto and `chrome://tracing` load): complete (`"ph":"X"`) events
-/// with microsecond `ts`/`dur`, one `pid`, per-thread `tid` tracks.
+/// with microsecond `ts`/`dur`, pid `LOCAL_PID`, per-thread `tid`
+/// tracks.
 pub fn chrome_trace_json(events: &[SpanEvent]) -> Json {
-    let evs = events
-        .iter()
-        .map(|e| {
-            let mut fields = vec![
-                ("name", Json::str(e.name)),
-                ("cat", Json::str("fkmpp")),
-                ("ph", Json::str("X")),
-                ("pid", Json::num(1.0)),
-                ("tid", Json::num(e.tid as f64)),
-                ("ts", Json::num(e.ts_us)),
-                ("dur", Json::num(e.dur_us)),
-            ];
-            if !e.args.is_empty() {
-                fields.push((
-                    "args",
-                    Json::Obj(
-                        e.args
-                            .iter()
-                            .map(|(k, v)| (k.to_string(), arg_json(v)))
-                            .collect(),
-                    ),
-                ));
-            }
-            Json::obj(fields)
-        })
-        .collect();
+    chrome_trace_json_merged(events, &[])
+}
+
+/// Render local plus merged foreign (worker) events as one document:
+/// each remote process gets its own pid row (with a `process_name`
+/// metadata label) and every complete event carries the trace id it was
+/// recorded under, so one file shows coordinator wire-time and worker
+/// compute-time side by side.
+pub fn chrome_trace_json_merged(events: &[SpanEvent], foreign: &[ForeignSpan]) -> Json {
+    let local_trace_id = trace_id();
+    let mut evs: Vec<Json> = Vec::with_capacity(events.len() + foreign.len() + 4);
+    evs.push(process_name_event(LOCAL_PID, "fkmpp-coordinator"));
+    let mut named: Vec<u32> = Vec::new();
+    for f in foreign {
+        if !named.contains(&f.pid) {
+            named.push(f.pid);
+            evs.push(process_name_event(f.pid, &f.process));
+        }
+    }
+    for e in events {
+        evs.push(complete_event(
+            e.name,
+            LOCAL_PID,
+            e.tid,
+            e.ts_us,
+            e.dur_us,
+            local_trace_id,
+            e.args
+                .iter()
+                .map(|(k, v)| (k.to_string(), arg_json(v)))
+                .collect(),
+        ));
+    }
+    for f in foreign {
+        evs.push(complete_event(
+            &f.name,
+            f.pid,
+            f.tid,
+            f.ts_us,
+            f.dur_us,
+            f.trace_id,
+            f.args
+                .iter()
+                .map(|(k, v)| (k.clone(), arg_json(v)))
+                .collect(),
+        ));
+    }
     Json::obj(vec![
         ("traceEvents", Json::Arr(evs)),
         ("displayTimeUnit", Json::str("ms")),
     ])
 }
 
-/// Export everything recorded so far as Chrome trace JSON.
+/// Export everything recorded so far (local + merged foreign spans) as
+/// Chrome trace JSON.
 pub fn export_json() -> Json {
-    chrome_trace_json(&snapshot_events())
+    chrome_trace_json_merged(&snapshot_events(), &snapshot_foreign())
 }
 
-/// Write the recorded trace to `path`; returns the span count.
+/// Write the recorded trace to `path`; returns the span count (local +
+/// foreign).
 pub fn write_file(path: &str) -> Result<usize> {
     let events = snapshot_events();
-    let doc = chrome_trace_json(&events);
+    let foreign = snapshot_foreign();
+    let doc = chrome_trace_json_merged(&events, &foreign);
     std::fs::write(path, doc.emit())
         .with_context(|| format!("writing trace file {path}"))?;
-    Ok(events.len())
+    Ok(events.len() + foreign.len())
 }
 
 /// Per-phase aggregate over a recorded trace (one table row).
@@ -296,11 +458,30 @@ pub struct PhaseRow {
 
 /// Aggregate a Chrome trace document by span name. Fails with a typed
 /// error when the document is not a trace (missing `traceEvents`).
+///
+/// Spans merged from another process (pid ≠ `LOCAL_PID`) aggregate
+/// under `"{process}/{name}"` — the process label from the pid row's
+/// `process_name` metadata (`"pid{N}"` when unlabelled) — so the table
+/// separates coordinator wire-time from worker compute-time.
 pub fn phase_rows(doc: &Json) -> Result<Vec<PhaseRow>> {
     let events = doc
         .get("traceEvents")
         .and_then(Json::as_array)
         .context("not a Chrome trace: no \"traceEvents\" array")?;
+    let mut process_names: std::collections::BTreeMap<u64, String> =
+        std::collections::BTreeMap::new();
+    for e in events {
+        if e.get("ph").and_then(Json::as_str) == Some("M")
+            && e.get("name").and_then(Json::as_str) == Some("process_name")
+        {
+            if let (Some(pid), Some(name)) = (
+                e.get("pid").and_then(Json::as_u64),
+                e.get("args").and_then(|a| a.get("name")).and_then(Json::as_str),
+            ) {
+                process_names.insert(pid, name.to_string());
+            }
+        }
+    }
     let mut by_name: std::collections::BTreeMap<String, PhaseRow> =
         std::collections::BTreeMap::new();
     for e in events {
@@ -311,9 +492,19 @@ pub fn phase_rows(doc: &Json) -> Result<Vec<PhaseRow>> {
             .get("name")
             .and_then(Json::as_str)
             .context("trace event without a name")?;
+        let pid = e.get("pid").and_then(Json::as_u64).unwrap_or(LOCAL_PID as u64);
+        let label = if pid == LOCAL_PID as u64 {
+            name.to_string()
+        } else {
+            let process = process_names
+                .get(&pid)
+                .cloned()
+                .unwrap_or_else(|| format!("pid{pid}"));
+            format!("{process}/{name}")
+        };
         let dur_s = e.get("dur").and_then(Json::as_f64).unwrap_or(0.0) / 1e6;
-        let row = by_name.entry(name.to_string()).or_insert_with(|| PhaseRow {
-            name: name.to_string(),
+        let row = by_name.entry(label.clone()).or_insert_with(|| PhaseRow {
+            name: label.clone(),
             count: 0,
             total_secs: 0.0,
             mean_secs: 0.0,
@@ -369,6 +560,85 @@ pub fn render_report(doc: &Json) -> Result<String> {
     }
     if rows.is_empty() {
         out.push_str("(trace contains no spans)\n");
+    }
+    Ok(out)
+}
+
+/// Per-phase diff between two trace documents
+/// (`fkmpp report --trace <a> --baseline <b>`): Δtotal and Δmean are
+/// `a − b` wall time, Δshare% is the change in each phase's fraction of
+/// its own trace's recorded span time. Phases present in only one trace
+/// diff against zero. Rows sort by |Δtotal| descending.
+pub fn render_report_diff(doc: &Json, baseline: &Json) -> Result<String> {
+    let cur = phase_rows(doc)?;
+    let base = phase_rows(baseline)?;
+    let cur_total: f64 = cur.iter().map(|r| r.total_secs).sum();
+    let base_total: f64 = base.iter().map(|r| r.total_secs).sum();
+    let share = |total: f64, of: f64| if of > 0.0 { 100.0 * total / of } else { 0.0 };
+    let mut names: Vec<String> = cur.iter().map(|r| r.name.clone()).collect();
+    for r in &base {
+        if !names.contains(&r.name) {
+            names.push(r.name.clone());
+        }
+    }
+    struct DiffRow {
+        name: String,
+        cur_total: f64,
+        base_total: f64,
+        d_total: f64,
+        d_mean: f64,
+        d_share: f64,
+    }
+    let mut rows: Vec<DiffRow> = names
+        .into_iter()
+        .map(|name| {
+            let a = cur.iter().find(|r| r.name == name);
+            let b = base.iter().find(|r| r.name == name);
+            let (at, am) = a.map(|r| (r.total_secs, r.mean_secs)).unwrap_or((0.0, 0.0));
+            let (bt, bm) = b.map(|r| (r.total_secs, r.mean_secs)).unwrap_or((0.0, 0.0));
+            DiffRow {
+                name,
+                cur_total: at,
+                base_total: bt,
+                d_total: at - bt,
+                d_mean: am - bm,
+                d_share: share(at, cur_total) - share(bt, base_total),
+            }
+        })
+        .collect();
+    rows.sort_by(|a, b| {
+        b.d_total
+            .abs()
+            .partial_cmp(&a.d_total.abs())
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.name.cmp(&b.name))
+    });
+    let signed = |secs: f64| -> String {
+        let mag = crate::metrics::fmt_duration(std::time::Duration::from_secs_f64(secs.abs()));
+        if secs < 0.0 {
+            format!("-{mag}")
+        } else {
+            format!("+{mag}")
+        }
+    };
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<28} {:>12} {:>12} {:>12} {:>12} {:>8}\n",
+        "phase", "total", "baseline", "Δtotal", "Δmean", "Δshare%"
+    ));
+    for r in &rows {
+        out.push_str(&format!(
+            "{:<28} {:>12} {:>12} {:>12} {:>12} {:>+8.2}\n",
+            r.name,
+            crate::metrics::fmt_duration(std::time::Duration::from_secs_f64(r.cur_total)),
+            crate::metrics::fmt_duration(std::time::Duration::from_secs_f64(r.base_total)),
+            signed(r.d_total),
+            signed(r.d_mean),
+            r.d_share,
+        ));
+    }
+    if rows.is_empty() {
+        out.push_str("(neither trace contains spans)\n");
     }
     Ok(out)
 }
@@ -437,16 +707,40 @@ mod tests {
         assert_ne!(worker.tid, outer.tid, "worker thread shares a tid");
 
         // Export must round-trip through the crate's strict parser and
-        // carry the Chrome trace-event shape.
+        // carry the Chrome trace-event shape: one `process_name`
+        // metadata row plus the complete events, each tagged with the
+        // process trace id.
         let text = chrome_trace_json(&events).emit();
         let doc = parse(&text).expect("exported trace must be strict-valid JSON");
-        let evs = doc.get("traceEvents").and_then(Json::as_array).unwrap();
+        let all = doc.get("traceEvents").and_then(Json::as_array).unwrap();
+        let metas: Vec<&Json> = all
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("M"))
+            .collect();
+        assert_eq!(metas.len(), 1);
+        assert_eq!(
+            metas[0].get("name").and_then(Json::as_str),
+            Some("process_name")
+        );
+        let evs: Vec<&Json> = all
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+            .collect();
         assert_eq!(evs.len(), 3);
-        for e in evs {
-            assert_eq!(e.get("ph").and_then(Json::as_str), Some("X"));
+        let tid_hex = format!("{:016x}", trace_id());
+        for e in &evs {
             assert_eq!(e.get("cat").and_then(Json::as_str), Some("fkmpp"));
             assert!(e.get("ts").and_then(Json::as_f64).is_some());
             assert!(e.get("dur").and_then(Json::as_f64).is_some());
+            assert_eq!(e.get("pid").and_then(Json::as_u64), Some(LOCAL_PID as u64));
+            // set_enabled(true) above assigned a trace id, so every
+            // exported event must carry it.
+            assert_eq!(
+                e.get("args")
+                    .and_then(|a| a.get("trace_id"))
+                    .and_then(Json::as_str),
+                Some(tid_hex.as_str())
+            );
         }
         let outer_json = evs
             .iter()
@@ -465,5 +759,80 @@ mod tests {
 
         // Non-trace documents are a typed error, not a panic.
         assert!(render_report(&parse("{\"x\":1}").unwrap()).is_err());
+    }
+
+    // Pure-function coverage of the merge + diff paths: synthetic
+    // foreign spans, no recorder state beyond the process trace id.
+    #[test]
+    fn merged_export_separates_processes_and_diff_reports() {
+        let local = vec![SpanEvent {
+            name: "mtest.rpc",
+            tid: 1,
+            ts_us: 0.0,
+            dur_us: 4_000_000.0,
+            args: vec![("round", TraceArg::U64(1))],
+        }];
+        let foreign = vec![ForeignSpan {
+            pid: 2,
+            process: "worker-1".to_string(),
+            trace_id: 0xabcd,
+            name: "worker.update".to_string(),
+            tid: 1,
+            ts_us: 500.0,
+            dur_us: 1_000_000.0,
+            args: vec![("n".to_string(), TraceArg::U64(7))],
+        }];
+        let doc =
+            parse(&chrome_trace_json_merged(&local, &foreign).emit()).expect("strict JSON");
+        let all = doc.get("traceEvents").and_then(Json::as_array).unwrap();
+        // Both pid rows are labelled.
+        let labels: Vec<&str> = all
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("M"))
+            .filter_map(|e| e.get("args").and_then(|a| a.get("name")).and_then(Json::as_str))
+            .collect();
+        assert!(labels.contains(&"fkmpp-coordinator"), "{labels:?}");
+        assert!(labels.contains(&"worker-1"), "{labels:?}");
+        // The worker event sits on its own pid row with its own trace id.
+        let worker_ev = all
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("worker.update"))
+            .unwrap();
+        assert_eq!(worker_ev.get("pid").and_then(Json::as_u64), Some(2));
+        assert_eq!(
+            worker_ev
+                .get("args")
+                .and_then(|a| a.get("trace_id"))
+                .and_then(Json::as_str),
+            Some("000000000000abcd")
+        );
+        assert_eq!(
+            worker_ev.get("args").and_then(|a| a.get("n")).and_then(Json::as_u64),
+            Some(7)
+        );
+        // The report keys foreign rows by process label.
+        let rows = phase_rows(&doc).unwrap();
+        assert!(rows.iter().any(|r| r.name == "mtest.rpc"), "{rows:?}");
+        let wrow = rows
+            .iter()
+            .find(|r| r.name == "worker-1/worker.update")
+            .expect("worker-process phase row");
+        assert!((wrow.total_secs - 1.0).abs() < 1e-9);
+        let report = render_report(&doc).unwrap();
+        assert!(report.contains("worker-1/worker.update"), "{report}");
+
+        // Diff against a baseline missing the worker row: Δtotal signed,
+        // missing side diffs against zero.
+        let base =
+            parse(&chrome_trace_json_merged(&local, &[]).emit()).expect("strict JSON");
+        let diff = render_report_diff(&doc, &base).unwrap();
+        assert!(diff.contains("Δtotal"), "{diff}");
+        assert!(diff.contains("worker-1/worker.update"), "{diff}");
+        assert!(diff.contains("+1.0"), "worker row gained 1s: {diff}");
+        // Span-free traces diff cleanly.
+        let empty = parse("{\"traceEvents\":[]}").unwrap();
+        let empty_diff = render_report_diff(&empty, &empty).unwrap();
+        assert!(empty_diff.contains("(neither trace contains spans)"), "{empty_diff}");
+        assert!(render_report_diff(&doc, &parse("{\"x\":1}").unwrap()).is_err());
     }
 }

@@ -829,3 +829,83 @@ fn idle_keepalive_connection_closed_by_deadline() {
     assert_eq!(status, 200);
     server_thread.join().expect("join").expect("run");
 }
+
+/// ISSUE 9: every response carries an `X-Request-Id` — echoed verbatim
+/// when the client supplies one, generated (`req-N`) when absent, and
+/// present even on the written 400 for a malformed request — and that
+/// 400 leaves an `http.malformed` event in the flight recorder, which
+/// `GET /debug/log` serves live.
+#[test]
+fn request_ids_echo_and_debug_log_captures_malformed() {
+    let cfg = ServeConfig {
+        host: "127.0.0.1".to_string(),
+        port: 0,
+        persist: false,
+        http_workers: 1,
+        fit_workers: 1,
+        ..ServeConfig::default()
+    };
+    let server = Server::bind(&cfg).expect("bind ephemeral port");
+    let addr = server.local_addr().expect("local addr");
+    let server_thread = std::thread::spawn(move || server.run());
+
+    let stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+
+    // Client-supplied id: echoed verbatim (whitespace-trimmed).
+    writer
+        .write_all(
+            b"GET /healthz HTTP/1.1\r\nHost: e2e\r\nX-Request-Id:  e2e-supplied-42 \r\n\
+              Content-Length: 0\r\n\r\n",
+        )
+        .unwrap();
+    let (status, headers, _) = read_one_response(&mut reader);
+    assert_eq!(status, 200);
+    assert_eq!(
+        header(&headers, "x-request-id"),
+        Some("e2e-supplied-42"),
+        "{headers:?}"
+    );
+
+    // No id supplied: the server mints one.
+    writer
+        .write_all(&raw_request("GET", "/healthz", "", &[], false))
+        .unwrap();
+    let (status, headers, _) = read_one_response(&mut reader);
+    assert_eq!(status, 200);
+    let generated = header(&headers, "x-request-id").expect("generated X-Request-Id");
+    assert!(generated.starts_with("req-"), "{generated:?}");
+
+    // Malformed request (conflicting duplicate Content-Length): the
+    // written 400 still carries a (minted) request id.
+    writer
+        .write_all(
+            b"GET /healthz HTTP/1.1\r\nHost: e2e\r\n\
+              Content-Length: 1\r\nContent-Length: 2\r\n\r\n",
+        )
+        .unwrap();
+    let (status, headers, _) = read_one_response(&mut reader);
+    assert_eq!(status, 400);
+    assert!(header(&headers, "x-request-id").is_some(), "{headers:?}");
+
+    // The rejection went through the structured logger into the flight
+    // recorder, which `GET /debug/log` serves as parsed entries.
+    let (status, log) = http(&addr.to_string(), "GET", "/debug/log", None);
+    assert_eq!(status, 200, "{log:?}");
+    let entries = log.get("entries").and_then(Json::as_array).expect("entries");
+    assert!(
+        entries
+            .iter()
+            .any(|e| e.get("event").and_then(Json::as_str) == Some("http.malformed")),
+        "no http.malformed event among {} /debug/log entries",
+        entries.len()
+    );
+
+    let (status, _) = http(&addr.to_string(), "POST", "/shutdown", None);
+    assert_eq!(status, 200);
+    server_thread.join().expect("join").expect("run");
+}

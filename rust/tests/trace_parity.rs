@@ -13,7 +13,10 @@
 //! 4. **2-worker distributed kmeans-par**, traced, vs the *untraced*
 //!    in-process baseline — and the `dist.rpc_secs` latency histogram
 //!    has observations with ordered quantiles (the `/metrics` p50/p99
-//!    source for RPC round-trips).
+//!    source for RPC round-trips). The merged export then must carry
+//!    the worker subprocesses' spans as distinct pid rows under the
+//!    coordinator's trace id (the ISSUE 9 propagation gate), with
+//!    `worker-1/…` rows in the report.
 //! 5. **FKMPP_TRACE through the CLI**: a traced `fkmpp seed` reports the
 //!    same seeding cost as the untraced run and writes a strict-parse
 //!    valid Chrome trace that `trace::render_report` can summarize.
@@ -223,8 +226,50 @@ fn traced_runs_are_bitwise_identical_to_untraced() {
             "span {name:?} missing from trace"
         );
     }
+    // Tentpole (ISSUE 9): the merged export carries the worker
+    // *subprocesses'* spans as distinct pid rows — collected over the
+    // TraceDump RPC and shifted onto the coordinator clock — and every
+    // one of them sits under the coordinator's trace id.
+    let coord_tid = format!("{:016x}", trace::trace_id());
+    let worker_pids: std::collections::BTreeSet<u64> = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+        .filter_map(|e| e.get("pid").and_then(|p| p.as_u64()))
+        .filter(|&pid| pid > trace::LOCAL_PID as u64)
+        .collect();
+    assert!(
+        worker_pids.len() >= 2,
+        "merged trace missing worker-process span rows (pids {worker_pids:?})"
+    );
+    for e in events {
+        if e.get("ph").and_then(|p| p.as_str()) != Some("X")
+            || e.get("pid").and_then(|p| p.as_u64()).unwrap_or(0) <= trace::LOCAL_PID as u64
+        {
+            continue;
+        }
+        let tid = e
+            .get("args")
+            .and_then(|a| a.get("trace_id"))
+            .and_then(|t| t.as_str());
+        assert_eq!(
+            tid,
+            Some(coord_tid.as_str()),
+            "worker span not under the coordinator trace id"
+        );
+    }
+    assert!(
+        events.iter().any(|e| {
+            e.get("ph").and_then(|p| p.as_str()) == Some("M")
+                && e.get("args")
+                    .and_then(|a| a.get("name"))
+                    .and_then(|n| n.as_str())
+                    == Some("worker-1")
+        }),
+        "merged trace missing worker-1 process_name metadata"
+    );
     let report = trace::render_report(&reparsed).expect("report renders");
     assert!(report.contains("shard.round"), "{report}");
+    assert!(report.contains("worker-1/"), "{report}");
 
     // Leg 5: FKMPP_TRACE through the CLI — same seeding cost as the
     // untraced CLI run, plus a strict-parse valid trace file on disk.
