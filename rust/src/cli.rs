@@ -254,10 +254,10 @@ USAGE:
                  [--http-workers 4] [--fit-workers 1] [--no-persist]
                  [--queue-depth 128] [--fit-queue-depth 64]
                  [--idle-timeout-secs 15] [--max-requests-per-conn 1000]
-                 [--trace trace.json]
+                 [--observe-refresh-every 256] [--trace trace.json]
   fkmpp loadgen  [--short] [--conns 1,2,8] [--points 256] [--dim 16]
                  [-k 64] [--requests 100] [--reps 2] [--seed 42]
-                 [--json BENCH_serve.json] [--trace trace.json]
+                 [--observe 0] [--json BENCH_serve.json] [--trace trace.json]
   fkmpp worker   [--port 0] [--host 127.0.0.1] [--fail-after N]
   fkmpp report   --trace trace.json [--baseline other.json]
   fkmpp info
@@ -496,6 +496,14 @@ fn cmd_serve(args: &Args) -> Result<String> {
         },
         keepalive_max_requests: args
             .get_usize("max-requests-per-conn", defaults.keepalive_max_requests)?,
+        observe_refresh_every: {
+            let every =
+                args.get_usize("observe-refresh-every", defaults.observe_refresh_every)?;
+            if every == 0 {
+                bail!("--observe-refresh-every must be >= 1");
+            }
+            every
+        },
     };
     let server = crate::server::Server::bind(&scfg)?;
     crate::log::info(
@@ -527,6 +535,7 @@ fn cmd_loadgen(args: &Args) -> Result<String> {
     cfg.requests = args.get_usize("requests", cfg.requests)?;
     cfg.reps = args.get_usize("reps", cfg.reps)?;
     cfg.seed = args.get_u64("seed", cfg.seed)?;
+    cfg.observe = args.get_usize("observe", cfg.observe)?;
     cfg.json_path = args.get("json").map(str::to_string);
     crate::server::loadgen::run(&cfg)
 }
@@ -616,6 +625,13 @@ mod tests {
     fn serve_rejects_out_of_range_port() {
         // Fails validation before any socket is bound.
         assert!(run(&argv("serve --port 99999")).is_err());
+    }
+
+    #[test]
+    fn serve_rejects_zero_refresh_cadence() {
+        // Fails validation before any socket is bound.
+        let err = format!("{:#}", run(&argv("serve --observe-refresh-every 0")).unwrap_err());
+        assert!(err.contains("observe-refresh-every"), "{err}");
     }
 
     #[test]

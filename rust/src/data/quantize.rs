@@ -28,15 +28,24 @@ pub struct Quantized {
 /// Estimate the k-means optimum cost by evaluating `sample_k` uniformly
 /// random centers (Appendix F step 1). The `O(n * sample_k * d)` cost
 /// evaluation runs on the parallel kernel engine.
+///
+/// Distinct indices come from a partial Fisher–Yates over `0..n`: `k`
+/// swaps, one bounded RNG draw each — `O(n + k)` total. The previous
+/// rejection loop (`idx.contains(&cand)` retry) was `O(k²)` in scans
+/// and its retry count diverged as `sample_k → n` (the last index
+/// needed `~n` draws in expectation at `sample_k = n`). Note the draw
+/// stream differs from the old scheme (bounds shrink per step and
+/// duplicates no longer consume extra draws), so fixed-seed outputs of
+/// quantization changed once at this commit.
 pub fn estimate_opt_cost(ps: &PointSet, sample_k: usize, rng: &mut Pcg64) -> f64 {
-    let k = sample_k.min(ps.len()).max(1);
-    let mut idx: Vec<usize> = Vec::with_capacity(k);
-    while idx.len() < k {
-        let cand = rng.index(ps.len());
-        if !idx.contains(&cand) {
-            idx.push(cand);
-        }
+    let n = ps.len();
+    let k = sample_k.min(n).max(1);
+    let mut idx: Vec<usize> = (0..n).collect();
+    for i in 0..k {
+        let j = i + rng.index(n - i);
+        idx.swap(i, j);
     }
+    idx.truncate(k);
     let centers = ps.gather(&idx);
     crate::kernels::reduce::cost(ps, &centers)
 }
@@ -153,6 +162,34 @@ mod tests {
         let mut rng = Pcg64::seed_from(6);
         let est = estimate_opt_cost(&ps, 3, &mut rng);
         assert_eq!(est, 0.0);
+    }
+
+    #[test]
+    fn estimate_opt_cost_full_coverage_terminates() {
+        // The old rejection loop (`idx.contains` retry) needed ~n draws
+        // for the last index at sample_k == n; the partial Fisher–Yates
+        // does exactly k bounded draws. With every point a center the
+        // estimate is exactly zero — and distinctness is what makes it
+        // so (a duplicate index would leave some point uncovered).
+        let ps = gaussian_mixture(
+            &SynthSpec {
+                n: 512,
+                d: 4,
+                k_true: 3,
+                ..Default::default()
+            },
+            8,
+        );
+        let mut rng = Pcg64::seed_from(9);
+        assert_eq!(estimate_opt_cost(&ps, 512, &mut rng), 0.0);
+        // sample_k beyond n clamps rather than diverging.
+        let mut rng = Pcg64::seed_from(9);
+        assert_eq!(estimate_opt_cost(&ps, 100_000, &mut rng), 0.0);
+        // Fixed seed → fixed estimate (replay determinism).
+        let a = estimate_opt_cost(&ps, 20, &mut Pcg64::seed_from(10));
+        let b = estimate_opt_cost(&ps, 20, &mut Pcg64::seed_from(10));
+        assert_eq!(a, b);
+        assert!(a > 0.0);
     }
 
     #[test]

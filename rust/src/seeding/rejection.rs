@@ -384,6 +384,191 @@ fn scale_level_name(level: usize) -> &'static str {
     SCALE_NAMES[level.min(SCALE_NAMES.len() - 1)]
 }
 
+/// Streaming variant of the rejection seeder for the online scenario:
+/// points arrive in batches and acceptance state is maintained
+/// incrementally — the monotone oracle **ingests each accepted center
+/// via `insert`** instead of being rebuilt over a frozen dataset, which
+/// is the whole point (refitting per batch would be `O(n)` per arrival).
+///
+/// The arriving stream plays the role of Algorithm 4's proposal
+/// distribution, and the accept test keeps the indicator form: draw
+/// `u ~ U[0,1)` and open `x` as a center iff no existing center lies
+/// below `sqrt(u · c² · W)`, decided by the oracle's early-exit witness
+/// scan ([`NnOracle::dist_below_cached`]). `W` is the running
+/// **potential** `Σ d²(y, S)` over the observed stream — the streaming
+/// stand-in for Lemma 5.2's normalizer `Σ_y DIST(y, Query(y))²`, so the
+/// accept probability `min(1, d²(x,S) / (c²·W))` mirrors the batch
+/// sampler's accepted distribution. Because `W` only grows, the accept
+/// rate for in-distribution points decays harmonically (the online
+/// facility-location shape), while an outlier whose `d²` rivals the
+/// whole accumulated potential opens immediately — the accept count
+/// doubles as a drift signal (`observe.novel` in the serving layer).
+///
+/// ## Determinism contract
+///
+/// Replays are bitwise: the accept draw for the `t`-th observed point
+/// comes from `stream_root.fork(t)` (exactly one fork and one `f64`
+/// draw per point), `W` accumulates in stream order, and the oracle
+/// only ever sees accepted centers in stream order. Consequently the
+/// final centers are a pure function of `(seed, cfg, point stream)` —
+/// **independent of how the stream is chunked into `observe` calls**,
+/// which is what lets the serving layer batch ingests freely.
+pub struct StreamingRejection {
+    cfg: RejectionConfig,
+    /// Max centers (seeded + accepted).
+    k: usize,
+    dim: usize,
+    oracle: Box<dyn NnOracle>,
+    /// Accepted centers; row index = oracle insertion id (append-only,
+    /// so earlier ids stay valid as the matrix grows).
+    centers: PointSet,
+    /// Running potential `Σ d²(x, S)` over the stream (the scale `W`).
+    d2_sum: f64,
+    observed: u64,
+    accepted: u64,
+    stream_root: Pcg64,
+}
+
+impl StreamingRejection {
+    /// Build an empty streaming seeder. The rigorous multi-scale oracle
+    /// needs the data's diameter up front, which a stream cannot
+    /// provide, so only `lsh` and `exact` are accepted; likewise the
+    /// bucket width is taken from the config as-is (auto-tuning needs
+    /// data).
+    pub fn new(dim: usize, k: usize, cfg: RejectionConfig, seed: u64) -> Result<StreamingRejection> {
+        cfg.validate()?;
+        if k == 0 {
+            bail!("streaming rejection needs k >= 1");
+        }
+        if dim == 0 {
+            bail!("streaming rejection needs dim >= 1");
+        }
+        let mut rng = Pcg64::seed_from(seed);
+        let oracle: Box<dyn NnOracle> = match cfg.oracle {
+            OracleKind::Exact => Box::new(ExactNn::default()),
+            OracleKind::LshPractical => {
+                let mut params = cfg.lsh.clone();
+                params.c = cfg.c;
+                Box::new(MonotoneLsh::new(dim, &params, &LshMode::Practical, &mut rng))
+            }
+            OracleKind::LshRigorous => {
+                bail!("streaming rejection supports oracles lsh|exact (rigorous needs the diameter up front)")
+            }
+        };
+        let stream_root = rng.fork(0x0AC1_E5);
+        Ok(StreamingRejection {
+            cfg,
+            k,
+            dim,
+            oracle,
+            centers: PointSet::from_flat(0, dim, Vec::new()),
+            d2_sum: 0.0,
+            observed: 0,
+            accepted: 0,
+            stream_root,
+        })
+    }
+
+    /// Pre-open existing centers (e.g. a fitted model's) without
+    /// consuming stream positions or accept draws. Each one is ingested
+    /// by the oracle incrementally, exactly like a streamed accept.
+    pub fn seed_centers(&mut self, centers: &PointSet) -> Result<()> {
+        if centers.dim() != self.dim {
+            bail!(
+                "seed centers have d={}, streaming seeder built for d={}",
+                centers.dim(),
+                self.dim
+            );
+        }
+        if self.centers.len() + centers.len() > self.k {
+            bail!(
+                "seeding {} centers would exceed the streaming cap k={}",
+                centers.len(),
+                self.k
+            );
+        }
+        for i in 0..centers.len() {
+            self.open(centers.row(i).to_vec());
+        }
+        Ok(())
+    }
+
+    /// Ingest a batch of arriving points; returns how many opened as new
+    /// centers. Bitwise identical to ingesting the same points across
+    /// any other chunking (see the determinism contract above).
+    pub fn observe(&mut self, batch: &PointSet) -> Result<u64> {
+        if batch.dim() != self.dim {
+            bail!(
+                "observed points have d={}, streaming seeder built for d={}",
+                batch.dim(),
+                self.dim
+            );
+        }
+        let c2 = (self.cfg.c as f64) * (self.cfg.c as f64);
+        let mut opened = 0u64;
+        for r in 0..batch.len() {
+            let t = self.observed;
+            self.observed += 1;
+            let x = batch.row(r);
+            if self.centers.is_empty() {
+                self.open(x.to_vec());
+                opened += 1;
+                continue;
+            }
+            let (_, d2) = crate::kernels::assign::nearest_center(x, &self.centers);
+            self.d2_sum += d2 as f64;
+            // The accept draw is consumed even when saturated or on a
+            // duplicate point, keeping one fork + one draw per stream
+            // position (chunk invariance is a counting argument).
+            let u = self.stream_root.fork(t).next_f64();
+            if self.centers.len() >= self.k || d2 <= 0.0 {
+                continue;
+            }
+            let threshold = (u * c2 * self.d2_sum).sqrt() as f32;
+            let x_norm = crate::kernels::blocked::dot(x, x);
+            if !self
+                .oracle
+                .dist_below_cached(&self.centers, x, x_norm, threshold)
+            {
+                self.open(x.to_vec());
+                opened += 1;
+            }
+        }
+        self.accepted += opened;
+        Ok(opened)
+    }
+
+    /// Append a center row and hand it to the oracle — the incremental
+    /// ingest path (no rebuild).
+    fn open(&mut self, row: Vec<f32>) {
+        let mut flat = self.centers.flat().to_vec();
+        flat.extend_from_slice(&row);
+        let n = self.centers.len() + 1;
+        self.centers = PointSet::from_flat(n, self.dim, flat);
+        self.oracle.insert(&self.centers, (n - 1) as u32);
+    }
+
+    /// Centers opened so far (seeded + accepted), in arrival order.
+    pub fn centers(&self) -> &PointSet {
+        &self.centers
+    }
+
+    /// Total points streamed through `observe`.
+    pub fn observed(&self) -> u64 {
+        self.observed
+    }
+
+    /// Centers opened by the accept test (excludes [`Self::seed_centers`]).
+    pub fn accepted(&self) -> u64 {
+        self.accepted
+    }
+
+    /// True once the center budget `k` is exhausted.
+    pub fn is_saturated(&self) -> bool {
+        self.centers.len() >= self.k
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -659,5 +844,108 @@ mod tests {
             props[1],
             props[0]
         );
+    }
+
+    #[test]
+    fn streaming_is_chunk_invariant_and_replayable() {
+        // The contract the serving layer leans on: the final centers are
+        // a pure function of (seed, cfg, stream) — identical bits no
+        // matter how the stream is chunked into observe calls, and
+        // identical again on replay.
+        let ps = data(400, 8, 31);
+        for oracle in [OracleKind::Exact, OracleKind::LshPractical] {
+            let cfg = RejectionConfig {
+                oracle,
+                ..Default::default()
+            };
+            let mut whole = StreamingRejection::new(8, 12, cfg.clone(), 77).unwrap();
+            whole.observe(&ps).unwrap();
+            let mut chunked = StreamingRejection::new(8, 12, cfg.clone(), 77).unwrap();
+            let mut at = 0;
+            for size in [1usize, 7, 64, 13, 400] {
+                let end = (at + size).min(ps.len());
+                if at >= end {
+                    break;
+                }
+                let rows: Vec<usize> = (at..end).collect();
+                chunked.observe(&ps.gather(&rows)).unwrap();
+                at = end;
+            }
+            assert_eq!(at, ps.len());
+            assert_eq!(whole.observed(), chunked.observed(), "{oracle:?}");
+            assert_eq!(whole.accepted(), chunked.accepted(), "{oracle:?}");
+            assert_eq!(whole.centers(), chunked.centers(), "{oracle:?} chunking changed bits");
+            assert!(whole.centers().len() >= 1 && whole.centers().len() <= 12);
+        }
+    }
+
+    #[test]
+    fn streaming_oracle_ingests_incrementally() {
+        // Accepted centers reach the oracle one insert at a time; probe
+        // stats move without any rebuild, and the accept test consults
+        // the oracle (inserted == opened centers at every step).
+        let ps = data(600, 6, 33);
+        let cfg = RejectionConfig {
+            oracle: OracleKind::LshPractical,
+            ..Default::default()
+        };
+        let mut s = StreamingRejection::new(6, 16, cfg, 5).unwrap();
+        s.observe(&ps).unwrap();
+        assert!(s.centers().len() >= 2, "stream opened at least two centers");
+        assert!(s.oracle.len() == s.centers().len(), "oracle saw every accept");
+        assert!(s.oracle.probe_stats().probes > 0, "accept tests probed the oracle");
+    }
+
+    #[test]
+    fn streaming_seeded_centers_gate_novelty() {
+        // Seed with one tight cluster's centers: points from that
+        // cluster nearly all reject; a far-away cluster opens centers.
+        let near = gaussian_mixture(
+            &SynthSpec {
+                n: 200,
+                d: 4,
+                k_true: 1,
+                ..Default::default()
+            },
+            61,
+        );
+        let mut s = StreamingRejection::new(
+            4,
+            16,
+            RejectionConfig {
+                oracle: OracleKind::Exact,
+                ..Default::default()
+            },
+            9,
+        )
+        .unwrap();
+        let seed_rows: Vec<usize> = (0..4).collect();
+        s.seed_centers(&near.gather(&seed_rows)).unwrap();
+        assert_eq!(s.centers().len(), 4);
+        s.observe(&near).unwrap();
+        let near_accepts = s.accepted();
+        // Shift a copy far away: drift must open new centers.
+        let mut far = near.clone();
+        for v in far.flat_mut() {
+            *v += 1000.0;
+        }
+        s.observe(&far).unwrap();
+        assert!(
+            s.accepted() > near_accepts,
+            "far cluster opened no centers (accepted stuck at {near_accepts})"
+        );
+        // Dimension mismatch is an error, not a panic.
+        assert!(s.observe(&data(5, 7, 1)).is_err());
+        // Rigorous oracle is rejected up front.
+        assert!(StreamingRejection::new(
+            4,
+            8,
+            RejectionConfig {
+                oracle: OracleKind::LshRigorous,
+                ..Default::default()
+            },
+            9,
+        )
+        .is_err());
     }
 }

@@ -342,6 +342,7 @@ fn run_fit(
     let cost = backend.cost(&points, &centers)?;
     let meta = ModelMeta {
         id: registry.fresh_id(),
+        version: 1,
         algorithm: spec.algorithm.name().to_string(),
         k: centers.len(),
         dim: centers.dim(),

@@ -46,6 +46,10 @@ pub struct LoadgenConfig {
     /// Repetitions per cell (per-rep walls feed the `seconds` stats).
     pub reps: usize,
     pub seed: u64,
+    /// Observe-burst requests to fire after the assign sweep (0 = off).
+    /// Each carries `points` points and the server's refresh cadence is
+    /// pinned to one batch, so every burst request publishes a version.
+    pub observe: usize,
     /// Write `BENCH_serve.json` here when set.
     pub json_path: Option<String>,
 }
@@ -60,6 +64,7 @@ impl Default for LoadgenConfig {
             requests: 100,
             reps: 2,
             seed: 42,
+            observe: 0,
             json_path: None,
         }
     }
@@ -100,6 +105,10 @@ pub fn run(cfg: &LoadgenConfig) -> Result<String> {
         fit_workers: 1,
         queue_depth: max_conns * 4 + 32,
         keepalive_max_requests: cfg.requests * 2 + 16,
+        // One observe request carries `points` points; pin the refresh
+        // cadence to one batch so each `--observe` burst request can
+        // publish a fresh model version.
+        observe_refresh_every: cfg.points.max(1),
         ..ServeConfig::default()
     };
     let server = Server::bind(&scfg)?;
@@ -116,6 +125,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<String> {
     );
     let meta = registry::ModelMeta {
         id: reg.fresh_id(),
+        version: 1,
         algorithm: "loadgen".to_string(),
         k: cfg.k,
         dim: cfg.dim,
@@ -127,6 +137,25 @@ pub fn run(cfg: &LoadgenConfig) -> Result<String> {
     };
     let model_id = meta.id.clone();
     reg.insert(meta, centers)?;
+    // Regression guard: registration must pin the same assign kernel the
+    // fit path would — a model that slipped past `Model::new` would make
+    // every throughput number below incomparable to served fits.
+    let installed = reg
+        .get(&model_id)
+        .context("loadgen model vanished after insert")?;
+    let pinned = crate::kernels::tune::kernel_for(
+        crate::kernels::tune::Op::Assign,
+        registry::ASSIGN_PIN_N,
+        cfg.dim,
+        cfg.k,
+    );
+    if installed.assign_kernel != pinned {
+        bail!(
+            "loadgen model registered with kernel {:?}, fit path pins {:?}",
+            installed.assign_kernel,
+            pinned
+        );
+    }
     let srv = std::thread::spawn(move || server.run());
 
     let queries = gaussian_mixture(
@@ -145,10 +174,63 @@ pub fn run(cfg: &LoadgenConfig) -> Result<String> {
 
     // The sweep aborts on any error past this point; make sure the
     // server is told to stop either way so the process can exit.
-    let result = sweep(cfg, addr, &model_id, &json_body, &bin_body);
+    let result = sweep(cfg, addr, &model_id, &json_body, &bin_body).and_then(|mut report| {
+        if cfg.observe > 0 {
+            report.push_str(&observe_burst(cfg, addr, &model_id, &bin_body)?);
+        }
+        Ok(report)
+    });
     let _ = one_shot(addr, &request_bytes("/shutdown", "", &[], true));
     let _ = srv.join();
     result
+}
+
+/// `--observe N`: fire N ingest requests at the served model, then wait
+/// for the off-thread refresher to publish a bumped version. Runs after
+/// the assign sweep so every timed cell answered from version 1.
+fn observe_burst(
+    cfg: &LoadgenConfig,
+    addr: SocketAddr,
+    model_id: &str,
+    bin_body: &[u8],
+) -> Result<String> {
+    let path = format!("/models/{model_id}/observe");
+    for _ in 0..cfg.observe {
+        let (status, _) = one_shot(
+            addr,
+            &request_bytes(&path, "application/octet-stream", bin_body, true),
+        )?;
+        if status != 200 {
+            bail!("observe request answered HTTP {status}");
+        }
+    }
+    // Every burst request crossed the refresh cadence (pinned to one
+    // batch above), so a publish is in flight; poll until a bump lands.
+    let meta_path = format!("/models/{model_id}");
+    let deadline = Instant::now() + std::time::Duration::from_secs(10);
+    loop {
+        let (status, body) = one_shot(addr, &get_bytes(&meta_path))?;
+        if status != 200 {
+            bail!("GET {meta_path} answered HTTP {status}");
+        }
+        let v = json::parse(std::str::from_utf8(&body).context("model doc")?)?;
+        let version = v.get("version").and_then(Json::as_u64).unwrap_or(0);
+        if version >= 2 {
+            return Ok(format!(
+                "\nobserve: {} requests x {} points ingested; model refreshed to version {version}\n",
+                cfg.observe, cfg.points
+            ));
+        }
+        if Instant::now() > deadline {
+            bail!("observe burst: model version never bumped past 1 (still {version})");
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+}
+
+/// Serialize a bodyless GET (the observe burst's version poll).
+fn get_bytes(path: &str) -> Vec<u8> {
+    format!("GET {path} HTTP/1.1\r\nHost: loadgen\r\nConnection: close\r\n\r\n").into_bytes()
 }
 
 fn sweep(
@@ -450,11 +532,19 @@ mod tests {
             requests: 6,
             reps: 1,
             seed: 7,
+            observe: 2,
             json_path: Some(path.display().to_string()),
         };
         let out = run(&cfg).unwrap();
         assert!(out.contains("parity: ok"), "{out}");
         assert!(out.contains("| binary | keepalive | 2 |"), "{out}");
+        // The observe mix ran, and the pinned-kernel regression guard in
+        // run() passed (a bypassed registration would have errored out).
+        assert!(
+            out.contains("observe: 2 requests x 8 points"),
+            "{out}"
+        );
+        assert!(out.contains("refreshed to version"), "{out}");
         let text = std::fs::read_to_string(&path).unwrap();
         let doc = json::parse(&text).unwrap();
         assert_eq!(doc.get("profile").and_then(Json::as_str), Some("serve_bench"));

@@ -12,6 +12,7 @@
 //! | `GET /models` | list fitted models (metadata) |
 //! | `GET /models/{id}` | one model, centers included |
 //! | `POST /models/{id}/assign` | batched nearest-center assignment for `points` (JSON or `.fbin` binary body) |
+//! | `POST /models/{id}/observe` | online ingest: mini-batch refresher + streaming-seeder drift signal; publishes a new model version every [`ServeConfig::observe_refresh_every`] points |
 //! | `GET /healthz` | liveness + model/job counts |
 //! | `GET /metrics` | request counters, latency histograms (p50/p90/p99), job/model gauges |
 //! | `GET /metrics?format=prometheus` | the same, as Prometheus text exposition |
@@ -54,6 +55,7 @@ pub mod http;
 pub mod jobs;
 pub mod json;
 pub mod loadgen;
+pub mod online;
 pub mod registry;
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -100,6 +102,10 @@ pub struct ServeConfig {
     /// `Connection: close` — bounds how long a worker can be owned by a
     /// single client.
     pub keepalive_max_requests: usize,
+    /// Observed points between online model refreshes: every time a
+    /// model's observe stream crosses this many points, a new version
+    /// is snapshotted and published (see [`online`]).
+    pub observe_refresh_every: usize,
 }
 
 impl Default for ServeConfig {
@@ -116,6 +122,7 @@ impl Default for ServeConfig {
             fit_queue_depth: 64,
             keepalive_idle: Duration::from_secs(15),
             keepalive_max_requests: 1000,
+            observe_refresh_every: online::DEFAULT_REFRESH_EVERY,
         }
     }
 }
@@ -145,6 +152,8 @@ pub struct ServerCtx {
     pub metrics: Metrics,
     /// Per-model coalescing of concurrent assigns (see [`registry`]).
     coalescer: registry::AssignCoalescer,
+    /// Per-model online ingest state (see [`online`]).
+    online: online::OnlineManager,
     started: Instant,
     shutdown: AtomicBool,
     limits: ConnLimits,
@@ -157,6 +166,7 @@ impl ServerCtx {
             jobs,
             metrics: Metrics::new(),
             coalescer: registry::AssignCoalescer::default(),
+            online: online::OnlineManager::new(online::DEFAULT_REFRESH_EVERY),
             started: Instant::now(),
             shutdown: AtomicBool::new(false),
             limits: ConnLimits::default(),
@@ -190,6 +200,7 @@ impl Server {
             keepalive_idle: cfg.keepalive_idle,
             keepalive_max_requests: cfg.keepalive_max_requests.max(1),
         };
+        ctx.online = online::OnlineManager::new(cfg.observe_refresh_every);
         Ok(Server {
             listener,
             ctx: Arc::new(ctx),
@@ -422,6 +433,7 @@ fn route(req: &Request, ctx: &ServerCtx) -> Response {
         ("GET", ["models"]) => Ok(handle_models(ctx)),
         ("GET", ["models", id]) => handle_model(id, ctx),
         ("POST", ["models", id, "assign"]) => handle_assign(id, req, ctx),
+        ("POST", ["models", id, "observe"]) => handle_observe(id, req, ctx),
         ("GET", ["debug", "log"]) => Ok(handle_debug_log()),
         ("POST", ["shutdown"]) => Ok(handle_shutdown(ctx)),
         // Wrong method on a known path reads better as 405 than 404.
@@ -838,6 +850,57 @@ fn handle_assign(id: &str, req: &Request, ctx: &ServerCtx) -> RouteResult {
     ))
 }
 
+/// `POST /models/{id}/observe`: online ingest. Same two bodies as
+/// assign (JSON `{"points": [[..], ..]}` or an `.fbin` binary body);
+/// always answers JSON. Points flow into the model's mini-batch
+/// refresher and streaming-seeder drift detector ([`online`]); when the
+/// stream crosses the refresh cadence a new model version is built
+/// off-thread and published atomically — `version` in the response (and
+/// in `GET /models/{id}`) is the currently *published* version, while
+/// `queued_version` reports the refresh this call triggered, if any.
+fn handle_observe(id: &str, req: &Request, ctx: &ServerCtx) -> RouteResult {
+    let model = ctx
+        .registry
+        .get(id)
+        .ok_or_else(|| (404, format!("unknown model {id:?}")))?;
+    let points = if req.content_type.starts_with("application/octet-stream") {
+        crate::data::io::decode_fbin(&req.body).map_err(bad)?
+    } else {
+        let body = req.body_str().map_err(bad)?;
+        let v = json::parse(body).map_err(bad)?;
+        let pts = v
+            .get("points")
+            .ok_or_else(|| (400, "missing \"points\"".to_string()))?;
+        json::points_from_json(pts).map_err(bad)?
+    };
+    let timer = ctx.metrics.latency_timer("observe.latency_secs");
+    let outcome = ctx
+        .online
+        .observe(&ctx.registry, &model, &points)
+        .map_err(bad)?;
+    timer.stop();
+    ctx.metrics.incr("observe.requests", 1);
+    ctx.metrics.incr("observe.points", outcome.ingested as u64);
+    // The published version may already have advanced past the model
+    // Arc this handler captured — report what a client would now see.
+    let published = ctx
+        .registry
+        .get(id)
+        .map(|m| m.meta.version)
+        .unwrap_or(model.meta.version);
+    let mut fields = vec![
+        ("model_id", Json::str(model.meta.id.clone())),
+        ("ingested", Json::num(outcome.ingested as f64)),
+        ("total_observed", Json::num(outcome.total_observed as f64)),
+        ("novel", Json::num(outcome.novel as f64)),
+        ("version", Json::num(published as f64)),
+    ];
+    if let Some(v) = outcome.queued_version {
+        fields.push(("queued_version", Json::num(v as f64)));
+    }
+    Ok(Response::json(200, &Json::obj(fields)))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1157,6 +1220,7 @@ mod tests {
         );
         let meta = registry::ModelMeta {
             id: ctx.registry.fresh_id(),
+            version: 1,
             algorithm: "uniform".to_string(),
             k: 4,
             dim: 3,
@@ -1208,6 +1272,7 @@ mod tests {
         );
         let meta = registry::ModelMeta {
             id: ctx.registry.fresh_id(),
+            version: 1,
             algorithm: "uniform".to_string(),
             k: 4,
             dim: 3,
@@ -1303,5 +1368,87 @@ mod tests {
         let server = Server::bind(&cfg).unwrap();
         let addr = server.local_addr().unwrap();
         assert_ne!(addr.port(), 0);
+    }
+
+    #[test]
+    fn observe_route_ingests_and_bumps_version() {
+        let mut ctx = test_ctx();
+        ctx.online = online::OnlineManager::new(16);
+        let cs = gaussian_mixture(
+            &SynthSpec {
+                n: 4,
+                d: 3,
+                k_true: 2,
+                ..Default::default()
+            },
+            5,
+        );
+        let meta = registry::ModelMeta {
+            id: ctx.registry.fresh_id(),
+            version: 1,
+            algorithm: "uniform".to_string(),
+            k: 4,
+            dim: 3,
+            source: "test".to_string(),
+            seed: 0,
+            seeding_secs: 0.0,
+            lloyd_iters: 0,
+            cost: 0.0,
+        };
+        ctx.registry.insert(meta, cs).unwrap();
+        let batch = gaussian_mixture(
+            &SynthSpec {
+                n: 20,
+                d: 3,
+                k_true: 2,
+                ..Default::default()
+            },
+            6,
+        );
+        let body = Json::obj(vec![("points", json::points_to_json(&batch))]).emit();
+        let resp = route(&post("/models/m-1/observe", &body), &ctx);
+        assert_eq!(resp.status, 200);
+        let v = body_json(&resp);
+        assert_eq!(v.get("ingested").and_then(Json::as_usize), Some(20));
+        assert_eq!(v.get("total_observed").and_then(Json::as_usize), Some(20));
+        assert_eq!(
+            v.get("queued_version").and_then(Json::as_u64),
+            Some(2),
+            "20 points past a cadence of 16 queues version 2"
+        );
+        // The publish is off-thread: poll until the registry swaps.
+        let mut published = 0;
+        for _ in 0..500 {
+            published = ctx.registry.get("m-1").unwrap().meta.version;
+            if published >= 2 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        assert_eq!(published, 2, "refresh never published");
+        // GET /models/{id} surfaces the bumped version.
+        let resp = route(&get("/models/m-1"), &ctx);
+        assert_eq!(body_json(&resp).get("version").and_then(Json::as_u64), Some(2));
+        // Assign still answers, from the published model.
+        let aresp = route(&post("/models/m-1/assign", &body), &ctx);
+        assert_eq!(aresp.status, 200);
+        // Client errors: unknown model, missing points, bad dims.
+        assert_eq!(route(&post("/models/m-404/observe", &body), &ctx).status, 404);
+        assert_eq!(route(&post("/models/m-1/observe", "{}"), &ctx).status, 400);
+        assert_eq!(
+            route(&post("/models/m-1/observe", r#"{"points": [[1,2]]}"#), &ctx).status,
+            400
+        );
+        // Observe counters moved on the request-scoped sink (error
+        // requests above fail before the counters and don't show up).
+        let counters = ctx.metrics.counters_snapshot();
+        let count = |name: &str| {
+            counters
+                .iter()
+                .find(|(k, _)| *k == name)
+                .map(|&(_, v)| v)
+        };
+        assert_eq!(count("observe.requests"), Some(1));
+        assert_eq!(count("observe.points"), Some(20));
     }
 }

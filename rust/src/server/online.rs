@@ -1,0 +1,436 @@
+//! Online ingest: `POST /models/{id}/observe` feeds arriving points
+//! into a mini-batch Lloyd refresher and periodically publishes a new
+//! model **version** through [`ModelRegistry::publish`].
+//!
+//! ## The observe → refresh lifecycle
+//!
+//! Each model with observe traffic owns an [`OnlineState`]: a working
+//! copy of the centers, per-center running counts, and a
+//! [`StreamingRejection`] drift detector seeded from the published
+//! centers. An observe batch is assigned in one pinned-kernel sweep
+//! against the working centers (cached assignment, Sculley-style), then
+//! applied as sequential per-point updates with learning rate
+//! `η_j = 1 / (warm + count_j)` — so centers converge as their counts
+//! grow instead of chasing the last batch. Every `refresh_every`
+//! observed points the state **snapshots** the working centers under
+//! its lock, stamps them with the next monotone version, and queues the
+//! snapshot for an off-thread publisher: the publisher builds a
+//! complete [`Model`] (norm cache + kernel pin), persists it, and swaps
+//! it into the registry atomically. Readers never wait on a refresh —
+//! in-flight assigns finish on the `Arc` they captured.
+//!
+//! ## Determinism contract
+//!
+//! Snapshots are taken at exact stream positions (every
+//! `refresh_every`-th point) while holding the state lock, and the
+//! update arithmetic is sequential in stream order, so replaying the
+//! same observe stream against the same starting model produces
+//! **bitwise-identical centers at every version** — publisher thread
+//! timing can delay *when* a version appears, never *what* it contains.
+//! Queued snapshots publish in version order through the registry's
+//! monotone [`ModelRegistry::publish`].
+//!
+//! The refreshed meta keeps the original fit's `cost` and
+//! `seeding_secs` (they describe the fit, not the stream); `version`
+//! is the field that moves.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+use crate::bail;
+use crate::data::matrix::PointSet;
+use crate::error::Result;
+use crate::kernels::tune;
+use crate::seeding::rejection::{OracleKind, RejectionConfig, StreamingRejection};
+use crate::server::registry::{Model, ModelMeta, ModelRegistry, ASSIGN_PIN_N};
+
+/// Default observe count between version publishes.
+pub const DEFAULT_REFRESH_EVERY: usize = 256;
+
+/// Warm-start pseudo-count: the fitted centers behave as if they had
+/// already absorbed this many points each, so the first observed point
+/// nudges its center by `1/(WARM_COUNT+1)` instead of replacing it
+/// (bare Sculley counts start at zero and would overwrite the fit).
+const WARM_COUNT: u64 = 64;
+
+/// What one observe call did (the `POST /models/{id}/observe` body).
+pub struct ObserveOutcome {
+    /// Points ingested by this call.
+    pub ingested: usize,
+    /// Lifetime points observed for this model.
+    pub total_observed: u64,
+    /// Lifetime centers the streaming seeder opened off the stream — a
+    /// drift signal (points near the model almost never open).
+    pub novel: u64,
+    /// Version the snapshot queued by this call will publish, if one
+    /// crossed the refresh threshold.
+    pub queued_version: Option<u64>,
+}
+
+/// A centers snapshot waiting for the off-thread publisher.
+struct Snapshot {
+    meta: ModelMeta,
+    centers: PointSet,
+}
+
+/// Per-model online state. All mutation happens under the owning mutex;
+/// the publisher thread only pops [`Snapshot`]s and flips
+/// `publisher_running`.
+struct OnlineState {
+    /// Meta template for refreshes (version overwritten per snapshot).
+    base_meta: ModelMeta,
+    /// Working centers the mini-batch updates mutate.
+    centers: PointSet,
+    /// Per-center observed-point counts (drives the learning rate).
+    counts: Vec<u64>,
+    /// Kernel pinned at state creation from the model shape (same
+    /// formula as [`Model::new`]) so observe batch size cannot flip the
+    /// sweep implementation.
+    kernel: tune::Kernel,
+    observed: u64,
+    since_refresh: usize,
+    /// Version the next snapshot will carry.
+    next_version: u64,
+    pending: VecDeque<Snapshot>,
+    publisher_running: bool,
+    /// Streaming rejection seeder over the observe stream, seeded from
+    /// the published centers: accepts are drift, surfaced as
+    /// `observe.novel`. Uses the exact oracle — its working set is only
+    /// ever the opened centers, so scans stay `O(k)`.
+    novelty: StreamingRejection,
+}
+
+impl OnlineState {
+    fn for_model(model: &Model) -> Result<OnlineState> {
+        let k = model.centers.len();
+        let dim = model.centers.dim();
+        let mut novelty = StreamingRejection::new(
+            dim,
+            // Room for one drifted center per fitted one before the
+            // detector saturates.
+            k.saturating_mul(2).max(2),
+            RejectionConfig {
+                oracle: OracleKind::Exact,
+                ..Default::default()
+            },
+            model.meta.seed ^ 0x0B5E_7EED,
+        )?;
+        novelty.seed_centers(&model.centers)?;
+        Ok(OnlineState {
+            base_meta: model.meta.clone(),
+            centers: model.centers.clone(),
+            counts: vec![0; k],
+            kernel: tune::kernel_for(tune::Op::Assign, ASSIGN_PIN_N, dim, k),
+            observed: 0,
+            since_refresh: 0,
+            next_version: model.meta.version + 1,
+            pending: VecDeque::new(),
+            publisher_running: false,
+            novelty,
+        })
+    }
+
+    /// One pinned-kernel sweep over the batch against the working
+    /// centers — the module owns no distance loops (PR 1 contract).
+    fn assign_working(&self, points: &PointSet) -> (Vec<u32>, Vec<f32>) {
+        match self.kernel {
+            tune::Kernel::Naive => {
+                crate::kernels::assign::assign_argmin_naive(points, &self.centers)
+            }
+            tune::Kernel::Blocked => {
+                let pn = crate::kernels::norms::squared_norms(points);
+                let cn = crate::kernels::norms::squared_norms(&self.centers);
+                crate::kernels::blocked::assign_argmin_blocked(points, &pn, &self.centers, &cn)
+            }
+        }
+    }
+
+    /// Mini-batch Lloyd step: cached assignment for the whole batch,
+    /// then sequential per-point center updates in stream order (the
+    /// order is what makes replays bitwise).
+    fn ingest(&mut self, points: &PointSet) -> Result<()> {
+        let (labels, _) = self.assign_working(points);
+        for (i, &label) in labels.iter().enumerate() {
+            let j = label as usize;
+            self.counts[j] += 1;
+            let eta = 1.0f32 / (WARM_COUNT + self.counts[j]) as f32;
+            let x = points.row(i);
+            let c = self.centers.row_mut(j);
+            for (cv, xv) in c.iter_mut().zip(x) {
+                *cv += eta * (*xv - *cv);
+            }
+        }
+        self.novelty.observe(points)?;
+        self.observed += points.len() as u64;
+        self.since_refresh += points.len();
+        Ok(())
+    }
+
+    /// Snapshot the working centers for the version this call crossed
+    /// into. Called with the state lock held, at an exact stream
+    /// position — the snapshot's bits are already final here.
+    fn queue_snapshot(&mut self) -> u64 {
+        let version = self.next_version;
+        self.next_version += 1;
+        self.since_refresh = 0;
+        let mut meta = self.base_meta.clone();
+        meta.version = version;
+        self.pending.push_back(Snapshot {
+            meta,
+            centers: self.centers.clone(),
+        });
+        version
+    }
+}
+
+/// All per-model online states behind the server, plus the refresh
+/// cadence. Owned by `ServerCtx`.
+pub struct OnlineManager {
+    states: Mutex<HashMap<String, Arc<Mutex<OnlineState>>>>,
+    refresh_every: usize,
+}
+
+impl OnlineManager {
+    pub fn new(refresh_every: usize) -> OnlineManager {
+        OnlineManager {
+            states: Mutex::new(HashMap::new()),
+            refresh_every: refresh_every.max(1),
+        }
+    }
+
+    /// Ingest one observe batch for `model`, queueing a versioned
+    /// refresh whenever the stream crosses the cadence (possibly more
+    /// than once for an oversized batch — each snapshot then lands at a
+    /// deterministic position only up to batch granularity, which is
+    /// why the threshold check runs *after* the whole batch: the
+    /// per-version bits depend only on the stream prefix, never on
+    /// publisher timing).
+    pub fn observe(
+        &self,
+        registry: &Arc<ModelRegistry>,
+        model: &Arc<Model>,
+        points: &PointSet,
+    ) -> Result<ObserveOutcome> {
+        if points.dim() != model.centers.dim() {
+            bail!(
+                "dimension mismatch: model {} has d={}, observed points have d={}",
+                model.meta.id,
+                model.centers.dim(),
+                points.dim()
+            );
+        }
+        if points.is_empty() {
+            bail!("observe batch is empty");
+        }
+        let state = self.state_for(model)?;
+        let mut st = state.lock().unwrap();
+        st.ingest(points)?;
+        let queued_version = if st.since_refresh >= self.refresh_every {
+            Some(st.queue_snapshot())
+        } else {
+            None
+        };
+        let outcome = ObserveOutcome {
+            ingested: points.len(),
+            total_observed: st.observed,
+            novel: st.novelty.accepted(),
+            queued_version,
+        };
+        if queued_version.is_some() && !st.publisher_running {
+            st.publisher_running = true;
+            drop(st);
+            spawn_publisher(Arc::clone(registry), state);
+        }
+        Ok(outcome)
+    }
+
+    /// Fetch or create the state for a model id. The state is created
+    /// from the *currently published* model on first observe.
+    fn state_for(&self, model: &Model) -> Result<Arc<Mutex<OnlineState>>> {
+        let mut states = self.states.lock().unwrap();
+        if let Some(existing) = states.get(&model.meta.id) {
+            return Ok(Arc::clone(existing));
+        }
+        let state = Arc::new(Mutex::new(OnlineState::for_model(model)?));
+        states.insert(model.meta.id.clone(), Arc::clone(&state));
+        Ok(state)
+    }
+}
+
+/// Drain the snapshot queue off-thread: build each snapshot into a full
+/// [`Model`] (norm cache + kernel pin run here, not under the state
+/// lock), persist + swap it via the registry, and exit once the queue
+/// is dry. Publishes happen in version order because the queue is
+/// FIFO and only one publisher runs per state.
+fn spawn_publisher(registry: Arc<ModelRegistry>, state: Arc<Mutex<OnlineState>>) {
+    std::thread::spawn(move || loop {
+        let snap = {
+            let mut st = state.lock().unwrap();
+            match st.pending.pop_front() {
+                Some(s) => s,
+                None => {
+                    st.publisher_running = false;
+                    return;
+                }
+            }
+        };
+        let mut span = crate::trace::Span::enter("model.refresh");
+        span.arg("model", snap.meta.id.clone());
+        span.arg("version", snap.meta.version);
+        span.arg("k", snap.centers.len() as u64);
+        let model = Model::new(snap.meta, snap.centers);
+        match registry.publish(model) {
+            Ok(_) => crate::metrics::global().incr("observe.refreshes", 1),
+            Err(e) => crate::log::warn(
+                "observe.refresh_failed",
+                &[(
+                    "error",
+                    crate::server::json::Json::str(format!("{e:#}")),
+                )],
+            ),
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gaussian_mixture, SynthSpec};
+
+    fn install(reg: &Arc<ModelRegistry>, k: usize, d: usize, seed: u64) -> Arc<Model> {
+        let meta = ModelMeta {
+            id: reg.fresh_id(),
+            version: 1,
+            algorithm: "uniform".to_string(),
+            k,
+            dim: d,
+            source: "test".to_string(),
+            seed,
+            seeding_secs: 0.0,
+            lloyd_iters: 0,
+            cost: 0.0,
+        };
+        let centers = gaussian_mixture(
+            &SynthSpec {
+                n: k,
+                d,
+                k_true: k.min(4),
+                ..Default::default()
+            },
+            seed,
+        );
+        reg.insert(meta, centers).unwrap()
+    }
+
+    fn stream(n: usize, d: usize, seed: u64) -> PointSet {
+        gaussian_mixture(
+            &SynthSpec {
+                n,
+                d,
+                k_true: 4,
+                ..Default::default()
+            },
+            seed,
+        )
+    }
+
+    fn wait_for_version(reg: &ModelRegistry, id: &str, version: u64) -> Arc<Model> {
+        for _ in 0..500 {
+            let m = reg.get(id).unwrap();
+            if m.meta.version >= version {
+                return m;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        panic!("model {id} never reached version {version}");
+    }
+
+    #[test]
+    fn observe_refresh_publishes_versions() {
+        let reg = Arc::new(ModelRegistry::new(None).unwrap());
+        let model = install(&reg, 4, 3, 1);
+        let id = model.meta.id.clone();
+        let mgr = OnlineManager::new(32);
+        let pts = stream(80, 3, 2);
+        let out = mgr.observe(&reg, &model, &pts).unwrap();
+        assert_eq!(out.ingested, 80);
+        assert_eq!(out.total_observed, 80);
+        assert_eq!(out.queued_version, Some(2));
+        let m2 = wait_for_version(&reg, &id, 2);
+        assert_eq!(m2.meta.version, 2);
+        assert_ne!(m2.centers, model.centers, "refresh moved the centers");
+        // Meta fields other than version carry over from the fit.
+        assert_eq!(m2.meta.algorithm, "uniform");
+        assert_eq!(m2.meta.k, 4);
+        // The original Arc is untouched (readers finish on their version).
+        assert_eq!(model.meta.version, 1);
+    }
+
+    #[test]
+    fn observe_replay_is_bitwise_per_version() {
+        // The fixed-seed contract: the same starting model + the same
+        // observe stream produce identical center bits at EVERY version,
+        // not just the last one. Driving the state machine directly
+        // (same module) captures each snapshot at its exact stream
+        // position — publisher timing never enters the bits.
+        let reg = Arc::new(ModelRegistry::new(None).unwrap());
+        let model = install(&reg, 4, 3, 1);
+        let chunks: Vec<PointSet> = (0..6).map(|i| stream(25, 3, 100 + i)).collect();
+        let run = || {
+            let mut st = OnlineState::for_model(&model).unwrap();
+            let mut versions: Vec<(u64, PointSet)> = Vec::new();
+            for chunk in &chunks {
+                st.ingest(chunk).unwrap();
+                if st.since_refresh >= 50 {
+                    let v = st.queue_snapshot();
+                    let snap = st.pending.back().unwrap();
+                    versions.push((v, snap.centers.clone()));
+                }
+            }
+            versions
+        };
+        let a = run();
+        let b = run();
+        // 150 points at cadence 50 → versions 2, 3, 4.
+        assert_eq!(a.len(), 3);
+        assert_eq!(a[0].0, 2);
+        assert_eq!(a[2].0, 4);
+        assert_eq!(a, b, "replay diverged");
+        // Successive versions actually differ (the stream moves them).
+        assert_ne!(a[0].1, a[1].1);
+    }
+
+    #[test]
+    fn oversized_batch_queues_single_snapshot_per_call() {
+        let reg = Arc::new(ModelRegistry::new(None).unwrap());
+        let model = install(&reg, 4, 3, 5);
+        let mgr = OnlineManager::new(10);
+        let out = mgr.observe(&reg, &model, &stream(35, 3, 6)).unwrap();
+        assert_eq!(out.queued_version, Some(2));
+        // Dimension mismatch and empty batches are client errors.
+        assert!(mgr.observe(&reg, &model, &stream(5, 7, 7)).is_err());
+        assert!(mgr
+            .observe(&reg, &model, &PointSet::from_flat(0, 3, Vec::new()))
+            .is_err());
+    }
+
+    #[test]
+    fn learning_rate_pulls_center_toward_stream() {
+        let reg = Arc::new(ModelRegistry::new(None).unwrap());
+        let model = install(&reg, 2, 2, 9);
+        let id = model.meta.id.clone();
+        let mgr = OnlineManager::new(64);
+        // A tight stream at a fixed offset from center 0's basin.
+        let target = [50.0f32, -30.0];
+        let rows: Vec<Vec<f32>> = (0..64).map(|_| target.to_vec()).collect();
+        mgr.observe(&reg, &model, &PointSet::from_rows(&rows)).unwrap();
+        let m2 = wait_for_version(&reg, &id, 2);
+        // The hit center moved strictly toward the stream point.
+        let (j, d2_new) = crate::kernels::assign::nearest_center(&target, &m2.centers);
+        let d2_old = crate::data::matrix::d2(model.centers.row(j as usize), &target);
+        assert!(
+            d2_new < d2_old,
+            "center {j} did not move toward the stream ({d2_new} !< {d2_old})"
+        );
+    }
+}

@@ -5,7 +5,24 @@
 //! [`crate::data::io`] as `.fbin` (the same layout the dataset cache
 //! uses) and metadata through [`crate::server::json`] — so a model
 //! directory is inspectable with the same tooling as everything else:
-//! `{data_dir}/models/{id}.fbin` + `{data_dir}/models/{id}.json`.
+//! `{data_dir}/models/{id}.v{version}.fbin` + `{data_dir}/models/{id}.json`.
+//!
+//! ## The versioned-swap contract
+//!
+//! Every model carries a monotone [`ModelMeta::version`]. Online
+//! refreshes ([`crate::server::online`]) build a complete new [`Model`]
+//! off-thread and [`ModelRegistry::publish`] it: persistence goes to
+//! temp names and is `rename`d into place (the `.json` rename is the
+//! commit point), then the in-memory entry is swapped under a brief
+//! write lock. Readers hold `Arc<Model>` clones, so an in-flight assign
+//! finishes on the version it started on and a response is always
+//! computed from exactly one published version — there is no moment at
+//! which a reader can observe half-swapped centers or a meta/centers
+//! mismatch. Publishes that do not raise the version are dropped, so
+//! racing refreshes can never roll a model backwards, in memory or on
+//! disk. A crash between the two renames leaves the previous committed
+//! version intact plus an orphan centers file, which the next boot's
+//! [`ModelRegistry::new`] deletes with a warn log.
 //!
 //! Assignment requests route through the kernel engine
 //! ([`crate::kernels::assign::assign_argmin`]); per the PR 1 contract,
@@ -40,6 +57,11 @@ use crate::server::json::{self, Json};
 pub struct ModelMeta {
     /// Registry id (`m-<seq>`).
     pub id: String,
+    /// Monotone model version, starting at 1 for a fresh fit and bumped
+    /// by every online refresh publish ([`ModelRegistry::publish`]).
+    /// Persisted meta written before versioning carries no field and
+    /// reloads as 1.
+    pub version: u64,
     /// Seeding algorithm name (as in [`crate::seeding::SeedingAlgorithm`]).
     pub algorithm: String,
     /// Number of centers.
@@ -63,6 +85,7 @@ impl ModelMeta {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("id", Json::str(self.id.clone())),
+            ("version", Json::num(self.version as f64)),
             ("algorithm", Json::str(self.algorithm.clone())),
             ("k", Json::num(self.k as f64)),
             ("dim", Json::num(self.dim as f64)),
@@ -83,6 +106,7 @@ impl ModelMeta {
         };
         Ok(ModelMeta {
             id: text("id")?,
+            version: v.get("version").and_then(Json::as_u64).unwrap_or(1),
             algorithm: text("algorithm")?,
             k: v.get("k").and_then(Json::as_usize).context("model meta: k")?,
             dim: v
@@ -263,6 +287,15 @@ pub struct AssignCoalescer {
     cond: Condvar,
 }
 
+/// Lanes are keyed by `(id, version)`, not id alone: a parked request is
+/// only ever swept by a leader holding the **same** published version,
+/// so a coalesced batch never mixes versions and every response comes
+/// from exactly the version its handler captured — the versioned-swap
+/// contract extends through coalescing.
+fn lane_key(model: &Model) -> String {
+    format!("{}@v{}", model.meta.id, model.meta.version)
+}
+
 impl AssignCoalescer {
     /// Assign `points` to `model`'s centers, batching with any concurrent
     /// requests against the same model. Bitwise identical to a solo
@@ -272,8 +305,9 @@ impl AssignCoalescer {
         // poison a batch (past this check the sweep is infallible).
         check_dim(model, &points)?;
         let slot = Arc::new(WaitSlot::new(points));
+        let key = lane_key(model);
         let mut lanes = self.lanes.lock().unwrap();
-        let lane = lanes.entry(model.meta.id.clone()).or_default();
+        let lane = lanes.entry(key.clone()).or_default();
         if !lane.leader_active {
             // Idle lane: lead a batch of any already-parked requests plus
             // our own, without waiting.
@@ -289,7 +323,7 @@ impl AssignCoalescer {
             if let Some(result) = slot.take_done() {
                 return Ok(result);
             }
-            let lane = lanes.entry(model.meta.id.clone()).or_default();
+            let lane = lanes.entry(key.clone()).or_default();
             if !lane.leader_active {
                 // The previous leader finished without us (we parked
                 // after its drain): take over and sweep the queue.
@@ -355,11 +389,12 @@ impl AssignCoalescer {
             own_result
         };
         drop(span);
+        let key = lane_key(model);
         let mut lanes = self.lanes.lock().unwrap();
-        if let Some(lane) = lanes.get_mut(&model.meta.id) {
+        if let Some(lane) = lanes.get_mut(&key) {
             lane.leader_active = false;
             if lane.waiting.is_empty() {
-                lanes.remove(&model.meta.id);
+                lanes.remove(&key);
             }
         }
         drop(lanes);
@@ -374,16 +409,45 @@ pub struct ModelRegistry {
     dir: Option<PathBuf>,
     models: RwLock<BTreeMap<String, Arc<Model>>>,
     next_id: AtomicU64,
+    /// Serializes check-version → persist → swap in [`Self::publish`] so
+    /// two racing publishes for one id cannot commit out of order on
+    /// disk. Held only by writers — readers take the `models` lock alone.
+    publish_lock: Mutex<()>,
+}
+
+/// On-disk name of a version's center matrix.
+fn centers_file(id: &str, version: u64) -> String {
+    format!("{id}.v{version}.fbin")
+}
+
+fn entry_name(path: &Path) -> String {
+    path.file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_default()
+}
+
+/// Parse a centers-file name into `(id, version)`; `version` is `None`
+/// for the legacy unversioned `{id}.fbin` layout.
+fn parse_centers_file(name: &str) -> Option<(&str, Option<u64>)> {
+    let stem = name.strip_suffix(".fbin")?;
+    if let Some(dot_v) = stem.rfind(".v") {
+        if let Ok(version) = stem[dot_v + 2..].parse::<u64>() {
+            return Some((&stem[..dot_v], Some(version)));
+        }
+    }
+    Some((stem, None))
 }
 
 impl ModelRegistry {
     /// Create a registry, reloading any models persisted under
-    /// `{dir}/models/` from a previous run.
+    /// `{dir}/models/` from a previous run and deleting orphaned
+    /// centers/temp files a crash mid-persist may have stranded.
     pub fn new(dir: Option<PathBuf>) -> Result<ModelRegistry> {
         let reg = ModelRegistry {
             dir,
             models: RwLock::new(BTreeMap::new()),
             next_id: AtomicU64::new(1),
+            publish_lock: Mutex::new(()),
         };
         reg.load_persisted()?;
         Ok(reg)
@@ -400,6 +464,9 @@ impl ModelRegistry {
         if !models_dir.exists() {
             return Ok(());
         }
+        // Committed versions: id → version of the model the `.json`
+        // (the commit point) references. Everything else is an orphan.
+        let mut committed: HashMap<String, u64> = HashMap::new();
         for entry in std::fs::read_dir(&models_dir)
             .with_context(|| format!("read {models_dir:?}"))?
         {
@@ -418,6 +485,7 @@ impl ModelRegistry {
                     {
                         self.next_id.fetch_max(n + 1, Ordering::Relaxed);
                     }
+                    committed.insert(model.meta.id.clone(), model.meta.version);
                     self.models
                         .write()
                         .unwrap()
@@ -433,13 +501,53 @@ impl ModelRegistry {
                 ),
             }
         }
+        // Orphan sweep: a crash between the centers rename and the meta
+        // rename leaves a committed-looking `.fbin` no meta references;
+        // a crash mid-write leaves `.tmp` files. Before this sweep they
+        // sat on disk forever, silently skipped. Delete them loudly.
+        for entry in std::fs::read_dir(&models_dir)
+            .with_context(|| format!("read {models_dir:?}"))?
+        {
+            let path = entry?.path();
+            let name = entry_name(&path);
+            let orphan = if name.ends_with(".tmp") {
+                true
+            } else if let Some((id, version)) = parse_centers_file(&name) {
+                match (committed.get(id), version) {
+                    // Versioned centers survive only when the committed
+                    // meta points at exactly this version.
+                    (Some(&v), Some(file_v)) => file_v != v,
+                    // Legacy unversioned centers survive while a meta
+                    // for the id exists at all.
+                    (Some(_), None) => false,
+                    (None, _) => true,
+                }
+            } else {
+                false
+            };
+            if orphan {
+                let _ = std::fs::remove_file(&path);
+                crate::log::warn(
+                    "registry.orphan_cleanup",
+                    &[("path", Json::str(path.display().to_string()))],
+                );
+            }
+        }
         Ok(())
     }
 
     fn load_model(meta_path: &Path) -> Result<Model> {
         let text = std::fs::read_to_string(meta_path)?;
         let meta = ModelMeta::from_json(&json::parse(&text)?)?;
-        let centers = read_fbin(&meta_path.with_extension("fbin"))?;
+        // Versioned layout first; fall back to the pre-version `{id}.fbin`.
+        let dir = meta_path.parent().unwrap_or_else(|| Path::new("."));
+        let versioned = dir.join(centers_file(&meta.id, meta.version));
+        let centers_path = if versioned.exists() {
+            versioned
+        } else {
+            meta_path.with_extension("fbin")
+        };
+        let centers = read_fbin(&centers_path)?;
         if centers.len() != meta.k || centers.dim() != meta.dim {
             bail!(
                 "centers shape {}x{} disagrees with meta k={} dim={}",
@@ -458,27 +566,68 @@ impl ModelRegistry {
     }
 
     /// Register a model (persisting it first when a directory is set, so
-    /// a model is never visible in memory but missing on disk).
+    /// a model is never visible in memory but missing on disk). The
+    /// common `POST /fit` path: callers pass a fresh id at version 1.
     pub fn insert(&self, meta: ModelMeta, centers: PointSet) -> Result<Arc<Model>> {
-        let model = Arc::new(Model::new(meta, centers));
-        if let Some(models_dir) = self.models_dir() {
-            std::fs::create_dir_all(&models_dir)
-                .with_context(|| format!("create {models_dir:?}"))?;
-            write_fbin(
-                &model.centers,
-                &models_dir.join(format!("{}.fbin", model.meta.id)),
-            )?;
-            std::fs::write(
-                models_dir.join(format!("{}.json", model.meta.id)),
-                model.meta.to_json().emit(),
-            )
-            .context("write model meta")?;
+        self.publish(Model::new(meta, centers))
+    }
+
+    /// Publish a model version: persist durably, then swap the in-memory
+    /// entry atomically. Monotone — a publish whose version does not
+    /// exceed the installed one is dropped (the installed model is
+    /// returned), so racing refreshes can never roll a model backwards.
+    /// Readers are never blocked by persistence I/O: they clone `Arc`s
+    /// under a read lock and the write lock is held only for the map
+    /// swap itself; in-flight assigns keep their old `Arc` and finish on
+    /// the version they started on.
+    pub fn publish(&self, model: Model) -> Result<Arc<Model>> {
+        let model = Arc::new(model);
+        let _serialized = self.publish_lock.lock().unwrap();
+        if let Some(current) = self.get(&model.meta.id) {
+            if current.meta.version >= model.meta.version {
+                return Ok(current);
+            }
         }
+        self.persist(&model)?;
         self.models
             .write()
             .unwrap()
             .insert(model.meta.id.clone(), Arc::clone(&model));
         Ok(model)
+    }
+
+    /// Crash-safe persistence: both files are written to temp names and
+    /// `rename`d into place — centers first, meta (`.json`) last as the
+    /// commit point. A crash at any instant leaves either the previous
+    /// committed version intact or the new one fully committed, never a
+    /// meta/centers mismatch; stranded temp or centers files are swept
+    /// by the next boot's [`ModelRegistry::new`].
+    fn persist(&self, model: &Model) -> Result<()> {
+        let Some(models_dir) = self.models_dir() else {
+            return Ok(());
+        };
+        std::fs::create_dir_all(&models_dir).with_context(|| format!("create {models_dir:?}"))?;
+        let id = &model.meta.id;
+        let fbin_name = centers_file(id, model.meta.version);
+        let fbin_tmp = models_dir.join(format!("{fbin_name}.tmp"));
+        write_fbin(&model.centers, &fbin_tmp)?;
+        std::fs::rename(&fbin_tmp, models_dir.join(&fbin_name)).context("commit centers")?;
+        let json_tmp = models_dir.join(format!("{id}.json.tmp"));
+        std::fs::write(&json_tmp, model.meta.to_json().emit()).context("write model meta")?;
+        std::fs::rename(&json_tmp, models_dir.join(format!("{id}.json")))
+            .context("commit model meta")?;
+        // Best-effort: drop center files superseded by this commit (old
+        // versions and the legacy unversioned layout).
+        if let Ok(entries) = std::fs::read_dir(&models_dir) {
+            for entry in entries.flatten() {
+                let name = entry_name(&entry.path());
+                if name != fbin_name && matches!(parse_centers_file(&name), Some((fid, _)) if fid == id)
+                {
+                    let _ = std::fs::remove_file(entry.path());
+                }
+            }
+        }
+        Ok(())
     }
 
     pub fn get(&self, id: &str) -> Option<Arc<Model>> {
@@ -520,6 +669,7 @@ mod tests {
     fn meta(id: &str, k: usize, dim: usize) -> ModelMeta {
         ModelMeta {
             id: id.to_string(),
+            version: 1,
             algorithm: "rejection".to_string(),
             k,
             dim,
@@ -699,6 +849,133 @@ mod tests {
         let reg = ModelRegistry::new(Some(dir)).unwrap();
         let m = reg.get("m-1").unwrap();
         assert_eq!(m.center_norms, crate::kernels::norms::squared_norms(&cs));
+    }
+
+    #[test]
+    fn meta_version_defaults_to_one_for_legacy_json() {
+        // Persisted meta written before versioning has no "version"
+        // field; it must reload as version 1, not fail.
+        let mut m = meta("m-3", 4, 2);
+        m.version = 7;
+        let v = json::parse(&m.to_json().emit()).unwrap();
+        assert_eq!(ModelMeta::from_json(&v).unwrap().version, 7);
+        let legacy = r#"{"id":"m-3","algorithm":"uniform","k":4,"dim":2,"source":"s"}"#;
+        let back = ModelMeta::from_json(&json::parse(legacy).unwrap()).unwrap();
+        assert_eq!(back.version, 1);
+    }
+
+    #[test]
+    fn publish_swaps_atomically_and_is_monotone() {
+        let reg = ModelRegistry::new(None).unwrap();
+        let cs1 = centers(4, 3, 11);
+        let v1 = reg.insert(meta("m-1", 4, 3), cs1.clone()).unwrap();
+        assert_eq!(v1.meta.version, 1);
+
+        // A reader captured before the refresh finishes on its version.
+        let reader = reg.get("m-1").unwrap();
+
+        let cs2 = centers(4, 3, 12);
+        let mut m2 = meta("m-1", 4, 3);
+        m2.version = 2;
+        let v2 = reg.publish(Model::new(m2, cs2.clone())).unwrap();
+        assert_eq!(v2.meta.version, 2);
+        assert_eq!(reg.get("m-1").unwrap().meta.version, 2);
+        assert_eq!(reg.get("m-1").unwrap().centers, cs2);
+        assert_eq!(reader.centers, cs1, "in-flight reader keeps its version");
+
+        // A stale publish (same or lower version) is dropped.
+        let stale = reg.publish(Model::new(meta("m-1", 4, 3), cs1)).unwrap();
+        assert_eq!(stale.meta.version, 2);
+        assert_eq!(reg.get("m-1").unwrap().centers, cs2);
+    }
+
+    #[test]
+    fn refresh_version_persists_and_reloads() {
+        let dir = std::env::temp_dir().join("fkmpp_registry_version_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cs2 = centers(5, 3, 21);
+        {
+            let reg = ModelRegistry::new(Some(dir.clone())).unwrap();
+            reg.insert(meta("m-1", 5, 3), centers(5, 3, 20)).unwrap();
+            let mut m2 = meta("m-1", 5, 3);
+            m2.version = 2;
+            reg.publish(Model::new(m2, cs2.clone())).unwrap();
+            // The superseded v1 centers file is gone after the commit.
+            assert!(!dir.join("models").join(centers_file("m-1", 1)).exists());
+        }
+        let reg = ModelRegistry::new(Some(dir)).unwrap();
+        let m = reg.get("m-1").unwrap();
+        assert_eq!(m.meta.version, 2);
+        assert_eq!(m.centers, cs2);
+    }
+
+    #[test]
+    fn crash_mid_persist_recovers_last_committed_version() {
+        // Simulate a crash between the centers rename and the meta
+        // rename: v1 fully committed, v2 centers on disk with no meta
+        // referencing them, plus stranded temp files. Reload must come
+        // back at v1 and sweep the orphans.
+        let dir = std::env::temp_dir().join("fkmpp_registry_crash_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cs1 = centers(4, 3, 30);
+        {
+            let reg = ModelRegistry::new(Some(dir.clone())).unwrap();
+            reg.insert(meta("m-1", 4, 3), cs1.clone()).unwrap();
+        }
+        let models_dir = dir.join("models");
+        write_fbin(&centers(4, 3, 31), &models_dir.join(centers_file("m-1", 2))).unwrap();
+        std::fs::write(models_dir.join("m-1.json.tmp"), "{partial").unwrap();
+        write_fbin(&centers(2, 2, 32), &models_dir.join("m-9.fbin")).unwrap();
+
+        let reg = ModelRegistry::new(Some(dir.clone())).unwrap();
+        assert_eq!(reg.len(), 1);
+        let m = reg.get("m-1").unwrap();
+        assert_eq!(m.meta.version, 1);
+        assert_eq!(m.centers, cs1, "last committed version wins");
+        assert!(
+            !models_dir.join(centers_file("m-1", 2)).exists(),
+            "uncommitted centers swept"
+        );
+        assert!(!models_dir.join("m-1.json.tmp").exists(), "temp swept");
+        assert!(!models_dir.join("m-9.fbin").exists(), "orphan fbin swept");
+    }
+
+    #[test]
+    fn concurrent_assign_during_refresh_single_version() {
+        // While a publisher swaps versions under assign load, every
+        // response must be bitwise-explainable by exactly one published
+        // version: the one the request captured. A torn read (labels
+        // from v_i, distances from v_j) would match neither.
+        let reg = Arc::new(ModelRegistry::new(None).unwrap());
+        reg.insert(meta("m-1", 4, 3), centers(4, 3, 40)).unwrap();
+        let coalescer = Arc::new(AssignCoalescer::default());
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let reg = Arc::clone(&reg);
+                let coalescer = Arc::clone(&coalescer);
+                let stop = Arc::clone(&stop);
+                std::thread::spawn(move || {
+                    let q = centers(30, 3, 50 + t as u64);
+                    while !stop.load(Ordering::Relaxed) {
+                        let m = reg.get("m-1").unwrap();
+                        let got = coalescer.assign(&m, q.clone()).unwrap();
+                        let want = assign(&m, &q).unwrap();
+                        assert_eq!(got, want, "response from the captured version");
+                    }
+                })
+            })
+            .collect();
+        for v in 2..40u64 {
+            let mut m = meta("m-1", 4, 3);
+            m.version = v;
+            reg.publish(Model::new(m, centers(4, 3, 40 + v))).unwrap();
+        }
+        stop.store(true, Ordering::Relaxed);
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(reg.get("m-1").unwrap().meta.version, 39);
     }
 
     #[test]

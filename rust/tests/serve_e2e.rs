@@ -591,6 +591,7 @@ fn keep_alive_session_binary_parity_and_protocol_fixes() {
     );
     let meta = ModelMeta {
         id: reg.fresh_id(),
+        version: 1,
         algorithm: "uniform".to_string(),
         k: 4,
         dim: 3,
@@ -908,4 +909,123 @@ fn request_ids_echo_and_debug_log_captures_malformed() {
     let (status, _) = http(&addr.to_string(), "POST", "/shutdown", None);
     assert_eq!(status, 200);
     server_thread.join().expect("join").expect("run");
+}
+
+/// ISSUE 10 tentpole leg: the observe → refresh → assign lifecycle over
+/// real TCP — ingest queues a refresh, assigns keep answering while the
+/// off-thread publisher works, `GET /models/{id}` reports the bumped
+/// version, and a registry reopened on the same data dir reloads the
+/// refreshed version bit-exactly (the atomic versioned persist).
+#[test]
+fn observe_refresh_bumps_version_and_survives_reload() {
+    let dir = std::env::temp_dir().join("fkmpp_serve_e2e_observe");
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = ServeConfig {
+        host: "127.0.0.1".to_string(),
+        port: 0,
+        data_dir: dir.clone(),
+        artifacts_dir: "/nonexistent".into(),
+        http_workers: 2,
+        fit_workers: 1,
+        persist: true,
+        observe_refresh_every: 32,
+        ..ServeConfig::default()
+    };
+    let server = Server::bind(&cfg).expect("bind ephemeral port");
+    let addr = server.local_addr().expect("local addr").to_string();
+    let reg = server.registry();
+    let centers = gaussian_mixture(
+        &SynthSpec {
+            n: 4,
+            d: 3,
+            k_true: 2,
+            ..Default::default()
+        },
+        5,
+    );
+    let meta = ModelMeta {
+        id: reg.fresh_id(),
+        version: 1,
+        algorithm: "uniform".to_string(),
+        k: 4,
+        dim: 3,
+        source: "test".to_string(),
+        seed: 0,
+        seeding_secs: 0.0,
+        lloyd_iters: 0,
+        cost: 0.0,
+    };
+    let model_id = meta.id.clone();
+    reg.insert(meta, centers).expect("insert model");
+    let server_thread = std::thread::spawn(move || server.run());
+
+    // Version 1 before any ingest.
+    let (status, model) = http(&addr, "GET", &format!("/models/{model_id}"), None);
+    assert_eq!(status, 200, "{model:?}");
+    assert_eq!(model.get("version").and_then(Json::as_usize), Some(1));
+
+    // One 40-point batch crosses the 32-point cadence: the response
+    // reports the queued version immediately.
+    let batch = gaussian_mixture(
+        &SynthSpec {
+            n: 40,
+            d: 3,
+            k_true: 2,
+            ..Default::default()
+        },
+        9,
+    );
+    let observe_body = Json::obj(vec![("points", json::points_to_json(&batch))]).emit();
+    let (status, obs) = http(
+        &addr,
+        "POST",
+        &format!("/models/{model_id}/observe"),
+        Some(&observe_body),
+    );
+    assert_eq!(status, 200, "{obs:?}");
+    assert_eq!(obs.get("ingested").and_then(Json::as_usize), Some(40));
+    assert_eq!(obs.get("total_observed").and_then(Json::as_usize), Some(40));
+    assert_eq!(obs.get("queued_version").and_then(Json::as_usize), Some(2));
+
+    // Assigns keep answering while the refresh publishes off-thread, and
+    // the served version eventually bumps to the queued one.
+    let assign_body = Json::obj(vec![("points", json::points_to_json(&batch))]).emit();
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let (status, assigned) = http(
+            &addr,
+            "POST",
+            &format!("/models/{model_id}/assign"),
+            Some(&assign_body),
+        );
+        assert_eq!(status, 200, "assign during refresh window: {assigned:?}");
+        let (status, doc) = http(&addr, "GET", &format!("/models/{model_id}"), None);
+        assert_eq!(status, 200, "{doc:?}");
+        match doc.get("version").and_then(Json::as_usize) {
+            Some(v) if v >= 2 => {
+                assert_eq!(v, 2, "exactly one refresh was queued");
+                break;
+            }
+            _ => {
+                assert!(Instant::now() < deadline, "version never bumped past 1");
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+
+    // Capture the refreshed centers as served, then shut down.
+    let (status, doc) = http(&addr, "GET", &format!("/models/{model_id}"), None);
+    assert_eq!(status, 200, "{doc:?}");
+    let refreshed =
+        json::points_from_json(doc.get("centers").expect("centers")).expect("parse centers");
+    let (status, _) = http(&addr, "POST", "/shutdown", None);
+    assert_eq!(status, 200);
+    server_thread.join().expect("join").expect("run");
+
+    // A fresh registry over the same data dir reloads the refreshed
+    // version with the same bits (a server restart keeps serving v2).
+    let reloaded = ModelRegistry::new(Some(dir)).expect("reload registry");
+    let model = reloaded.get(&model_id).expect("model persisted");
+    assert_eq!(model.meta.version, 2);
+    assert_eq!(model.centers, refreshed);
 }
